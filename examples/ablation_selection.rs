@@ -1,0 +1,12 @@
+//! Fig. 7 driver — selection-criterion ablations: BlockLLM vs
+//! BlockLLM-SubOPT (smallest-gradient selection) and vs the
+//! no-visit-frequency variant.
+//!
+//!     cargo run --release --example ablation_selection [-- --quick]
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    blockllm::experiments::run("fig7", quick)
+}

@@ -1,0 +1,13 @@
+//! Fig. 1 / Fig. 5 driver — the paper's headline finetuning comparison:
+//! BlockLLM vs LoRA vs BAdam vs GaLore on the Alpaca-sim instruction task,
+//! warm-started from a C4-sim pretrained checkpoint.
+//!
+//!     cargo run --release --example finetune_alpaca_sim            # tiny preset
+//!     cargo run --release --example finetune_alpaca_sim -- --quick # micro preset
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    blockllm::experiments::run("fig5", quick)
+}

@@ -1,0 +1,12 @@
+//! Tables 7 & 8 driver — the GLUE-sim suite: BlockLLM vs GaLore r8/r4 vs
+//! full finetuning across eight tasks, reporting score and peak memory.
+//!
+//!     cargo run --release --example glue_suite            # all 8 tasks
+//!     cargo run --release --example glue_suite -- --quick # cola + sst2
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    blockllm::experiments::run("table7", quick)
+}

@@ -1,0 +1,16 @@
+//! Table 1 / Fig. 6 driver — the paper's pretraining evaluation, and this
+//! repo's END-TO-END VALIDATION run (EXPERIMENTS.md §E2E): pretrain the
+//! model ladder on the C4-sim corpus with BlockLLM vs GaLore, logging loss
+//! curves, perplexity, and the memory ledger.
+//!
+//!     cargo run --release --example pretrain_c4_sim            # full ladder
+//!     cargo run --release --example pretrain_c4_sim -- --quick # small ladder
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    blockllm::experiments::run("table1", quick)?;
+    blockllm::experiments::run("fig6", quick)?;
+    Ok(())
+}

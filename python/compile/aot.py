@@ -1,0 +1,238 @@
+"""AOT compile path: lower the L2 model (with L1 kernels) to HLO TEXT artifacts.
+
+Python runs ONLY here (`make artifacts`); the Rust coordinator is
+self-contained afterwards.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  <id>.hlo.txt        one per (preset, head, phase, batch-shape[, pallas])
+  masked_adam_<n>.hlo.txt   fused masked-Adam update artifact (L1 kernel)
+  manifest.json       the ABI: parameter order/shapes, io signature per artifact
+  golden.json         golden vectors: deterministic-filler loss probes +
+                      masked-Adam input/output vectors, consumed by Rust tests
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .presets import PRESETS
+from .kernels import masked_adam as madam_k
+from .kernels import ref as kref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def filler_params(specs, scale=0.02):
+    """Deterministic parameter filler reproduced bit-compatibly in Rust
+    (rust/src/model/store.rs::fill_deterministic): w[j] = scale*sin(0.1*(j+31*pi))
+    for matrix params, 1.0 for norms, 0.0 for biases."""
+    out = []
+    for pi, (name, shape) in enumerate(specs):
+        n = math.prod(shape)
+        if "norm" in name:
+            arr = jnp.ones(n, jnp.float32)
+        elif name.endswith("bias"):
+            arr = jnp.zeros(n, jnp.float32)
+        else:
+            j = jnp.arange(n, dtype=jnp.float32)
+            arr = (scale * jnp.sin(0.1 * (j + 31.0 * pi))).astype(jnp.float32)
+        out.append(arr.reshape(shape))
+    return out
+
+
+def filler_tokens(b, t, vocab, salt=0):
+    """tokens[i,j] = (7*i + 13*j + salt) % vocab — same in Rust."""
+    i = jnp.arange(b)[:, None]
+    j = jnp.arange(t)[None, :]
+    return ((7 * i + 13 * j + salt) % vocab).astype(jnp.int32)
+
+
+def lower_artifact(fn, example_args, out_path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_model_artifact(out_dir, preset_name, head, phase, b, t, n_out=2,
+                         regression=False, use_pallas=False, golden=None):
+    p = PRESETS[preset_name]
+    specs = model.param_specs(p, head, n_out)
+    pshapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    if head == "lm":
+        tgt = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        fn = (model.make_lm_train if phase == "train" else model.make_lm_eval)(p, use_pallas)
+        outputs = (["loss"] + [f"grad:{n}" for n, _ in specs]) if phase == "train" else [
+            "loss_sum", "valid_count"]
+    else:
+        regression = head == "reg"
+        tgt = jax.ShapeDtypeStruct((b,), jnp.float32 if regression else jnp.int32)
+        if phase == "train":
+            fn = model.make_cls_train(p, n_out, regression, use_pallas)
+            outputs = ["loss"] + [f"grad:{n}" for n, _ in specs]
+        else:
+            fn = model.make_cls_eval(p, n_out, regression, use_pallas)
+            outputs = ["loss_sum", "metric_sum", "preds"]
+
+    suffix = "_pallas" if use_pallas else ""
+    art_id = f"{preset_name}_{head}{n_out if head == 'cls' else ''}_{phase}_b{b}t{t}{suffix}"
+    fname = art_id + ".hlo.txt"
+    nchars = lower_artifact(fn, (*pshapes, tok, tgt), os.path.join(out_dir, fname))
+    print(f"  {fname}: {nchars} chars")
+
+    entry = {
+        "id": art_id,
+        "file": fname,
+        "kind": f"{head}_{phase}",
+        "preset": preset_name,
+        "head": head,
+        "n_out": (1 if head == "reg" else (n_out if head == "cls" else 0)),
+        "batch": b,
+        "seq": t,
+        "pallas": bool(use_pallas),
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "outputs": outputs,
+    }
+
+    # Golden probe: run the fn eagerly on deterministic inputs, record loss.
+    if golden is not None:
+        params = filler_params(specs)
+        tokens = filler_tokens(b, t, p.vocab)
+        if head == "lm":
+            targets = filler_tokens(b, t, p.vocab, salt=3)
+            res = fn(*params, tokens, targets)
+        else:
+            if regression:
+                targets = (jnp.arange(b, dtype=jnp.float32) % 5.0) / 5.0
+            else:
+                targets = (jnp.arange(b) % n_out).astype(jnp.int32)
+            res = fn(*params, tokens, targets)
+        probe = {"artifact": art_id, "loss": float(res[0])}
+        if phase == "train":
+            # also record a few gradient norms to pin the grad path
+            gnorms = [float(jnp.linalg.norm(g)) for g in res[1:4]]
+            probe["grad_norms_first3"] = gnorms
+        elif head == "lm":
+            probe["valid_count"] = float(res[1])
+        golden.append(probe)
+    return entry
+
+
+def build_masked_adam_artifact(out_dir, n, golden):
+    fn = madam_k.masked_adam_xla_fn(n)
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    h = jax.ShapeDtypeStruct((6,), jnp.float32)
+    fname = f"masked_adam_{n}.hlo.txt"
+    nchars = lower_artifact(fn, (spec, spec, spec, spec, spec, h), os.path.join(out_dir, fname))
+    print(f"  {fname}: {nchars} chars")
+
+    # Golden vectors: deterministic inputs + jnp-reference outputs, so the
+    # Rust-native masked Adam can be asserted against the same semantics.
+    j = jnp.arange(n, dtype=jnp.float32)
+    w = jnp.sin(0.05 * j)
+    m = 0.01 * jnp.cos(0.07 * j)
+    v = 0.001 * (1.0 + jnp.sin(0.11 * j) ** 2)
+    g = jnp.cos(0.13 * j) * 0.5
+    mask = (jnp.arange(n) % 3 == 0).astype(jnp.float32)
+    lr, b1, b2, eps, step = 1e-3, 0.9, 0.999, 1e-8, 7
+    w2, m2, v2 = kref.masked_adam_ref(w, m, v, g, mask, lr, b1, b2, eps, step)
+    golden.append({
+        "artifact": fname[:-8],
+        "kind": "masked_adam",
+        "n": n,
+        "hypers": {"lr": lr, "beta1": b1, "beta2": b2, "eps": eps, "step": step},
+        "checksums": {
+            "w_out_sum": float(jnp.sum(w2)), "m_out_sum": float(jnp.sum(m2)),
+            "v_out_sum": float(jnp.sum(v2)),
+            "w_out_l2": float(jnp.linalg.norm(w2)),
+        },
+    })
+    return {
+        "id": fname[:-8], "file": fname, "kind": "masked_adam", "n": n,
+        "outputs": ["w", "m", "v"],
+    }
+
+
+# Artifact plan: (preset, head, n_out, [(batch, seq)], pallas_variant_too)
+DEFAULT_PLAN = [
+    ("nano", "lm", 0, [(8, 64)], True),    # pallas twin proves kernel-in-HLO parity
+    ("micro", "lm", 0, [(8, 64)], False),
+    ("tiny", "lm", 0, [(8, 64)], False),
+    ("small", "lm", 0, [(8, 64)], False),
+    ("nano", "cls", 2, [(16, 32)], False),
+    ("nano", "cls", 3, [(16, 32)], False),
+    ("nano", "reg", 1, [(16, 32)], False),
+    ("micro", "cls", 2, [(16, 32)], False),
+]
+FULL_EXTRA = [
+    ("base", "lm", 0, [(8, 64)], False),
+    ("micro", "cls", 3, [(16, 32)], False),
+    ("micro", "reg", 1, [(16, 32)], False),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also build the base preset + extra heads")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    plan = DEFAULT_PLAN + (FULL_EXTRA if args.full else [])
+    artifacts, golden = [], []
+    for preset, head, n_out, shapes, pallas_too in plan:
+        for b, t in shapes:
+            print(f"[aot] {preset} {head}{n_out or ''} b{b}t{t}")
+            for phase in ("train", "eval"):
+                artifacts.append(build_model_artifact(
+                    args.out, preset, head, phase, b, t, n_out=n_out or 2,
+                    use_pallas=False, golden=golden))
+            if pallas_too:
+                for phase in ("train", "eval"):
+                    artifacts.append(build_model_artifact(
+                        args.out, preset, head, phase, b, t, n_out=n_out or 2,
+                        use_pallas=True, golden=golden))
+
+    print("[aot] masked_adam kernel artifact")
+    artifacts.append(build_masked_adam_artifact(args.out, 4096, golden))
+
+    manifest = {
+        "version": 1,
+        "presets": {
+            name: {"vocab": p.vocab, "d_model": p.d_model, "n_layers": p.n_layers,
+                   "n_heads": p.n_heads, "d_ff": p.d_ff, "max_seq": p.max_seq,
+                   "param_count": p.param_count()}
+            for name, p in PRESETS.items()
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print(f"[aot] wrote {len(artifacts)} artifacts + manifest + golden to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# attention.py   — tiled causal attention (the model's FLOP hot-spot)
+# masked_adam.py — fused masked-Adam coordinate update (BlockLLM's inner loop)
+# ref.py         — pure-jnp oracles both kernels are tested against

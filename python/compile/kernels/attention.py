@@ -1,0 +1,139 @@
+"""Pallas causal flash-attention kernel (L1 compute hot-spot).
+
+The kernel implements the online-softmax (flash) schedule: the grid iterates
+over (batch*heads, q_blocks); each program streams kv blocks through VMEM,
+maintaining running max / running denominator / output accumulator, so the
+full [T, T] logits matrix is never materialized.
+
+HARDWARE-ADAPTATION NOTE (GPU paper -> TPU kernel, DESIGN.md §3): the paper's
+memory argument lives at the optimizer level, but its models are standard
+LLaMA attention stacks.  On GPU one would tile over threadblocks with shared
+memory; here the BlockSpec grid expresses the HBM->VMEM schedule instead:
+  - q tile:  [BLOCK_Q, Dh]   resident in VMEM for the whole row of kv steps,
+  - kv tile: [BLOCK_K, Dh]x2 streamed per inner step,
+  - accum:   [BLOCK_Q, Dh] f32 accumulator + [BLOCK_Q] running (m, l) stats.
+VMEM per program = (BLOCK_Q + 2*BLOCK_K)*Dh*4 + O(BLOCK_Q) bytes; with the
+default BLOCK_Q=BLOCK_K=32, Dh<=64 this is ~24 KiB, far under the ~16 MiB
+VMEM budget — chosen small so interpret-mode lowering stays compact.  The
+inner matmuls are [BLOCK_Q, Dh] @ [Dh, BLOCK_K] and [BLOCK_Q, BLOCK_K] @
+[BLOCK_K, Dh] — MXU-shaped (pad Dh to 128 on real TPU for full utilization).
+
+interpret=True ALWAYS: real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+Differentiation: pallas_call has no autodiff rule, so `causal_attention`
+wraps the kernel in jax.custom_vjp with a pure-jnp backward (recomputation
+style, like flash-attention's bwd).  The forward in the lowered train HLO is
+the Pallas schedule; the backward is the reference gradient.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, scale, seq_len):
+    """One (batch*head, q_block) program: stream kv blocks, online softmax."""
+    q_blk = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale  # [block_q, dh]
+
+    dh = q.shape[-1]
+    q_base = q_blk * block_q
+    q_ids = q_base + jax.lax.iota(jnp.int32, block_q)
+
+    num_k_blocks = pl.cdiv(seq_len, block_k)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        k_ids = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = q @ k.astype(jnp.float32).T  # [block_q, block_k]
+        causal = q_ids[:, None] >= k_ids[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    # Causality: kv blocks strictly above the diagonal contribute nothing;
+    # stop the stream at the q block's diagonal block.
+    last_kb = jnp.minimum((q_base + block_q - 1) // block_k + 1, num_k_blocks)
+    acc = jnp.zeros((block_q, dh), jnp.float32)
+    m_i = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, last_kb, body, (acc, m_i, l_i))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def causal_attention_pallas(q, k, v, *, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K, scale=None):
+    """Raw Pallas forward. q,k,v: f32[BH, T, Dh] -> f32[BH, T, Dh].
+
+    T is padded up to a multiple of the block sizes so every tile is full —
+    padded kv rows carry key-ids > every valid query-id and are therefore
+    annihilated by the causal mask; padded q rows are sliced off the output.
+    """
+    bh, t, dh = q.shape
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    if scale is None:
+        scale = 1.0 / (dh**0.5)
+
+    # pad T to a common multiple of both block sizes (zeros; masked out)
+    tp = t
+    while tp % block_q or tp % block_k:
+        tp += block_q - (tp % block_q) if tp % block_q else block_k - (tp % block_k)
+    if tp != t:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, tp - t), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+
+    grid = (bh, tp // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, scale=scale, seq_len=tp
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, tp, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, tp, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+    return out[:, :t, :] if tp != t else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def causal_attention(q, k, v, use_pallas=True):
+    """Causal attention over [BH, T, Dh] with a Pallas fwd + jnp bwd."""
+    if use_pallas:
+        return causal_attention_pallas(q, k, v)
+    return ref.causal_attention_ref_bhtd(q, k, v)
+
+
+def _fwd(q, k, v, use_pallas):
+    return causal_attention(q, k, v, use_pallas), (q, k, v)
+
+
+def _bwd(use_pallas, res, g):
+    q, k, v = res
+    # Recomputation-style backward through the jnp reference (numerically
+    # identical attention function; the kernel is only a schedule change).
+    _, vjp = jax.vjp(ref.causal_attention_ref_bhtd, q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_fwd, _bwd)

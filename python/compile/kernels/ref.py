@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+asserted allclose against its oracle here (python/tests/test_kernel.py), and
+the Rust-native hot paths (rust/src/optim/) are asserted against the same
+semantics through golden vectors emitted by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Causal scaled-dot-product attention, single head.
+
+    q, k, v: f32[T, Dh].  Returns f32[T, Dh].
+    """
+    t = q.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return p @ v
+
+
+def causal_attention_ref_bhtd(q, k, v, scale=None):
+    """Batched-heads version: q,k,v f32[BH, T, Dh] -> f32[BH, T, Dh]."""
+    return jax.vmap(lambda a, b, c: causal_attention_ref(a, b, c, scale))(q, k, v)
+
+
+def masked_adam_ref(w, m, v, g, mask, lr, beta1, beta2, eps, step):
+    """Masked Adam coordinate update (BlockLLM inner update, paper eq. 1).
+
+    All arrays are flat f32[N]; mask is {0,1} f32[N]; step is the 1-based Adam
+    timestep used for bias correction.  Only masked coordinates advance their
+    optimizer state and weight; unmasked coordinates are left untouched (this
+    is the BlockLLM semantics: optimizer state exists only for the active
+    block, and within the block only masked coordinates move).
+
+    Returns (w', m', v').
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    upd = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    w_out = jnp.where(mask > 0, w - upd, w)
+    m_out = jnp.where(mask > 0, m_new, m)
+    v_out = jnp.where(mask > 0, v_new, v)
+    return w_out, m_out, v_out
+
+
+def rmsnorm_ref(x, weight, eps=1e-6):
+    """RMSNorm over the last axis. x: f32[..., D], weight: f32[D]."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * weight
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x@Wg) * (x@Wu) @ Wd."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

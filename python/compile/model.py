@@ -1,0 +1,238 @@
+"""L2: LLaMA-style transformer in JAX — the paper's model family, build-time only.
+
+Architecture (matches the paper's LLaMA 60M..7B ladder, scaled by presets.py):
+token embedding -> N x [RMSNorm -> RoPE causal attention -> residual ->
+RMSNorm -> SwiGLU MLP -> residual] -> final RMSNorm -> head.
+
+Heads:
+  - "lm":   untied LM head, next-token cross-entropy (pretraining / Alpaca-sim
+            finetuning; targets of -1 are ignored, which is how the Alpaca-sim
+            data masks the instruction prefix).
+  - "cls":  mean-pooled K-way classification head (GLUE-sim, DistilBERT-sim).
+  - "reg":  mean-pooled scalar regression head (STS-B-sim).
+
+Parameters travel as a FLAT TUPLE in the canonical order of param_specs() —
+this order is the ABI between aot.py's manifest and the Rust runtime
+(rust/src/model/spec.rs).  Do not reorder.
+
+The attention hot-spot calls the L1 Pallas kernel (kernels/attention.py) when
+use_pallas=True, so the kernel lowers into the same train/eval HLO artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .presets import Preset
+from .kernels import attention as attn_k
+from .kernels import ref as kref
+
+RMS_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (the ABI)
+# ---------------------------------------------------------------------------
+
+def param_specs(p: Preset, head: str = "lm", n_out: int = 2):
+    """Ordered [(name, shape)] for a preset+head — mirrored by the manifest."""
+    specs = [("tok_emb", (p.vocab, p.d_model))]
+    for i in range(p.n_layers):
+        pre = f"layers.{i}."
+        specs += [
+            (pre + "attn_norm", (p.d_model,)),
+            (pre + "wq", (p.d_model, p.d_model)),
+            (pre + "wk", (p.d_model, p.d_model)),
+            (pre + "wv", (p.d_model, p.d_model)),
+            (pre + "wo", (p.d_model, p.d_model)),
+            (pre + "mlp_norm", (p.d_model,)),
+            (pre + "w_gate", (p.d_model, p.d_ff)),
+            (pre + "w_up", (p.d_model, p.d_ff)),
+            (pre + "w_down", (p.d_ff, p.d_model)),
+        ]
+    specs.append(("final_norm", (p.d_model,)))
+    if head == "lm":
+        specs.append(("lm_head", (p.d_model, p.vocab)))
+    elif head == "cls":
+        specs.append(("cls_head", (p.d_model, n_out)))
+        specs.append(("cls_bias", (n_out,)))
+    elif head == "reg":
+        specs.append(("cls_head", (p.d_model, 1)))
+        specs.append(("cls_bias", (1,)))
+    else:
+        raise ValueError(f"unknown head {head!r}")
+    return specs
+
+
+def init_params(key, p: Preset, head: str = "lm", n_out: int = 2):
+    """Reference init (tests only; Rust owns the real init with the same scheme):
+    normals scaled 0.02 for embeddings/heads, 1/sqrt(fan_in) for matrices,
+    ones for norms, zeros for biases."""
+    out = []
+    for name, shape in param_specs(p, head, n_out):
+        key, sub = jax.random.split(key)
+        if "norm" in name:
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name == "cls_bias":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name in ("tok_emb", "lm_head") or name == "cls_head":
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(shape[0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _rope(x, positions):
+    """Rotary embedding. x: [B, T, H, Dh]; rotate half-dims pairwise."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freq[None, :]  # [T, half]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_block(x, wq, wk, wv, wo, p: Preset, use_pallas: bool):
+    b, t, d = x.shape
+    h, dh = p.n_heads, p.d_head
+    pos = jnp.arange(t)
+    q = _rope((x @ wq).reshape(b, t, h, dh), pos)
+    k = _rope((x @ wk).reshape(b, t, h, dh), pos)
+    v = (x @ wv).reshape(b, t, h, dh)
+    # [B, T, H, Dh] -> [B*H, T, Dh]
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    o = attn_k.causal_attention(to_bh(q), to_bh(k), to_bh(v), use_pallas)
+    o = o.reshape(b, h, t, dh).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ wo
+
+
+def trunk(params, tokens, p: Preset, use_pallas: bool = False):
+    """Embedding + transformer stack + final norm. tokens: i32[B,T] -> f32[B,T,D]."""
+    it = iter(params)
+    nxt = lambda: next(it)
+    tok_emb = nxt()
+    x = tok_emb[tokens]
+    for _ in range(p.n_layers):
+        attn_norm, wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt(), nxt()
+        mlp_norm, w_gate, w_up, w_down = nxt(), nxt(), nxt(), nxt()
+        hx = kref.rmsnorm_ref(x, attn_norm, RMS_EPS)
+        x = x + _attention_block(hx, wq, wk, wv, wo, p, use_pallas)
+        hx = kref.rmsnorm_ref(x, mlp_norm, RMS_EPS)
+        x = x + kref.swiglu_ref(hx, w_gate, w_up, w_down)
+    final_norm = nxt()
+    return kref.rmsnorm_ref(x, final_norm, RMS_EPS), it
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss_terms(params, tokens, targets, p: Preset, use_pallas: bool = False):
+    """Next-token CE. targets: i32[B,T], -1 = ignore. Returns (sum, count)."""
+    x, it = trunk(params, tokens, p, use_pallas)
+    lm_head = next(it)
+    logits = x @ lm_head  # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll), jnp.sum(valid).astype(jnp.float32)
+
+
+def lm_loss_mean(params, tokens, targets, p: Preset, use_pallas: bool = False):
+    s, c = lm_loss_terms(params, tokens, targets, p, use_pallas)
+    return s / jnp.maximum(c, 1.0)
+
+
+def cls_logits(params, tokens, p: Preset, use_pallas: bool = False):
+    """Mean-pooled classification/regression logits: f32[B, n_out]."""
+    x, it = trunk(params, tokens, p, use_pallas)
+    pooled = jnp.mean(x, axis=1)  # [B, D]
+    w, b = next(it), next(it)
+    return pooled @ w + b
+
+
+def cls_loss_mean(params, tokens, labels, p: Preset, use_pallas: bool = False):
+    """K-way CE; labels i32[B]."""
+    logits = cls_logits(params, tokens, p, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def reg_loss_mean(params, tokens, labels, p: Preset, use_pallas: bool = False):
+    """MSE regression; labels f32[B]."""
+    pred = cls_logits(params, tokens, p, use_pallas)[:, 0]
+    return jnp.mean((pred - labels) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# AOT entrypoints (fixed signature: (*params, tokens, targets) -> tuple)
+# ---------------------------------------------------------------------------
+
+def make_lm_train(p: Preset, use_pallas: bool = False):
+    """(params..., tokens i32[B,T], targets i32[B,T]) -> (loss, *grads)."""
+
+    def f(*args):
+        params, tokens, targets = list(args[:-2]), args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: lm_loss_mean(ps, tokens, targets, p, use_pallas)
+        )(params)
+        return (loss, *grads)
+
+    return f
+
+
+def make_lm_eval(p: Preset, use_pallas: bool = False):
+    """(params..., tokens, targets) -> (loss_sum, valid_count)."""
+
+    def f(*args):
+        params, tokens, targets = list(args[:-2]), args[-2], args[-1]
+        return lm_loss_terms(params, tokens, targets, p, use_pallas)
+
+    return f
+
+
+def make_cls_train(p: Preset, n_out: int, regression: bool = False, use_pallas: bool = False):
+    """(params..., tokens i32[B,T], labels) -> (loss, *grads)."""
+    loss_fn = reg_loss_mean if regression else cls_loss_mean
+
+    def f(*args):
+        params, tokens, labels = list(args[:-2]), args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, labels, p, use_pallas)
+        )(params)
+        return (loss, *grads)
+
+    return f
+
+
+def make_cls_eval(p: Preset, n_out: int, regression: bool = False, use_pallas: bool = False):
+    """(params..., tokens, labels) -> (loss_sum, metric_sum, preds f32[B]).
+
+    metric_sum = #correct for classification; sum of squared error for
+    regression (preds let Rust compute Spearman/Matthews exactly).
+    """
+
+    def f(*args):
+        params, tokens, labels = list(args[:-2]), args[-2], args[-1]
+        logits = cls_logits(params, tokens, p, use_pallas)
+        if regression:
+            pred = logits[:, 0]
+            se = (pred - labels) ** 2
+            return jnp.sum(se), jnp.sum(se), pred
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == labels).astype(jnp.float32))
+        return jnp.sum(nll), correct, pred.astype(jnp.float32)
+
+    return f

@@ -1,0 +1,58 @@
+"""Model preset registry shared by model.py / aot.py / tests and mirrored in
+rust/src/config/presets.rs.
+
+Presets are LLaMA-architecture decoders scaled down to single-CPU-core scale
+(see DESIGN.md §5 for the substitution argument).  The *structure* (RMSNorm,
+RoPE attention, SwiGLU MLP, untied LM head) matches the paper's LLaMA 60M-7B
+family; only the widths/depths are reduced.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total trainable parameter count (matches model.param_specs)."""
+        v, d, f = self.vocab, self.d_model, self.d_ff
+        per_layer = 2 * d + 4 * d * d + 3 * d * f
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def cls_param_count(self, n_out: int) -> int:
+        """Classifier variant: trunk + pooled head, no LM head."""
+        v, d, f = self.vocab, self.d_model, self.d_ff
+        per_layer = 2 * d + 4 * d * d + 3 * d * f
+        return v * d + self.n_layers * per_layer + d + d * n_out + n_out
+
+
+# Stand-ins for the paper's LLaMA 60M / 130M / 350M / 7B ladder, scaled for a
+# single CPU core.  Ratios between rungs (~2.4-3x) roughly match the paper's.
+PRESETS = {
+    "nano": Preset("nano", vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=176, max_seq=64),
+    "micro": Preset("micro", vocab=256, d_model=128, n_layers=4, n_heads=4, d_ff=352, max_seq=64),
+    "tiny": Preset("tiny", vocab=256, d_model=256, n_layers=6, n_heads=4, d_ff=688, max_seq=64),
+    "small": Preset("small", vocab=256, d_model=320, n_layers=8, n_heads=8, d_ff=864, max_seq=64),
+    "base": Preset("base", vocab=256, d_model=448, n_layers=10, n_heads=8, d_ff=1216, max_seq=64),
+}
+
+
+def get(name: str) -> Preset:
+    return PRESETS[name]
+
+
+if __name__ == "__main__":
+    for p in PRESETS.values():
+        print(f"{p.name:6s} params={p.param_count()/1e6:7.3f}M cls2={p.cls_param_count(2)/1e6:7.3f}M")

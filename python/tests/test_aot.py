@@ -1,0 +1,91 @@
+"""AOT pipeline tests: lowering produces parseable HLO text, the manifest
+ABI matches model.param_specs, and golden probes are self-consistent.
+
+These run the same code path as `make artifacts` on the nano preset only
+(kept fast); the shipped artifacts' integrity is separately asserted by the
+Rust side (rust/tests/golden.rs)."""
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.presets import PRESETS
+
+
+def test_to_hlo_text_emits_parseable_header(tmp_path):
+    p = PRESETS["nano"]
+    fn = model.make_lm_eval(p)
+    specs = model.param_specs(p, "lm")
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    args += [jax.ShapeDtypeStruct((2, 8), jnp.int32)] * 2
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    # one entry computation, tuple root (return_tuple=True)
+    assert "ENTRY" in text
+
+
+def test_filler_params_deterministic_and_spec_shaped():
+    specs = model.param_specs(PRESETS["nano"], "lm")
+    a = aot.filler_params(specs)
+    b = aot.filler_params(specs)
+    for x, y, (name, shape) in zip(a, b, specs):
+        assert x.shape == shape, name
+        assert (x == y).all(), name
+    # norms are ones
+    names = [n for n, _ in specs]
+    i = names.index("layers.0.attn_norm")
+    assert float(a[i].min()) == 1.0
+
+
+def test_filler_tokens_formula():
+    t = aot.filler_tokens(2, 3, 256, salt=3)
+    # tokens[i,j] = (7i + 13j + 3) % 256
+    assert t.tolist() == [[3, 16, 29], [10, 23, 36]]
+
+
+def test_build_artifact_writes_manifest_entry_and_golden(tmp_path):
+    golden = []
+    entry = aot.build_model_artifact(
+        str(tmp_path), "nano", "lm", "eval", 2, 8, golden=golden
+    )
+    assert os.path.exists(tmp_path / entry["file"])
+    n_total = sum(math.prod(p["shape"]) for p in entry["params"])
+    assert n_total == PRESETS["nano"].param_count()
+    assert entry["outputs"] == ["loss_sum", "valid_count"]
+    assert golden and golden[0]["valid_count"] == 16.0
+    # golden loss is sane: ~ln(256) per token at filler params
+    per_tok = golden[0]["loss"] / golden[0]["valid_count"]
+    assert 4.5 < per_tok < 6.5
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_shipped_manifest_consistent_with_code():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    man = json.load(open(os.path.join(root, "manifest.json")))
+    assert man["version"] == 1
+    for name, pj in man["presets"].items():
+        p = PRESETS[name]
+        assert pj["param_count"] == p.param_count(), name
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(root, a["file"])), a["id"]
+        if a["kind"] == "masked_adam":
+            continue
+        specs = model.param_specs(
+            PRESETS[a["preset"]], a["head"], a["n_out"] or 2
+        )
+        assert [p["name"] for p in a["params"]] == [n for n, _ in specs], a["id"]
+        assert [tuple(p["shape"]) for p in a["params"]] == [s for _, s in specs], a["id"]
+
+    golden = json.load(open(os.path.join(root, "golden.json")))
+    ids = {a["id"] for a in man["artifacts"]}
+    for g in golden:
+        assert g["artifact"] in ids

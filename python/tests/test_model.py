@@ -1,0 +1,165 @@
+"""L2 model tests: shapes, loss semantics, gradient integrity, pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.presets import PRESETS
+
+
+NANO = PRESETS["nano"]
+
+
+def nano_params(head="lm", n_out=2, seed=0):
+    return model.init_params(jax.random.PRNGKey(seed), NANO, head, n_out)
+
+
+def test_param_specs_count_matches_preset():
+    for name, p in PRESETS.items():
+        specs = model.param_specs(p, "lm")
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert total == p.param_count(), name
+
+
+def test_cls_param_specs_count():
+    for n_out in (1, 2, 3, 5):
+        specs = model.param_specs(NANO, "cls", n_out)
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert total == NANO.cls_param_count(n_out)
+
+
+def test_param_order_is_stable():
+    names = [n for n, _ in model.param_specs(NANO, "lm")]
+    assert names[0] == "tok_emb"
+    assert names[1] == "layers.0.attn_norm"
+    assert names[-1] == "lm_head"
+    assert names[-2] == "final_norm"
+    # the ABI order: 9 tensors per layer
+    assert len(names) == 2 + 9 * NANO.n_layers + 1
+
+
+def test_lm_loss_at_init_near_uniform():
+    """At (near-)random init, next-token CE should be ~ log(vocab)."""
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0, NANO.vocab)
+    loss = model.lm_loss_mean(params, tokens, targets, NANO)
+    assert abs(float(loss) - np.log(NANO.vocab)) < 0.5
+
+
+def test_lm_loss_ignores_masked_targets():
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, NANO.vocab)
+    masked = targets.at[:, :8].set(-1)
+    s_all, c_all = model.lm_loss_terms(params, tokens, targets, NANO)
+    s_m, c_m = model.lm_loss_terms(params, tokens, masked, NANO)
+    assert float(c_all) == 32.0 and float(c_m) == 16.0
+    assert float(s_m) < float(s_all)
+
+
+def test_train_step_outputs_match_param_specs():
+    params = nano_params()
+    specs = model.param_specs(NANO, "lm")
+    fn = model.make_lm_train(NANO)
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    targets = jnp.zeros((2, 8), jnp.int32)
+    out = fn(*params, tokens, targets)
+    assert len(out) == 1 + len(specs)
+    for g, (_, shape) in zip(out[1:], specs):
+        assert g.shape == shape
+
+
+def test_gradients_nonzero_everywhere():
+    """Every parameter tensor must receive gradient signal (no dead layers)."""
+    params = nano_params()
+    fn = model.make_lm_train(NANO)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(4), (4, 16), 0, NANO.vocab)
+    out = fn(*params, tokens, targets)
+    for g, (name, _) in zip(out[1:], model.param_specs(NANO, "lm")):
+        assert float(jnp.linalg.norm(g)) > 0, f"dead gradient in {name}"
+
+
+def test_grad_matches_finite_difference():
+    """Directional finite-difference check of the full fwd/bwd on nano."""
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, NANO.vocab)
+
+    loss_fn = lambda ps: model.lm_loss_mean(ps, tokens, targets, NANO)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+
+    key = jax.random.PRNGKey(7)
+    dirs = [jax.random.normal(k, p.shape) for k, p in
+            zip(jax.random.split(key, len(params)), params)]
+    eps = 1e-3
+    plus = [p + eps * d for p, d in zip(params, dirs)]
+    minus = [p - eps * d for p, d in zip(params, dirs)]
+    fd = (loss_fn(plus) - loss_fn(minus)) / (2 * eps)
+    analytic = sum(jnp.vdot(g, d) for g, d in zip(grads, dirs))
+    np.testing.assert_allclose(float(fd), float(analytic), rtol=2e-2)
+
+
+def test_pallas_and_jnp_model_agree():
+    """The pallas-attention model and the jnp-attention model are the same
+    function — this is what licenses shipping jnp-path artifacts for speed."""
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (2, 64), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(9), (2, 64), 0, NANO.vocab)
+    l1 = model.lm_loss_mean(params, tokens, targets, NANO, use_pallas=False)
+    l2 = model.lm_loss_mean(params, tokens, targets, NANO, use_pallas=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_pallas_grads_match_jnp_grads():
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(10), (2, 32), 0, NANO.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(11), (2, 32), 0, NANO.vocab)
+    g1 = jax.grad(lambda ps: model.lm_loss_mean(ps, tokens, targets, NANO, False))(params)
+    g2 = jax.grad(lambda ps: model.lm_loss_mean(ps, tokens, targets, NANO, True))(params)
+    for a, b, (name, _) in zip(g1, g2, model.param_specs(NANO, "lm")):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-6, err_msg=name)
+
+
+def test_cls_head_shapes_and_loss():
+    for n_out in (2, 3):
+        params = nano_params("cls", n_out)
+        tokens = jax.random.randint(jax.random.PRNGKey(12), (4, 16), 0, NANO.vocab)
+        labels = jnp.array([0, 1, 0, 1], jnp.int32) % n_out
+        logits = model.cls_logits(params, tokens, NANO)
+        assert logits.shape == (4, n_out)
+        loss = model.cls_loss_mean(params, tokens, labels, NANO)
+        assert abs(float(loss) - np.log(n_out)) < 0.5
+
+
+def test_reg_head():
+    params = nano_params("reg", 1)
+    tokens = jax.random.randint(jax.random.PRNGKey(13), (4, 16), 0, NANO.vocab)
+    labels = jnp.array([0.0, 0.5, 1.0, 0.25], jnp.float32)
+    loss = model.reg_loss_mean(params, tokens, labels, NANO)
+    assert float(loss) >= 0
+
+
+def test_cls_eval_outputs():
+    params = nano_params("cls", 2)
+    fn = model.make_cls_eval(NANO, 2)
+    tokens = jax.random.randint(jax.random.PRNGKey(14), (4, 16), 0, NANO.vocab)
+    labels = jnp.array([0, 1, 0, 1], jnp.int32)
+    loss_sum, correct, preds = fn(*params, tokens, labels)
+    assert preds.shape == (4,)
+    assert 0 <= float(correct) <= 4
+    assert float(loss_sum) > 0
+
+
+def test_causal_model_property():
+    """Changing tokens at position j must not affect logits before j."""
+    params = nano_params()
+    tokens = jax.random.randint(jax.random.PRNGKey(15), (1, 16), 0, NANO.vocab)
+    x1, it = model.trunk(params, tokens, NANO)
+    pert = tokens.at[0, 10].set((tokens[0, 10] + 1) % NANO.vocab)
+    x2, _ = model.trunk(params, pert, NANO)
+    np.testing.assert_allclose(x1[:, :10], x2[:, :10], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(x1[:, 10:], x2[:, 10:])

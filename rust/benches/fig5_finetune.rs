@@ -1,0 +1,11 @@
+//! Bench binary regenerating Fig. 5 (Alpaca-sim finetune: loss/memory/time
+//! across BlockLLM, LoRA, BAdam, GaLore). `cargo bench` runs the quick
+//! variant; pass `--full` for the tiny-preset run. Same harness as
+//! `blockllm exp --id fig5` / examples/finetune_alpaca_sim.rs.
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    if let Err(e) = blockllm::experiments::run("fig5", quick) {
+        eprintln!("fig5 bench failed: {e:#} (did you run `make artifacts`?)");
+    }
+}

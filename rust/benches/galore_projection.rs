@@ -1,0 +1,30 @@
+//! Bench: GaLore's per-step projection cost (the baseline's L3 overhead) —
+//! low-rank project/backproject matmuls every step plus the periodic
+//! randomized range-finder refresh. Contrast with BlockLLM's masked-Adam
+//! bench: this is the structural reason BlockLLM wins wall-clock in Fig. 5.
+
+#[path = "harness.rs"]
+mod harness;
+
+use blockllm::linalg::range_finder;
+use blockllm::tensor::Tensor;
+use blockllm::util::rng::Pcg64;
+use harness::{bench, black_box};
+
+fn main() {
+    let mut rng = Pcg64::new(4);
+    for (m, n, r) in [(256, 256, 8), (256, 688, 8), (256, 688, 64)] {
+        let mut g = Tensor::zeros(&[m, n]);
+        rng.fill_normal(&mut g.data, 1.0);
+
+        let p = range_finder(&g, r, 2, &mut rng);
+        bench(&format!("project+backproject {m}x{n} r={r} (per step)"), 5, 50, || {
+            let low = p.matmul_tn(&g); // [r, n]
+            black_box(p.matmul(&low)); // back to [m, n]
+        });
+
+        bench(&format!("range_finder {m}x{n} r={r} (per refresh)"), 2, 10, || {
+            black_box(range_finder(&g, r, 2, &mut rng));
+        });
+    }
+}

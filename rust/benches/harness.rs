@@ -1,0 +1,73 @@
+//! Minimal statistics-reporting bench harness (criterion is not in the
+//! offline crate set — DESIGN.md §8). Each bench binary is built with
+//! `harness = false` and uses `bench()` to report median/p10/p90 over
+//! timed iterations after warmup.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+/// Time `f` repeatedly: `warmup` throwaway runs, then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        iters,
+    };
+    println!(
+        "{:48} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p10_ns),
+        fmt_ns(r.p90_ns),
+        r.iters
+    );
+    r
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Throughput helper: elements processed per second at the median.
+pub fn throughput(r: &BenchResult, elems: usize) -> String {
+    let eps = elems as f64 / (r.median_ns / 1e9);
+    if eps > 1e9 {
+        format!("{:.2} Gelem/s", eps / 1e9)
+    } else {
+        format!("{:.2} Melem/s", eps / 1e6)
+    }
+}
+
+/// Keep a value alive / opaque to the optimizer.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

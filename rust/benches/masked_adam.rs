@@ -1,0 +1,46 @@
+//! Bench: the masked sparse Adam hot path (BlockLLM's per-step update) at
+//! the paper's operating sparsities, vs the dense Adam baseline — the L3
+//! cost the paper's "BlockLLM is faster per step" claim rests on.
+
+#[path = "harness.rs"]
+mod harness;
+
+use blockllm::optim::masked_adam::{masked_adam_step, BitMask, LayerState};
+use blockllm::optim::AdamHypers;
+use blockllm::util::rng::Pcg64;
+use harness::{bench, black_box, throughput};
+
+fn main() {
+    let n = 1 << 20; // one 1M-coordinate layer
+    let mut rng = Pcg64::new(1);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let h = AdamHypers::default();
+
+    println!("masked Adam over a {n}-coordinate layer:");
+    for density in [1.0, 0.5, 0.05, 0.005] {
+        let tau_idx = ((n as f64) * density) as usize;
+        let tau = if tau_idx == 0 {
+            f32::INFINITY
+        } else {
+            blockllm::tensor::kth_largest_abs(&g, tau_idx.max(1))
+        };
+        let mask = BitMask::from_threshold(&g, tau);
+        let mut st = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask };
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut step = 0u64;
+        let r = bench(&format!("masked_adam density={density}"), 3, 30, || {
+            step += 1;
+            black_box(masked_adam_step(&mut w, &g, &mut st, step, 1e-3, &h));
+        });
+        println!("    -> {} active-coord throughput", throughput(&r, st.mask.popcount.max(1)));
+    }
+
+    // dense baseline for the same layer
+    let mut dense = blockllm::optim::DenseAdam::new(&[n], h);
+    let mut w = vec![vec![0.5f32; n]];
+    let r = bench("dense_adam (baseline)", 3, 30, || {
+        let gr: Vec<&[f32]> = vec![&g];
+        dense.step(&mut w, &gr, 1e-3);
+    });
+    println!("    -> {} coord throughput", throughput(&r, n));
+}

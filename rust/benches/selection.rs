@@ -1,0 +1,55 @@
+//! Bench: the BlockLLM selection path — per-layer norm scoring, greedy
+//! selection, and percentile mask construction — at model-ladder scales.
+//! This is the cost paid once per patience window, amortized to near-zero
+//! per step; the bench verifies that claim.
+
+#[path = "harness.rs"]
+mod harness;
+
+use blockllm::blockllm::scorer::NormDictionary;
+use blockllm::blockllm::selector::{select_layers, SelectionRule};
+use blockllm::blockllm::build_masks;
+use blockllm::config::{MaskMode, NormKind};
+use blockllm::util::rng::Pcg64;
+use harness::{bench, black_box};
+
+fn main() {
+    let mut rng = Pcg64::new(2);
+    // a tiny-preset-shaped layer table: 56 tensors, ~4.9M params
+    let mut sizes = vec![65536usize];
+    for _ in 0..6 {
+        sizes.extend_from_slice(&[256, 65536, 65536, 65536, 65536, 256, 176128, 176128, 176128]);
+    }
+    sizes.push(256);
+    sizes.push(65536);
+    let grads: Vec<Vec<f32>> = sizes
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let n: usize = sizes.iter().sum();
+    println!("layer table: {} tensors, {n} params", sizes.len());
+
+    let mut dict = NormDictionary::new(sizes.len(), NormKind::Rms, 3);
+    bench("score_all_layers (selection event)", 3, 30, || {
+        for (l, g) in grads.iter().enumerate() {
+            dict.record(l, g, 0);
+        }
+        black_box(&dict);
+    });
+
+    bench("greedy_select (Alg. 2 core)", 10, 200, || {
+        black_box(select_layers(&dict, &sizes, 0.95, SelectionRule::TopScore));
+    });
+
+    for s in [0.5, 0.95] {
+        let sel = select_layers(&dict, &sizes, s, SelectionRule::TopScore);
+        bench(&format!("build_masks s={s} (percentile+bitmask)"), 3, 30, || {
+            black_box(build_masks(&sel, &grads, MaskMode::Alg2));
+        });
+    }
+
+    // p-layer probe bookkeeping (every step)
+    bench("layers_to_probe p=2 (per-step)", 10, 500, || {
+        black_box(dict.layers_to_probe(&[3, 7, 11], 2, 100));
+    });
+}

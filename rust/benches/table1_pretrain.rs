@@ -1,0 +1,11 @@
+//! Bench binary regenerating Table 1 (C4-sim pretraining ladder, BlockLLM
+//! vs GaLore: perplexity + memory). `cargo bench` runs the quick ladder;
+//! pass `--full` for the full one. Same harness as
+//! `blockllm exp --id table1` / examples/pretrain_c4_sim.rs.
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    if let Err(e) = blockllm::experiments::run("table1", quick) {
+        eprintln!("table1 bench failed: {e:#} (did you run `make artifacts`?)");
+    }
+}

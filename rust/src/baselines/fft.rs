@@ -1,0 +1,74 @@
+//! Full-parameter Adam — the paper's "FFT" baseline (Tables 7/8) and the
+//! memory ceiling every other method is compared against.
+
+use super::{StepInfo, Strategy};
+use crate::memory::profiles;
+use crate::model::ParamStore;
+use crate::optim::{AdamHypers, DenseAdam};
+
+pub struct FftAdam {
+    opt: DenseAdam,
+    n_params: u64,
+}
+
+impl FftAdam {
+    pub fn new(sizes: &[usize], h: AdamHypers) -> FftAdam {
+        FftAdam {
+            opt: DenseAdam::new(sizes, h),
+            n_params: sizes.iter().map(|&s| s as u64).sum(),
+        }
+    }
+}
+
+impl Strategy for FftAdam {
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        _loss: f64,
+        lr: f64,
+        _step: usize,
+    ) -> StepInfo {
+        let grad_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        self.opt.step(&mut store.bufs, &grad_refs, lr);
+        StepInfo {
+            updated_coords: self.n_params,
+            reselected: false,
+            mem: profiles::full_adam(self.n_params),
+            active_layers: Vec::new(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    #[test]
+    fn descends_quadratic() {
+        let sizes: Vec<usize> = testutil::toy_specs().iter().map(|s| s.numel()).collect();
+        let mut s = FftAdam::new(&sizes, AdamHypers::default());
+        let (before, after) = testutil::quadratic_descends(&mut s, 300);
+        assert!(after < before * 0.05, "before={before} after={after}");
+    }
+
+    #[test]
+    fn memory_is_4n() {
+        let sizes = vec![100usize, 50];
+        let mut s = FftAdam::new(&sizes, AdamHypers::default());
+        let specs = vec![
+            crate::runtime::ParamSpec { name: "a".into(), shape: vec![100] },
+            crate::runtime::ParamSpec { name: "b".into(), shape: vec![50] },
+        ];
+        let mut store = ParamStore::init(&specs, 1);
+        let grads = testutil::rand_grads(&sizes, 2);
+        let info = s.step(&mut store, &grads, 1.0, 1e-3, 0);
+        assert_eq!(info.mem.total(), 4 * 150 * 4);
+        assert_eq!(info.updated_coords, 150);
+    }
+}

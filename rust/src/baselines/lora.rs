@@ -1,0 +1,254 @@
+//! LoRA baseline (Hu et al., 2021): rank-r adapters on every 2-D matrix.
+//!
+//! W_eff = W₀ + (α/r)·B A with A [r, n] ~ N(0, 1/r), B [m, r] = 0. The
+//! frozen base W₀ never moves; Adam runs over (A, B) only. Because the AOT
+//! artifact consumes full weight matrices, the strategy materializes W_eff
+//! into the store each step — the accounting charges LoRA for base+adapters
+//! exactly as the paper does (adapters add parameters, §1 "PEFT methods").
+//!
+//! Gradients w.r.t. adapters follow from the chain rule on the full-matrix
+//! gradient G the artifact returns: ∂L/∂B = (α/r)·G Aᵀ, ∂L/∂A = (α/r)·Bᵀ G.
+//! 1-D parameters (norms, biases) are frozen, as in standard LoRA practice.
+
+use super::{StepInfo, Strategy};
+use crate::memory::profiles;
+use crate::model::ParamStore;
+use crate::optim::AdamHypers;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+struct Adapter {
+    a: Tensor, // [r, n]
+    b: Tensor, // [m, r]
+    m_a: Vec<f32>,
+    v_a: Vec<f32>,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+    w0: Vec<f32>, // frozen base
+}
+
+pub struct LoRa {
+    adapters: Vec<Option<Adapter>>,
+    rank: usize,
+    alpha: f64,
+    hypers: AdamHypers,
+    step: u64,
+    n_params: u64,
+    initialized: bool,
+    seed: u64,
+}
+
+impl LoRa {
+    pub fn new(
+        sizes: &[usize],
+        _names: &[String],
+        rank: usize,
+        alpha: f64,
+        hypers: AdamHypers,
+        seed: u64,
+    ) -> LoRa {
+        LoRa {
+            adapters: (0..sizes.len()).map(|_| None).collect(),
+            rank: rank.max(1),
+            alpha,
+            hypers,
+            step: 0,
+            n_params: sizes.iter().map(|&s| s as u64).sum(),
+            initialized: false,
+            seed,
+        }
+    }
+
+    fn init_adapters(&mut self, store: &ParamStore) {
+        let mut rng = Pcg64::with_stream(self.seed, 0x10FA);
+        for (li, spec) in store.specs.iter().enumerate() {
+            if spec.shape.len() != 2 {
+                continue;
+            }
+            let (m, n) = (spec.shape[0], spec.shape[1]);
+            let r = self.rank.min(m).min(n);
+            let mut a = Tensor::zeros(&[r, n]);
+            rng.fill_normal(&mut a.data, 1.0 / (r as f32).sqrt());
+            let b = Tensor::zeros(&[m, r]);
+            self.adapters[li] = Some(Adapter {
+                m_a: vec![0.0; a.numel()],
+                v_a: vec![0.0; a.numel()],
+                m_b: vec![0.0; b.numel()],
+                v_b: vec![0.0; b.numel()],
+                w0: store.bufs[li].clone(),
+                a,
+                b,
+            });
+        }
+        self.initialized = true;
+    }
+
+    pub fn adapter_elems(&self) -> u64 {
+        self.adapters
+            .iter()
+            .flatten()
+            .map(|ad| (ad.a.numel() + ad.b.numel()) as u64)
+            .sum()
+    }
+}
+
+fn adam_inplace(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: u64,
+    lr: f32,
+    h: &AdamHypers,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let bc1 = 1.0 - b1.powi(step as i32);
+    let bc2 = 1.0 - b2.powi(step as i32);
+    for i in 0..w.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        w[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+    }
+}
+
+impl Strategy for LoRa {
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        _loss: f64,
+        lr: f64,
+        _step: usize,
+    ) -> StepInfo {
+        if !self.initialized {
+            self.init_adapters(store);
+        }
+        self.step += 1;
+        let mut updated = 0u64;
+        let scale = (self.alpha / self.rank as f64) as f32;
+
+        for (li, spec) in store.specs.iter().enumerate() {
+            let Some(ad) = self.adapters[li].as_mut() else { continue };
+            let (rows, cols) = (spec.shape[0], spec.shape[1]);
+            let g = Tensor::from_vec(&[rows, cols], grads[li].clone()).expect("grad shape");
+
+            // chain rule through W_eff = W0 + scale * B A
+            let gb = g.matmul_nt(&ad.a); // [m, r] = G Aᵀ
+            let ga = ad.b.matmul_tn(&g); // [r, n] = Bᵀ G
+            let lr_f = lr as f32;
+            adam_inplace(&mut ad.b.data, &gb.data.iter().map(|x| x * scale).collect::<Vec<_>>(), &mut ad.m_b, &mut ad.v_b, self.step, lr_f, &self.hypers);
+            adam_inplace(&mut ad.a.data, &ga.data.iter().map(|x| x * scale).collect::<Vec<_>>(), &mut ad.m_a, &mut ad.v_a, self.step, lr_f, &self.hypers);
+            updated += (ad.a.numel() + ad.b.numel()) as u64;
+
+            // materialize W_eff for the next artifact execution
+            let ba = ad.b.matmul(&ad.a); // [m, n]
+            let w = &mut store.bufs[li];
+            for i in 0..w.len() {
+                w[i] = ad.w0[i] + scale * ba.data[i];
+            }
+        }
+
+        StepInfo {
+            updated_coords: updated,
+            reselected: false,
+            mem: profiles::lora(self.n_params, self.adapter_elems()),
+            active_layers: Vec::new(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "lora"
+    }
+
+    /// Only adapter gradients need to persist on-device (the full G is
+    /// consumed layer-by-layer during backward in a GPU implementation).
+    fn modeled_grad_elems(&self, _n: u64) -> u64 {
+        self.adapter_elems()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    #[test]
+    fn first_step_keeps_weights_at_base() {
+        // B starts at 0 so W_eff == W0 before any update; after one step
+        // with nonzero grads, B moves and W_eff != W0.
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let mut s = LoRa::new(&sizes, &names, 2, 8.0, AdamHypers::default(), 1);
+        let mut store = ParamStore::init(&specs, 2);
+        let w0 = store.bufs[0].clone();
+        let grads = testutil::rand_grads(&sizes, 3);
+        s.step(&mut store, &grads, 1.0, 1e-2, 0);
+        assert_ne!(store.bufs[0], w0, "adapters had no effect");
+    }
+
+    #[test]
+    fn norm_params_frozen() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let mut s = LoRa::new(&sizes, &names, 2, 8.0, AdamHypers::default(), 1);
+        let mut store = ParamStore::init(&specs, 2);
+        let norm_idx = store.idx("layers.0.attn_norm").unwrap();
+        let before = store.bufs[norm_idx].clone();
+        let grads = testutil::rand_grads(&sizes, 3);
+        for t in 0..5 {
+            s.step(&mut store, &grads, 1.0, 1e-2, t);
+        }
+        assert_eq!(store.bufs[norm_idx], before, "frozen 1-D param moved");
+    }
+
+    #[test]
+    fn update_is_low_rank() {
+        let specs = vec![crate::runtime::ParamSpec { name: "w".into(), shape: vec![8, 8] }];
+        let sizes = vec![64usize];
+        let names = vec!["w".to_string()];
+        let mut s = LoRa::new(&sizes, &names, 2, 2.0, AdamHypers::default(), 1);
+        let mut store = ParamStore::zeros(&specs);
+        let grads = testutil::rand_grads(&sizes, 4);
+        for t in 0..10 {
+            s.step(&mut store, &grads, 1.0, 1e-2, t);
+        }
+        // ΔW = W - 0 lives in the span of B (rank <= 2): check via Gram rank
+        let w = Tensor::from_vec(&[8, 8], store.bufs[0].clone()).unwrap();
+        let gram = w.matmul_nt(&w);
+        // eigenvalues beyond the 2nd must be ~0; proxy: trace of gram minus
+        // top-2 power-iteration estimates stays tiny
+        let mut rng = Pcg64::new(5);
+        let s1 = crate::linalg::spectral_norm_est(&w, 40, &mut rng);
+        let tr: f32 = (0..8).map(|i| gram.at(i, i)).sum();
+        assert!(tr as f64 <= 2.0 * s1 * s1 + 1e-4, "rank escape: tr={tr} s1²={}", s1 * s1);
+    }
+
+    #[test]
+    fn memory_charges_adapters_not_base_state() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let mut s = LoRa::new(&sizes, &names, 2, 8.0, AdamHypers::default(), 1);
+        let mut store = ParamStore::init(&specs, 2);
+        let grads = testutil::rand_grads(&sizes, 3);
+        let info = s.step(&mut store, &grads, 1.0, 1e-2, 0);
+        let n: u64 = sizes.iter().map(|&x| x as u64).sum();
+        assert!(info.mem.optim_m < n * 4, "optimizer state must cover adapters only");
+        assert!(info.mem.weights > n * 4, "weights must include adapters");
+    }
+
+    #[test]
+    fn descends_quadratic_within_subspace() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+        let mut s = LoRa::new(&sizes, &names, 4, 8.0, AdamHypers::default(), 1);
+        let (before, after) = testutil::quadratic_descends(&mut s, 300);
+        // LoRA can't reach zero (rank limit + frozen vectors) but must drop
+        assert!(after < before, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Magnitude-pruning analysis optimizer (paper §2 / §2.1, Tables 2-5).
+//!
+//! Updates only the top-k coordinates by |W| (k = (1-s)·n), either fixed
+//! from W⁰ (Table 2 protocol) or re-selected from |Wᵗ| every `update_every`
+//! steps (§2.1, Tables 3-5). Tracks q — the fraction of UNIQUE coordinates
+//! ever updated — which is the quantity the paper analyses.
+
+use super::{StepInfo, Strategy};
+use crate::memory::MemBreakdown;
+use crate::model::ParamStore;
+use crate::optim::masked_adam::{masked_adam_step, BitMask, LayerState};
+use crate::optim::AdamHypers;
+use crate::tensor::kth_largest_abs;
+
+pub struct Magnitude {
+    sizes: Vec<usize>,
+    /// layers always kept fully active (task heads: standard practice is to
+    /// train the new head densely; magnitude ranking applies to the trunk)
+    always_active: Vec<usize>,
+    sparsity: f64,
+    update_every: usize, // 0 = select once at t=0
+    hypers: AdamHypers,
+    states: Vec<LayerState>,
+    /// union of every mask ever active (for q)
+    ever_updated: Vec<BitMask>,
+    adam_step: u64,
+    n_params: u64,
+    selected_once: bool,
+}
+
+impl Magnitude {
+    pub fn new(sizes: &[usize], sparsity: f64, update_every: usize, hypers: AdamHypers) -> Magnitude {
+        Magnitude {
+            sizes: sizes.to_vec(),
+            always_active: Vec::new(),
+            sparsity,
+            update_every,
+            hypers,
+            states: Vec::new(),
+            ever_updated: sizes.iter().map(|&n| BitMask::from_threshold(&vec![0.0; n], 1.0)).collect(),
+            adam_step: 0,
+            n_params: sizes.iter().map(|&s| s as u64).sum(),
+            selected_once: false,
+        }
+    }
+
+    /// Mark head layers (by index) as always fully trainable.
+    pub fn with_always_active(mut self, idx: Vec<usize>) -> Magnitude {
+        self.always_active = idx;
+        self
+    }
+
+    /// Global top-k by |W|: one threshold across ALL coordinates (the §2
+    /// protocol prunes globally, not per layer).
+    fn select(&mut self, store: &ParamStore) {
+        let k = (((1.0 - self.sparsity) * self.n_params as f64).round() as usize).max(1);
+        let mut all: Vec<f32> = Vec::with_capacity(self.n_params as usize);
+        for b in &store.bufs {
+            all.extend_from_slice(b);
+        }
+        let tau = kth_largest_abs(&all, k);
+        self.states = store
+            .bufs
+            .iter()
+            .enumerate()
+            .map(|(li, b)| {
+                let mask = if self.always_active.contains(&li) {
+                    BitMask::all_set(b.len())
+                } else {
+                    BitMask::from_threshold(b, tau)
+                };
+                LayerState { m: vec![0.0; b.len()], v: vec![0.0; b.len()], mask }
+            })
+            .collect();
+        // accumulate into ever_updated
+        for (ever, st) in self.ever_updated.iter_mut().zip(&self.states) {
+            let mut pop = 0;
+            for (w, s) in ever.words.iter_mut().zip(&st.mask.words) {
+                *w |= s;
+                pop += w.count_ones() as usize;
+            }
+            ever.popcount = pop;
+        }
+        self.adam_step = 0;
+        self.selected_once = true;
+    }
+
+    /// q: fraction of unique coordinates updated so far (paper §2.1).
+    pub fn unique_updated_frac(&self) -> f64 {
+        let q: usize = self.ever_updated.iter().map(|m| m.popcount).sum();
+        q as f64 / self.n_params as f64
+    }
+
+    pub fn active_coords(&self) -> u64 {
+        self.states.iter().map(|s| s.mask.popcount as u64).sum()
+    }
+}
+
+impl Strategy for Magnitude {
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        _loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo {
+        let reselect = !self.selected_once
+            || (self.update_every > 0 && step > 0 && step % self.update_every == 0);
+        if reselect {
+            self.select(store);
+        }
+        self.adam_step += 1;
+        let mut updated = 0u64;
+        for (li, st) in self.states.iter_mut().enumerate() {
+            updated += masked_adam_step(
+                &mut store.bufs[li],
+                &grads[li],
+                st,
+                self.adam_step,
+                lr,
+                &self.hypers,
+            ) as u64;
+        }
+        let active = self.active_coords();
+        StepInfo {
+            updated_coords: updated,
+            reselected: reselect,
+            mem: MemBreakdown {
+                weights: self.n_params * 4,
+                grads: active * 4,
+                optim_m: active * 4,
+                optim_v: active * 4,
+                extra: self.ever_updated.iter().map(|m| m.bytes()).sum(),
+            },
+            active_layers: Vec::new(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "magnitude"
+    }
+
+    fn modeled_grad_elems(&self, _n: u64) -> u64 {
+        self.active_coords()
+    }
+
+    fn telemetry(&self) -> Vec<(String, f64)> {
+        vec![("unique_updated_frac".into(), self.unique_updated_frac())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil;
+    use super::*;
+
+    fn setup(sparsity: f64, update_every: usize) -> (Magnitude, ParamStore, Vec<usize>) {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let store = ParamStore::init(&specs, 3);
+        (Magnitude::new(&sizes, sparsity, update_every, AdamHypers::default()), store, sizes)
+    }
+
+    #[test]
+    fn selects_top_k_by_weight_magnitude() {
+        let (mut m, mut store, sizes) = setup(0.9, 0);
+        let grads = testutil::rand_grads(&sizes, 1);
+        let info = m.step(&mut store, &grads, 1.0, 1e-3, 0);
+        assert!(info.reselected);
+        let n: u64 = sizes.iter().map(|&x| x as u64).sum();
+        let want = ((0.1 * n as f64).round()) as u64;
+        let active = m.active_coords();
+        assert!(active >= want && active <= want + 8, "active={active} want≈{want}");
+    }
+
+    #[test]
+    fn fixed_selection_keeps_q_at_one_minus_s() {
+        let (mut m, mut store, sizes) = setup(0.8, 0);
+        let grads = testutil::rand_grads(&sizes, 2);
+        for t in 0..10 {
+            m.step(&mut store, &grads, 1.0, 1e-3, t);
+        }
+        let q = m.unique_updated_frac();
+        assert!((q - 0.2).abs() < 0.02, "q={q}");
+    }
+
+    #[test]
+    fn adaptive_selection_grows_q() {
+        let (mut m, mut store, sizes) = setup(0.8, 3);
+        // strong gradients move weights so the top-k set churns
+        for t in 0..30 {
+            let grads = testutil::rand_grads(&sizes, 100 + t as u64);
+            m.step(&mut store, &grads, 1.0, 5e-2, t);
+        }
+        let q = m.unique_updated_frac();
+        assert!(q > 0.22, "q={q} did not grow beyond 1-s=0.2");
+    }
+
+    #[test]
+    fn descends_quadratic_on_active_set() {
+        let (mut m, _, _) = setup(0.5, 0);
+        let (before, after) = testutil::quadratic_descends(&mut m, 300);
+        assert!(after < before * 0.8, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Optimization strategies: the paper's comparison set behind one trait.
+//!
+//! The trainer executes the AOT fwd/bwd artifact and hands each strategy the
+//! full gradient set; the strategy owns *which* coordinates move and what
+//! optimizer state exists — that difference is exactly what the paper
+//! compares (loss, peak memory, wall-clock).
+
+pub mod badam;
+pub mod fft;
+pub mod galore;
+pub mod lora;
+pub mod magnitude;
+
+use crate::memory::MemBreakdown;
+use crate::model::ParamStore;
+
+/// Telemetry returned by each optimizer step.
+#[derive(Debug, Clone, Default)]
+pub struct StepInfo {
+    /// coordinates actually updated this step
+    pub updated_coords: u64,
+    /// whether the block/selection changed this step
+    pub reselected: bool,
+    /// modeled memory this step (weights+grads+state+extras; DESIGN.md §5)
+    pub mem: MemBreakdown,
+    /// layers in the active block (empty = all)
+    pub active_layers: Vec<usize>,
+}
+
+/// A training method (BlockLLM or a baseline).
+pub trait Strategy {
+    /// Consume this step's loss + full gradient set, update `store` in
+    /// place. `lr` already includes the schedule; `step` is 0-based.
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo;
+
+    fn name(&self) -> &'static str;
+
+    /// Gradient elements the method must materialize simultaneously on the
+    /// accelerator (the paper's memory model; the CPU artifact always
+    /// returns all grads — see DESIGN.md §5 "VRAM" row).
+    fn modeled_grad_elems(&self, n_params: u64) -> u64 {
+        n_params
+    }
+
+    /// Method-specific end-of-run telemetry (e.g. Magnitude's unique-update
+    /// fraction q, BlockLLM's selection count).
+    fn telemetry(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+/// Build a strategy from a config + the model's parameter sizes.
+pub fn build(
+    cfg: &crate::config::TrainConfig,
+    sizes: &[usize],
+    names: &[String],
+) -> Box<dyn Strategy> {
+    use crate::config::Method;
+    let h = crate::optim::AdamHypers {
+        beta1: cfg.beta1,
+        beta2: cfg.beta2,
+        eps: cfg.eps,
+        weight_decay: cfg.weight_decay,
+    };
+    match cfg.method {
+        Method::FullAdam => Box::new(fft::FftAdam::new(sizes, h)),
+        Method::BlockLlm | Method::BlockLlmSubOpt | Method::BlockLlmNoFreq => Box::new(
+            crate::blockllm::strategy::BlockLlmStrategy::from_config(cfg, sizes, h),
+        ),
+        Method::GaLore => Box::new(galore::GaLore::new(
+            sizes,
+            names,
+            cfg.rank,
+            cfg.galore_scale,
+            cfg.galore_refresh,
+            h,
+            cfg.seed,
+        )),
+        Method::LoRa => Box::new(lora::LoRa::new(sizes, names, cfg.rank, cfg.lora_alpha, h, cfg.seed)),
+        Method::BAdam => Box::new(badam::BAdam::new(sizes, cfg.badam_k, h)),
+        Method::Magnitude => {
+            let heads: Vec<usize> = names
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.starts_with("cls_"))
+                .map(|(i, _)| i)
+                .collect();
+            Box::new(
+                magnitude::Magnitude::new(sizes, cfg.sparsity, cfg.mag_update_every, h)
+                    .with_always_active(heads),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::runtime::ParamSpec;
+    use crate::util::rng::Pcg64;
+
+    /// A toy 4-tensor "model" used across strategy tests.
+    pub fn toy_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "tok_emb".into(), shape: vec![32, 8] },
+            ParamSpec { name: "layers.0.wq".into(), shape: vec![8, 8] },
+            ParamSpec { name: "layers.0.attn_norm".into(), shape: vec![8] },
+            ParamSpec { name: "lm_head".into(), shape: vec![8, 32] },
+        ]
+    }
+
+    pub fn rand_grads(sizes: &[usize], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed);
+        sizes.iter().map(|&n| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    /// Quadratic bowl: loss = 0.5||W||², grad = W. Any sane optimizer must
+    /// shrink the params.
+    pub fn quadratic_descends(strategy: &mut dyn super::Strategy, steps: usize) -> (f64, f64) {
+        let specs = toy_specs();
+        let mut store = crate::model::ParamStore::init(&specs, 7);
+        // overwrite with larger values so descent is visible
+        for b in &mut store.bufs {
+            for x in b.iter_mut() {
+                *x = (*x) * 10.0 + 0.5;
+            }
+        }
+        let before: f64 = store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum();
+        for t in 0..steps {
+            let grads: Vec<Vec<f32>> = store.bufs.clone();
+            let loss: f64 = 0.5 * store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum::<f64>();
+            strategy.step(&mut store, &grads, loss, 0.05, t);
+        }
+        let after: f64 = store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum();
+        (before, after)
+    }
+}

@@ -1,0 +1,142 @@
+//! Intra-layer coordinate masks (Alg. 2 lines 11-18).
+//!
+//! For each selected layer, keep only coordinates with |G̃[i,j]| >= τ where
+//! τ is the per-layer (1−ζ)-style percentile such that the kept fraction is
+//! `keep_frac = n_s / Σ_p` (see selector.rs for why that's the well-defined
+//! reading of the paper's ζ). Three policies are exposed for the ablation
+//! bench (DESIGN.md §6.1).
+
+use crate::config::MaskMode;
+use crate::optim::masked_adam::BitMask;
+use crate::tensor::abs_quantile_keep;
+
+use super::selector::Selection;
+
+/// Build per-layer masks for a selection. `grads[l]` must hold the gradient
+/// buffer for each selected layer l (others may be empty).
+pub fn build_masks(
+    sel: &Selection,
+    grads: &[Vec<f32>],
+    mode: MaskMode,
+) -> Vec<(usize, BitMask)> {
+    let mut out = Vec::with_capacity(sel.layers.len());
+    match mode {
+        MaskMode::DenseLayers => {
+            for &l in &sel.layers {
+                out.push((l, BitMask::all_set(grads[l].len())));
+            }
+        }
+        MaskMode::Alg2 => {
+            // paper-literal: every selected layer masked with the same keep
+            // fraction, thresholded on its own |G̃| percentile
+            for &l in &sel.layers {
+                let tau = abs_quantile_keep(&grads[l], sel.keep_frac);
+                out.push((l, BitMask::from_threshold(&grads[l], tau)));
+            }
+        }
+        MaskMode::OvershootOnly => {
+            // earlier layers dense; only the final (overshooting) layer is
+            // trimmed so the total lands on the budget
+            let mut covered = 0usize;
+            for (i, &l) in sel.layers.iter().enumerate() {
+                let n = grads[l].len();
+                if i + 1 < sel.layers.len() || covered + n <= sel.n_s {
+                    out.push((l, BitMask::all_set(n)));
+                    covered += n;
+                } else {
+                    let remaining = sel.n_s.saturating_sub(covered).max(1);
+                    let keep = remaining as f64 / n as f64;
+                    let tau = abs_quantile_keep(&grads[l], keep);
+                    out.push((l, BitMask::from_threshold(&grads[l], tau)));
+                    covered += remaining;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Total active coordinates across a mask set.
+pub fn active_coords(masks: &[(usize, BitMask)]) -> usize {
+    masks.iter().map(|(_, m)| m.popcount).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockllm::selector::Selection;
+    use crate::util::rng::Pcg64;
+
+    fn toy_selection(layers: Vec<usize>, sigma_p: usize, n_s: usize) -> Selection {
+        Selection {
+            layers,
+            sigma_p,
+            n_s,
+            zeta: (((sigma_p as f64 - n_s as f64) / n_s as f64).max(0.0)).min(1.0),
+            keep_frac: (n_s as f64 / sigma_p as f64).min(1.0),
+        }
+    }
+
+    fn rand_grads(sizes: &[usize], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed);
+        sizes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn alg2_hits_the_budget_approximately() {
+        let sizes = [1000usize, 500];
+        let grads = rand_grads(&sizes, 1);
+        let sel = toy_selection(vec![0, 1], 1500, 600);
+        let masks = build_masks(&sel, &grads, crate::config::MaskMode::Alg2);
+        let active = active_coords(&masks);
+        // keep_frac = 0.4 -> ~600 coords, quantile rounding gives slack
+        assert!((550..=650).contains(&active), "active={active}");
+    }
+
+    #[test]
+    fn alg2_keeps_largest_magnitude_coords() {
+        let grads = vec![vec![0.1f32, -9.0, 0.2, 8.0, -0.3, 7.0, 0.1, -6.0]];
+        let sel = toy_selection(vec![0], 8, 4);
+        let masks = build_masks(&sel, &grads, crate::config::MaskMode::Alg2);
+        let m = &masks[0].1;
+        assert_eq!(m.popcount, 4);
+        for (i, want) in [false, true, false, true, false, true, false, true].iter().enumerate() {
+            assert_eq!(m.get(i), *want, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn dense_layers_mode_masks_nothing() {
+        let sizes = [100usize, 50];
+        let grads = rand_grads(&sizes, 2);
+        let sel = toy_selection(vec![0, 1], 150, 60);
+        let masks = build_masks(&sel, &grads, crate::config::MaskMode::DenseLayers);
+        assert_eq!(active_coords(&masks), 150);
+    }
+
+    #[test]
+    fn overshoot_only_trims_just_the_last_layer() {
+        let sizes = [100usize, 100];
+        let grads = rand_grads(&sizes, 3);
+        let sel = toy_selection(vec![0, 1], 200, 150);
+        let masks = build_masks(&sel, &grads, crate::config::MaskMode::OvershootOnly);
+        assert_eq!(masks[0].1.popcount, 100, "first layer must stay dense");
+        let second = masks[1].1.popcount;
+        assert!((45..=55).contains(&second), "second layer ~50, got {second}");
+    }
+
+    #[test]
+    fn masks_pair_with_layer_indices() {
+        let sizes = [10usize, 20, 30];
+        let grads = rand_grads(&sizes, 4);
+        let sel = toy_selection(vec![2, 0], 40, 40);
+        let masks = build_masks(&sel, &grads, crate::config::MaskMode::Alg2);
+        assert_eq!(masks[0].0, 2);
+        assert_eq!(masks[1].0, 0);
+        assert_eq!(masks[0].1.len, 30);
+        assert_eq!(masks[1].1.len, 10);
+    }
+}

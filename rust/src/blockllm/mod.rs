@@ -1,0 +1,22 @@
+//! BlockLLM core (the paper's contribution, Alg. 1 + Alg. 2):
+//!
+//! * `scorer`   — per-layer gradient-norm dictionary with p-layer sampling
+//!                and the visit-frequency term f_l,
+//! * `selector` — greedy layer selection until the parameter budget
+//!                n_s = (1-s)·n is covered (Alg. 2 l.2-10),
+//! * `mask`     — the intra-layer top-|G̃| percentile masks (Alg. 2 l.11-18),
+//! * `patience` — the loss-plateau controller that triggers re-selection
+//!                (Alg. 1 l.5-8).
+//!
+//! The trainer wires these to the masked sparse Adam in `optim::masked_adam`.
+
+pub mod mask;
+pub mod patience;
+pub mod scorer;
+pub mod selector;
+pub mod strategy;
+
+pub use mask::build_masks;
+pub use patience::PatienceController;
+pub use scorer::{NormDictionary, ScorerMode};
+pub use selector::{select_layers, Selection, SelectionRule};

@@ -1,0 +1,100 @@
+//! The loss-plateau patience controller (Alg. 1 lines 5-8).
+//!
+//! Keep a loss history H; once it holds m entries, trigger re-selection
+//! whenever the current loss φ_t fails to improve on the mean of the last m
+//! losses — then reset H (so selections last at least m further steps).
+//! t = 0 always triggers (the initial selection).
+
+use crate::metrics::MovingWindow;
+
+#[derive(Debug)]
+pub struct PatienceController {
+    window: MovingWindow,
+    m: usize,
+    /// number of re-selections triggered (telemetry / tests)
+    pub triggers: u64,
+    started: bool,
+}
+
+impl PatienceController {
+    pub fn new(m: usize) -> Self {
+        PatienceController { window: MovingWindow::new(m.max(1)), m: m.max(1), triggers: 0, started: false }
+    }
+
+    /// Feed the step loss; returns true if the block should be re-selected.
+    pub fn observe(&mut self, loss: f64) -> bool {
+        if !self.started {
+            // t=0: initial selection, history starts empty afterwards
+            self.started = true;
+            self.triggers += 1;
+            self.window.push(loss);
+            return true;
+        }
+        let trigger = self.window.len() >= self.m && loss >= self.window.mean();
+        if trigger {
+            self.triggers += 1;
+            self.window.clear();
+        }
+        self.window.push(loss);
+        trigger
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.window.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_always_triggers() {
+        let mut p = PatienceController::new(5);
+        assert!(p.observe(10.0));
+        assert!(!p.observe(9.0));
+    }
+
+    #[test]
+    fn monotone_decrease_never_retriggers() {
+        let mut p = PatienceController::new(4);
+        p.observe(100.0);
+        for i in 1..200 {
+            assert!(!p.observe(100.0 - i as f64 * 0.5), "step {i} retriggered");
+        }
+        assert_eq!(p.triggers, 1);
+    }
+
+    #[test]
+    fn plateau_triggers_after_m_steps() {
+        let mut p = PatienceController::new(3);
+        p.observe(5.0); // initial
+        assert!(!p.observe(5.0)); // history len 1 < m
+        assert!(!p.observe(5.0)); // len 2 < m
+        assert!(p.observe(5.0)); // len 3, loss == mean -> trigger
+    }
+
+    #[test]
+    fn history_resets_after_trigger_giving_m_step_grace() {
+        let mut p = PatienceController::new(3);
+        p.observe(5.0);
+        p.observe(5.0);
+        p.observe(5.0);
+        assert!(p.observe(5.0)); // trigger, reset
+        // grace period: needs m=3 fresh entries before it can trigger again
+        assert!(!p.observe(5.0));
+        assert!(!p.observe(5.0));
+        assert!(p.observe(5.0));
+    }
+
+    #[test]
+    fn spike_above_mean_triggers() {
+        let mut p = PatienceController::new(3);
+        p.observe(5.0);
+        p.observe(4.0);
+        p.observe(3.9);
+        p.observe(3.8);
+        // mean of last 3 ≈ 3.9; a spike to 6 must trigger
+        assert!(p.observe(6.0));
+    }
+}

@@ -1,0 +1,204 @@
+//! Layer scoring: the gradient-norm dictionary + visit frequency.
+//!
+//! The paper's selection criterion is ||G̃_l|| / f_l where G̃ is the Adam
+//! processed gradient and f_l the sum-normalized visit frequency. Computing
+//! ||G̃_l|| for every layer would require optimizer state for all layers —
+//! exactly what BlockLLM avoids — so the paper samples p extra layers per
+//! iteration and keeps their norms in a dictionary (§2.2 "Memory
+//! Efficiency"). This module is that dictionary.
+//!
+//! Processed-gradient caveat (DESIGN.md §6.2): for layers *outside* the
+//! active block there is no (M, V) state, so their entries are raw-gradient
+//! norms (bias-correction-scaled); for active layers the caller may refresh
+//! entries with true processed-gradient norms (`ScorerMode::Adamized`).
+
+use crate::config::NormKind;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerMode {
+    /// Raw gradient norms for everything (default; what a fresh Adam state
+    /// would yield up to the elementwise normalization).
+    Raw,
+    /// Active layers use their true processed-gradient norms.
+    Adamized,
+}
+
+/// Per-layer norm dictionary with staleness tracking and visit counts.
+#[derive(Debug, Clone)]
+pub struct NormDictionary {
+    pub norms: Vec<f64>,
+    /// step at which each norm was last refreshed (usize::MAX = never)
+    pub last_update: Vec<usize>,
+    /// number of times each layer was part of the active selection
+    visit_counts: Vec<u64>,
+    total_selections: u64,
+    norm_kind: NormKind,
+    rng: Pcg64,
+}
+
+impl NormDictionary {
+    pub fn new(n_layers: usize, norm_kind: NormKind, seed: u64) -> Self {
+        NormDictionary {
+            norms: vec![0.0; n_layers],
+            last_update: vec![usize::MAX; n_layers],
+            visit_counts: vec![0; n_layers],
+            total_selections: 0,
+            norm_kind,
+            rng: Pcg64::with_stream(seed, 0xD1C7),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.norms.len()
+    }
+
+    /// Layers whose norms should be (re)computed this step: the active set
+    /// plus p sampled others, preferring never/least-recently scored layers.
+    pub fn layers_to_probe(&mut self, active: &[usize], p: usize, step: usize) -> Vec<usize> {
+        let n = self.norms.len();
+        let mut probe: Vec<usize> = active.to_vec();
+        let mut is_active = vec![false; n];
+        for &a in active {
+            is_active[a] = true;
+        }
+        // stale-first: sort inactive layers by last_update, break ties randomly
+        let mut inactive: Vec<usize> = (0..n).filter(|&l| !is_active[l]).collect();
+        self.rng.shuffle(&mut inactive);
+        inactive.sort_by_key(|&l| self.last_update[l]); // MAX (never) sorts last
+        // pick never-scored first (from the back), else the stalest
+        let mut never: Vec<usize> =
+            inactive.iter().copied().filter(|&l| self.last_update[l] == usize::MAX).collect();
+        let mut picked = Vec::with_capacity(p);
+        while picked.len() < p && !never.is_empty() {
+            picked.push(never.remove(0));
+        }
+        for &l in &inactive {
+            if picked.len() >= p {
+                break;
+            }
+            if self.last_update[l] != usize::MAX && !picked.contains(&l) {
+                picked.push(l);
+            }
+        }
+        let _ = step;
+        probe.extend(picked);
+        probe
+    }
+
+    /// Record a freshly-computed gradient for layer `l` at `step`.
+    pub fn record(&mut self, l: usize, grad: &[f32], step: usize) {
+        let sq: f64 = grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let norm = match self.norm_kind {
+            NormKind::Fro => sq.sqrt(),
+            NormKind::Rms => (sq / grad.len().max(1) as f64).sqrt(),
+        };
+        self.norms[l] = norm;
+        self.last_update[l] = step;
+    }
+
+    /// Record a precomputed norm (used when the caller already reduced).
+    pub fn record_norm(&mut self, l: usize, norm: f64, step: usize) {
+        self.norms[l] = norm;
+        self.last_update[l] = step;
+    }
+
+    /// Mark a selection event: bump visit counts for the chosen layers.
+    pub fn mark_selected(&mut self, selected: &[usize]) {
+        self.total_selections += 1;
+        for &l in selected {
+            self.visit_counts[l] += 1;
+        }
+    }
+
+    /// Laplace-smoothed visit frequency f_l (DESIGN.md §6.4): strictly
+    /// positive even at t=0, sums to 1 over layers.
+    pub fn visit_freq(&self, l: usize) -> f64 {
+        // f_l = (1 + c_l) / (T + |L|): T selection events so far, |L| layers
+        let n = self.norms.len() as f64;
+        (1.0 + self.visit_counts[l] as f64) / (self.total_selections as f64 + n)
+    }
+
+    /// Selection score ||G̃_l|| / f_l (paper §2.2). `use_freq=false` gives
+    /// the no-frequency ablation (Fig. 7 right).
+    pub fn score(&self, l: usize, use_freq: bool) -> f64 {
+        if use_freq {
+            self.norms[l] / self.visit_freq(l)
+        } else {
+            self.norms[l]
+        }
+    }
+
+    pub fn visit_count(&self, l: usize) -> u64 {
+        self.visit_counts[l]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dict(n: usize) -> NormDictionary {
+        NormDictionary::new(n, NormKind::Rms, 1)
+    }
+
+    #[test]
+    fn rms_vs_fro_norms() {
+        let mut d = NormDictionary::new(2, NormKind::Fro, 1);
+        d.record(0, &[3.0, 4.0], 0);
+        assert!((d.norms[0] - 5.0).abs() < 1e-9);
+        let mut d = dict(2);
+        d.record(0, &[3.0, 4.0], 0);
+        assert!((d.norms[0] - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn probe_includes_active_and_p_extras() {
+        let mut d = dict(10);
+        let probe = d.layers_to_probe(&[2, 3], 3, 0);
+        assert!(probe.len() == 5);
+        assert!(probe.contains(&2) && probe.contains(&3));
+        let extras: Vec<_> = probe.iter().filter(|&&l| l != 2 && l != 3).collect();
+        assert_eq!(extras.len(), 3);
+    }
+
+    #[test]
+    fn probe_prefers_never_scored_layers() {
+        let mut d = dict(6);
+        for l in [0usize, 1, 2] {
+            d.record(l, &[1.0], 5);
+        }
+        // layers 3,4,5 never scored; p=3 must pick exactly those
+        let probe = d.layers_to_probe(&[0], 3, 6);
+        let extras: Vec<usize> = probe.into_iter().filter(|&l| l != 0).collect();
+        let mut e = extras.clone();
+        e.sort_unstable();
+        assert_eq!(e, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn visit_freq_laplace_smoothed() {
+        let mut d = dict(4);
+        // at t=0 all frequencies equal and positive
+        for l in 0..4 {
+            assert!((d.visit_freq(l) - 0.25).abs() < 1e-12);
+        }
+        d.mark_selected(&[0]);
+        d.mark_selected(&[0]);
+        assert!(d.visit_freq(0) > d.visit_freq(1));
+        assert_eq!(d.visit_count(0), 2);
+    }
+
+    #[test]
+    fn score_downweights_frequent_layers() {
+        let mut d = dict(2);
+        d.record(0, &[1.0], 0);
+        d.record(1, &[1.0], 0);
+        for _ in 0..5 {
+            d.mark_selected(&[0]);
+        }
+        assert!(d.score(1, true) > d.score(0, true));
+        // ablation: without frequency they tie
+        assert_eq!(d.score(0, false), d.score(1, false));
+    }
+}

@@ -1,0 +1,158 @@
+//! Greedy layer selection (Alg. 2 lines 2-10).
+//!
+//! Sort layers by descending score ||G̃_l|| / f_l, take layers until the
+//! cumulative parameter count Σ_p reaches the budget n_s = (1-s)·n, and
+//! compute ζ = clamp((Σ_p − n_s)/n_s) — the overshoot fraction that the mask
+//! stage trims back inside layers (paper's ζ definition; the clamp is
+//! DESIGN.md §6.1).
+
+use super::scorer::NormDictionary;
+
+/// Ordering rule — the paper's greedy rule plus its §3.3 ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionRule {
+    /// Largest score first (BlockLLM).
+    TopScore,
+    /// Smallest score first (BlockLLM-SubOPT, Fig. 7 left).
+    BottomScore,
+    /// Largest raw norm, ignoring visit frequency (Fig. 7 right).
+    TopScoreNoFreq,
+}
+
+/// Result of one selection event.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// chosen layer indices, in greedy order
+    pub layers: Vec<usize>,
+    /// Σ_p: parameters covered by the chosen layers
+    pub sigma_p: usize,
+    /// the budget n_s that was being filled
+    pub n_s: usize,
+    /// ζ = clamp((Σ_p − n_s)/n_s, 0, 1): fraction to mask away per layer.
+    /// NOTE (paper literalism): Alg. 2 computes the keep-percentile from
+    /// this ζ; we keep a fraction keep = n_s / Σ_p of each selected layer,
+    /// which is the (1−ζ′) percentile with ζ′ = 1 − n_s/Σ_p — identical to
+    /// the paper's intent of landing exactly on the sparsity budget and
+    /// well-defined even when Σ_p > 2·n_s.
+    pub zeta: f64,
+    /// fraction of each selected layer's coordinates to KEEP
+    pub keep_frac: f64,
+}
+
+/// Greedy selection until the parameter budget is covered.
+///
+/// `sizes[l]` = parameter count of layer l; `sparsity` = s in the paper;
+/// returns at least one layer even if it overshoots the budget.
+pub fn select_layers(
+    dict: &NormDictionary,
+    sizes: &[usize],
+    sparsity: f64,
+    rule: SelectionRule,
+) -> Selection {
+    let n: usize = sizes.iter().sum();
+    let n_s = (((1.0 - sparsity) * n as f64).round() as usize).max(1);
+
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    match rule {
+        SelectionRule::TopScore => {
+            order.sort_by(|&a, &b| dict.score(b, true).partial_cmp(&dict.score(a, true)).unwrap())
+        }
+        SelectionRule::BottomScore => {
+            order.sort_by(|&a, &b| dict.score(a, true).partial_cmp(&dict.score(b, true)).unwrap())
+        }
+        SelectionRule::TopScoreNoFreq => {
+            order.sort_by(|&a, &b| dict.score(b, false).partial_cmp(&dict.score(a, false)).unwrap())
+        }
+    }
+
+    let mut layers = Vec::new();
+    let mut sigma_p = 0usize;
+    for l in order {
+        sigma_p += sizes[l];
+        layers.push(l);
+        if sigma_p >= n_s {
+            break;
+        }
+    }
+    let zeta = (((sigma_p as f64 - n_s as f64) / n_s as f64).max(0.0)).min(1.0);
+    let keep_frac = (n_s as f64 / sigma_p as f64).min(1.0);
+    Selection { layers, sigma_p, n_s, zeta, keep_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NormKind;
+
+    fn dict_with_norms(norms: &[f64]) -> NormDictionary {
+        let mut d = NormDictionary::new(norms.len(), NormKind::Rms, 1);
+        for (l, &n) in norms.iter().enumerate() {
+            d.record_norm(l, n, 0);
+        }
+        d
+    }
+
+    #[test]
+    fn picks_largest_norm_layers_first() {
+        let d = dict_with_norms(&[0.1, 5.0, 0.2, 3.0]);
+        let sizes = [100, 100, 100, 100];
+        let sel = select_layers(&d, &sizes, 0.5, SelectionRule::TopScore);
+        assert_eq!(sel.layers, vec![1, 3]);
+        assert_eq!(sel.sigma_p, 200);
+        assert_eq!(sel.n_s, 200);
+        assert_eq!(sel.zeta, 0.0);
+        assert!((sel.keep_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subopt_picks_smallest() {
+        let d = dict_with_norms(&[0.1, 5.0, 0.2, 3.0]);
+        let sizes = [100, 100, 100, 100];
+        let sel = select_layers(&d, &sizes, 0.5, SelectionRule::BottomScore);
+        assert_eq!(sel.layers, vec![0, 2]);
+    }
+
+    #[test]
+    fn overshoot_produces_keep_frac() {
+        let d = dict_with_norms(&[1.0, 0.5]);
+        let sizes = [1000, 10];
+        // budget n_s = 0.05*1010 ≈ 51; first layer (1000) overshoots hard
+        let sel = select_layers(&d, &sizes, 0.95, SelectionRule::TopScore);
+        assert_eq!(sel.layers, vec![0]);
+        assert!(sel.sigma_p == 1000);
+        assert!(sel.keep_frac > 0.04 && sel.keep_frac < 0.06, "{}", sel.keep_frac);
+        assert_eq!(sel.zeta, 1.0); // clamped: raw (1000-51)/51 >> 1
+    }
+
+    #[test]
+    fn always_selects_at_least_one_layer() {
+        let d = dict_with_norms(&[0.0, 0.0]);
+        let sizes = [50, 50];
+        let sel = select_layers(&d, &sizes, 0.9999, SelectionRule::TopScore);
+        assert_eq!(sel.layers.len(), 1);
+        assert!(sel.n_s >= 1);
+    }
+
+    #[test]
+    fn frequency_steers_selection() {
+        let mut d = dict_with_norms(&[1.0, 1.0]);
+        for _ in 0..10 {
+            d.mark_selected(&[0]);
+        }
+        let sizes = [100, 100];
+        let sel = select_layers(&d, &sizes, 0.5, SelectionRule::TopScore);
+        assert_eq!(sel.layers[0], 1, "less-visited layer must win the tie");
+        // ...but the no-freq ablation is indifferent (stable sort picks 0)
+        let sel2 = select_layers(&d, &sizes, 0.5, SelectionRule::TopScoreNoFreq);
+        assert_eq!(sel2.layers[0], 0);
+    }
+
+    #[test]
+    fn budget_is_fraction_of_total() {
+        let d = dict_with_norms(&[1.0; 8]);
+        let sizes = [25usize; 8];
+        let sel = select_layers(&d, &sizes, 0.75, SelectionRule::TopScore);
+        assert_eq!(sel.n_s, 50);
+        assert_eq!(sel.layers.len(), 2);
+    }
+}

@@ -1,0 +1,410 @@
+//! The BlockLLM strategy: Alg. 1 wired end-to-end.
+//!
+//! Per step: (1) refresh the gradient-norm dictionary for the active block
+//! plus p sampled layers, (2) let the patience controller decide whether to
+//! re-select, (3) on re-selection run greedy Alg. 2 + mask construction and
+//! REBUILD the sparse Adam state (dropping the old block's state, as the
+//! paper does), (4) run the masked Adam update over the active block, then
+//! (5) refresh the active layers' dictionary entries with true
+//! processed-gradient norms ||G̃|| (the paper's criterion; inactive layers
+//! necessarily carry raw-gradient norms — DESIGN.md §6.2).
+
+use crate::baselines::{StepInfo, Strategy};
+use crate::config::{MaskMode, Method, NormKind, StatePolicy, TrainConfig};
+use crate::memory::{profiles, MemBreakdown};
+use crate::model::ParamStore;
+use crate::optim::masked_adam::{masked_adam_step, LayerState};
+use crate::optim::{AdamHypers, SparseAdamState};
+
+use super::mask::build_masks;
+use super::scorer::NormDictionary;
+use super::selector::{select_layers, SelectionRule};
+use super::PatienceController;
+
+pub struct BlockLlmStrategy {
+    pub dict: NormDictionary,
+    pub patience: PatienceController,
+    state: SparseAdamState,
+    sizes: Vec<usize>,
+    hypers: AdamHypers,
+    sparsity: f64,
+    rule: SelectionRule,
+    mask_mode: MaskMode,
+    sample_p: usize,
+    norm_kind: NormKind,
+    n_params: u64,
+    /// paper §2.2: Reset drops deselected state (the paper's design);
+    /// Offload stashes it host-side and restores on re-selection (tried and
+    /// rejected by the paper — kept for the reproduction of that finding)
+    pub state_policy: StatePolicy,
+    /// host-side stash for Offload: layer -> (m, v)
+    offloaded: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)>,
+    /// telemetry: number of selection events
+    pub n_selections: u64,
+}
+
+impl BlockLlmStrategy {
+    pub fn new(
+        sizes: &[usize],
+        hypers: AdamHypers,
+        sparsity: f64,
+        patience_m: usize,
+        sample_p: usize,
+        rule: SelectionRule,
+        mask_mode: MaskMode,
+        norm_kind: NormKind,
+        seed: u64,
+    ) -> BlockLlmStrategy {
+        BlockLlmStrategy {
+            dict: NormDictionary::new(sizes.len(), norm_kind, seed),
+            patience: PatienceController::new(patience_m),
+            state: SparseAdamState::default(),
+            sizes: sizes.to_vec(),
+            hypers,
+            sparsity,
+            rule,
+            mask_mode,
+            sample_p,
+            norm_kind,
+            n_params: sizes.iter().map(|&s| s as u64).sum(),
+            state_policy: StatePolicy::Reset,
+            offloaded: std::collections::HashMap::new(),
+            n_selections: 0,
+        }
+    }
+
+    pub fn from_config(cfg: &TrainConfig, sizes: &[usize], h: AdamHypers) -> BlockLlmStrategy {
+        let rule = match cfg.method {
+            Method::BlockLlmSubOpt => SelectionRule::BottomScore,
+            Method::BlockLlmNoFreq => SelectionRule::TopScoreNoFreq,
+            _ => SelectionRule::TopScore,
+        };
+        let mut s = BlockLlmStrategy::new(
+            sizes,
+            h,
+            cfg.sparsity,
+            cfg.patience,
+            cfg.sample_layers,
+            rule,
+            cfg.mask_mode,
+            cfg.norm_kind,
+            cfg.seed,
+        );
+        s.state_policy = cfg.state_policy;
+        s
+    }
+
+    pub fn active_layers(&self) -> Vec<usize> {
+        self.state.selected_layers()
+    }
+
+    /// ||G̃|| over the masked coordinates of a just-updated layer — the
+    /// paper's processed-gradient norm, free to compute from (m, v).
+    fn processed_norm(&self, st: &LayerState, step: u64) -> f64 {
+        let bc1 = 1.0 - self.hypers.beta1.powi(step as i32);
+        let bc2 = 1.0 - self.hypers.beta2.powi(step as i32);
+        let eps = self.hypers.eps;
+        let mut sq = 0.0f64;
+        let mut cnt = 0usize;
+        for (i, (&m, &v)) in st.m.iter().zip(&st.v).enumerate() {
+            if st.mask.get(i) {
+                let g = (m as f64 / bc1) / ((v as f64 / bc2).sqrt() + eps);
+                sq += g * g;
+                cnt += 1;
+            }
+        }
+        match self.norm_kind {
+            NormKind::Fro => sq.sqrt(),
+            NormKind::Rms => (sq / cnt.max(1) as f64).sqrt(),
+        }
+    }
+}
+
+impl Strategy for BlockLlmStrategy {
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo {
+        // (2) patience decides whether this is a selection event
+        let will_select = self.patience.observe(loss);
+
+        // (1) dictionary refresh. At selection events Alg. 2 scores EVERY
+        // layer (||G_l|| is a streaming reduction during backward — no grad
+        // storage needed); between events only the active block + p sampled
+        // layers are refreshed.
+        let active = self.state.selected_layers();
+        let probes: Vec<usize> = if will_select {
+            (0..self.sizes.len()).collect()
+        } else {
+            self.dict.layers_to_probe(&active, self.sample_p, step)
+        };
+        for &l in &probes {
+            self.dict.record(l, &grads[l], step);
+        }
+        // modeled grad residency: active coords + the largest probed layer
+        let probe_max = probes.iter().map(|&l| self.sizes[l] as u64).max().unwrap_or(0);
+
+        // (3) re-selection
+        let mut reselected = false;
+        if will_select {
+            let sel = select_layers(&self.dict, &self.sizes, self.sparsity, self.rule);
+            let masks = build_masks(&sel, grads, self.mask_mode);
+            self.dict.mark_selected(&sel.layers);
+            let prev_step = self.state.step;
+            if self.state_policy == StatePolicy::Offload {
+                // stash the outgoing block's moments host-side (paper §2.2:
+                // the rejected alternative)
+                let old = std::mem::take(&mut self.state);
+                for (li, lst) in old.layers {
+                    self.offloaded.insert(li, (lst.m, lst.v));
+                }
+            }
+            // dropping the old state IS the paper's optimizer reset
+            self.state = SparseAdamState::new(masks, &self.sizes);
+            if self.state_policy == StatePolicy::Offload {
+                for (li, lst) in self.state.layers.iter_mut() {
+                    if let Some((m, v)) = self.offloaded.remove(li) {
+                        lst.m = m;
+                        lst.v = v;
+                    }
+                }
+                // bias-correction step continues (restored moments are warm)
+                self.state.step = prev_step;
+            }
+            self.n_selections += 1;
+            reselected = true;
+        }
+
+        // (4) masked sparse Adam over the active block
+        self.state.step += 1;
+        let t = self.state.step;
+        let mut updated = 0u64;
+        for (li, lst) in self.state.layers.iter_mut() {
+            updated +=
+                masked_adam_step(&mut store.bufs[*li], &grads[*li], lst, t, lr, &self.hypers) as u64;
+        }
+
+        // (5) refresh active layers with processed-gradient norms
+        let mut processed: Vec<(usize, f64)> = Vec::with_capacity(self.state.layers.len());
+        for (li, lst) in self.state.layers.iter() {
+            processed.push((*li, 0.0));
+            let n = self.processed_norm(lst, t);
+            processed.last_mut().expect("just pushed").1 = n;
+        }
+        for (li, n) in processed {
+            self.dict.record_norm(li, n, step);
+        }
+
+        let active_coords = self.state.active_coords();
+        let mask_elems: u64 = self.state.layers.iter().map(|(_, s)| s.mask.len as u64).sum();
+        let mem: MemBreakdown =
+            profiles::blockllm(self.n_params, active_coords, active_coords + probe_max, mask_elems);
+
+        StepInfo {
+            updated_coords: updated,
+            reselected,
+            mem,
+            active_layers: self.state.selected_layers(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.rule {
+            SelectionRule::TopScore => "blockllm",
+            SelectionRule::BottomScore => "blockllm-subopt",
+            SelectionRule::TopScoreNoFreq => "blockllm-nofreq",
+        }
+    }
+
+    fn modeled_grad_elems(&self, _n: u64) -> u64 {
+        self.state.active_coords() + self.sizes.iter().map(|&s| s as u64).max().unwrap_or(0)
+    }
+
+    fn telemetry(&self) -> Vec<(String, f64)> {
+        let offload_bytes: usize = self.offloaded.values().map(|(m, v)| 4 * (m.len() + v.len())).sum();
+        vec![
+            ("n_selections".into(), self.n_selections as f64),
+            ("active_coords".into(), self.state.active_coords() as f64),
+            ("offloaded_host_bytes".into(), offload_bytes as f64),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil;
+
+    fn make(sparsity: f64, m: usize) -> BlockLlmStrategy {
+        let sizes: Vec<usize> = testutil::toy_specs().iter().map(|s| s.numel()).collect();
+        BlockLlmStrategy::new(
+            &sizes,
+            AdamHypers::default(),
+            sparsity,
+            m,
+            1,
+            SelectionRule::TopScore,
+            MaskMode::Alg2,
+            NormKind::Rms,
+            1,
+        )
+    }
+
+    #[test]
+    fn first_step_selects_a_block() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.8, 10);
+        let mut store = ParamStore::init(&specs, 2);
+        let grads = testutil::rand_grads(&sizes, 3);
+        let info = s.step(&mut store, &grads, 5.0, 1e-3, 0);
+        assert!(info.reselected);
+        assert!(!info.active_layers.is_empty());
+        let n: u64 = sizes.iter().map(|&x| x as u64).sum();
+        let budget = (0.2 * n as f64) as u64;
+        assert!(info.updated_coords <= budget + 64, "updated {} > budget {}", info.updated_coords, budget);
+        assert!(info.updated_coords > budget / 2);
+    }
+
+    #[test]
+    fn memory_scales_with_sparsity() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut store = ParamStore::init(&specs, 2);
+        let grads = testutil::rand_grads(&sizes, 3);
+        let mut mems = Vec::new();
+        for s_level in [0.5, 0.9, 0.99] {
+            let mut s = make(s_level, 10);
+            let info = s.step(&mut store.clone_store(), &grads, 5.0, 1e-3, 0);
+            mems.push(info.mem.total());
+        }
+        assert!(mems[0] > mems[1] && mems[1] > mems[2], "{mems:?}");
+    }
+
+    #[test]
+    fn only_selected_layers_move() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.9, 100);
+        let mut store = ParamStore::init(&specs, 2);
+        let before: Vec<Vec<f32>> = store.bufs.clone();
+        let grads = testutil::rand_grads(&sizes, 3);
+        let info = s.step(&mut store, &grads, 5.0, 1e-2, 0);
+        for li in 0..sizes.len() {
+            if !info.active_layers.contains(&li) {
+                assert_eq!(store.bufs[li], before[li], "inactive layer {li} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn plateau_triggers_reselection_and_state_reset() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.8, 3);
+        let mut store = ParamStore::init(&specs, 2);
+        let mut reselections = 0;
+        for t in 0..20 {
+            let grads = testutil::rand_grads(&sizes, 50 + t as u64);
+            // constant loss = permanent plateau
+            let info = s.step(&mut store, &grads, 5.0, 1e-3, t);
+            reselections += info.reselected as u32;
+        }
+        assert!(reselections >= 4, "plateau produced only {reselections} reselections");
+        assert_eq!(s.n_selections as u32, reselections);
+    }
+
+    #[test]
+    fn decreasing_loss_keeps_block_stable() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.8, 3);
+        let mut store = ParamStore::init(&specs, 2);
+        let mut reselections = 0;
+        for t in 0..30 {
+            let grads = testutil::rand_grads(&sizes, 70 + t as u64);
+            let info = s.step(&mut store, &grads, 10.0 - 0.3 * t as f64, 1e-3, t);
+            reselections += info.reselected as u32;
+        }
+        assert_eq!(reselections, 1, "loss was strictly improving");
+    }
+
+    #[test]
+    fn visit_frequency_rotates_blocks_under_plateau() {
+        // under a plateau with symmetric gradients, the f_l term must make
+        // selection visit different layers over time
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.7, 1);
+        let mut store = ParamStore::init(&specs, 2);
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..40 {
+            let grads = testutil::rand_grads(&sizes, 7); // same grads each step
+            let info = s.step(&mut store, &grads, 5.0, 1e-9, t);
+            for l in info.active_layers {
+                seen.insert(l);
+            }
+        }
+        assert!(seen.len() >= 3, "selection stuck on {seen:?}");
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        let mut s = make(0.5, 10);
+        let (before, after) = testutil::quadratic_descends(&mut s, 400);
+        assert!(after < before * 0.7, "before={before} after={after}");
+    }
+
+    #[test]
+    fn offload_policy_restores_state_reset_drops_it() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        // patience 1 so every plateau step reselects
+        let run = |policy: StatePolicy| {
+            let mut s = make(0.5, 1);
+            s.state_policy = policy;
+            let mut store = ParamStore::init(&specs, 2);
+            let grads = testutil::rand_grads(&sizes, 3);
+            for t in 0..6 {
+                s.step(&mut store, &grads, 5.0, 1e-3, t); // constant loss
+            }
+            // moment magnitude of the active block after repeated resets
+            let msum: f32 = s
+                .state
+                .layers
+                .iter()
+                .map(|(_, l)| l.m.iter().map(|x| x.abs()).sum::<f32>())
+                .sum();
+            (msum, s.offloaded.len(), s.state.step)
+        };
+        let (m_reset, stash_reset, _) = run(StatePolicy::Reset);
+        let (m_off, _stash_off, step_off) = run(StatePolicy::Offload);
+        assert_eq!(stash_reset, 0, "Reset must not stash anything");
+        // warm restored moments accumulate across reselections -> larger
+        assert!(m_off > m_reset, "offload {m_off} <= reset {m_reset}");
+        assert!(step_off > 1, "offload must keep the Adam step counter");
+    }
+
+    #[test]
+    fn subopt_picks_low_norm_layers() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut top = make(0.8, 100);
+        let mut bottom = make(0.8, 100);
+        bottom.rule = SelectionRule::BottomScore;
+        let mut store = ParamStore::init(&specs, 2);
+        // layer 0 gets huge grads, others tiny
+        let mut grads = testutil::rand_grads(&sizes, 3);
+        for g in grads[0].iter_mut() {
+            *g *= 100.0;
+        }
+        let it = top.step(&mut store.clone_store(), &grads, 5.0, 1e-3, 0);
+        let ib = bottom.step(&mut store.clone_store(), &grads, 5.0, 1e-3, 0);
+        assert!(it.active_layers.contains(&0));
+        assert!(!ib.active_layers.contains(&0));
+    }
+}

@@ -1,0 +1,126 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
+//!
+//! Grammar: `blockllm <command> [--key value]... [--flag]...`
+//! Unknown keys are surfaced to the caller so `TrainConfig::set` can reject
+//! typos loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub kv: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                out.command = it.next().expect("peeked").clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("positional argument {tok:?} after command; use --key value");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.kv.insert(key.to_string(), it.next().expect("peeked").clone());
+                }
+                _ => out.flags.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+blockllm — BlockLLM (Ramesh et al., 2024) reproduction, Rust+JAX+Pallas
+
+USAGE:
+  blockllm train [--preset tiny] [--task c4|alpaca|glue-<t>] [--method blockllm|adam|galore|lora|badam]
+                 [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42] ...
+  blockllm exp --id <fig1|table1|table2|table3|table4|table5|fig3|fig5|fig6|fig7|fig9|table7|table8>
+  blockllm exp --all [--quick]
+  blockllm eval --ckpt path [--preset tiny] [--task c4]
+  blockllm info                 # manifest / artifact inventory
+  blockllm help
+
+Any TrainConfig key can be overridden with --key value (see config/mod.rs).
+Results are written to results/ as JSONL + printed tables.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_kv_flags() {
+        let a = Args::parse(&sv(&["train", "--steps", "100", "--quick", "--lr", "1e-3"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("lr"), Some("1e-3"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn no_command_is_ok() {
+        let a = Args::parse(&sv(&["--all"])).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.flag("all"));
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(&sv(&["train", "oops"])).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = Args::parse(&sv(&["train", "--lr", "-3"])).unwrap();
+        // "-3" does not start with "--" so it is a value
+        assert_eq!(a.get("lr"), Some("-3"));
+    }
+
+    #[test]
+    fn helpers() {
+        let a = Args::parse(&sv(&["x", "--n", "5"])).unwrap();
+        assert_eq!(a.usize_or("n", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(a.usize_or("n", 1).is_ok());
+    }
+}

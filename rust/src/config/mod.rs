@@ -1,0 +1,331 @@
+//! Experiment configuration: typed configs, method registry, presets.
+//!
+//! Every run is fully described by a `TrainConfig`; experiment harnesses
+//! (rust/src/experiments/) construct these programmatically and the CLI can
+//! override any field with `--key value` pairs. Configs serialize to JSON in
+//! the run's results directory so every number in EXPERIMENTS.md is
+//! reproducible.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Which optimization method drives the run (the paper's comparison set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// BlockLLM (the paper's contribution): greedy block selection by
+    /// processed-gradient norm / visit frequency + masked sparse Adam.
+    BlockLlm,
+    /// Ablation: select layers with the SMALLEST gradient norms (§3.3).
+    BlockLlmSubOpt,
+    /// Ablation: BlockLLM without the visit-frequency term f_l (§3.3).
+    BlockLlmNoFreq,
+    /// Full-parameter Adam (the FFT baseline in Tables 7/8).
+    FullAdam,
+    /// GaLore: gradient low-rank projection + Adam in rank-r space.
+    GaLore,
+    /// LoRA: rank-r adapters per 2-D matrix, Adam over adapters only.
+    LoRa,
+    /// BAdam (Luo et al., 2024): cyclic block coordinate Adam, K steps/block.
+    BAdam,
+    /// Magnitude-pruning analysis optimizer (§2): update top-k |W| coords.
+    Magnitude,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "blockllm" => Method::BlockLlm,
+            "blockllm-subopt" => Method::BlockLlmSubOpt,
+            "blockllm-nofreq" => Method::BlockLlmNoFreq,
+            "adam" | "fft" => Method::FullAdam,
+            "galore" => Method::GaLore,
+            "lora" => Method::LoRa,
+            "badam" => Method::BAdam,
+            "magnitude" => Method::Magnitude,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::BlockLlm => "blockllm",
+            Method::BlockLlmSubOpt => "blockllm-subopt",
+            Method::BlockLlmNoFreq => "blockllm-nofreq",
+            Method::FullAdam => "adam",
+            Method::GaLore => "galore",
+            Method::LoRa => "lora",
+            Method::BAdam => "badam",
+            Method::Magnitude => "magnitude",
+        }
+    }
+}
+
+/// How layer gradient norms are computed for selection (DESIGN.md §6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    /// Frobenius norm (size-biased: big layers win).
+    Fro,
+    /// Root-mean-square norm (size-invariant; default).
+    Rms,
+}
+
+/// What happens to a deselected layer's Adam state (paper §2.2 "Memory
+/// Efficiency": reset is the paper's choice; offload-to-CPU was tried and
+/// rejected — both are implemented so the finding can be reproduced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatePolicy {
+    /// drop state on re-selection (the paper's final design)
+    Reset,
+    /// stash (M, V) on the host and restore when the layer is re-selected
+    Offload,
+}
+
+/// Masking policy within selected layers (DESIGN.md §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskMode {
+    /// Alg. 2 literal: per-layer (1-zeta)-percentile threshold on |G̃|.
+    Alg2,
+    /// Only the last (overshooting) layer is masked; earlier layers dense.
+    OvershootOnly,
+    /// No intra-layer masking at all (whole selected layers train densely).
+    DenseLayers,
+}
+
+/// Workload selector — maps to a data generator + artifact kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// C4-sim LM pretraining stream.
+    C4Pretrain,
+    /// Alpaca-sim instruction finetuning (LM with masked prefix loss).
+    AlpacaFinetune,
+    /// GLUE-sim classification task (id 0..7) on a pretrained trunk.
+    Glue(usize),
+    /// The §2 analysis protocol: sentiment-ish task A -> acceptability-ish B.
+    DomainShift,
+}
+
+impl Task {
+    pub fn name(&self) -> String {
+        match self {
+            Task::C4Pretrain => "c4-pretrain".into(),
+            Task::AlpacaFinetune => "alpaca-finetune".into(),
+            Task::Glue(i) => format!("glue-{}", crate::data::gluesim::TASK_NAMES[*i]),
+            Task::DomainShift => "domain-shift".into(),
+        }
+    }
+}
+
+/// The full run description.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub task: Task,
+    pub method: Method,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub use_pallas_artifact: bool,
+    /// microbatches accumulated per optimizer step (paper App. A.6/A.7
+    /// train with accumulation 2-4)
+    pub grad_accum: usize,
+
+    // optimizer
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub cosine_lr: bool,
+    pub warmup_frac: f64,
+
+    // BlockLLM hyperparameters (paper notation)
+    pub sparsity: f64,      // s: fraction NOT updated
+    pub patience: usize,    // m: loss-history window
+    pub sample_layers: usize, // p: extra layers scored per step
+    pub norm_kind: NormKind,
+    pub mask_mode: MaskMode,
+    pub state_policy: StatePolicy,
+
+    // GaLore / LoRA
+    pub rank: usize,
+    pub galore_scale: f64,
+    pub galore_refresh: usize,
+    pub lora_alpha: f64,
+
+    // BAdam
+    pub badam_k: usize, // steps per block before switching
+
+    // Magnitude analysis (§2)
+    pub mag_update_every: usize, // m in §2.1: re-select every m steps
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "nano".into(),
+            task: Task::C4Pretrain,
+            method: Method::BlockLlm,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            seed: 42,
+            use_pallas_artifact: false,
+            grad_accum: 1,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            cosine_lr: true,
+            warmup_frac: 0.0,
+            sparsity: 0.5,
+            patience: 50,
+            sample_layers: 2,
+            norm_kind: NormKind::Rms,
+            mask_mode: MaskMode::Alg2,
+            state_policy: StatePolicy::Reset,
+            rank: 8,
+            galore_scale: 0.25,
+            galore_refresh: 200,
+            lora_alpha: 32.0,
+            badam_k: 100,
+            mag_update_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply a `--key value` CLI override. Returns error on unknown keys so
+    /// typos fail loudly.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "preset" => self.preset = val.into(),
+            "method" => self.method = Method::parse(val)?,
+            "task" => {
+                self.task = match val {
+                    "c4" | "pretrain" => Task::C4Pretrain,
+                    "alpaca" | "finetune" => Task::AlpacaFinetune,
+                    "domain-shift" => Task::DomainShift,
+                    v if v.starts_with("glue-") => {
+                        let name = &v[5..];
+                        let idx = crate::data::gluesim::TASK_NAMES
+                            .iter()
+                            .position(|t| *t == name)
+                            .ok_or_else(|| anyhow::anyhow!("unknown glue task {name}"))?;
+                        Task::Glue(idx)
+                    }
+                    v => bail!("unknown task {v:?}"),
+                }
+            }
+            "steps" => self.steps = val.parse()?,
+            "eval-every" => self.eval_every = val.parse()?,
+            "eval-batches" => self.eval_batches = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "pallas" => self.use_pallas_artifact = val.parse()?,
+            "grad-accum" => self.grad_accum = val.parse::<usize>()?.max(1),
+            "lr" => self.lr = val.parse()?,
+            "beta1" => self.beta1 = val.parse()?,
+            "beta2" => self.beta2 = val.parse()?,
+            "eps" => self.eps = val.parse()?,
+            "weight-decay" => self.weight_decay = val.parse()?,
+            "cosine-lr" => self.cosine_lr = val.parse()?,
+            "warmup-frac" => self.warmup_frac = val.parse()?,
+            "sparsity" | "s" => self.sparsity = val.parse()?,
+            "patience" | "m" => self.patience = val.parse()?,
+            "sample-layers" | "p" => self.sample_layers = val.parse()?,
+            "norm" => {
+                self.norm_kind = match val {
+                    "fro" => NormKind::Fro,
+                    "rms" => NormKind::Rms,
+                    v => bail!("unknown norm {v:?}"),
+                }
+            }
+            "state-policy" => {
+                self.state_policy = match val {
+                    "reset" => StatePolicy::Reset,
+                    "offload" => StatePolicy::Offload,
+                    v => bail!("unknown state policy {v:?}"),
+                }
+            }
+            "mask-mode" => {
+                self.mask_mode = match val {
+                    "alg2" => MaskMode::Alg2,
+                    "overshoot-only" => MaskMode::OvershootOnly,
+                    "dense-layers" => MaskMode::DenseLayers,
+                    v => bail!("unknown mask mode {v:?}"),
+                }
+            }
+            "rank" => self.rank = val.parse()?,
+            "galore-scale" => self.galore_scale = val.parse()?,
+            "galore-refresh" => self.galore_refresh = val.parse()?,
+            "lora-alpha" => self.lora_alpha = val.parse()?,
+            "badam-k" => self.badam_k = val.parse()?,
+            "mag-update-every" => self.mag_update_every = val.parse()?,
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("task", Json::str(self.task.name())),
+            ("method", Json::str(self.method.name())),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", Json::num(self.lr)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("patience", Json::num(self.patience as f64)),
+            ("rank", Json::num(self.rank as f64)),
+            ("badam_k", Json::num(self.badam_k as f64)),
+            ("cosine_lr", Json::Bool(self.cosine_lr)),
+            ("pallas", Json::Bool(self.use_pallas_artifact)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::BlockLlm,
+            Method::BlockLlmSubOpt,
+            Method::BlockLlmNoFreq,
+            Method::FullAdam,
+            Method::GaLore,
+            Method::LoRa,
+            Method::BAdam,
+            Method::Magnitude,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn config_overrides() {
+        let mut c = TrainConfig::default();
+        c.set("method", "galore").unwrap();
+        c.set("sparsity", "0.95").unwrap();
+        c.set("m", "100").unwrap();
+        c.set("task", "glue-cola").unwrap();
+        assert_eq!(c.method, Method::GaLore);
+        assert_eq!(c.sparsity, 0.95);
+        assert_eq!(c.patience, 100);
+        assert!(matches!(c.task, Task::Glue(_)));
+        assert!(c.set("not-a-key", "1").is_err());
+        assert!(c.set("steps", "abc").is_err());
+    }
+
+    #[test]
+    fn config_json_has_method() {
+        let c = TrainConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.req("method").unwrap().as_str().unwrap(), "blockllm");
+    }
+}

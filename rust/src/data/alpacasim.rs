@@ -1,0 +1,147 @@
+//! Alpaca-sim: synthetic instruction-following pairs (DESIGN.md §5).
+//!
+//! Each example is `BOS <instruction> SEP <response> PERIOD pad...` where the
+//! response is a *computable function* of the instruction, drawn from a small
+//! task grammar:
+//!
+//!   reverse   — respond with the payload tokens reversed
+//!   echo      — respond with the payload verbatim
+//!   last      — respond with the final payload token repeated 3x
+//!   swapcase  — respond with each payload token xor'd within its alphabet
+//!
+//! Finetuning on this distribution is a strong-format domain shift relative
+//! to the C4-sim pretraining stream (new control structure, new conditional
+//! dependencies), which is exactly the regime the paper's §3.1 targets.
+//! Loss is masked to the response span (targets = -1 elsewhere), matching
+//! instruction-tuning practice.
+
+use super::{LmBatch, LmStream, SEP};
+use crate::util::rng::Pcg64;
+
+const PERIOD: i32 = 4;
+const TASK_TOKENS: [i32; 4] = [16, 17, 18, 19]; // one marker token per task
+const PAYLOAD_LO: i32 = 32;
+const PAYLOAD_SPAN: i32 = 64;
+
+pub struct AlpacaSim {
+    rng: Pcg64,
+    /// restrict to a subset of tasks (ablations / eval splits)
+    pub tasks: Vec<usize>,
+}
+
+impl AlpacaSim {
+    pub fn new(seed: u64) -> Self {
+        AlpacaSim { rng: Pcg64::with_stream(seed, 0xA1), tasks: vec![0, 1, 2, 3] }
+    }
+
+    /// Build one example; returns (tokens, targets) of length `seq`.
+    fn example(&mut self, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let task = self.tasks[self.rng.below(self.tasks.len())];
+        let payload_len = 3 + self.rng.below(8);
+        let payload: Vec<i32> = (0..payload_len)
+            .map(|_| PAYLOAD_LO + self.rng.below(PAYLOAD_SPAN as usize) as i32)
+            .collect();
+
+        let response: Vec<i32> = match task {
+            0 => payload.iter().rev().copied().collect(),
+            1 => payload.clone(),
+            2 => vec![payload[payload.len() - 1]; 3],
+            _ => payload.iter().map(|&t| PAYLOAD_LO + ((t - PAYLOAD_LO) ^ 1)).collect(),
+        };
+
+        let mut tokens = Vec::with_capacity(seq);
+        tokens.push(super::BOS);
+        tokens.push(TASK_TOKENS[task]);
+        tokens.extend_from_slice(&payload);
+        tokens.push(SEP);
+        let resp_start = tokens.len();
+        tokens.extend_from_slice(&response);
+        tokens.push(PERIOD);
+        tokens.truncate(seq);
+        let used = tokens.len();
+        tokens.resize(seq, super::PAD);
+
+        // next-token targets, masked to the response span (the token BEFORE
+        // each response position predicts it, so the mask starts at
+        // resp_start-1 in target space).
+        let mut targets = vec![-1i32; seq];
+        for j in 0..seq - 1 {
+            let predicts = j + 1; // position the target lives at
+            if predicts >= resp_start && predicts < used {
+                targets[j] = tokens[predicts];
+            }
+        }
+        (tokens, targets)
+    }
+}
+
+impl LmStream for AlpacaSim {
+    fn next_batch(&mut self, batch: usize, seq: usize) -> LmBatch {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let (t, g) = self.example(seq);
+            tokens.extend(t);
+            targets.extend(g);
+        }
+        LmBatch { tokens, targets, batch, seq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn responses_are_functions_of_instructions() {
+        let mut a = AlpacaSim::new(1);
+        a.tasks = vec![0]; // reverse only
+        let (tokens, _) = a.example(64);
+        // parse: BOS task payload... SEP response... PERIOD
+        let sep = tokens.iter().position(|&t| t == SEP).unwrap();
+        let payload = &tokens[2..sep];
+        let period = tokens[sep + 1..].iter().position(|&t| t == PERIOD).unwrap() + sep + 1;
+        let response = &tokens[sep + 1..period];
+        let want: Vec<i32> = payload.iter().rev().copied().collect();
+        assert_eq!(response, &want[..]);
+    }
+
+    #[test]
+    fn loss_mask_covers_only_response() {
+        let mut a = AlpacaSim::new(2);
+        let (tokens, targets) = a.example(64);
+        let sep = tokens.iter().position(|&t| t == SEP).unwrap();
+        // everything predicting positions <= sep must be masked
+        for j in 0..sep {
+            assert_eq!(targets[j], -1, "instruction position {j} not masked");
+        }
+        // at least one unmasked target exists and matches the next token
+        let live: Vec<usize> = (0..63).filter(|&j| targets[j] >= 0).collect();
+        assert!(!live.is_empty());
+        for &j in &live {
+            assert_eq!(targets[j], tokens[j + 1]);
+        }
+    }
+
+    #[test]
+    fn batches_have_variety() {
+        let mut a = AlpacaSim::new(3);
+        let b = a.next_batch(8, 64);
+        let first_row = &b.tokens[..64];
+        let any_diff = (1..8).any(|r| &b.tokens[r * 64..(r + 1) * 64] != first_row);
+        assert!(any_diff);
+    }
+
+    #[test]
+    fn swapcase_is_involution() {
+        let mut a = AlpacaSim::new(4);
+        a.tasks = vec![3];
+        let (tokens, _) = a.example(64);
+        let sep = tokens.iter().position(|&t| t == SEP).unwrap();
+        let payload = &tokens[2..sep];
+        let period = tokens[sep + 1..].iter().position(|&t| t == PERIOD).unwrap() + sep + 1;
+        let response = &tokens[sep + 1..period];
+        let back: Vec<i32> = response.iter().map(|&t| PAYLOAD_LO + ((t - PAYLOAD_LO) ^ 1)).collect();
+        assert_eq!(&back[..], payload);
+    }
+}

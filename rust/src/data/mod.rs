@@ -1,0 +1,90 @@
+//! Synthetic data substrates standing in for the paper's corpora
+//! (DESIGN.md §5): C4 -> `c4sim`, Alpaca -> `alpacasim`, GLUE -> `gluesim`.
+//!
+//! All generators are deterministic functions of a seed, emit byte-level
+//! token ids in [0, 256), and produce batches shaped exactly like the AOT
+//! artifacts expect: LM batches (tokens, targets) i32[B,T] with -1 = ignore,
+//! classification batches (tokens i32[B,T], labels).
+
+pub mod alpacasim;
+pub mod c4sim;
+pub mod gluesim;
+
+pub const VOCAB: usize = 256;
+/// Token 0 doubles as padding (targets at pad positions are -1 = ignored).
+pub const PAD: i32 = 0;
+/// Separator token for pair tasks / instruction boundaries.
+pub const SEP: i32 = 1;
+/// Begin-of-sequence.
+pub const BOS: i32 = 2;
+
+/// An LM batch matching the `*_lm_*` artifacts.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,  // [b*t]
+    pub targets: Vec<i32>, // [b*t], -1 = ignore
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// A classification/regression batch matching the `*_cls*`/`*_reg*` artifacts.
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,    // [b*t]
+    pub labels_i: Vec<i32>,  // [b] (classification)
+    pub labels_f: Vec<f32>,  // [b] (regression)
+    pub regression: bool,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Anything that can feed the LM trainer.
+pub trait LmStream {
+    fn next_batch(&mut self, batch: usize, seq: usize) -> LmBatch;
+}
+
+/// Anything that can feed the classifier trainer. `train` selects split.
+pub trait ClsSource {
+    fn n_classes(&self) -> usize;
+    fn regression(&self) -> bool;
+    fn batch(&mut self, batch: usize, seq: usize, train: bool) -> ClsBatch;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::c4sim::C4Sim;
+    use super::*;
+
+    #[test]
+    fn lm_batch_shapes_and_ranges() {
+        let mut s = C4Sim::new(1);
+        let b = s.next_batch(4, 32);
+        assert_eq!(b.tokens.len(), 4 * 32);
+        assert_eq!(b.targets.len(), 4 * 32);
+        assert!(b.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        assert!(b.targets.iter().all(|&t| t >= -1 && t < VOCAB as i32));
+    }
+
+    #[test]
+    fn lm_targets_are_shifted_tokens() {
+        let mut s = C4Sim::new(2);
+        let b = s.next_batch(2, 16);
+        for row in 0..2 {
+            for j in 0..15 {
+                let tgt = b.targets[row * 16 + j];
+                if tgt >= 0 {
+                    assert_eq!(tgt, b.tokens[row * 16 + j + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        let mut a = C4Sim::new(7);
+        let mut b = C4Sim::new(7);
+        assert_eq!(a.next_batch(2, 32).tokens, b.next_batch(2, 32).tokens);
+        let mut c = C4Sim::new(8);
+        assert_ne!(a.next_batch(2, 32).tokens, c.next_batch(2, 32).tokens);
+    }
+}

@@ -1,0 +1,210 @@
+//! Shared experiment machinery: result persistence, table rendering, run
+//! drivers, and the pretrain-checkpoint cache used by finetune experiments.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Task, TrainConfig};
+use crate::data::{alpacasim::AlpacaSim, c4sim::C4Sim, gluesim::GlueSim};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+use crate::trainer::{RunResult, Trainer};
+use crate::util::json::Json;
+
+/// results/ directory next to artifacts/ (repo root).
+pub fn results_dir() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("artifacts").join("manifest.json").exists() {
+            return dir.join("results");
+        }
+        if !dir.pop() {
+            return PathBuf::from("results");
+        }
+    }
+}
+
+pub fn save_json(name: &str, v: &Json) -> Result<()> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), v.to_string())?;
+    Ok(())
+}
+
+/// Render an aligned ASCII table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// ASCII sparkline of a series (the repo's "figure" rendering).
+pub fn sparkline(series: &[f64], width: usize) -> String {
+    if series.is_empty() {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let stride = (series.len() as f64 / width as f64).max(1.0);
+    let samples: Vec<f64> = (0..series.len().min(width))
+        .map(|i| series[(((i as f64) * stride) as usize).min(series.len() - 1)])
+        .collect();
+    let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    samples
+        .iter()
+        .map(|&v| {
+            let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+            GLYPHS[((t * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+/// Run one config end-to-end on its task's data (fresh Runtime reuse via
+/// caller-provided `rt`). `warm` optionally seeds the trunk.
+pub fn run_config(
+    rt: &mut Runtime,
+    cfg: &TrainConfig,
+    warm: Option<&ParamStore>,
+) -> Result<RunResult> {
+    let mut tr = Trainer::new(rt, cfg.clone(), warm)
+        .with_context(|| format!("trainer for {:?}", cfg.method))?;
+    let seed = cfg.seed;
+    match cfg.task {
+        Task::C4Pretrain => {
+            let mut train = C4Sim::new(seed);
+            let mut eval = C4Sim::new(seed ^ 0xEEEE);
+            tr.train_lm(&mut train, &mut eval)
+        }
+        Task::AlpacaFinetune => {
+            let mut train = AlpacaSim::new(seed);
+            let mut eval = AlpacaSim::new(seed ^ 0xEEEE);
+            tr.train_lm(&mut train, &mut eval)
+        }
+        Task::Glue(i) => {
+            let mut src = GlueSim::new(i, seed);
+            tr.train_cls(&mut src)
+        }
+        Task::DomainShift => {
+            // sentiment-ish source task at offset 0 (the IMDb stand-in)
+            let mut src = GlueSim::new(4, seed);
+            tr.train_cls(&mut src)
+        }
+    }
+}
+
+/// Like `run_config` but returns the trained parameters too.
+pub fn run_config_with_params(
+    rt: &mut Runtime,
+    cfg: &TrainConfig,
+    warm: Option<&ParamStore>,
+) -> Result<(RunResult, ParamStore)> {
+    let mut tr = Trainer::new(rt, cfg.clone(), warm)?;
+    let seed = cfg.seed;
+    let res = match cfg.task {
+        Task::C4Pretrain => {
+            let mut train = C4Sim::new(seed);
+            let mut eval = C4Sim::new(seed ^ 0xEEEE);
+            tr.train_lm(&mut train, &mut eval)?
+        }
+        Task::AlpacaFinetune => {
+            let mut train = AlpacaSim::new(seed);
+            let mut eval = AlpacaSim::new(seed ^ 0xEEEE);
+            tr.train_lm(&mut train, &mut eval)?
+        }
+        Task::Glue(i) => {
+            let mut src = GlueSim::new(i, seed);
+            tr.train_cls(&mut src)?
+        }
+        Task::DomainShift => {
+            let mut src = GlueSim::new(4, seed);
+            tr.train_cls(&mut src)?
+        }
+    };
+    Ok((res, tr.store))
+}
+
+/// Pretrain (or load a cached) LM checkpoint for warm starts.
+pub fn pretrained_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
+    let dir = results_dir().join("ckpt");
+    let path = dir.join(format!("{preset}_c4_{steps}_{seed}.bin"));
+    if path.exists() {
+        return ParamStore::load(&path);
+    }
+    let mut cfg = TrainConfig::default();
+    cfg.preset = preset.to_string();
+    cfg.task = Task::C4Pretrain;
+    cfg.method = crate::config::Method::FullAdam;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.lr = 1e-3;
+    println!("[common] pretraining {preset} checkpoint for {steps} steps (cached at {path:?})");
+    let (_res, store) = run_config_with_params(rt, &cfg, None)?;
+    store.save(&path)?;
+    Ok(store)
+}
+
+/// Pretrain (or load) a *classifier* checkpoint on the DomainShift source
+/// task — the DistilBERT-on-IMDb stand-in for the §2 analyses.
+pub fn pretrained_cls_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
+    let dir = results_dir().join("ckpt");
+    let path = dir.join(format!("{preset}_cls_{steps}_{seed}.bin"));
+    if path.exists() {
+        return ParamStore::load(&path);
+    }
+    let mut cfg = TrainConfig::default();
+    cfg.preset = preset.to_string();
+    cfg.task = Task::DomainShift;
+    cfg.method = crate::config::Method::FullAdam;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.lr = 3e-4;
+    println!("[common] pretraining {preset} classifier checkpoint ({steps} steps)");
+    let (_res, store) = run_config_with_params(rt, &cfg, None)?;
+    store.save(&path)?;
+    Ok(store)
+}
+
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[1.0, 2.0, 3.0, 2.0, 1.0], 5);
+        assert_eq!(s.chars().count(), 5);
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        print_table(
+            "t",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Tables 7 & 8 — the GLUE suite: VRAM + score for BlockLLM vs GaLore
+//! (rank 8 / rank 4) vs full finetuning (FFT).
+//!
+//! Paper workload: pretrained RoBERTa-base finetuned per GLUE task,
+//! BlockLLM s=0.95, m = total_steps/4, per-task LRs (App. A.5). Ours: the
+//! `micro` preset warm-started from a C4-sim checkpoint, finetuned on each
+//! GLUE-sim task (DESIGN.md §5). Scores: accuracy (most), Matthews (CoLA),
+//! Spearman (STS-B) — the GLUE convention the paper's Table 8 follows.
+//!
+//! Expected shape (paper Tables 7/8): BlockLLM matches-or-beats the
+//! baselines' scores with ~13.5% average memory reduction.
+
+use anyhow::Result;
+
+use super::common::{fmt_mb, print_table, pretrained_checkpoint, run_config, save_json};
+use crate::config::{Method, Task, TrainConfig};
+use crate::data::gluesim::TASK_NAMES;
+use crate::metrics::{matthews_corr, spearman_corr};
+use crate::runtime::Runtime;
+use crate::trainer::RunResult;
+use crate::util::json::Json;
+
+/// Per-task learning rates (paper Table 6, scaled one decade up for our
+/// smaller models).
+const TASK_LRS: [f64; 8] = [3e-4, 5e-4, 3e-4, 3e-4, 3e-4, 3e-4, 1e-4, 3e-4];
+
+fn score(task: usize, res: &RunResult) -> f64 {
+    let last = res.evals.last().expect("eval point");
+    match task {
+        1 => {
+            // CoLA -> Matthews correlation * 100
+            let preds: Vec<u32> = last.preds.iter().map(|&p| p as u32).collect();
+            let labels: Vec<u32> = last.labels.iter().map(|&l| l as u32).collect();
+            matthews_corr(&preds, &labels) * 100.0
+        }
+        2 => spearman_corr(&last.preds, &last.labels) * 100.0, // STS-B
+        _ => last.metric * 100.0,                              // accuracy
+    }
+}
+
+pub fn run_table7_table8(quick: bool) -> Result<()> {
+    let mut rt = Runtime::open_default()?;
+    let preset = "micro";
+    let warm = pretrained_checkpoint(&mut rt, preset, if quick { 40 } else { 200 }, 7)?;
+
+    // (label, method, rank)
+    let variants: &[(&str, Method, usize)] = &[
+        ("Block-LLM", Method::BlockLlm, 0),
+        ("GaLore (rank=8)", Method::GaLore, 8),
+        ("GaLore (rank=4)", Method::GaLore, 4),
+        ("FFT", Method::FullAdam, 0),
+    ];
+    let tasks: Vec<usize> = if quick { vec![1, 4] } else { (0..8).collect() };
+
+    // rows keyed [variant][task]
+    let mut mem_rows: Vec<Vec<String>> = variants.iter().map(|v| vec![v.0.to_string()]).collect();
+    let mut score_rows: Vec<Vec<String>> = variants.iter().map(|v| vec![v.0.to_string()]).collect();
+    let mut rec = Vec::new();
+
+    for &task in &tasks {
+        // steps scale mildly with paper dataset size
+        let size_k = crate::data::gluesim::TASK_SIZES_K[task];
+        let steps = if quick {
+            40
+        } else {
+            (80 + (size_k as f64).sqrt() as usize * 4).min(160)
+        };
+        for (vi, (label, method, rank)) in variants.iter().enumerate() {
+            let mut cfg = TrainConfig::default();
+            cfg.preset = preset.into();
+            cfg.task = Task::Glue(task);
+            cfg.method = *method;
+            cfg.steps = steps;
+            cfg.eval_every = 0;
+            cfg.eval_batches = 16;
+            cfg.lr = TASK_LRS[task];
+            cfg.sparsity = 0.95; // paper App. A.5
+            cfg.patience = (steps / 4).max(1); // paper: m = total/4
+            if *rank > 0 {
+                cfg.rank = *rank;
+            }
+            println!("[table7/8] {} on {} ({steps} steps) ...", label, TASK_NAMES[task]);
+            let res = run_config(&mut rt, &cfg, Some(&warm))?;
+            let sc = score(task, &res);
+            mem_rows[vi].push(fmt_mb(res.peak_mem_bytes));
+            score_rows[vi].push(format!("{sc:.2}"));
+            rec.push(Json::obj(vec![
+                ("task", Json::str(TASK_NAMES[task])),
+                ("method", Json::str(*label)),
+                ("score", Json::num(sc)),
+                ("mem_bytes", Json::num(res.peak_mem_bytes as f64)),
+                ("eval_loss", Json::num(res.final_eval_loss())),
+            ]));
+        }
+    }
+
+    // averages
+    for rows in [&mut mem_rows, &mut score_rows] {
+        for row in rows.iter_mut() {
+            let vals: Vec<f64> = row[1..].iter().filter_map(|c| c.parse().ok()).collect();
+            let avg = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
+            row.push(format!("{avg:.2}"));
+        }
+    }
+
+    let mut headers: Vec<&str> = vec![""];
+    let names: Vec<&str> = tasks.iter().map(|&t| TASK_NAMES[t]).collect();
+    headers.extend(names.iter());
+    headers.push("Avg.");
+    print_table(
+        "Table 7 — peak training memory (MB; paper reports GB for RoBERTa-base)",
+        &headers,
+        &mem_rows,
+    );
+    print_table(
+        "Table 8 — GLUE-sim scores (acc / Matthews / Spearman × 100)",
+        &headers,
+        &score_rows,
+    );
+    println!("shape check (paper): Block-LLM ≥ baseline scores at ~13.5% less memory than FFT/GaLore");
+    save_json("table7_table8_glue", &Json::Arr(rec))?;
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! The §2 analysis suite: Table 2 (sparsity-accuracy trade-off), Fig. 3/8
+//! (weight-change histograms), Tables 3/4/5 (adaptive reduced-parameter
+//! training: update frequency m vs unique-update fraction q).
+//!
+//! Paper protocol: DistilBERT pretrained on IMDb, magnitude-pruned, then
+//! finetuned on GLUE-CoLA (a domain shift). Ours: the `nano` classifier
+//! pretrained on sst2-sim at vocab offset 0, finetuned on the shifted task
+//! (DESIGN.md §5 "DistilBERT+IMDb->CoLA" row).
+
+use anyhow::Result;
+
+use super::common::{fmt_mb, pretrained_cls_checkpoint, print_table, save_json};
+use crate::config::{Method, Task, TrainConfig};
+use crate::data::gluesim::GlueSim;
+use crate::metrics::{matthews_corr, spearman_corr, Histogram};
+use crate::runtime::Runtime;
+use crate::trainer::{RunResult, Trainer};
+use crate::util::json::Json;
+
+const SHIFT_OFFSET: i32 = 48;
+
+/// Finetune the warm-started classifier on the shifted target task with a
+/// given strategy config; returns the result and final params.
+fn finetune_shifted(
+    rt: &mut Runtime,
+    cfg: &TrainConfig,
+    warm: &crate::model::ParamStore,
+    target_task: usize,
+) -> Result<(RunResult, crate::model::ParamStore)> {
+    let mut tr = Trainer::new(rt, cfg.clone(), Some(warm))?;
+    let mut src = GlueSim::new(target_task, cfg.seed).with_offset(SHIFT_OFFSET);
+    let res = tr.train_cls(&mut src)?;
+    Ok((res, tr.store))
+}
+
+fn base_cfg(quick: bool, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "nano".into();
+    cfg.task = Task::DomainShift; // resolves the cls artifact
+    cfg.method = Method::Magnitude;
+    cfg.steps = if quick { steps.min(40) } else { steps };
+    cfg.eval_every = 0;
+    cfg.eval_batches = 16;
+    cfg.lr = 3e-4;
+    cfg.cosine_lr = true;
+    cfg.seed = 42;
+    cfg
+}
+
+/// Table 2: magnitude pruning at fixed sparsity levels.
+pub fn run_table2(quick: bool) -> Result<()> {
+    let mut rt = Runtime::open_default()?;
+    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+
+    // source-task accuracy before / after the shift (the paper's 92% -> 48%)
+    {
+        let mut cfg = base_cfg(quick, 0);
+        cfg.steps = 1;
+        cfg.lr = 0.0;
+        let mut tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+        let mut src_a = GlueSim::new(4, cfg.seed);
+        let ev_a = tr.eval_cls(&mut src_a)?;
+        let mut src_b = GlueSim::new(1, cfg.seed).with_offset(SHIFT_OFFSET);
+        let ev_b = tr.eval_cls(&mut src_b)?;
+        println!(
+            "[table2] source-task acc {:.1}% -> shifted-task zero-shot acc {:.1}% (paper: 92.0 -> 47.7)",
+            ev_a.metric * 100.0,
+            ev_b.metric * 100.0
+        );
+    }
+
+    let levels: &[f64] = if quick { &[0.0, 0.5, 0.9] } else { &[0.0, 0.5, 0.6, 0.7, 0.8, 0.9] };
+    let mut rows = Vec::new();
+    let mut rec = Vec::new();
+    for &s in levels {
+        let mut cfg = base_cfg(quick, 150);
+        cfg.sparsity = s;
+        cfg.mag_update_every = 0; // Table 2: selection fixed from W^0
+        if s == 0.0 {
+            cfg.method = Method::FullAdam; // s=0 row is plain finetuning
+        }
+        println!("[table2] s={s} ...");
+        let (res, _) = finetune_shifted(&mut rt, &cfg, &warm, 1)?;
+        rows.push(vec![format!("{s:.1}"), format!("{:.2}", res.final_metric() * 100.0)]);
+        rec.push(Json::obj(vec![
+            ("sparsity", Json::num(s)),
+            ("accuracy", Json::num(res.final_metric() * 100.0)),
+        ]));
+    }
+    print_table("Table 2 — pruned-finetune accuracy vs sparsity (paper: DistilBERT IMDb->CoLA)",
+        &["sparsity", "accuracy"], &rows);
+    println!("shape check (paper): mild drop to s=0.5, cliff by s=0.7, flat after");
+    save_json("table2_magnitude", &Json::Arr(rec))?;
+    Ok(())
+}
+
+/// Fig. 3 / Fig. 8: histograms of the weight changes during the shifted
+/// finetune — most |δ| are tiny; changed weights are low-magnitude.
+pub fn run_fig3_histograms(quick: bool) -> Result<()> {
+    let mut rt = Runtime::open_default()?;
+    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+    let mut cfg = base_cfg(quick, 200);
+    cfg.sparsity = 0.7; // the paper's Fig. 8 setting
+    cfg.mag_update_every = 0;
+    println!("[fig3] finetuning s=0.7 for histogram capture ...");
+    // snapshot W^0 (post warm start, pre finetune)
+    let tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+    let w0 = tr.store.clone_store();
+    drop(tr);
+    let (_res, wt) = finetune_shifted(&mut rt, &cfg, &warm, 1)?;
+
+    let eta = 1e-4; // change threshold (paper uses 1e-3 at DistilBERT scale)
+    let mut h_mag = Histogram::new(0.0, 0.5, 20); // |w^t| of changed params
+    let mut h_delta = Histogram::new(0.0, 2e-3, 20); // δ distribution
+    let mut changed = 0u64;
+    let mut total = 0u64;
+    for (a, b) in w0.bufs.iter().zip(&wt.bufs) {
+        for (&x0, &x1) in a.iter().zip(b) {
+            let d = (x0 - x1).abs() as f64;
+            total += 1;
+            h_delta.add(d);
+            if d > eta {
+                changed += 1;
+                h_mag.add(x1.abs() as f64);
+            }
+        }
+    }
+    println!("\n== Fig 3a — |w^t| of parameters with δ > {eta} ({changed}/{total} changed) ==");
+    print!("{}", h_mag.render(50));
+    println!("\n== Fig 3b — distribution of δ = |w^0 - w^t| ==");
+    print!("{}", h_delta.render(50));
+    println!("shape check (paper): δ mass concentrated near zero; changed weights skew low-magnitude");
+
+    save_json(
+        "fig3_histograms",
+        &Json::obj(vec![
+            ("changed", Json::num(changed as f64)),
+            ("total", Json::num(total as f64)),
+            ("hist_mag", h_mag.to_json()),
+            ("hist_delta", h_delta.to_json()),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Tables 3/4/5: adaptive selection — vary (1-s) and update period m, track
+/// q (unique-update fraction), score, and modeled VRAM.
+/// `which`: 0 = Table 3 (CoLA-sim / accuracy+Matthews), 1 = Table 4
+/// (STS-B-sim / Spearman), 2 = Table 5 (SST2-sim / accuracy+VRAM).
+pub fn run_table3_5(which: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::open_default()?;
+    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+
+    let (title, target_task, combos): (&str, usize, Vec<(f64, usize)>) = match which {
+        0 => (
+            "Table 3 — update frequency & sparsity on CoLA-sim",
+            1,
+            vec![(0.1, 50), (0.02, 50), (0.02, 100), (0.02, 200)],
+        ),
+        1 => (
+            "Table 4 — update frequency & sparsity on STSB-sim",
+            2,
+            vec![(0.01, 100), (0.01, 200)],
+        ),
+        _ => (
+            "Table 5 — update frequency, sparsity & VRAM on SST2-sim",
+            4,
+            vec![(0.008, 60), (0.01, 80), (0.02, 50), (0.02, 100)],
+        ),
+    };
+
+    // Regression needs the reg artifact; only nano_reg exists -> fine.
+    let mut rows = Vec::new();
+    let mut rec = Vec::new();
+    for (one_minus_s, m) in combos {
+        let mut cfg = base_cfg(quick, 250);
+        cfg.sparsity = 1.0 - one_minus_s;
+        cfg.mag_update_every = m.min(cfg.steps.saturating_sub(1)).max(1);
+        if which == 1 {
+            // STS-B-sim is a regression task -> reg head artifact
+            cfg.task = Task::Glue(2);
+        }
+        println!("[{title}] 1-s={one_minus_s} m={m} ...");
+        let (res, _) = if which == 1 {
+            // regression target uses its own generator (no shift offset:
+            // Table 4 in the paper is plain STS-B finetuning on a
+            // pretrained trunk — warm-start the trunk, fresh reg head)
+            cfg.lr = 1e-3;
+            let mut tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+            let mut src = GlueSim::new(2, cfg.seed);
+            let r = tr.train_cls(&mut src)?;
+            (r, tr.store)
+        } else {
+            finetune_shifted(&mut rt, &cfg, &warm, target_task)?
+        };
+        let q = res.telem("unique_updated_frac").unwrap_or(f64::NAN);
+        let last = res.evals.last().expect("eval");
+        let score = match which {
+            0 => {
+                let preds: Vec<u32> = last.preds.iter().map(|&p| p as u32).collect();
+                let labels: Vec<u32> = last.labels.iter().map(|&l| l as u32).collect();
+                format!(
+                    "{:.2} / {:.4}",
+                    res.final_metric() * 100.0,
+                    matthews_corr(&preds, &labels)
+                )
+            }
+            1 => format!("{:.2}", spearman_corr(&last.preds, &last.labels) * 100.0),
+            _ => format!("{:.2}", res.final_metric() * 100.0),
+        };
+        let mut row = vec![
+            format!("{one_minus_s}"),
+            format!("{q:.3}"),
+            format!("{m}"),
+            score.clone(),
+        ];
+        if which == 2 {
+            row.push(fmt_mb(res.peak_mem_bytes));
+        }
+        rows.push(row);
+        rec.push(Json::obj(vec![
+            ("one_minus_s", Json::num(one_minus_s)),
+            ("m", Json::num(m as f64)),
+            ("q", Json::num(q)),
+            ("score", Json::str(score)),
+            ("mem_bytes", Json::num(res.peak_mem_bytes as f64)),
+        ]));
+    }
+
+    let headers: Vec<&str> = if which == 2 {
+        vec!["1-s", "q", "m", "accuracy", "VRAM (MB)"]
+    } else if which == 1 {
+        vec!["1-s", "q", "m", "spearman"]
+    } else {
+        vec!["1-s", "q", "m", "acc / matthews"]
+    };
+    print_table(title, &headers, &rows);
+    println!("shape check (paper): lower s or smaller m -> larger q; extreme m degrades score");
+    save_json(&format!("table{}_reduced_param", which + 3), &Json::Arr(rec))?;
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each harness builds the workload the paper used (scaled per DESIGN.md §5),
+//! runs every method the paper compares, and prints the same rows/series the
+//! paper reports, plus a JSON record under results/.
+
+pub mod common;
+pub mod finetune; // fig1 + fig5 (+ fig7-left ablation workload)
+pub mod glue; // table7 + table8 (+ fig9-finetune)
+pub mod magnitude; // table2 + fig3/fig8 + table3/4/5
+pub mod pretrain; // table1 + fig6 (+ fig7-right, fig9-pretrain)
+
+use anyhow::{bail, Result};
+
+/// Registry: experiment id -> runner.
+pub fn run(id: &str, quick: bool) -> Result<()> {
+    match id {
+        "fig1" => finetune::run_fig1_fig5(true),
+        "fig5" => finetune::run_fig1_fig5(quick),
+        "fig7" => finetune::run_fig7_ablation(quick),
+        "table1" => pretrain::run_table1(quick),
+        "fig6" => pretrain::run_fig6_sparsity(quick),
+        "fig9" => pretrain::run_fig9_patience(quick),
+        "table2" => magnitude::run_table2(quick),
+        "fig3" | "fig8" => magnitude::run_fig3_histograms(quick),
+        "table3" => magnitude::run_table3_5(0, quick),
+        "table4" => magnitude::run_table3_5(1, quick),
+        "table5" => magnitude::run_table3_5(2, quick),
+        "table7" | "table8" => glue::run_table7_table8(quick),
+        _ => bail!("unknown experiment id {id:?}; see `blockllm help`"),
+    }
+}
+
+pub const ALL_IDS: [&str; 12] = [
+    "table2", "fig3", "table3", "table4", "table5", "fig1", "fig5", "fig7", "table1", "fig6",
+    "fig9", "table7",
+];

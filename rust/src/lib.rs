@@ -1,0 +1,30 @@
+//! BlockLLM: memory-efficient LLM adaptation by selecting and optimizing the
+//! right coordinate blocks — a full-system reproduction of Ramesh et al.
+//! (2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers (DESIGN.md §2):
+//! * **L3 (this crate)** — the training coordinator: BlockLLM's greedy block
+//!   selection, masked sparse Adam, patience controller, plus the GaLore /
+//!   LoRA / BAdam / full-Adam baselines, data substrates, memory accounting,
+//!   and one experiment harness per paper table/figure.
+//! * **L2 (python/compile/model.py)** — the LLaMA-style model fwd/bwd,
+//!   AOT-lowered once to HLO text and executed here via PJRT (`runtime`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the attention
+//!   hot-spot and the fused masked-Adam update, validated against pure-jnp
+//!   oracles and (for nano) lowered into the shipped artifacts.
+
+pub mod baselines;
+pub mod blockllm;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

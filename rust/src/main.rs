@@ -1,0 +1,146 @@
+//! `blockllm` — the L3 coordinator CLI.
+//!
+//! Subcommands: `train` (one run, any method/task/preset), `exp` (paper
+//! table/figure harnesses), `eval` (checkpoint evaluation), `info`
+//! (artifact inventory). See cli::USAGE.
+
+use anyhow::{bail, Result};
+
+use blockllm::cli::{Args, USAGE};
+use blockllm::config::{Task, TrainConfig};
+use blockllm::experiments;
+use blockllm::runtime::Runtime;
+use blockllm::util::human_bytes;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    for (k, v) in &args.kv {
+        if k == "ckpt" || k == "save" || k == "id" {
+            continue;
+        }
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let mut rt = Runtime::open_default()?;
+    let warm = match args.get("ckpt") {
+        Some(p) => Some(blockllm::model::ParamStore::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    println!("config: {}", cfg.to_json().to_string());
+    let (res, store) =
+        blockllm::experiments::common::run_config_with_params(&mut rt, &cfg, warm.as_ref())?;
+    println!(
+        "\n{}: {} steps | final train loss {:.4} | eval loss {:.4} | metric {:.4}",
+        res.method,
+        res.train_losses.len(),
+        res.final_train_loss,
+        res.final_eval_loss(),
+        res.final_metric()
+    );
+    println!(
+        "peak modeled memory {} | wall {:.1}s ({:.2} steps/s, {:.0}% in XLA)",
+        human_bytes(res.peak_mem_bytes),
+        res.wall_secs,
+        res.steps_per_sec,
+        100.0 * res.exec_secs / res.wall_secs.max(1e-9)
+    );
+    let [up, ex, dl, st] = res.phase_secs;
+    println!(
+        "phase breakdown: upload {up:.2}s | execute {ex:.2}s | grad-download {dl:.2}s | strategy {st:.2}s"
+    );
+    for (k, v) in &res.telemetry {
+        println!("  {k} = {v}");
+    }
+    if let Some(path) = args.get("save") {
+        store.save(std::path::Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    if args.flag("all") {
+        for id in experiments::ALL_IDS {
+            println!("\n######## experiment {id} ########");
+            experiments::run(id, quick)?;
+        }
+        return Ok(());
+    }
+    let id = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("exp needs --id <experiment> or --all\n{USAGE}"))?;
+    experiments::run(id, quick)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let ckpt = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("eval needs --ckpt <path>"))?;
+    let store = blockllm::model::ParamStore::load(std::path::Path::new(ckpt))?;
+    let mut rt = Runtime::open_default()?;
+    let mut tr = blockllm::trainer::Trainer::new(&mut rt, cfg.clone(), Some(&store))?;
+    let ev = match cfg.task {
+        Task::C4Pretrain => {
+            let mut s = blockllm::data::c4sim::C4Sim::new(cfg.seed ^ 0xEEEE);
+            tr.eval_lm(&mut s)?
+        }
+        Task::AlpacaFinetune => {
+            let mut s = blockllm::data::alpacasim::AlpacaSim::new(cfg.seed ^ 0xEEEE);
+            tr.eval_lm(&mut s)?
+        }
+        Task::Glue(i) => {
+            let mut s = blockllm::data::gluesim::GlueSim::new(i, cfg.seed);
+            tr.eval_cls(&mut s)?
+        }
+        Task::DomainShift => {
+            let mut s = blockllm::data::gluesim::GlueSim::new(4, cfg.seed);
+            tr.eval_cls(&mut s)?
+        }
+    };
+    println!("eval loss {:.4} | metric {:.4}", ev.loss, ev.metric);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("presets:");
+    for (name, p) in &rt.manifest.presets {
+        println!(
+            "  {name:6} d={} L={} h={} ff={} params={}",
+            p.d_model, p.n_layers, p.n_heads, p.d_ff, p.param_count
+        );
+    }
+    println!("artifacts:");
+    for (id, a) in &rt.manifest.artifacts {
+        println!("  {id:40} kind={:12} pallas={}", a.kind, a.pallas);
+    }
+    Ok(())
+}

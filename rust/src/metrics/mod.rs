@@ -1,0 +1,301 @@
+//! Metrics substrate: run logging (JSONL), evaluation statistics
+//! (perplexity, accuracy, Matthews/Spearman correlation), moving averages,
+//! and the weight-change histograms behind Fig. 3/8.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Run logger
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL logger; one file per run under results/.
+pub struct RunLogger {
+    path: PathBuf,
+    file: Option<fs::File>,
+}
+
+impl RunLogger {
+    pub fn create(dir: &Path, run_name: &str) -> Result<RunLogger> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{run_name}.jsonl"));
+        let file = fs::File::create(&path)?;
+        Ok(RunLogger { path, file: Some(file) })
+    }
+
+    /// A sink that discards everything (unit tests, quick runs).
+    pub fn null() -> RunLogger {
+        RunLogger { path: PathBuf::new(), file: None }
+    }
+
+    pub fn log(&mut self, record: &Json) {
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{}", record.to_string());
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Moving statistics
+// ---------------------------------------------------------------------------
+
+/// Fixed-window moving average over the last `cap` values (the paper's loss
+/// history H with patience m).
+#[derive(Debug, Clone)]
+pub struct MovingWindow {
+    cap: usize,
+    buf: Vec<f64>,
+}
+
+impl MovingWindow {
+    pub fn new(cap: usize) -> Self {
+        MovingWindow { cap: cap.max(1), buf: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.remove(0);
+        }
+        self.buf.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            f64::NAN
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation statistics
+// ---------------------------------------------------------------------------
+
+/// exp(total_nll / total_tokens) — perplexity from summed eval terms.
+pub fn perplexity(loss_sum: f64, token_count: f64) -> f64 {
+    if token_count <= 0.0 {
+        return f64::NAN;
+    }
+    (loss_sum / token_count).exp()
+}
+
+/// Matthews correlation coefficient for binary predictions (CoLA metric).
+pub fn matthews_corr(preds: &[u32], labels: &[u32]) -> f64 {
+    let (mut tp, mut tn, mut fp, mut fn_) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fn_ += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fn_) / denom
+    }
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // average rank for ties
+        for k in i..=j {
+            r[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation (STS-B metric). Handles ties by average rank.
+pub fn spearman_corr(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    pearson(&ra, &rb)
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut sab, mut saa, mut sbb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        sab += (x - ma) * (y - mb);
+        saa += (x - ma) * (x - ma);
+        sbb += (y - mb) * (y - mb);
+    }
+    if saa == 0.0 || sbb == 0.0 {
+        0.0
+    } else {
+        sab / (saa * sbb).sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histograms (Fig. 3 / Fig. 8)
+// ---------------------------------------------------------------------------
+
+/// Fixed-bin histogram over [lo, hi); values outside clamp to edge bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        let bins = self.counts.len();
+        let t = ((v - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let b = (t.max(0.0) as usize).min(bins - 1);
+        self.counts[b] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lo", Json::num(self.lo)),
+            ("hi", Json::num(self.hi)),
+            ("counts", Json::Arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect())),
+        ])
+    }
+
+    /// ASCII rendering for terminal reports (the repo's "figures").
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let a = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
+            let b = self.lo + (self.hi - self.lo) * (i + 1) as f64 / bins as f64;
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).round() as usize);
+            out.push_str(&format!("[{a:9.4},{b:9.4}) {c:>8} {bar}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moving_window_mean_and_eviction() {
+        let mut w = MovingWindow::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.push(v);
+        }
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!(w.full());
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over 256 symbols: nll = ln 256 per token -> ppl = 256
+        let nll = (256f64).ln() * 100.0;
+        assert!((perplexity(nll, 100.0) - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverted() {
+        let l = [0, 1, 0, 1, 1, 0];
+        assert!((matthews_corr(&l, &l) - 1.0).abs() < 1e-12);
+        let inv: Vec<u32> = l.iter().map(|&x| 1 - x).collect();
+        assert!((matthews_corr(&inv, &l) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_degenerate_is_zero() {
+        assert_eq!(matthews_corr(&[1, 1, 1], &[0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [10.0, 100.0, 1000.0, 1e4, 1e5];
+        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert!((spearman_corr(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let b = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman_corr(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for v in [-1.0, 0.1, 0.3, 0.6, 0.9, 2.0] {
+            h.add(v);
+        }
+        assert_eq!(h.counts, vec![2, 1, 1, 2]);
+        assert_eq!(h.total(), 6);
+        assert!(h.render(10).lines().count() == 4);
+    }
+
+    #[test]
+    fn logger_writes_jsonl() {
+        let dir = std::env::temp_dir().join("blockllm_test_logs");
+        let mut lg = RunLogger::create(&dir, "t").unwrap();
+        lg.log(&Json::obj(vec![("step", Json::num(1.0))]));
+        lg.log(&Json::obj(vec![("step", Json::num(2.0))]));
+        let content = std::fs::read_to_string(lg.path()).unwrap();
+        assert_eq!(content.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,289 @@
+//! Parameter store: the host-side source of truth for model weights.
+//!
+//! The Rust coordinator owns all parameters as host f32 buffers keyed by the
+//! manifest's canonical order; each step they are marshaled into literals
+//! for the AOT executable. Init mirrors python/compile/model.py::init_params
+//! (norms=1, biases=0, embeddings/heads ~ N(0, 0.02), matrices ~
+//! N(0, 1/sqrt(fan_in))) and checkpoints round-trip through a simple binary
+//! format (`store.rs` would be overkill as a separate module — everything
+//! parameter-shaped lives here).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::ParamSpec;
+use crate::util::rng::Pcg64;
+
+/// Named, ordered parameter tensors.
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub bufs: Vec<Vec<f32>>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn zeros(specs: &[ParamSpec]) -> ParamStore {
+        let bufs = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
+        Self::with_bufs(specs, bufs)
+    }
+
+    fn with_bufs(specs: &[ParamSpec], bufs: Vec<Vec<f32>>) -> ParamStore {
+        let index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        ParamStore { specs: specs.to_vec(), bufs, index }
+    }
+
+    /// Random init mirroring the python reference scheme.
+    pub fn init(specs: &[ParamSpec], seed: u64) -> ParamStore {
+        let mut store = Self::zeros(specs);
+        let mut rng = Pcg64::with_stream(seed, 0x1417);
+        for (spec, buf) in store.specs.iter().zip(store.bufs.iter_mut()) {
+            if spec.name.contains("norm") {
+                buf.fill(1.0);
+            } else if spec.name.ends_with("bias") {
+                buf.fill(0.0);
+            } else if spec.name == "tok_emb" || spec.name == "lm_head" || spec.name == "cls_head" {
+                rng.fill_normal(buf, 0.02);
+            } else {
+                let fan_in = spec.shape[0] as f32;
+                rng.fill_normal(buf, 1.0 / fan_in.sqrt());
+            }
+        }
+        store
+    }
+
+    /// Deterministic filler matching aot.py::filler_params — used by the
+    /// golden ABI test: w[j] = 0.02*sin(0.1*(j + 31*param_index)).
+    pub fn fill_deterministic(specs: &[ParamSpec]) -> ParamStore {
+        let mut store = Self::zeros(specs);
+        for (pi, (spec, buf)) in store.specs.iter().zip(store.bufs.iter_mut()).enumerate() {
+            if spec.name.contains("norm") {
+                buf.fill(1.0);
+            } else if spec.name.ends_with("bias") {
+                buf.fill(0.0);
+            } else {
+                for (j, x) in buf.iter_mut().enumerate() {
+                    *x = 0.02 * (0.1 * (j as f32 + 31.0 * pi as f32)).sin();
+                }
+            }
+        }
+        store
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.bufs.iter().map(Vec::len).sum()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&[f32]> {
+        self.index.get(name).map(|&i| self.bufs[i].as_slice())
+    }
+
+    pub fn idx(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Marshal every parameter into literals in canonical order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.specs
+            .iter()
+            .zip(&self.bufs)
+            .map(|(s, b)| crate::runtime::lit_f32(b, &s.shape))
+            .collect()
+    }
+
+    /// L2 distance to another store (tests, Fig.3 histogram tooling).
+    pub fn l2_distance(&self, other: &ParamStore) -> f64 {
+        assert_eq!(self.specs.len(), other.specs.len());
+        let mut acc = 0.0f64;
+        for (a, b) in self.bufs.iter().zip(&other.bufs) {
+            for (x, y) in a.iter().zip(b) {
+                let d = (*x - *y) as f64;
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    pub fn clone_store(&self) -> ParamStore {
+        Self::with_bufs(&self.specs, self.bufs.clone())
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"BLLMCKP1";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&(self.specs.len() as u32).to_le_bytes())?;
+        for (spec, buf) in self.specs.iter().zip(&self.bufs) {
+            let name = spec.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+            for &d in &spec.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            // raw little-endian f32
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let n = u32::from_le_bytes(u32buf) as usize;
+        let mut specs = Vec::with_capacity(n);
+        let mut bufs = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            f.read_exact(&mut u32buf)?;
+            let rank = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u32buf)?;
+                shape.push(u32::from_le_bytes(u32buf) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+            };
+            f.read_exact(bytes)?;
+            specs.push(ParamSpec {
+                name: String::from_utf8(name).map_err(|e| anyhow!("bad name: {e}"))?,
+                shape,
+            });
+            bufs.push(data);
+        }
+        Ok(Self::with_bufs(&specs, bufs))
+    }
+
+    /// Verify shapes match another spec table (loading a checkpoint into a
+    /// differently-headed model must fail loudly).
+    pub fn check_compatible(&self, specs: &[ParamSpec]) -> Result<()> {
+        if self.specs.len() != specs.len() {
+            bail!("checkpoint has {} tensors, model wants {}", self.specs.len(), specs.len());
+        }
+        for (a, b) in self.specs.iter().zip(specs) {
+            if a != b {
+                bail!("tensor mismatch: checkpoint {a:?} vs model {b:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy overlapping tensors (by name+shape) from `other` — the
+    /// pretrain->finetune trunk transfer (LM checkpoint into a CLS model).
+    pub fn load_overlapping(&mut self, other: &ParamStore) -> usize {
+        let mut n = 0;
+        for (i, spec) in self.specs.iter().enumerate() {
+            if let Some(j) = other.idx(&spec.name) {
+                if other.specs[j].shape == spec.shape {
+                    self.bufs[i].copy_from_slice(&other.bufs[j]);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "tok_emb".into(), shape: vec![16, 8] },
+            ParamSpec { name: "layers.0.attn_norm".into(), shape: vec![8] },
+            ParamSpec { name: "layers.0.wq".into(), shape: vec![8, 8] },
+            ParamSpec { name: "cls_bias".into(), shape: vec![2] },
+        ]
+    }
+
+    #[test]
+    fn init_scheme() {
+        let s = ParamStore::init(&toy_specs(), 1);
+        assert!(s.by_name("layers.0.attn_norm").unwrap().iter().all(|&x| x == 1.0));
+        assert!(s.by_name("cls_bias").unwrap().iter().all(|&x| x == 0.0));
+        let emb = s.by_name("tok_emb").unwrap();
+        let std = (emb.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / emb.len() as f64).sqrt();
+        assert!((std - 0.02).abs() < 0.01, "emb std {std}");
+        assert_eq!(s.n_params(), 16 * 8 + 8 + 64 + 2);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let a = ParamStore::init(&toy_specs(), 7);
+        let b = ParamStore::init(&toy_specs(), 7);
+        let c = ParamStore::init(&toy_specs(), 8);
+        assert_eq!(a.bufs, b.bufs);
+        assert_ne!(a.bufs, c.bufs);
+    }
+
+    #[test]
+    fn deterministic_filler_matches_formula() {
+        let s = ParamStore::fill_deterministic(&toy_specs());
+        let wq = s.by_name("layers.0.wq").unwrap();
+        // param index of wq in toy_specs is 2
+        let want = 0.02 * (0.1f32 * (5.0 + 31.0 * 2.0)).sin();
+        assert!((wq[5] - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = ParamStore::init(&toy_specs(), 3);
+        let path = std::env::temp_dir().join("blockllm_test_ckpt.bin");
+        s.save(&path).unwrap();
+        let l = ParamStore::load(&path).unwrap();
+        assert_eq!(s.bufs, l.bufs);
+        l.check_compatible(&toy_specs()).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incompatible_checkpoint_rejected() {
+        let s = ParamStore::init(&toy_specs(), 3);
+        let mut other = toy_specs();
+        other[0].shape = vec![16, 9];
+        assert!(s.check_compatible(&other).is_err());
+    }
+
+    #[test]
+    fn overlapping_transfer() {
+        let lm = ParamStore::init(&toy_specs(), 4);
+        let mut cls_specs = toy_specs();
+        cls_specs[3] = ParamSpec { name: "cls_head".into(), shape: vec![8, 2] };
+        let mut cls = ParamStore::init(&cls_specs, 99);
+        let n = cls.load_overlapping(&lm);
+        assert_eq!(n, 3); // everything except the head
+        assert_eq!(cls.by_name("tok_emb").unwrap(), lm.by_name("tok_emb").unwrap());
+    }
+}

@@ -1,0 +1,82 @@
+//! Learning-rate schedules. The paper uses cosine annealing decaying to 10%
+//! of the initial LR for pretraining (App. A.7: no warmup for BlockLLM,
+//! 10% warmup for GaLore) and cosine-to-zero for the Alpaca finetune
+//! (App. A.6).
+
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub cosine: bool,
+    /// final LR as a fraction of base (0.1 for pretraining, 0.0 finetune)
+    pub min_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f64) -> LrSchedule {
+        LrSchedule { base_lr: lr, total_steps: 1, warmup_steps: 0, cosine: false, min_frac: 1.0 }
+    }
+
+    pub fn cosine(lr: f64, total_steps: usize, warmup_frac: f64, min_frac: f64) -> LrSchedule {
+        LrSchedule {
+            base_lr: lr,
+            total_steps: total_steps.max(1),
+            warmup_steps: ((total_steps as f64) * warmup_frac) as usize,
+            cosine: true,
+            min_frac,
+        }
+    }
+
+    /// LR at 0-based step t.
+    pub fn at(&self, t: usize) -> f64 {
+        if !self.cosine {
+            return self.base_lr;
+        }
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.base_lr * (t as f64 + 1.0) / self.warmup_steps as f64;
+        }
+        let prog = ((t - self.warmup_steps) as f64
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64)
+            .min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * prog).cos());
+        self.base_lr * (self.min_frac + (1.0 - self.min_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn cosine_decays_to_min_frac() {
+        let s = LrSchedule::cosine(1.0, 100, 0.0, 0.1);
+        assert!((s.at(0) - 1.0).abs() < 1e-9);
+        assert!((s.at(100) - 0.1).abs() < 1e-9);
+        assert!(s.at(50) < s.at(10));
+        assert!(s.at(50) > s.at(90));
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::cosine(1.0, 100, 0.1, 0.0);
+        assert!((s.at(0) - 0.1).abs() < 1e-9);
+        assert!((s.at(4) - 0.5).abs() < 1e-9);
+        assert!((s.at(9) - 1.0).abs() < 1e-9);
+        // monotone decay after warmup
+        assert!(s.at(20) > s.at(60));
+    }
+
+    #[test]
+    fn beyond_total_clamps() {
+        let s = LrSchedule::cosine(1.0, 100, 0.0, 0.1);
+        assert!((s.at(500) - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,225 @@
+//! Manifest parsing — the ABI between aot.py and the Rust runtime.
+//!
+//! `artifacts/manifest.json` records, per artifact: the HLO file, the model
+//! preset, the ordered parameter table (names + shapes = the exact order of
+//! input literals), the batch shape, and the output signature.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub id: String,
+    pub file: String,
+    pub kind: String,
+    pub preset: String,
+    pub head: String,
+    pub n_out: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub pallas: bool,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let version = root.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+
+        let mut presets = BTreeMap::new();
+        for (name, p) in root.req("presets")?.as_obj()? {
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    vocab: p.req("vocab")?.as_usize()?,
+                    d_model: p.req("d_model")?.as_usize()?,
+                    n_layers: p.req("n_layers")?.as_usize()?,
+                    n_heads: p.req("n_heads")?.as_usize()?,
+                    d_ff: p.req("d_ff")?.as_usize()?,
+                    param_count: p.req("param_count")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr()? {
+            let id = a.req("id")?.as_str()?.to_string();
+            let kind = a.req("kind")?.as_str()?.to_string();
+            if kind == "masked_adam" {
+                // kernel artifact: no params table; expose with empty specs
+                artifacts.insert(
+                    id.clone(),
+                    ArtifactInfo {
+                        id,
+                        file: a.req("file")?.as_str()?.to_string(),
+                        kind,
+                        preset: String::new(),
+                        head: String::new(),
+                        n_out: 0,
+                        batch: 0,
+                        seq: a.req("n")?.as_usize()?,
+                        pallas: true,
+                        params: Vec::new(),
+                        outputs: vec!["w".into(), "m".into(), "v".into()],
+                    },
+                );
+                continue;
+            }
+            let mut params = Vec::new();
+            for ps in a.req("params")?.as_arr()? {
+                let shape = ps
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                params.push(ParamSpec { name: ps.req("name")?.as_str()?.to_string(), shape });
+            }
+            let outputs = a
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| o.as_str().map(str::to_string))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                id.clone(),
+                ArtifactInfo {
+                    id,
+                    file: a.req("file")?.as_str()?.to_string(),
+                    kind,
+                    preset: a.req("preset")?.as_str()?.to_string(),
+                    head: a.req("head")?.as_str()?.to_string(),
+                    n_out: a.req("n_out")?.as_usize()?,
+                    batch: a.req("batch")?.as_usize()?,
+                    seq: a.req("seq")?.as_usize()?,
+                    pallas: a.req("pallas")?.as_bool()?,
+                    params,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { presets, artifacts })
+    }
+
+    /// Find the train/eval artifact pair for a preset+head (+pallas flag).
+    pub fn find(&self, preset: &str, head: &str, phase: &str, pallas: bool) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.preset == preset && a.head == head && a.kind.ends_with(phase) && a.pallas == pallas
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!("no artifact for preset={preset} head={head} phase={phase} pallas={pallas}; rebuild with `make artifacts` (--full for base preset)")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1,
+      "presets": {"nano": {"vocab": 256, "d_model": 64, "n_layers": 2,
+                   "n_heads": 2, "d_ff": 176, "max_seq": 64, "param_count": 133440}},
+      "artifacts": [
+        {"id": "nano_lm_train_b8t64", "file": "x.hlo.txt", "kind": "lm_train",
+         "preset": "nano", "head": "lm", "n_out": 0, "batch": 8, "seq": 64,
+         "pallas": false,
+         "params": [{"name": "tok_emb", "shape": [256, 64]},
+                     {"name": "lm_head", "shape": [64, 256]}],
+         "outputs": ["loss", "grad:tok_emb", "grad:lm_head"]},
+        {"id": "masked_adam_64", "file": "ma.hlo.txt", "kind": "masked_adam",
+         "n": 64, "outputs": ["w", "m", "v"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_model_artifact() {
+        let m = Manifest::parse(MINI).unwrap();
+        let a = &m.artifacts["nano_lm_train_b8t64"];
+        assert_eq!(a.batch, 8);
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].numel(), 256 * 64);
+        assert_eq!(a.outputs.len(), 3);
+        assert_eq!(m.presets["nano"].param_count, 133440);
+    }
+
+    #[test]
+    fn parses_kernel_artifact() {
+        let m = Manifest::parse(MINI).unwrap();
+        let k = &m.artifacts["masked_adam_64"];
+        assert_eq!(k.kind, "masked_adam");
+        assert_eq!(k.seq, 64);
+    }
+
+    #[test]
+    fn find_matches_phase_and_pallas() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.find("nano", "lm", "train", false).is_ok());
+        assert!(m.find("nano", "lm", "eval", false).is_err());
+        assert!(m.find("nano", "lm", "train", true).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = MINI.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and contain the nano pallas twin.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.find("nano", "lm", "train", true).is_ok());
+            assert!(m.find("tiny", "lm", "train", false).is_ok());
+            let a = m.find("nano", "lm", "train", false).unwrap();
+            let total: usize = a.params.iter().map(|p| p.numel()).sum();
+            assert_eq!(total, m.presets["nano"].param_count);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! This is the only place the process touches XLA. The flow per artifact:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` (cached) -> `execute` with host literals.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and DESIGN.md §2) —
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos; the
+//! text parser reassigns ids.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactInfo, Manifest, ParamSpec};
+
+/// Lazily-compiled executable registry over an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative host<->device marshaling + execute time (perf accounting)
+    pub exec_secs: f64,
+    pub exec_calls: u64,
+}
+
+impl Runtime {
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), exec_secs: 0.0, exec_calls: 0 })
+    }
+
+    /// Locate the artifacts dir by walking up from cwd (so examples work
+    /// from any working directory inside the repo).
+    pub fn open_default() -> Result<Runtime> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Runtime::open(cand);
+            }
+            if !dir.pop() {
+                bail!("artifacts/manifest.json not found above cwd; run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn artifact(&self, id: &str) -> Result<&ArtifactInfo> {
+        self.manifest
+            .artifacts
+            .get(id)
+            .ok_or_else(|| anyhow!("artifact {id:?} not in manifest"))
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact id.
+    pub fn compile(&mut self, id: &str) -> Result<()> {
+        if self.cache.contains_key(id) {
+            return Ok(());
+        }
+        let info = self.artifact(id)?.clone();
+        let path = self.dir.join(&info.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {id}: {e}"))?;
+        self.cache.insert(id.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given input literals (owned or
+    /// borrowed); returns the flattened output tuple.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        id: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.compile(id)?;
+        let exe = self.cache.get(id).expect("compiled above");
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing {id}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {id}: {e}"))?;
+        let out = lit.to_tuple().map_err(|e| anyhow!("untupling result of {id}: {e}"))?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshaling helpers
+// ---------------------------------------------------------------------------
+
+/// f32 host buffer -> shaped literal.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32 shape {shape:?} wants {n}, got {}", data.len());
+    }
+    let l = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// i32 host buffer -> shaped literal.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32 shape {shape:?} wants {n}, got {}", data.len());
+    }
+    let l = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Scalar f32 from a literal (loss outputs).
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e}"))
+}
+
+/// Copy a literal's f32 payload into a reusable scratch buffer.
+pub fn copy_f32_into(l: &xla::Literal, buf: &mut Vec<f32>) -> Result<()> {
+    let n = l.element_count();
+    buf.resize(n, 0.0);
+    l.copy_raw_to::<f32>(buf).map_err(|e| anyhow!("copy_raw_to: {e}"))
+}

@@ -1,0 +1,303 @@
+//! Host f32 tensor substrate.
+//!
+//! The L3 coordinator only needs host-side tensor math for the *optimizer*
+//! layer (GaLore projections, LoRA adapter algebra, gradient statistics) —
+//! model fwd/bwd runs inside the AOT XLA artifact. Shapes here are small
+//! (at most d_model x d_ff), so a cache-blocked native matmul is plenty.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor, rank 1 or 2 in practice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        match self.shape.len() {
+            1 => 1,
+            2 => self.shape[0],
+            r => panic!("rank {r} tensor has no rows"),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self.shape.len() {
+            1 => self.shape[0],
+            2 => self.shape[1],
+            r => panic!("rank {r} tensor has no cols"),
+        }
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    // ---- elementwise ------------------------------------------------------
+
+    pub fn scale(&mut self, a: f32) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// self += a * other
+    pub fn axpy(&mut self, a: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += a * y;
+        }
+    }
+
+    // ---- reductions ------------------------------------------------------
+
+    pub fn sq_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.sq_sum().sqrt()
+    }
+
+    /// Root-mean-square norm: ||x||_F / sqrt(n). Size-invariant layer score.
+    pub fn rms_norm(&self) -> f64 {
+        (self.sq_sum() / self.numel() as f64).sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    // ---- matmul family -----------------------------------------------------
+
+    /// C = A @ B for A [m,k], B [k,n]. Cache-friendly i-k-j loop order.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: c }
+    }
+
+    /// C = Aᵀ @ B for A [k,m], B [k,n] (no explicit transpose).
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        let (k, m) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
+        let mut c = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: c }
+    }
+
+    /// C = A @ Bᵀ for A [m,k], B [n,k].
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        Tensor { shape: vec![m, n], data: c }
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut t = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                t[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data: t }
+    }
+}
+
+/// Exact k-th largest |value| in a slice, O(n) via quickselect.
+/// Returns the threshold t such that exactly >= k entries satisfy |x| >= t
+/// (ties may admit more). k must satisfy 1 <= k <= len.
+pub fn kth_largest_abs(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len());
+    let mut a: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let idx = k - 1;
+    // select_nth_unstable puts the idx-th *smallest* at idx; we want the
+    // idx-th largest, i.e. (len - k)-th smallest.
+    let pos = a.len() - k;
+    let (_, v, _) = a.select_nth_unstable_by(pos, |x, y| x.partial_cmp(y).unwrap());
+    let _ = idx;
+    *v
+}
+
+/// The (1-zeta) upper-quantile of |xs| (zeta in [0,1]): the threshold tau
+/// keeping ~zeta fraction of entries. zeta=1 keeps everything (tau=0).
+pub fn abs_quantile_keep(xs: &[f32], zeta: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let zeta = zeta.clamp(0.0, 1.0);
+    let keep = ((xs.len() as f64) * zeta).round() as usize;
+    if keep == 0 {
+        return f32::INFINITY;
+    }
+    if keep >= xs.len() {
+        return 0.0;
+    }
+    kth_largest_abs(xs, keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[rows, cols], v).unwrap()
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = t2(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = t2(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t2(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let id = t2(3, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&id).data, a.data);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = t2(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = t2(3, 4, (0..12).map(|x| x as f32).collect());
+        let got = a.matmul_tn(&b);
+        let want = a.transpose().matmul(&b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = t2(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = t2(4, 3, (0..12).map(|x| x as f32).collect());
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.transpose());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let a = t2(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::from_vec(&[4], vec![3.0, 4.0, 0.0, 0.0]).unwrap();
+        assert!((a.fro_norm() - 5.0).abs() < 1e-9);
+        assert!((a.rms_norm() - 2.5).abs() < 1e-9);
+        assert_eq!(a.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn kth_largest_abs_basics() {
+        let xs = [1.0f32, -5.0, 3.0, -2.0, 4.0];
+        assert_eq!(kth_largest_abs(&xs, 1), 5.0);
+        assert_eq!(kth_largest_abs(&xs, 2), 4.0);
+        assert_eq!(kth_largest_abs(&xs, 5), 1.0);
+    }
+
+    #[test]
+    fn abs_quantile_keep_semantics() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        // keep top 10% -> threshold 91; count(|x| >= 91) == 10
+        let tau = abs_quantile_keep(&xs, 0.10);
+        let kept = xs.iter().filter(|x| x.abs() >= tau).count();
+        assert_eq!(kept, 10);
+        assert_eq!(abs_quantile_keep(&xs, 1.0), 0.0);
+        assert_eq!(abs_quantile_keep(&xs, 0.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn quantile_keep_counts_randomised() {
+        let mut rng = crate::util::rng::Pcg64::new(17);
+        for _ in 0..20 {
+            let n = 1 + rng.below(2000);
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let zeta = rng.uniform();
+            let tau = abs_quantile_keep(&xs, zeta);
+            let kept = xs.iter().filter(|x| x.abs() >= tau).count();
+            let want = ((n as f64) * zeta).round() as usize;
+            // ties can only add; quickselect threshold keeps at least `want`
+            assert!(kept >= want, "kept {kept} < want {want} (n={n})");
+        }
+    }
+}

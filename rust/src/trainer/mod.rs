@@ -1,0 +1,473 @@
+//! The L3 training coordinator: executes the AOT fwd/bwd artifact, routes
+//! gradients to the active strategy, applies updates, tracks memory and
+//! wall-clock, and runs periodic evaluation.
+//!
+//! Python never runs here — the artifact was lowered once by `make
+//! artifacts`; this loop is pure Rust + PJRT.
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{build, Strategy};
+use crate::config::{Task, TrainConfig};
+use crate::data::{ClsSource, LmStream};
+use crate::memory::MemTracker;
+use crate::metrics::{perplexity, RunLogger};
+use crate::model::ParamStore;
+use crate::optim::schedule::LrSchedule;
+use crate::runtime::{copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, Runtime};
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+
+/// One evaluation snapshot.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    /// mean per-token (LM) or per-example (cls) loss
+    pub loss: f64,
+    /// perplexity (LM) or accuracy (cls) or MSE (reg)
+    pub metric: f64,
+    pub preds: Vec<f64>,
+    pub labels: Vec<f64>,
+}
+
+/// Everything a paper harness needs from one run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub method: String,
+    pub train_losses: Vec<f64>,
+    pub evals: Vec<EvalPoint>,
+    pub peak_mem_gb: f64,
+    pub peak_mem_bytes: u64,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub exec_secs: f64,
+    /// cumulative per-phase seconds: [param upload, XLA execute,
+    /// grad download, strategy update] — §Perf instrumentation
+    pub phase_secs: [f64; 4],
+    /// method-specific counters (Magnitude's q, BlockLLM's selection count)
+    pub telemetry: Vec<(String, f64)>,
+    pub final_train_loss: f64,
+}
+
+impl RunResult {
+    pub fn final_eval_loss(&self) -> f64 {
+        self.evals.last().map(|e| e.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_metric(&self) -> f64 {
+        self.evals.last().map(|e| e.metric).unwrap_or(f64::NAN)
+    }
+
+    pub fn telem(&self, key: &str) -> Option<f64> {
+        self.telemetry.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// mean of the last k train losses (smoother headline number)
+    pub fn tail_train_loss(&self, k: usize) -> f64 {
+        let n = self.train_losses.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let k = k.min(n);
+        self.train_losses[n - k..].iter().sum::<f64>() / k as f64
+    }
+}
+
+/// The trainer owns the runtime, the parameter store and the strategy.
+pub struct Trainer<'rt> {
+    pub rt: &'rt mut Runtime,
+    pub cfg: TrainConfig,
+    pub store: ParamStore,
+    pub strategy: Box<dyn Strategy>,
+    pub mem: MemTracker,
+    pub logger: RunLogger,
+    train_art: ArtifactInfo,
+    eval_art: ArtifactInfo,
+    sched: LrSchedule,
+    grads: Vec<Vec<f32>>,
+    /// persistent input literals for the parameters: built once, refreshed
+    /// in place (copy_raw_from) only for layers the strategy touched — the
+    /// first hot-path optimization recorded in EXPERIMENTS.md §Perf
+    param_lits: Vec<xla::Literal>,
+    dirty: Vec<bool>,
+    phase_secs: [f64; 4],
+    step: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Build a trainer for a config; resolves artifacts from the manifest
+    /// and initializes parameters (or adopts `warm_start`).
+    pub fn new(
+        rt: &'rt mut Runtime,
+        cfg: TrainConfig,
+        warm_start: Option<&ParamStore>,
+    ) -> Result<Trainer<'rt>> {
+        let head = match cfg.task {
+            Task::C4Pretrain | Task::AlpacaFinetune => "lm".to_string(),
+            Task::Glue(i) => {
+                let g = crate::data::gluesim::GlueSim::new(i, cfg.seed);
+                if g.regression() { "reg".into() } else { "cls".into() }
+            }
+            Task::DomainShift => "cls".into(),
+        };
+        let n_out = match cfg.task {
+            Task::Glue(i) => crate::data::gluesim::GlueSim::new(i, cfg.seed).n_classes(),
+            Task::DomainShift => 2,
+            _ => 0,
+        };
+        let find = |phase: &str| -> Result<ArtifactInfo> {
+            let cands: Vec<&ArtifactInfo> = rt
+                .manifest
+                .artifacts
+                .values()
+                .filter(|a| {
+                    a.preset == cfg.preset
+                        && a.head == head
+                        && a.kind.ends_with(phase)
+                        && a.pallas == cfg.use_pallas_artifact
+                        && (head == "lm" || a.n_out == n_out.max(1))
+                })
+                .collect();
+            match cands.first() {
+                Some(a) => Ok((*a).clone()),
+                None => bail!(
+                    "no artifact preset={} head={head} n_out={n_out} phase={phase} pallas={} — run `make artifacts`",
+                    cfg.preset, cfg.use_pallas_artifact
+                ),
+            }
+        };
+        let train_art = find("train")?;
+        let eval_art = find("eval")?;
+
+        let mut store = ParamStore::init(&train_art.params, cfg.seed);
+        if let Some(w) = warm_start {
+            let n = store.load_overlapping(w);
+            if n == 0 {
+                bail!("warm start shared no tensors with the target model");
+            }
+        }
+
+        let sizes: Vec<usize> = train_art.params.iter().map(|p| p.numel()).collect();
+        let names: Vec<String> = train_art.params.iter().map(|p| p.name.clone()).collect();
+        let strategy = build(&cfg, &sizes, &names);
+        let sched = if cfg.cosine_lr {
+            let min_frac = match cfg.task {
+                Task::C4Pretrain => 0.1, // paper App. A.7
+                _ => 0.0,                // paper App. A.6
+            };
+            LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, min_frac)
+        } else {
+            LrSchedule::constant(cfg.lr)
+        };
+
+        let param_lits = store.to_literals()?;
+        let n_tensors = store.n_tensors();
+        Ok(Trainer {
+            rt,
+            store,
+            strategy,
+            mem: MemTracker::new(),
+            logger: RunLogger::null(),
+            train_art,
+            eval_art,
+            sched,
+            grads: sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
+            param_lits,
+            dirty: vec![false; n_tensors],
+            phase_secs: [0.0; 4],
+            step: 0,
+            cfg,
+        })
+    }
+
+    /// Refresh the persistent parameter literals for layers marked dirty.
+    fn sync_param_lits(&mut self) -> Result<()> {
+        for (i, d) in self.dirty.iter_mut().enumerate() {
+            if *d {
+                self.param_lits[i]
+                    .copy_raw_from::<f32>(&self.store.bufs[i])
+                    .map_err(|e| anyhow::anyhow!("param upload {i}: {e}"))?;
+                *d = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Mark layers updated by the strategy (empty slice = all layers).
+    fn mark_dirty(&mut self, active: &[usize]) {
+        if active.is_empty() {
+            self.dirty.iter_mut().for_each(|d| *d = true);
+        } else {
+            for &l in active {
+                self.dirty[l] = true;
+            }
+        }
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.train_art.batch, self.train_art.seq)
+    }
+
+    /// Single externally-driven LM step (bench harness entry point).
+    pub fn bench_step(&mut self, batch: &crate::data::LmBatch) -> Result<f64> {
+        let (b, t) = self.batch_shape();
+        let tgt = lit_i32(&batch.targets, &[b, t])?;
+        self.step_lm_like(&batch.tokens, tgt)
+    }
+
+    /// Externally-driven accumulated LM step over the given microbatches
+    /// (tests + bench harness). Returns the mean loss.
+    pub fn bench_accum_step(&mut self, micro: &[crate::data::LmBatch]) -> Result<f64> {
+        let (b, t) = self.batch_shape();
+        let scale = 1.0 / micro.len() as f32;
+        let mut mean_loss = 0.0;
+        for (k, batch) in micro.iter().enumerate() {
+            let tgt = lit_i32(&batch.targets, &[b, t])?;
+            mean_loss += self.forward_backward(&batch.tokens, &tgt, k == 0, scale)?;
+        }
+        mean_loss /= micro.len() as f64;
+        let t3 = std::time::Instant::now();
+        let lr = self.sched.at(self.step);
+        let info = self.strategy.step(&mut self.store, &self.grads, mean_loss, lr, self.step);
+        self.phase_secs[3] += t3.elapsed().as_secs_f64();
+        self.mark_dirty(&info.active_layers);
+        self.mem.record(info.mem);
+        self.step += 1;
+        Ok(mean_loss)
+    }
+
+    /// One fwd/bwd microbatch: execute the train artifact and accumulate
+    /// the scaled gradients into `self.grads` (`first` resets the
+    /// accumulator; `scale` = 1/grad_accum). Returns the microbatch loss.
+    fn forward_backward(
+        &mut self,
+        tokens: &[i32],
+        tgt_lit: &xla::Literal,
+        first: bool,
+        scale: f32,
+    ) -> Result<f64> {
+        let (b, t) = (self.train_art.batch, self.train_art.seq);
+        let t0 = std::time::Instant::now();
+        self.sync_param_lits()?;
+        let tok_lit = lit_i32(tokens, &[b, t])?;
+        let t1 = std::time::Instant::now();
+        let outs = {
+            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            inputs.push(&tok_lit);
+            inputs.push(tgt_lit);
+            self.rt.execute(&self.train_art.id, &inputs)?
+        };
+        let t2 = std::time::Instant::now();
+        if outs.len() != 1 + self.grads.len() {
+            bail!("artifact returned {} outputs, want {}", outs.len(), 1 + self.grads.len());
+        }
+        let loss = scalar_f32(&outs[0])? as f64;
+        let mut tmp = Vec::new();
+        for (g, o) in self.grads.iter_mut().zip(&outs[1..]) {
+            if first && scale == 1.0 {
+                copy_f32_into(o, g)?;
+            } else {
+                copy_f32_into(o, &mut tmp)?;
+                if first {
+                    g.iter_mut().zip(&tmp).for_each(|(gi, &x)| *gi = scale * x);
+                } else {
+                    g.iter_mut().zip(&tmp).for_each(|(gi, &x)| *gi += scale * x);
+                }
+            }
+        }
+        let t3 = std::time::Instant::now();
+        self.phase_secs[0] += (t1 - t0).as_secs_f64();
+        self.phase_secs[1] += (t2 - t1).as_secs_f64();
+        self.phase_secs[2] += (t3 - t2).as_secs_f64();
+        Ok(loss)
+    }
+
+    /// Execute the train artifact on (tokens, targets-as-i32) and apply one
+    /// strategy step. Returns the train loss.
+    fn step_lm_like(&mut self, tokens: &[i32], tgt_lit: xla::Literal) -> Result<f64> {
+        let loss = self.forward_backward(tokens, &tgt_lit, true, 1.0)?;
+        let t3 = std::time::Instant::now();
+        let lr = self.sched.at(self.step);
+        let info = self.strategy.step(&mut self.store, &self.grads, loss, lr, self.step);
+        let t4 = std::time::Instant::now();
+        self.phase_secs[3] += (t4 - t3).as_secs_f64();
+        self.mark_dirty(&info.active_layers);
+        self.mem.record(info.mem);
+        self.logger.log(&Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(loss)),
+            ("lr", Json::num(lr)),
+            ("updated", Json::num(info.updated_coords as f64)),
+            ("reselected", Json::Bool(info.reselected)),
+            ("mem_gb", Json::num(info.mem.total() as f64 / 1e9)),
+        ]));
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Train on an LM stream for `steps`, evaluating every `eval_every`.
+    /// With cfg.grad_accum > 1 each optimizer step consumes that many
+    /// microbatches (mean loss / mean gradients).
+    pub fn train_lm(
+        &mut self,
+        train: &mut dyn LmStream,
+        eval: &mut dyn LmStream,
+    ) -> Result<RunResult> {
+        let (b, t) = self.batch_shape();
+        let sw = Stopwatch::start();
+        let mut train_losses = Vec::with_capacity(self.cfg.steps);
+        let mut evals = Vec::new();
+        let exec0 = self.rt.exec_secs;
+        let accum = self.cfg.grad_accum.max(1);
+        for s in 0..self.cfg.steps {
+            let loss = if accum == 1 {
+                let batch = train.next_batch(b, t);
+                let tgt = lit_i32(&batch.targets, &[b, t])?;
+                self.step_lm_like(&batch.tokens, tgt)?
+            } else {
+                let scale = 1.0 / accum as f32;
+                let mut mean_loss = 0.0;
+                for k in 0..accum {
+                    let batch = train.next_batch(b, t);
+                    let tgt = lit_i32(&batch.targets, &[b, t])?;
+                    mean_loss += self.forward_backward(&batch.tokens, &tgt, k == 0, scale)?;
+                }
+                mean_loss /= accum as f64;
+                let t3 = std::time::Instant::now();
+                let lr = self.sched.at(self.step);
+                let info =
+                    self.strategy.step(&mut self.store, &self.grads, mean_loss, lr, self.step);
+                self.phase_secs[3] += t3.elapsed().as_secs_f64();
+                self.mark_dirty(&info.active_layers);
+                self.mem.record(info.mem);
+                self.step += 1;
+                mean_loss
+            };
+            train_losses.push(loss);
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                evals.push(self.eval_lm(eval).context("eval")?);
+            }
+        }
+        if evals.is_empty() || evals.last().map(|e| e.step) != Some(self.step) {
+            evals.push(self.eval_lm(eval)?);
+        }
+        Ok(self.finish(train_losses, evals, sw.secs(), self.rt.exec_secs - exec0))
+    }
+
+    /// LM evaluation: aggregate (loss_sum, valid_count) over eval batches.
+    pub fn eval_lm(&mut self, eval: &mut dyn LmStream) -> Result<EvalPoint> {
+        let (b, t) = (self.eval_art.batch, self.eval_art.seq);
+        let mut loss_sum = 0.0f64;
+        let mut count = 0.0f64;
+        self.sync_param_lits()?;
+        for _ in 0..self.cfg.eval_batches {
+            let batch = eval.next_batch(b, t);
+            let tok_lit = lit_i32(&batch.tokens, &[b, t])?;
+            let tgt_lit = lit_i32(&batch.targets, &[b, t])?;
+            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            inputs.push(&tok_lit);
+            inputs.push(&tgt_lit);
+            let outs = self.rt.execute(&self.eval_art.id, &inputs)?;
+            loss_sum += scalar_f32(&outs[0])? as f64;
+            count += scalar_f32(&outs[1])? as f64;
+        }
+        let mean = loss_sum / count.max(1.0);
+        Ok(EvalPoint {
+            step: self.step,
+            loss: mean,
+            metric: perplexity(loss_sum, count),
+            preds: Vec::new(),
+            labels: Vec::new(),
+        })
+    }
+
+    /// Train on a classification/regression source.
+    pub fn train_cls(&mut self, src: &mut dyn ClsSource) -> Result<RunResult> {
+        let (b, t) = self.batch_shape();
+        let sw = Stopwatch::start();
+        let mut train_losses = Vec::with_capacity(self.cfg.steps);
+        let mut evals = Vec::new();
+        let exec0 = self.rt.exec_secs;
+        let regression = src.regression();
+        for s in 0..self.cfg.steps {
+            let batch = src.batch(b, t, true);
+            let tgt = if regression {
+                lit_f32(&batch.labels_f, &[b])?
+            } else {
+                lit_i32(&batch.labels_i, &[b])?
+            };
+            let loss = self.step_lm_like(&batch.tokens, tgt)?;
+            train_losses.push(loss);
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                evals.push(self.eval_cls(src)?);
+            }
+        }
+        if evals.is_empty() || evals.last().map(|e| e.step) != Some(self.step) {
+            evals.push(self.eval_cls(src)?);
+        }
+        Ok(self.finish(train_losses, evals, sw.secs(), self.rt.exec_secs - exec0))
+    }
+
+    /// Classification eval: (loss_sum, metric_sum, preds) per batch.
+    pub fn eval_cls(&mut self, src: &mut dyn ClsSource) -> Result<EvalPoint> {
+        let (b, t) = (self.eval_art.batch, self.eval_art.seq);
+        let regression = src.regression();
+        let mut loss_sum = 0.0;
+        let mut metric_sum = 0.0;
+        let mut n = 0.0;
+        let mut preds = Vec::new();
+        let mut labels = Vec::new();
+        self.sync_param_lits()?;
+        for _ in 0..self.cfg.eval_batches {
+            let batch = src.batch(b, t, false);
+            let tok_lit = lit_i32(&batch.tokens, &[b, t])?;
+            let tgt_lit = if regression {
+                lit_f32(&batch.labels_f, &[b])?
+            } else {
+                lit_i32(&batch.labels_i, &[b])?
+            };
+            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
+            inputs.push(&tok_lit);
+            inputs.push(&tgt_lit);
+            let outs = self.rt.execute(&self.eval_art.id, &inputs)?;
+            loss_sum += scalar_f32(&outs[0])? as f64;
+            metric_sum += scalar_f32(&outs[1])? as f64;
+            let p = outs[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("preds: {e}"))?;
+            preds.extend(p.iter().map(|&x| x as f64));
+            if regression {
+                labels.extend(batch.labels_f.iter().map(|&x| x as f64));
+            } else {
+                labels.extend(batch.labels_i.iter().map(|&x| x as f64));
+            }
+            n += b as f64;
+        }
+        let metric = if regression {
+            metric_sum / n // MSE
+        } else {
+            metric_sum / n // accuracy
+        };
+        Ok(EvalPoint { step: self.step, loss: loss_sum / n, metric, preds, labels })
+    }
+
+    fn finish(
+        &mut self,
+        train_losses: Vec<f64>,
+        evals: Vec<EvalPoint>,
+        wall: f64,
+        exec_secs: f64,
+    ) -> RunResult {
+        RunResult {
+            method: self.strategy.name().to_string(),
+            final_train_loss: *train_losses.last().unwrap_or(&f64::NAN),
+            steps_per_sec: train_losses.len() as f64 / wall.max(1e-9),
+            peak_mem_gb: self.mem.peak_gb(),
+            peak_mem_bytes: self.mem.peak_total,
+            wall_secs: wall,
+            exec_secs,
+            phase_secs: self.phase_secs,
+            telemetry: self.strategy.telemetry(),
+            train_losses,
+            evals,
+        }
+    }
+}
