@@ -1,0 +1,24 @@
+# Repo driver targets. `make check` is the tier-1 gate (ROADMAP.md); it
+# needs only a Rust toolchain — no Python, no artifacts: tests fall back to
+# the pure-Rust NativeBackend when artifacts/ is absent.
+
+.PHONY: check build test bench artifacts clean
+
+check: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+# AOT-lower the JAX model to HLO artifacts (enables the PJRT backend).
+# Requires jax; run from a machine with the Python toolchain.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+clean:
+	cargo clean

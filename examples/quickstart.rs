@@ -1,28 +1,26 @@
 //! Quickstart: the smallest end-to-end BlockLLM run.
 //!
-//! Loads the nano AOT artifact (the PALLAS-attention variant, proving the
-//! L1 kernel is live in the served HLO), pretrains on the C4-sim stream for
-//! 40 steps with BlockLLM (s=0.9), and prints the loss curve, block
-//! selections, and the memory ledger vs full Adam.
+//! Pretrains the nano model on the C4-sim stream for 40 steps with BlockLLM
+//! (s=0.9) and prints the loss curve, block selections, and the memory
+//! ledger vs full Adam. Runs on ANY machine: with AOT artifacts present it
+//! executes via PJRT (the Pallas-attention artifact, proving the L1 kernel
+//! is live in the served HLO); without them it runs the pure-Rust native
+//! backend.
 //!
 //!     cargo run --release --example quickstart
 
 use anyhow::Result;
 
-use blockllm::config::{Method, Task, TrainConfig};
+use blockllm::config::{presets, Method, Task, TrainConfig};
 use blockllm::experiments::common::{run_config, sparkline};
-use blockllm::runtime::Runtime;
 use blockllm::util::human_bytes;
 
 fn main() -> Result<()> {
-    let mut rt = Runtime::open_default()?;
-    println!("PJRT up; {} artifacts in manifest", rt.manifest.artifacts.len());
-
     let mut cfg = TrainConfig::default();
     cfg.preset = "nano".into();
     cfg.task = Task::C4Pretrain;
     cfg.method = Method::BlockLlm;
-    cfg.use_pallas_artifact = true; // L1 Pallas attention inside the HLO
+    cfg.use_pallas_artifact = true; // L1 Pallas attention inside the HLO (pjrt path)
     cfg.steps = 40;
     cfg.eval_every = 20;
     cfg.eval_batches = 2;
@@ -30,11 +28,15 @@ fn main() -> Result<()> {
     cfg.patience = 10;
     cfg.lr = 3e-3;
 
+    let preset = presets::get(&cfg.preset).expect("nano preset");
     println!(
         "training {} ({} params) with BlockLLM s={} on C4-sim ...",
-        cfg.preset, rt.manifest.presets[&cfg.preset].param_count, cfg.sparsity
+        cfg.preset,
+        preset.param_count(),
+        cfg.sparsity
     );
-    let res = run_config(&mut rt, &cfg, None)?;
+    let res = run_config(&cfg, None)?;
+    println!("execution backend: {}", res.backend);
 
     println!("\nloss curve  {}", sparkline(&res.train_losses, 50));
     println!(
@@ -44,9 +46,9 @@ fn main() -> Result<()> {
         res.final_metric()
     );
     println!(
-        "peak modeled training memory: {} (full Adam would be {})",
+        "peak modeled training memory: {} (full Adam weights+grads+moments would be {})",
         human_bytes(res.peak_mem_bytes),
-        human_bytes(4 * 4 * rt.manifest.presets[&cfg.preset].param_count as u64),
+        human_bytes(4 * 4 * preset.param_count() as u64),
     );
     for (k, v) in &res.telemetry {
         println!("  {k} = {v}");

@@ -1,0 +1,376 @@
+"""Blueprint + oracle for the Rust NativeBackend (rust/src/backend/native.rs).
+
+The numpy code below is a line-for-line mirror of the Rust native engine's
+forward AND hand-derived backward pass.  It is asserted here against
+jax.value_and_grad of the L2 reference model (compile/model.py) on every
+head (lm / cls / reg), so the Rust transcription has a machine-checked
+mathematical blueprint.  Run as a script to print the deterministic-filler
+golden losses pinned in rust/tests/native_golden.rs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+try:  # package import (pytest from repo root via conftest)
+    from compile import model
+    from compile.presets import PRESETS
+except ImportError:  # script execution from python/
+    import os, sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from compile import model
+    from compile.presets import PRESETS
+
+RMS_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# numpy forward (mirrors rust backend/native.rs exactly)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_fwd(x, g):
+    # x: (B,T,D), g: (D,)
+    r = 1.0 / np.sqrt(np.mean(x * x, axis=-1, keepdims=True) + RMS_EPS)
+    return x * r * g, r
+
+
+def rmsnorm_bwd(dy, x, g, r):
+    d = x.shape[-1]
+    dg = np.sum(dy * x * r, axis=(0, 1))
+    s = np.sum(dy * g * x, axis=-1, keepdims=True)
+    dx = dy * g * r - x * (r ** 3) * s / d
+    return dx, dg
+
+
+def rope_tables(t, dh):
+    half = dh // 2
+    freq = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float64) / half))
+    ang = np.arange(t, dtype=np.float64)[:, None] * freq[None, :]
+    return np.cos(ang), np.sin(ang)  # (T, half)
+
+
+def rope_fwd(x, cos, sin):
+    # x: (B,T,H,Dh)
+    half = x.shape[-1] // 2
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return np.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def rope_bwd(dy, cos, sin):
+    # rotation is orthogonal: backward = inverse rotation
+    half = dy.shape[-1] // 2
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    d1, d2 = dy[..., :half], dy[..., half:]
+    return np.concatenate([d1 * c + d2 * s, -d1 * s + d2 * c], axis=-1)
+
+
+def softmax_rows(x):
+    m = np.max(x, axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / np.sum(e, axis=-1, keepdims=True)
+
+
+def silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+class LayerCache:
+    pass
+
+
+def trunk_fwd(params, tokens, p):
+    """params: dict name->array (f32). tokens: (B,T) int. Returns xf, caches."""
+    b, t = tokens.shape
+    d, h = p.d_model, p.n_heads
+    dh = d // h
+    scale = 1.0 / np.sqrt(dh)
+    cos, sin = rope_tables(t, dh)
+    x = params["tok_emb"][tokens]  # (B,T,D) gather rows
+    caches = []
+    for i in range(p.n_layers):
+        pre = f"layers.{i}."
+        c = LayerCache()
+        c.x0 = x
+        c.ha, c.ra = rmsnorm_fwd(x, params[pre + "attn_norm"])
+        q = (c.ha @ params[pre + "wq"]).reshape(b, t, h, dh)
+        k = (c.ha @ params[pre + "wk"]).reshape(b, t, h, dh)
+        c.v = (c.ha @ params[pre + "wv"]).reshape(b, t, h, dh)
+        c.q = rope_fwd(q, cos, sin)
+        c.k = rope_fwd(k, cos, sin)
+        # per (b, head): S = q k^T * scale, causal mask, softmax, ctx = P v
+        c.probs = np.zeros((b, h, t, t), dtype=x.dtype)
+        ctx = np.zeros((b, t, h, dh), dtype=x.dtype)
+        for bi in range(b):
+            for hi in range(h):
+                qh = c.q[bi, :, hi, :]  # (T, Dh)
+                kh = c.k[bi, :, hi, :]
+                vh = c.v[bi, :, hi, :]
+                s_mat = (qh @ kh.T) * scale
+                mask = np.triu(np.ones((t, t), dtype=bool), 1)
+                s_mat = np.where(mask, -np.inf, s_mat)
+                pr = softmax_rows(s_mat)
+                c.probs[bi, hi] = pr
+                ctx[bi, :, hi, :] = pr @ vh
+        c.ctx = ctx.reshape(b, t, d)
+        x = x + c.ctx @ params[pre + "wo"]
+        c.x1 = x
+        c.hm, c.rm = rmsnorm_fwd(x, params[pre + "mlp_norm"])
+        c.g = c.hm @ params[pre + "w_gate"]
+        c.u = c.hm @ params[pre + "w_up"]
+        c.sg = 1.0 / (1.0 + np.exp(-c.g))  # sigmoid(g)
+        c.prod = (c.g * c.sg) * c.u  # silu(g) * u
+        x = x + c.prod @ params[pre + "w_down"]
+        c.x2 = x
+        caches.append(c)
+    xf, rf = rmsnorm_fwd(x, params["final_norm"])
+    return xf, rf, caches, (cos, sin, scale)
+
+
+def trunk_bwd(dxf, params, tokens, p, xf_inputs, caches, tables, grads):
+    b, t = tokens.shape
+    d, h = p.d_model, p.n_heads
+    dh = d // h
+    cos, sin, scale = tables
+    x2 = caches[-1].x2 if caches else params["tok_emb"][tokens]
+    dx, dgf = rmsnorm_bwd(dxf, x2, params["final_norm"], xf_inputs)
+    grads["final_norm"] += dgf
+    for i in reversed(range(p.n_layers)):
+        pre = f"layers.{i}."
+        c = caches[i]
+        # mlp residual: x2 = x1 + prod @ w_down
+        dprod = dx @ params[pre + "w_down"].T
+        grads[pre + "w_down"] += c.prod.reshape(b * t, -1).T @ dx.reshape(b * t, d)
+        sil = c.g * c.sg
+        du = dprod * sil
+        dg = dprod * c.u * (c.sg * (1.0 + c.g * (1.0 - c.sg)))  # dsilu/dg
+        grads[pre + "w_up"] += c.hm.reshape(b * t, d).T @ du.reshape(b * t, -1)
+        grads[pre + "w_gate"] += c.hm.reshape(b * t, d).T @ dg.reshape(b * t, -1)
+        dhm = dg @ params[pre + "w_gate"].T + du @ params[pre + "w_up"].T
+        dx1_from_norm, dgm = rmsnorm_bwd(dhm, c.x1, params[pre + "mlp_norm"], c.rm)
+        grads[pre + "mlp_norm"] += dgm
+        dx = dx + dx1_from_norm  # residual add
+        # attn residual: x1 = x0 + ctx @ wo
+        dctx = (dx @ params[pre + "wo"].T).reshape(b, t, h, dh)
+        grads[pre + "wo"] += c.ctx.reshape(b * t, d).T @ dx.reshape(b * t, d)
+        dq = np.zeros_like(c.q)
+        dk = np.zeros_like(c.k)
+        dv = np.zeros_like(c.v)
+        for bi in range(b):
+            for hi in range(h):
+                pr = c.probs[bi, hi]  # (T,T)
+                do = dctx[bi, :, hi, :]  # (T,Dh)
+                vh = c.v[bi, :, hi, :]
+                dv[bi, :, hi, :] = pr.T @ do
+                dp = do @ vh.T
+                ds = pr * (dp - np.sum(dp * pr, axis=-1, keepdims=True))
+                dq[bi, :, hi, :] = (ds @ c.k[bi, :, hi, :]) * scale
+                dk[bi, :, hi, :] = (ds.T @ c.q[bi, :, hi, :]) * scale
+        dq = rope_bwd(dq, cos, sin).reshape(b, t, d)
+        dk = rope_bwd(dk, cos, sin).reshape(b, t, d)
+        dv = dv.reshape(b, t, d)
+        grads[pre + "wq"] += c.ha.reshape(b * t, d).T @ dq.reshape(b * t, d)
+        grads[pre + "wk"] += c.ha.reshape(b * t, d).T @ dk.reshape(b * t, d)
+        grads[pre + "wv"] += c.ha.reshape(b * t, d).T @ dv.reshape(b * t, d)
+        dha = dq @ params[pre + "wq"].T + dk @ params[pre + "wk"].T + dv @ params[pre + "wv"].T
+        dx0_from_norm, dga = rmsnorm_bwd(dha, c.x0, params[pre + "attn_norm"], c.ra)
+        grads[pre + "attn_norm"] += dga
+        dx = dx + dx0_from_norm
+    # embedding scatter-add
+    demb = grads["tok_emb"]
+    flat_tok = tokens.reshape(-1)
+    flat_dx = dx.reshape(-1, d)
+    for j, tok in enumerate(flat_tok):
+        demb[tok] += flat_dx[j]
+
+
+def lm_fwd_bwd(params, tokens, targets, p):
+    """Returns (mean loss, grads dict). targets: -1 = ignore."""
+    b, t = tokens.shape
+    xf, rf, caches, tables = trunk_fwd(params, tokens, p)
+    logits = xf @ params["lm_head"]  # (B,T,V)
+    probs = softmax_rows(logits)
+    valid = targets >= 0
+    count = max(float(np.sum(valid)), 1.0)
+    # loss accumulated in f64
+    m = np.max(logits, axis=-1)
+    lse = m + np.log(np.sum(np.exp(logits - m[..., None]), axis=-1))
+    tgt = np.where(valid, targets, 0)
+    picked = np.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    loss = float(np.sum(np.where(valid, lse - picked, 0.0)) / count)
+    # backward
+    dlogits = probs.copy()
+    flat = dlogits.reshape(-1, dlogits.shape[-1])
+    for j, (tok, ok) in enumerate(zip(tgt.reshape(-1), valid.reshape(-1))):
+        if ok:
+            flat[j, tok] -= 1.0
+        else:
+            flat[j, :] = 0.0
+    dlogits = flat.reshape(dlogits.shape) / count
+    grads = {k: np.zeros_like(v) for k, v in params.items()}
+    d = p.d_model
+    grads["lm_head"] += xf.reshape(b * t, d).T @ dlogits.reshape(b * t, -1)
+    dxf = dlogits @ params["lm_head"].T
+    trunk_bwd(dxf, params, tokens, p, rf, caches, tables, grads)
+    return loss, grads
+
+
+def cls_fwd_bwd(params, tokens, labels, p, regression=False):
+    b, t = tokens.shape
+    d = p.d_model
+    xf, rf, caches, tables = trunk_fwd(params, tokens, p)
+    pooled = np.mean(xf, axis=1)  # (B, D)
+    logits = pooled @ params["cls_head"] + params["cls_bias"]
+    grads = {k: np.zeros_like(v) for k, v in params.items()}
+    if regression:
+        pred = logits[:, 0]
+        loss = float(np.mean((pred - labels) ** 2))
+        dpred = 2.0 * (pred - labels) / b
+        dlogits = dpred[:, None]
+    else:
+        probs = softmax_rows(logits)
+        m = np.max(logits, axis=-1)
+        lse = m + np.log(np.sum(np.exp(logits - m[:, None]), axis=-1))
+        picked = logits[np.arange(b), labels]
+        loss = float(np.mean(lse - picked))
+        dlogits = probs.copy()
+        dlogits[np.arange(b), labels] -= 1.0
+        dlogits /= b
+    grads["cls_head"] += pooled.T @ dlogits
+    grads["cls_bias"] += np.sum(dlogits, axis=0)
+    dpooled = dlogits @ params["cls_head"].T
+    dxf = np.repeat(dpooled[:, None, :], t, axis=1) / t
+    trunk_bwd(dxf, params, tokens, p, rf, caches, tables, grads)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def named_params(p, head, n_out, seed=0):
+    specs = model.param_specs(p, head, n_out)
+    flat = model.init_params(jax.random.PRNGKey(seed), p, head, n_out)
+    return specs, {name: np.asarray(a, np.float32) for (name, _), a in zip(specs, flat)}
+
+
+def filler_tokens(b, t, vocab, salt):
+    out = np.zeros((b, t), np.int32)
+    for i in range(b):
+        for j in range(t):
+            out[i, j] = (7 * i + 13 * j + salt) % vocab
+    return out
+
+
+def _assert_grads_close(specs, got, want_flat, rtol=2e-3, atol=2e-4):
+    for (name, _), w in zip(specs, want_flat):
+        g = got[name]
+        w = np.asarray(w)
+        err = np.max(np.abs(g - w))
+        ref = np.max(np.abs(w)) + 1e-8
+        assert err <= atol + rtol * ref, f"{name}: max |Δgrad| {err} vs ref {ref}"
+
+
+def test_lm_mirror_matches_jax():
+    p = PRESETS["nano"]
+    b, t = 2, 16
+    specs, params = named_params(p, "lm", 0, seed=3)
+    tokens = filler_tokens(b, t, p.vocab, 0)
+    targets = filler_tokens(b, t, p.vocab, 3)
+    targets[0, :3] = -1  # exercise the ignore path
+    loss, grads = lm_fwd_bwd(params, tokens, targets, p)
+
+    flat = [jnp.asarray(params[name]) for name, _ in specs]
+    jloss, jgrads = jax.value_and_grad(
+        lambda ps: model.lm_loss_mean(ps, jnp.asarray(tokens), jnp.asarray(targets), p)
+    )(flat)
+    assert abs(loss - float(jloss)) < 1e-4 * max(1.0, abs(float(jloss))), (loss, float(jloss))
+    _assert_grads_close(specs, grads, jgrads)
+
+
+def test_cls_mirror_matches_jax():
+    p = PRESETS["nano"]
+    b, t, n_out = 4, 12, 3
+    specs, params = named_params(p, "cls", n_out, seed=5)
+    tokens = filler_tokens(b, t, p.vocab, 1)
+    labels = np.array([0, 1, 2, 1], np.int32)
+    loss, grads = cls_fwd_bwd(params, tokens, labels, p, regression=False)
+
+    flat = [jnp.asarray(params[name]) for name, _ in specs]
+    jloss, jgrads = jax.value_and_grad(
+        lambda ps: model.cls_loss_mean(ps, jnp.asarray(tokens), jnp.asarray(labels), p)
+    )(flat)
+    assert abs(loss - float(jloss)) < 1e-4 * max(1.0, abs(float(jloss)))
+    _assert_grads_close(specs, grads, jgrads)
+
+
+def test_reg_mirror_matches_jax():
+    p = PRESETS["nano"]
+    b, t = 4, 12
+    specs, params = named_params(p, "reg", 1, seed=7)
+    tokens = filler_tokens(b, t, p.vocab, 2)
+    labels = np.array([0.1, 0.9, 0.4, 0.6], np.float32)
+    loss, grads = cls_fwd_bwd(params, tokens, labels, p, regression=True)
+
+    flat = [jnp.asarray(params[name]) for name, _ in specs]
+    jloss, jgrads = jax.value_and_grad(
+        lambda ps: model.reg_loss_mean(ps, jnp.asarray(tokens), jnp.asarray(labels), p)
+    )(flat)
+    assert abs(loss - float(jloss)) < 1e-4 * max(1.0, abs(float(jloss)))
+    _assert_grads_close(specs, grads, jgrads)
+
+
+def deterministic_filler(specs):
+    """Mirror of rust ParamStore::fill_deterministic / aot.filler_params."""
+    out = {}
+    for pi, (name, shape) in enumerate(specs):
+        n = int(np.prod(shape))
+        if "norm" in name:
+            w = np.ones(n, np.float32)
+        elif name.endswith("bias"):
+            w = np.zeros(n, np.float32)
+        else:
+            j = np.arange(n, dtype=np.float32)
+            w = (0.02 * np.sin(0.1 * (j + 31.0 * pi))).astype(np.float32)
+        out[name] = w.reshape(shape)
+    return out
+
+
+def golden_native_losses():
+    """The constants pinned in rust/tests/native_golden.rs."""
+    p = PRESETS["nano"]
+    specs = model.param_specs(p, "lm")
+    params = deterministic_filler(specs)
+    b, t = 8, 64
+    tokens = filler_tokens(b, t, p.vocab, 0)
+    targets = filler_tokens(b, t, p.vocab, 3)
+    loss, grads = lm_fwd_bwd(params, tokens, targets, p)
+    norms = [float(np.linalg.norm(grads[name])) for name, _ in specs[:3]]
+    return loss, norms
+
+
+def test_golden_matches_jax_reference():
+    p = PRESETS["nano"]
+    specs = model.param_specs(p, "lm")
+    params = deterministic_filler(specs)
+    tokens = filler_tokens(8, 64, p.vocab, 0)
+    targets = filler_tokens(8, 64, p.vocab, 3)
+    flat = [jnp.asarray(params[name]) for name, _ in specs]
+    jloss = model.lm_loss_mean(flat, jnp.asarray(tokens), jnp.asarray(targets), p)
+    loss, _ = golden_native_losses()
+    assert abs(loss - float(jloss)) < 1e-4 * abs(float(jloss))
+
+
+if __name__ == "__main__":
+    test_lm_mirror_matches_jax()
+    print("lm mirror OK")
+    test_cls_mirror_matches_jax()
+    print("cls mirror OK")
+    test_reg_mirror_matches_jax()
+    print("reg mirror OK")
+    loss, norms = golden_native_losses()
+    print(f"native golden: nano lm b8t64 loss = {loss!r}")
+    print(f"grad_norms_first3 = {norms!r}")

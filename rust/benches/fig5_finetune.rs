@@ -2,10 +2,15 @@
 //! across BlockLLM, LoRA, BAdam, GaLore). `cargo bench` runs the quick
 //! variant; pass `--full` for the tiny-preset run. Same harness as
 //! `blockllm exp --id fig5` / examples/finetune_alpaca_sim.rs.
+//!
+//! Always produces numbers: the experiment harness resolves its execution
+//! backend per run (PJRT with artifacts, pure-Rust native without) and each
+//! run's table records which backend ran.
 
 fn main() {
     let quick = !std::env::args().any(|a| a == "--full");
     if let Err(e) = blockllm::experiments::run("fig5", quick) {
-        eprintln!("fig5 bench failed: {e:#} (did you run `make artifacts`?)");
+        eprintln!("fig5 bench failed: {e:#}");
+        std::process::exit(1);
     }
 }

@@ -2,10 +2,15 @@
 //! vs GaLore: perplexity + memory). `cargo bench` runs the quick ladder;
 //! pass `--full` for the full one. Same harness as
 //! `blockllm exp --id table1` / examples/pretrain_c4_sim.rs.
+//!
+//! Always produces numbers: the experiment harness resolves its execution
+//! backend per run (PJRT with artifacts, pure-Rust native without) and each
+//! run's table records which backend ran.
 
 fn main() {
     let quick = !std::env::args().any(|a| a == "--full");
     if let Err(e) = blockllm::experiments::run("table1", quick) {
-        eprintln!("table1 bench failed: {e:#} (did you run `make artifacts`?)");
+        eprintln!("table1 bench failed: {e:#}");
+        std::process::exit(1);
     }
 }

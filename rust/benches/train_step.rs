@@ -1,8 +1,10 @@
-//! Bench: full end-to-end training steps through the PJRT artifact for each
-//! method — the repo's equivalent of the paper's wall-clock comparison
+//! Bench: full end-to-end training steps through the execution backend for
+//! each method — the repo's equivalent of the paper's wall-clock comparison
 //! (Fig. 5 bottom-right), isolated from data generation.
 //!
-//! Requires `make artifacts`.
+//! Always produces numbers: with AOT artifacts present it drives PJRT,
+//! otherwise the pure-Rust native backend. The backend that ran is printed
+//! with every row.
 
 #[path = "harness.rs"]
 mod harness;
@@ -10,15 +12,10 @@ mod harness;
 use blockllm::config::{Method, Task, TrainConfig};
 use blockllm::data::c4sim::C4Sim;
 use blockllm::data::LmStream;
-use blockllm::runtime::Runtime;
 use blockllm::trainer::Trainer;
 use harness::bench;
 
 fn main() {
-    let Ok(mut rt) = Runtime::open_default() else {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    };
     let preset = std::env::args()
         .skip_while(|a| a != "--preset")
         .nth(1)
@@ -32,16 +29,28 @@ fn main() {
         cfg.steps = 1_000_000; // schedule horizon; we drive steps manually
         cfg.sparsity = 0.95;
         cfg.cosine_lr = false;
-        let mut tr = Trainer::new(&mut rt, cfg, None).expect("trainer");
+        let mut tr = match Trainer::open(cfg, None) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("SKIP {preset} {}: {e:#}", method.name());
+                continue;
+            }
+        };
+        let backend = tr.backend.name();
         let (b, t) = tr.batch_shape();
         let mut stream = C4Sim::new(9);
         // pre-generate batches so data gen is outside the timed region
         let batches: Vec<_> = (0..12).map(|_| stream.next_batch(b, t)).collect();
         let mut i = 0;
-        bench(&format!("train_step {preset} {}", method.name()), 3, 24, || {
-            let batch = &batches[i % batches.len()];
-            i += 1;
-            tr.bench_step(batch).expect("step");
-        });
+        bench(
+            &format!("train_step {preset} {} [{backend}]", method.name()),
+            3,
+            24,
+            || {
+                let batch = &batches[i % batches.len()];
+                i += 1;
+                tr.bench_step(batch).expect("step");
+            },
+        );
     }
 }

@@ -1,0 +1,232 @@
+//! PJRT execution backend: wraps the `runtime` module (AOT HLO artifacts)
+//! behind the `Backend` trait.
+//!
+//! Owns everything XLA-specific that used to live inside the trainer: the
+//! persistent parameter literals (built once, refreshed in place only for
+//! layers the strategy touched — the first hot-path optimization recorded in
+//! EXPERIMENTS.md §Perf), the input marshaling, and the output untupling.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{EvalOut, Targets};
+use crate::config::TrainConfig;
+use crate::model::ParamStore;
+use crate::runtime::{copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime};
+
+pub struct PjrtBackend {
+    rt: Runtime,
+    train_art: ArtifactInfo,
+    eval_art: ArtifactInfo,
+    /// persistent parameter literals; built lazily from the store on first
+    /// use so warm-starts applied after construction are picked up
+    param_lits: Option<Vec<xla::Literal>>,
+    dirty: Vec<bool>,
+    /// [param upload, execute, grad download] cumulative seconds
+    phase: [f64; 3],
+}
+
+impl PjrtBackend {
+    /// Resolve the train/eval artifacts for a config from the default
+    /// artifacts directory. Fails cleanly when artifacts are absent or the
+    /// PJRT client cannot start (e.g. the vendored xla stub) — `auto`
+    /// backend selection falls back to native in that case.
+    pub fn open(cfg: &TrainConfig, head: &str, n_out: usize) -> Result<PjrtBackend> {
+        let rt = Runtime::open_default()?;
+        Self::with_runtime(rt, cfg, head, n_out)
+    }
+
+    pub fn with_runtime(
+        rt: Runtime,
+        cfg: &TrainConfig,
+        head: &str,
+        n_out: usize,
+    ) -> Result<PjrtBackend> {
+        let find = |phase: &str| -> Result<ArtifactInfo> {
+            rt.manifest
+                .artifacts
+                .values()
+                .find(|a| {
+                    a.preset == cfg.preset
+                        && a.head == head
+                        && a.kind.ends_with(phase)
+                        && a.pallas == cfg.use_pallas_artifact
+                        && (head == "lm" || a.n_out == n_out.max(1))
+                })
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no artifact preset={} head={head} n_out={n_out} phase={phase} pallas={} — run `make artifacts`",
+                        cfg.preset,
+                        cfg.use_pallas_artifact
+                    )
+                })
+        };
+        let train_art = find("train")?;
+        let eval_art = find("eval")?;
+        // the trainer generates both train and eval batches at one shape
+        // (Backend::batch_shape); reject manifests where the pair disagrees
+        // rather than marshaling wrongly-shaped eval literals later
+        if (train_art.batch, train_art.seq) != (eval_art.batch, eval_art.seq) {
+            bail!(
+                "train artifact {} is ({}, {}) but eval artifact {} is ({}, {}); \
+                 the backend contract requires one batch shape per run",
+                train_art.id,
+                train_art.batch,
+                train_art.seq,
+                eval_art.id,
+                eval_art.batch,
+                eval_art.seq
+            );
+        }
+        let n_tensors = train_art.params.len();
+        Ok(PjrtBackend {
+            rt,
+            train_art,
+            eval_art,
+            param_lits: None,
+            dirty: vec![false; n_tensors],
+            phase: [0.0; 3],
+        })
+    }
+
+    /// Build or refresh the persistent parameter literals from the store.
+    fn sync_param_lits(&mut self, store: &ParamStore) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        match &mut self.param_lits {
+            None => {
+                self.param_lits = Some(store.to_literals()?);
+                self.dirty.iter_mut().for_each(|d| *d = false);
+            }
+            Some(lits) => {
+                for (i, d) in self.dirty.iter_mut().enumerate() {
+                    if *d {
+                        lits[i]
+                            .copy_raw_from::<f32>(&store.bufs[i])
+                            .map_err(|e| anyhow!("param upload {i}: {e}"))?;
+                        *d = false;
+                    }
+                }
+            }
+        }
+        self.phase[0] += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn target_literal(&self, targets: Targets<'_>, b: usize, t: usize) -> Result<xla::Literal> {
+        match targets {
+            Targets::Lm(x) => lit_i32(x, &[b, t]),
+            Targets::Cls(x) => lit_i32(x, &[b]),
+            Targets::Reg(x) => lit_f32(x, &[b]),
+        }
+    }
+
+    fn execute(
+        &mut self,
+        art_id: &str,
+        tok_lit: &xla::Literal,
+        tgt_lit: &xla::Literal,
+    ) -> Result<Vec<xla::Literal>> {
+        let lits = self.param_lits.as_ref().expect("synced before execute");
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.push(tok_lit);
+        inputs.push(tgt_lit);
+        let t0 = std::time::Instant::now();
+        let outs = self.rt.execute(art_id, &inputs)?;
+        self.phase[1] += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+}
+
+impl super::Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn param_specs(&self) -> &[ParamSpec] {
+        &self.train_art.params
+    }
+
+    fn batch_shape(&self) -> (usize, usize) {
+        (self.train_art.batch, self.train_art.seq)
+    }
+
+    fn forward_backward(
+        &mut self,
+        store: &ParamStore,
+        tokens: &[i32],
+        targets: Targets<'_>,
+        grads_out: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        let (b, t) = (self.train_art.batch, self.train_art.seq);
+        self.sync_param_lits(store)?;
+        let tok_lit = lit_i32(tokens, &[b, t])?;
+        let tgt_lit = self.target_literal(targets, b, t)?;
+        let art_id = self.train_art.id.clone();
+        let outs = self.execute(&art_id, &tok_lit, &tgt_lit)?;
+        if outs.len() != 1 + grads_out.len() {
+            bail!("artifact returned {} outputs, want {}", outs.len(), 1 + grads_out.len());
+        }
+        let t2 = std::time::Instant::now();
+        let loss = scalar_f32(&outs[0])? as f64;
+        for (g, o) in grads_out.iter_mut().zip(&outs[1..]) {
+            copy_f32_into(o, g)?;
+        }
+        self.phase[2] += t2.elapsed().as_secs_f64();
+        Ok(loss)
+    }
+
+    fn eval_batch(
+        &mut self,
+        store: &ParamStore,
+        tokens: &[i32],
+        targets: Targets<'_>,
+    ) -> Result<EvalOut> {
+        let (b, t) = (self.eval_art.batch, self.eval_art.seq);
+        self.sync_param_lits(store)?;
+        let tok_lit = lit_i32(tokens, &[b, t])?;
+        let tgt_lit = self.target_literal(targets, b, t)?;
+        let art_id = self.eval_art.id.clone();
+        let outs = self.execute(&art_id, &tok_lit, &tgt_lit)?;
+        let loss_sum = scalar_f32(&outs[0])? as f64;
+        let aux = scalar_f32(&outs[1])? as f64;
+        let preds = match targets {
+            Targets::Lm(_) => Vec::new(),
+            _ => outs
+                .get(2)
+                .map(|o| o.to_vec::<f32>().map_err(|e| anyhow!("preds: {e}")))
+                .transpose()?
+                .unwrap_or_default(),
+        };
+        Ok(EvalOut { loss_sum, aux, preds })
+    }
+
+    fn params_updated(&mut self, active_layers: &[usize]) {
+        if active_layers.is_empty() {
+            self.dirty.iter_mut().for_each(|d| *d = true);
+        } else {
+            for &l in active_layers {
+                if l < self.dirty.len() {
+                    self.dirty[l] = true;
+                }
+            }
+        }
+    }
+
+    fn exec_secs(&self) -> f64 {
+        self.rt.exec_secs
+    }
+
+    fn exec_calls(&self) -> u64 {
+        self.rt.exec_calls
+    }
+
+    fn phase_secs(&self) -> [f64; 3] {
+        self.phase
+    }
+
+    fn activation_bytes(&self) -> u64 {
+        // activations live inside XLA's arena; the modeled comparison
+        // charges them to the artifact, not the host
+        0
+    }
+}

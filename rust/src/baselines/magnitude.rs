@@ -132,6 +132,7 @@ impl Strategy for Magnitude {
                 optim_m: active * 4,
                 optim_v: active * 4,
                 extra: self.ever_updated.iter().map(|m| m.bytes()).sum(),
+                activations: 0,
             },
             active_layers: Vec::new(),
         }

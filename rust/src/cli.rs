@@ -68,14 +68,17 @@ blockllm — BlockLLM (Ramesh et al., 2024) reproduction, Rust+JAX+Pallas
 
 USAGE:
   blockllm train [--preset tiny] [--task c4|alpaca|glue-<t>] [--method blockllm|adam|galore|lora|badam]
-                 [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42] ...
+                 [--backend auto|native|pjrt] [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42] ...
   blockllm exp --id <fig1|table1|table2|table3|table4|table5|fig3|fig5|fig6|fig7|fig9|table7|table8>
   blockllm exp --all [--quick]
   blockllm eval --ckpt path [--preset tiny] [--task c4]
-  blockllm info                 # manifest / artifact inventory
+  blockllm info                 # preset registry + artifact inventory
   blockllm help
 
 Any TrainConfig key can be overridden with --key value (see config/mod.rs).
+--backend selects the execution engine: `pjrt` runs the AOT HLO artifacts
+(`make artifacts`), `native` runs the pure-Rust model engine, and `auto`
+(default) prefers pjrt when artifacts exist, falling back to native.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

@@ -6,9 +6,40 @@
 //! the run's results directory so every number in EXPERIMENTS.md is
 //! reproducible.
 
+pub mod presets;
+
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;
+
+/// Which execution engine runs the model fwd/bwd (the L2.5 backend layer,
+/// rust/src/backend/). `Auto` prefers PJRT when AOT artifacts are present
+/// and falls back to the pure-Rust native engine otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            _ => bail!("unknown backend {s:?} (want auto|native|pjrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Which optimization method drives the run (the paper's comparison set).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +153,9 @@ pub struct TrainConfig {
     pub preset: String,
     pub task: Task,
     pub method: Method,
+    /// execution backend: auto (pjrt when artifacts exist, else native),
+    /// native (pure Rust), pjrt (require artifacts)
+    pub backend: BackendKind,
     pub steps: usize,
     pub eval_every: usize,
     pub eval_batches: usize,
@@ -167,6 +201,7 @@ impl Default for TrainConfig {
             preset: "nano".into(),
             task: Task::C4Pretrain,
             method: Method::BlockLlm,
+            backend: BackendKind::Auto,
             steps: 200,
             eval_every: 50,
             eval_batches: 8,
@@ -203,6 +238,7 @@ impl TrainConfig {
         match key {
             "preset" => self.preset = val.into(),
             "method" => self.method = Method::parse(val)?,
+            "backend" => self.backend = BackendKind::parse(val)?,
             "task" => {
                 self.task = match val {
                     "c4" | "pretrain" => Task::C4Pretrain,
@@ -273,6 +309,7 @@ impl TrainConfig {
             ("preset", Json::str(self.preset.clone())),
             ("task", Json::str(self.task.name())),
             ("method", Json::str(self.method.name())),
+            ("backend", Json::str(self.backend.name())),
             ("steps", Json::num(self.steps as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("lr", Json::num(self.lr)),
@@ -308,12 +345,23 @@ mod tests {
     }
 
     #[test]
+    fn backend_parse_roundtrip() {
+        for b in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(b.name()).unwrap(), b);
+        }
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
     fn config_overrides() {
         let mut c = TrainConfig::default();
         c.set("method", "galore").unwrap();
         c.set("sparsity", "0.95").unwrap();
         c.set("m", "100").unwrap();
         c.set("task", "glue-cola").unwrap();
+        c.set("backend", "native").unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(c.set("backend", "tpu").is_err());
         assert_eq!(c.method, Method::GaLore);
         assert_eq!(c.sparsity, 0.95);
         assert_eq!(c.patience, 100);

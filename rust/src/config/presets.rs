@@ -1,0 +1,139 @@
+//! Model preset registry — the Rust mirror of python/compile/presets.py.
+//!
+//! The native backend builds models from these dims directly (no manifest
+//! needed); the PJRT backend cross-checks them against the manifest. The
+//! parameter table produced by `param_specs` is the ABI: it must match
+//! python/compile/model.py::param_specs order exactly (tok_emb, per-layer
+//! [attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down], final_norm,
+//! head) — do not reorder.
+
+use crate::runtime::ParamSpec;
+
+/// LLaMA-architecture decoder dims scaled to single-CPU-core scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Preset {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl Preset {
+    pub fn d_head(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Total LM-head parameter count (matches presets.py::param_count).
+    pub fn param_count(&self) -> usize {
+        let (v, d, f) = (self.vocab, self.d_model, self.d_ff);
+        let per_layer = 2 * d + 4 * d * d + 3 * d * f;
+        v * d + self.n_layers * per_layer + d + d * v
+    }
+
+    /// Ordered parameter table for a head ("lm" | "cls" | "reg").
+    pub fn param_specs(&self, head: &str, n_out: usize) -> Vec<ParamSpec> {
+        let d = self.d_model;
+        let mut specs = vec![ParamSpec { name: "tok_emb".into(), shape: vec![self.vocab, d] }];
+        for i in 0..self.n_layers {
+            let pre = format!("layers.{i}.");
+            let push = |specs: &mut Vec<ParamSpec>, suffix: &str, shape: Vec<usize>| {
+                specs.push(ParamSpec { name: format!("{pre}{suffix}"), shape });
+            };
+            push(&mut specs, "attn_norm", vec![d]);
+            push(&mut specs, "wq", vec![d, d]);
+            push(&mut specs, "wk", vec![d, d]);
+            push(&mut specs, "wv", vec![d, d]);
+            push(&mut specs, "wo", vec![d, d]);
+            push(&mut specs, "mlp_norm", vec![d]);
+            push(&mut specs, "w_gate", vec![d, self.d_ff]);
+            push(&mut specs, "w_up", vec![d, self.d_ff]);
+            push(&mut specs, "w_down", vec![self.d_ff, d]);
+        }
+        specs.push(ParamSpec { name: "final_norm".into(), shape: vec![d] });
+        match head {
+            "lm" => specs.push(ParamSpec { name: "lm_head".into(), shape: vec![d, self.vocab] }),
+            "cls" | "reg" => {
+                let n = if head == "reg" { 1 } else { n_out };
+                specs.push(ParamSpec { name: "cls_head".into(), shape: vec![d, n] });
+                specs.push(ParamSpec { name: "cls_bias".into(), shape: vec![n] });
+            }
+            other => panic!("unknown head {other:?}"),
+        }
+        specs
+    }
+
+    /// Default LM batch shape — mirrors aot.py's DEFAULT_PLAN (8, 64).
+    pub fn lm_batch(&self) -> (usize, usize) {
+        (8, 64.min(self.max_seq))
+    }
+
+    /// Default classifier/regression batch shape — aot.py uses (16, 32).
+    pub fn cls_batch(&self) -> (usize, usize) {
+        (16, 32.min(self.max_seq))
+    }
+}
+
+/// The nano..base ladder (stand-ins for the paper's LLaMA 60M..7B).
+pub const PRESETS: [Preset; 5] = [
+    Preset { name: "nano", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 176, max_seq: 64 },
+    Preset { name: "micro", vocab: 256, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 352, max_seq: 64 },
+    Preset { name: "tiny", vocab: 256, d_model: 256, n_layers: 6, n_heads: 4, d_ff: 688, max_seq: 64 },
+    Preset { name: "small", vocab: 256, d_model: 320, n_layers: 8, n_heads: 8, d_ff: 864, max_seq: 64 },
+    Preset { name: "base", vocab: 256, d_model: 448, n_layers: 10, n_heads: 8, d_ff: 1216, max_seq: 64 },
+];
+
+pub fn get(name: &str) -> Option<&'static Preset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nano_matches_manifest_numbers() {
+        // the same numbers the python preset registry and the shipped
+        // manifest report for nano
+        let p = get("nano").unwrap();
+        assert_eq!(p.d_head(), 32);
+        assert_eq!(p.param_count(), 133_440);
+    }
+
+    #[test]
+    fn lm_spec_table_shape_and_order() {
+        let p = get("nano").unwrap();
+        let specs = p.param_specs("lm", 0);
+        assert_eq!(specs.len(), 1 + 9 * p.n_layers + 2);
+        assert_eq!(specs[0].name, "tok_emb");
+        assert_eq!(specs[1].name, "layers.0.attn_norm");
+        assert_eq!(specs[9].name, "layers.0.w_down");
+        assert_eq!(specs[9].shape, vec![176, 64]);
+        assert_eq!(specs.last().unwrap().name, "lm_head");
+        let total: usize = specs.iter().map(ParamSpec::numel).sum();
+        assert_eq!(total, p.param_count());
+    }
+
+    #[test]
+    fn cls_and_reg_heads() {
+        let p = get("nano").unwrap();
+        let cls = p.param_specs("cls", 3);
+        assert_eq!(cls.last().unwrap().name, "cls_bias");
+        assert_eq!(cls[cls.len() - 2].shape, vec![64, 3]);
+        let reg = p.param_specs("reg", 1);
+        assert_eq!(reg[reg.len() - 2].shape, vec![64, 1]);
+    }
+
+    #[test]
+    fn every_preset_is_consistent() {
+        for p in &PRESETS {
+            assert_eq!(p.d_model % p.n_heads, 0, "{}", p.name);
+            let total: usize = p.param_specs("lm", 0).iter().map(ParamSpec::numel).sum();
+            assert_eq!(total, p.param_count(), "{}", p.name);
+        }
+        assert!(get("nope").is_none());
+    }
+}

@@ -8,15 +8,18 @@ use anyhow::{Context, Result};
 use crate::config::{Task, TrainConfig};
 use crate::data::{alpacasim::AlpacaSim, c4sim::C4Sim, gluesim::GlueSim};
 use crate::model::ParamStore;
-use crate::runtime::Runtime;
 use crate::trainer::{RunResult, Trainer};
 use crate::util::json::Json;
 
-/// results/ directory next to artifacts/ (repo root).
+/// results/ directory at the repo root, found by walking up from cwd to the
+/// first directory holding artifacts/manifest.json or a .git. (Not keyed on
+/// Cargo.toml: the crate dir rust/ and the vendored crates have their own,
+/// which would split the results/checkpoint caches between test and CLI
+/// runs.)
 pub fn results_dir() -> PathBuf {
     let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
     loop {
-        if dir.join("artifacts").join("manifest.json").exists() {
+        if dir.join("artifacts").join("manifest.json").exists() || dir.join(".git").exists() {
             return dir.join("results");
         }
         if !dir.pop() {
@@ -78,46 +81,22 @@ pub fn sparkline(series: &[f64], width: usize) -> String {
         .collect()
 }
 
-/// Run one config end-to-end on its task's data (fresh Runtime reuse via
-/// caller-provided `rt`). `warm` optionally seeds the trunk.
-pub fn run_config(
-    rt: &mut Runtime,
-    cfg: &TrainConfig,
-    warm: Option<&ParamStore>,
-) -> Result<RunResult> {
-    let mut tr = Trainer::new(rt, cfg.clone(), warm)
-        .with_context(|| format!("trainer for {:?}", cfg.method))?;
-    let seed = cfg.seed;
-    match cfg.task {
-        Task::C4Pretrain => {
-            let mut train = C4Sim::new(seed);
-            let mut eval = C4Sim::new(seed ^ 0xEEEE);
-            tr.train_lm(&mut train, &mut eval)
-        }
-        Task::AlpacaFinetune => {
-            let mut train = AlpacaSim::new(seed);
-            let mut eval = AlpacaSim::new(seed ^ 0xEEEE);
-            tr.train_lm(&mut train, &mut eval)
-        }
-        Task::Glue(i) => {
-            let mut src = GlueSim::new(i, seed);
-            tr.train_cls(&mut src)
-        }
-        Task::DomainShift => {
-            // sentiment-ish source task at offset 0 (the IMDb stand-in)
-            let mut src = GlueSim::new(4, seed);
-            tr.train_cls(&mut src)
-        }
-    }
+/// Run one config end-to-end on its task's data. The execution backend is
+/// resolved per run from `cfg.backend` (auto: PJRT artifacts when present,
+/// pure-Rust native engine otherwise). `warm` optionally seeds the trunk.
+pub fn run_config(cfg: &TrainConfig, warm: Option<&ParamStore>) -> Result<RunResult> {
+    Ok(run_config_with_params(cfg, warm)
+        .with_context(|| format!("run for {:?}", cfg.method))?
+        .0)
 }
 
 /// Like `run_config` but returns the trained parameters too.
 pub fn run_config_with_params(
-    rt: &mut Runtime,
     cfg: &TrainConfig,
     warm: Option<&ParamStore>,
 ) -> Result<(RunResult, ParamStore)> {
-    let mut tr = Trainer::new(rt, cfg.clone(), warm)?;
+    let mut tr = Trainer::open(cfg.clone(), warm)
+        .with_context(|| format!("trainer for {:?}", cfg.method))?;
     let seed = cfg.seed;
     let res = match cfg.task {
         Task::C4Pretrain => {
@@ -135,6 +114,7 @@ pub fn run_config_with_params(
             tr.train_cls(&mut src)?
         }
         Task::DomainShift => {
+            // sentiment-ish source task at offset 0 (the IMDb stand-in)
             let mut src = GlueSim::new(4, seed);
             tr.train_cls(&mut src)?
         }
@@ -143,7 +123,7 @@ pub fn run_config_with_params(
 }
 
 /// Pretrain (or load a cached) LM checkpoint for warm starts.
-pub fn pretrained_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
+pub fn pretrained_checkpoint(preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
     let dir = results_dir().join("ckpt");
     let path = dir.join(format!("{preset}_c4_{steps}_{seed}.bin"));
     if path.exists() {
@@ -158,14 +138,14 @@ pub fn pretrained_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, seed:
     cfg.seed = seed;
     cfg.lr = 1e-3;
     println!("[common] pretraining {preset} checkpoint for {steps} steps (cached at {path:?})");
-    let (_res, store) = run_config_with_params(rt, &cfg, None)?;
+    let (_res, store) = run_config_with_params(&cfg, None)?;
     store.save(&path)?;
     Ok(store)
 }
 
 /// Pretrain (or load) a *classifier* checkpoint on the DomainShift source
 /// task — the DistilBERT-on-IMDb stand-in for the §2 analyses.
-pub fn pretrained_cls_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
+pub fn pretrained_cls_checkpoint(preset: &str, steps: usize, seed: u64) -> Result<ParamStore> {
     let dir = results_dir().join("ckpt");
     let path = dir.join(format!("{preset}_cls_{steps}_{seed}.bin"));
     if path.exists() {
@@ -180,7 +160,7 @@ pub fn pretrained_cls_checkpoint(rt: &mut Runtime, preset: &str, steps: usize, s
     cfg.seed = seed;
     cfg.lr = 3e-4;
     println!("[common] pretraining {preset} classifier checkpoint ({steps} steps)");
-    let (_res, store) = run_config_with_params(rt, &cfg, None)?;
+    let (_res, store) = run_config_with_params(&cfg, None)?;
     store.save(&path)?;
     Ok(store)
 }

@@ -14,7 +14,6 @@ use anyhow::Result;
 
 use super::common::{print_table, pretrained_checkpoint, run_config, save_json, sparkline};
 use crate::config::{Method, Task, TrainConfig};
-use crate::runtime::Runtime;
 use crate::util::json::Json;
 
 fn base_cfg(quick: bool) -> TrainConfig {
@@ -34,9 +33,8 @@ fn base_cfg(quick: bool) -> TrainConfig {
 }
 
 pub fn run_fig1_fig5(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let cfg0 = base_cfg(quick);
-    let warm = pretrained_checkpoint(&mut rt, &cfg0.preset, if quick { 40 } else { 150 }, 7)?;
+    let warm = pretrained_checkpoint(&cfg0.preset, if quick { 40 } else { 150 }, 7)?;
 
     let methods = [Method::BlockLlm, Method::LoRa, Method::BAdam, Method::GaLore];
     let mut rows = Vec::new();
@@ -46,9 +44,10 @@ pub fn run_fig1_fig5(quick: bool) -> Result<()> {
         let mut cfg = cfg0.clone();
         cfg.method = m;
         println!("[fig5] {} ...", m.name());
-        let res = run_config(&mut rt, &cfg, Some(&warm))?;
+        let res = run_config(&cfg, Some(&warm))?;
         println!(
-            "  train loss {}  (final {:.4})",
+            "  [{}] train loss {}  (final {:.4})",
+            res.backend,
             sparkline(&res.train_losses, 40),
             res.final_train_loss
         );
@@ -62,6 +61,7 @@ pub fn run_fig1_fig5(quick: bool) -> Result<()> {
         ]);
         records.push(Json::obj(vec![
             ("method", Json::str(m.name())),
+            ("backend", Json::str(res.backend.clone())),
             ("train_losses", Json::arr_f64(&res.train_losses)),
             (
                 "evals",
@@ -113,9 +113,8 @@ pub fn run_fig1_fig5(quick: bool) -> Result<()> {
 /// on the finetune workload; Fig. 7-right handled by pretrain::fig9-style
 /// harness but included here for the finetune side.
 pub fn run_fig7_ablation(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let cfg0 = base_cfg(quick);
-    let warm = pretrained_checkpoint(&mut rt, &cfg0.preset, if quick { 40 } else { 150 }, 7)?;
+    let warm = pretrained_checkpoint(&cfg0.preset, if quick { 40 } else { 150 }, 7)?;
 
     // left panel: selection direction
     let mut rows = Vec::new();
@@ -124,7 +123,7 @@ pub fn run_fig7_ablation(quick: bool) -> Result<()> {
         let mut cfg = cfg0.clone();
         cfg.method = m;
         println!("[fig7-left] {} ...", m.name());
-        let res = run_config(&mut rt, &cfg, Some(&warm))?;
+        let res = run_config(&cfg, Some(&warm))?;
         println!("  {}", sparkline(&res.train_losses, 40));
         rows.push(vec![
             m.name().to_string(),
@@ -155,7 +154,7 @@ pub fn run_fig7_ablation(quick: bool) -> Result<()> {
         cfg.patience = if quick { 10 } else { 50 };
         cfg.steps = if quick { 60 } else { 200 };
         println!("[fig7-right] {} ...", m.name());
-        let res = run_config(&mut rt, &cfg, None)?;
+        let res = run_config(&cfg, None)?;
         println!("  {}", sparkline(&res.train_losses, 40));
         let early: f64 = res.train_losses.iter().take(res.train_losses.len() / 3).sum::<f64>()
             / (res.train_losses.len() / 3).max(1) as f64;

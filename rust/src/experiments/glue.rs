@@ -16,7 +16,6 @@ use super::common::{fmt_mb, print_table, pretrained_checkpoint, run_config, save
 use crate::config::{Method, Task, TrainConfig};
 use crate::data::gluesim::TASK_NAMES;
 use crate::metrics::{matthews_corr, spearman_corr};
-use crate::runtime::Runtime;
 use crate::trainer::RunResult;
 use crate::util::json::Json;
 
@@ -39,9 +38,8 @@ fn score(task: usize, res: &RunResult) -> f64 {
 }
 
 pub fn run_table7_table8(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let preset = "micro";
-    let warm = pretrained_checkpoint(&mut rt, preset, if quick { 40 } else { 200 }, 7)?;
+    let warm = pretrained_checkpoint(preset, if quick { 40 } else { 200 }, 7)?;
 
     // (label, method, rank)
     let variants: &[(&str, Method, usize)] = &[
@@ -80,7 +78,7 @@ pub fn run_table7_table8(quick: bool) -> Result<()> {
                 cfg.rank = *rank;
             }
             println!("[table7/8] {} on {} ({steps} steps) ...", label, TASK_NAMES[task]);
-            let res = run_config(&mut rt, &cfg, Some(&warm))?;
+            let res = run_config(&cfg, Some(&warm))?;
             let sc = score(task, &res);
             mem_rows[vi].push(fmt_mb(res.peak_mem_bytes));
             score_rows[vi].push(format!("{sc:.2}"));

@@ -13,7 +13,6 @@ use super::common::{fmt_mb, pretrained_cls_checkpoint, print_table, save_json};
 use crate::config::{Method, Task, TrainConfig};
 use crate::data::gluesim::GlueSim;
 use crate::metrics::{matthews_corr, spearman_corr, Histogram};
-use crate::runtime::Runtime;
 use crate::trainer::{RunResult, Trainer};
 use crate::util::json::Json;
 
@@ -22,12 +21,11 @@ const SHIFT_OFFSET: i32 = 48;
 /// Finetune the warm-started classifier on the shifted target task with a
 /// given strategy config; returns the result and final params.
 fn finetune_shifted(
-    rt: &mut Runtime,
     cfg: &TrainConfig,
     warm: &crate::model::ParamStore,
     target_task: usize,
 ) -> Result<(RunResult, crate::model::ParamStore)> {
-    let mut tr = Trainer::new(rt, cfg.clone(), Some(warm))?;
+    let mut tr = Trainer::open(cfg.clone(), Some(warm))?;
     let mut src = GlueSim::new(target_task, cfg.seed).with_offset(SHIFT_OFFSET);
     let res = tr.train_cls(&mut src)?;
     Ok((res, tr.store))
@@ -49,15 +47,14 @@ fn base_cfg(quick: bool, steps: usize) -> TrainConfig {
 
 /// Table 2: magnitude pruning at fixed sparsity levels.
 pub fn run_table2(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
-    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+    let warm = pretrained_cls_checkpoint("nano", if quick { 60 } else { 200 }, 9)?;
 
     // source-task accuracy before / after the shift (the paper's 92% -> 48%)
     {
         let mut cfg = base_cfg(quick, 0);
         cfg.steps = 1;
         cfg.lr = 0.0;
-        let mut tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+        let mut tr = Trainer::open(cfg.clone(), Some(&warm))?;
         let mut src_a = GlueSim::new(4, cfg.seed);
         let ev_a = tr.eval_cls(&mut src_a)?;
         let mut src_b = GlueSim::new(1, cfg.seed).with_offset(SHIFT_OFFSET);
@@ -80,7 +77,7 @@ pub fn run_table2(quick: bool) -> Result<()> {
             cfg.method = Method::FullAdam; // s=0 row is plain finetuning
         }
         println!("[table2] s={s} ...");
-        let (res, _) = finetune_shifted(&mut rt, &cfg, &warm, 1)?;
+        let (res, _) = finetune_shifted(&cfg, &warm, 1)?;
         rows.push(vec![format!("{s:.1}"), format!("{:.2}", res.final_metric() * 100.0)]);
         rec.push(Json::obj(vec![
             ("sparsity", Json::num(s)),
@@ -97,17 +94,16 @@ pub fn run_table2(quick: bool) -> Result<()> {
 /// Fig. 3 / Fig. 8: histograms of the weight changes during the shifted
 /// finetune — most |δ| are tiny; changed weights are low-magnitude.
 pub fn run_fig3_histograms(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
-    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+    let warm = pretrained_cls_checkpoint("nano", if quick { 60 } else { 200 }, 9)?;
     let mut cfg = base_cfg(quick, 200);
     cfg.sparsity = 0.7; // the paper's Fig. 8 setting
     cfg.mag_update_every = 0;
     println!("[fig3] finetuning s=0.7 for histogram capture ...");
     // snapshot W^0 (post warm start, pre finetune)
-    let tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+    let tr = Trainer::open(cfg.clone(), Some(&warm))?;
     let w0 = tr.store.clone_store();
     drop(tr);
-    let (_res, wt) = finetune_shifted(&mut rt, &cfg, &warm, 1)?;
+    let (_res, wt) = finetune_shifted(&cfg, &warm, 1)?;
 
     let eta = 1e-4; // change threshold (paper uses 1e-3 at DistilBERT scale)
     let mut h_mag = Histogram::new(0.0, 0.5, 20); // |w^t| of changed params
@@ -148,8 +144,7 @@ pub fn run_fig3_histograms(quick: bool) -> Result<()> {
 /// `which`: 0 = Table 3 (CoLA-sim / accuracy+Matthews), 1 = Table 4
 /// (STS-B-sim / Spearman), 2 = Table 5 (SST2-sim / accuracy+VRAM).
 pub fn run_table3_5(which: usize, quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
-    let warm = pretrained_cls_checkpoint(&mut rt, "nano", if quick { 60 } else { 200 }, 9)?;
+    let warm = pretrained_cls_checkpoint("nano", if quick { 60 } else { 200 }, 9)?;
 
     let (title, target_task, combos): (&str, usize, Vec<(f64, usize)>) = match which {
         0 => (
@@ -186,12 +181,12 @@ pub fn run_table3_5(which: usize, quick: bool) -> Result<()> {
             // Table 4 in the paper is plain STS-B finetuning on a
             // pretrained trunk — warm-start the trunk, fresh reg head)
             cfg.lr = 1e-3;
-            let mut tr = Trainer::new(&mut rt, cfg.clone(), Some(&warm))?;
+            let mut tr = Trainer::open(cfg.clone(), Some(&warm))?;
             let mut src = GlueSim::new(2, cfg.seed);
             let r = tr.train_cls(&mut src)?;
             (r, tr.store)
         } else {
-            finetune_shifted(&mut rt, &cfg, &warm, target_task)?
+            finetune_shifted(&cfg, &warm, target_task)?
         };
         let q = res.telem("unique_updated_frac").unwrap_or(f64::NAN);
         let last = res.evals.last().expect("eval");

@@ -12,8 +12,7 @@
 use anyhow::Result;
 
 use super::common::{fmt_mb, print_table, run_config, save_json, sparkline};
-use crate::config::{Method, Task, TrainConfig};
-use crate::runtime::Runtime;
+use crate::config::{presets, Method, Task, TrainConfig};
 use crate::util::json::Json;
 
 fn base_cfg(preset: &str, quick: bool) -> TrainConfig {
@@ -32,7 +31,6 @@ fn base_cfg(preset: &str, quick: bool) -> TrainConfig {
 
 /// Table 1: the model-size ladder. nano/micro/tiny stand in for 60/130/350M.
 pub fn run_table1(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let ladder: &[(&str, &str)] =
         &[("nano", "60M"), ("micro", "130M"), ("tiny", "350M")];
     let ladder = if quick { &ladder[..2] } else { ladder };
@@ -45,12 +43,12 @@ pub fn run_table1(quick: bool) -> Result<()> {
             cfg.method = method;
             if method == Method::GaLore {
                 cfg.warmup_frac = 0.1; // paper: GaLore warms up 10%
-                let d = rt.manifest.presets[*preset].d_model;
+                let d = presets::get(preset).expect("ladder preset").d_model;
                 cfg.rank = (d / 4).max(4); // paper uses rank ~ d/4 for pretraining
             }
             println!("[table1] {preset} ({paper_size}) {} ...", method.name());
-            let res = run_config(&mut rt, &cfg, None)?;
-            println!("  {}", sparkline(&res.train_losses, 40));
+            let res = run_config(&cfg, None)?;
+            println!("  [{}] {}", res.backend, sparkline(&res.train_losses, 40));
             rows.push(vec![
                 format!("{preset} (paper {paper_size})"),
                 method.name().into(),
@@ -61,6 +59,7 @@ pub fn run_table1(quick: bool) -> Result<()> {
             rec.push(Json::obj(vec![
                 ("preset", Json::str(*preset)),
                 ("method", Json::str(method.name())),
+                ("backend", Json::str(res.backend.clone())),
                 ("perplexity", Json::num(res.final_metric())),
                 ("mem_bytes", Json::num(res.peak_mem_bytes as f64)),
                 ("train_losses", Json::arr_f64(&res.train_losses)),
@@ -79,7 +78,6 @@ pub fn run_table1(quick: bool) -> Result<()> {
 
 /// Fig. 6: sparsity sweep s ∈ {0.5, 0.7, 0.9} vs GaLore on one model.
 pub fn run_fig6_sparsity(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let preset = if quick { "nano" } else { "micro" };
     let mut rows = Vec::new();
     let mut rec = Vec::new();
@@ -88,7 +86,7 @@ pub fn run_fig6_sparsity(quick: bool) -> Result<()> {
         let mut cfg = base_cfg(preset, quick);
         cfg.sparsity = s;
         println!("[fig6] blockllm s={s} ...");
-        let res = run_config(&mut rt, &cfg, None)?;
+        let res = run_config(&cfg, None)?;
         println!("  {}", sparkline(&res.train_losses, 40));
         rows.push(vec![
             format!("blockllm s={s}"),
@@ -105,9 +103,9 @@ pub fn run_fig6_sparsity(quick: bool) -> Result<()> {
     let mut cfg = base_cfg(preset, quick);
     cfg.method = Method::GaLore;
     cfg.warmup_frac = 0.1;
-    cfg.rank = (rt.manifest.presets[preset].d_model / 4).max(4);
+    cfg.rank = (presets::get(preset).expect("preset").d_model / 4).max(4);
     println!("[fig6] galore ...");
-    let res = run_config(&mut rt, &cfg, None)?;
+    let res = run_config(&cfg, None)?;
     rows.push(vec![
         "galore".into(),
         format!("{:.2}", res.final_metric()),
@@ -132,7 +130,6 @@ pub fn run_fig6_sparsity(quick: bool) -> Result<()> {
 
 /// Fig. 9: patience m ablation — pretraining is m-sensitive, finetuning not.
 pub fn run_fig9_patience(quick: bool) -> Result<()> {
-    let mut rt = Runtime::open_default()?;
     let preset = if quick { "nano" } else { "micro" };
     let ms: &[usize] = if quick { &[5, 50] } else { &[5, 50, 200] };
 
@@ -141,7 +138,6 @@ pub fn run_fig9_patience(quick: bool) -> Result<()> {
     for &task in &[Task::C4Pretrain, Task::AlpacaFinetune] {
         let warm = if matches!(task, Task::AlpacaFinetune) {
             Some(super::common::pretrained_checkpoint(
-                &mut rt,
                 preset,
                 if quick { 40 } else { 200 },
                 7,
@@ -159,7 +155,7 @@ pub fn run_fig9_patience(quick: bool) -> Result<()> {
                 cfg.sparsity = 0.95;
             }
             println!("[fig9] {} m={m} ...", cfg.task.name());
-            let res = run_config(&mut rt, &cfg, warm.as_ref())?;
+            let res = run_config(&cfg, warm.as_ref())?;
             println!("  {}", sparkline(&res.train_losses, 40));
             rows.push(vec![
                 cfg.task.name(),

@@ -1,18 +1,28 @@
 //! BlockLLM: memory-efficient LLM adaptation by selecting and optimizing the
 //! right coordinate blocks — a full-system reproduction of Ramesh et al.
-//! (2024) as a three-layer Rust + JAX + Pallas stack.
+//! (2024) as a layered Rust + JAX + Pallas stack.
 //!
 //! Layers (DESIGN.md §2):
 //! * **L3 (this crate)** — the training coordinator: BlockLLM's greedy block
 //!   selection, masked sparse Adam, patience controller, plus the GaLore /
 //!   LoRA / BAdam / full-Adam baselines, data substrates, memory accounting,
 //!   and one experiment harness per paper table/figure.
-//! * **L2 (python/compile/model.py)** — the LLaMA-style model fwd/bwd,
-//!   AOT-lowered once to HLO text and executed here via PJRT (`runtime`).
+//! * **L2.5 (`backend`)** — the pluggable execution layer: one `Backend`
+//!   trait owning "params + batch -> loss + grads", with two engines:
+//!   `NativeBackend` (the LLaMA-style model fwd/bwd in pure Rust on
+//!   `tensor::Tensor` — the self-verifying reference path, no Python or
+//!   artifacts needed) and `PjrtBackend` (executes the AOT HLO artifacts
+//!   via `runtime`). Selected per run with `--backend {auto|native|pjrt}`;
+//!   `auto` uses PJRT when artifacts exist and falls back to native.
+//! * **L2 (python/compile/model.py)** — the same model in JAX, AOT-lowered
+//!   once to HLO text by `make artifacts` and executed here via PJRT; also
+//!   the oracle the native engine is validated against
+//!   (python/tests/test_native_mirror.py).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the attention
 //!   hot-spot and the fused masked-Adam update, validated against pure-jnp
 //!   oracles and (for nano) lowered into the shipped artifacts.
 
+pub mod backend;
 pub mod baselines;
 pub mod blockllm;
 pub mod cli;

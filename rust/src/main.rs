@@ -47,24 +47,24 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
-    let mut rt = Runtime::open_default()?;
     let warm = match args.get("ckpt") {
         Some(p) => Some(blockllm::model::ParamStore::load(std::path::Path::new(p))?),
         None => None,
     };
     println!("config: {}", cfg.to_json().to_string());
     let (res, store) =
-        blockllm::experiments::common::run_config_with_params(&mut rt, &cfg, warm.as_ref())?;
+        blockllm::experiments::common::run_config_with_params(&cfg, warm.as_ref())?;
     println!(
-        "\n{}: {} steps | final train loss {:.4} | eval loss {:.4} | metric {:.4}",
+        "\n{} [{} backend]: {} steps | final train loss {:.4} | eval loss {:.4} | metric {:.4}",
         res.method,
+        res.backend,
         res.train_losses.len(),
         res.final_train_loss,
         res.final_eval_loss(),
         res.final_metric()
     );
     println!(
-        "peak modeled memory {} | wall {:.1}s ({:.2} steps/s, {:.0}% in XLA)",
+        "peak modeled memory {} | wall {:.1}s ({:.2} steps/s, {:.0}% in backend exec)",
         human_bytes(res.peak_mem_bytes),
         res.wall_secs,
         res.steps_per_sec,
@@ -105,8 +105,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .get("ckpt")
         .ok_or_else(|| anyhow::anyhow!("eval needs --ckpt <path>"))?;
     let store = blockllm::model::ParamStore::load(std::path::Path::new(ckpt))?;
-    let mut rt = Runtime::open_default()?;
-    let mut tr = blockllm::trainer::Trainer::new(&mut rt, cfg.clone(), Some(&store))?;
+    let mut tr = blockllm::trainer::Trainer::open(cfg.clone(), Some(&store))?;
     let ev = match cfg.task {
         Task::C4Pretrain => {
             let mut s = blockllm::data::c4sim::C4Sim::new(cfg.seed ^ 0xEEEE);
@@ -130,17 +129,29 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    let rt = Runtime::open_default()?;
-    println!("presets:");
-    for (name, p) in &rt.manifest.presets {
+    println!("presets (native registry):");
+    for p in &blockllm::config::presets::PRESETS {
         println!(
-            "  {name:6} d={} L={} h={} ff={} params={}",
-            p.d_model, p.n_layers, p.n_heads, p.d_ff, p.param_count
+            "  {:6} d={} L={} h={} ff={} params={}",
+            p.name,
+            p.d_model,
+            p.n_layers,
+            p.n_heads,
+            p.d_ff,
+            p.param_count()
         );
     }
-    println!("artifacts:");
-    for (id, a) in &rt.manifest.artifacts {
-        println!("  {id:40} kind={:12} pallas={}", a.kind, a.pallas);
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts (PJRT backend available):");
+            for (id, a) in &rt.manifest.artifacts {
+                println!("  {id:40} kind={:12} pallas={}", a.kind, a.pallas);
+            }
+        }
+        Err(e) => {
+            println!("artifacts: none usable ({e})");
+            println!("  -> runs fall back to the pure-Rust native backend (--backend native)");
+        }
     }
     Ok(())
 }

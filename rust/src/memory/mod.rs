@@ -24,11 +24,17 @@ pub struct MemBreakdown {
     pub optim_m: u64,
     pub optim_v: u64,
     pub extra: u64, // projections (GaLore), adapters (LoRA), masks (BlockLLM)
+    /// model activations the execution backend materializes host-side
+    /// (native backend keeps fwd caches for its backward pass; 0 under
+    /// PJRT, where they live in XLA's arena) — filled in by the trainer
+    /// from `Backend::activation_bytes` so cross-backend peak-memory
+    /// comparisons stay honest
+    pub activations: u64,
 }
 
 impl MemBreakdown {
     pub fn total(&self) -> u64 {
-        self.weights + self.grads + self.optim_m + self.optim_v + self.extra
+        self.weights + self.grads + self.optim_m + self.optim_v + self.extra + self.activations
     }
 }
 
@@ -63,13 +69,14 @@ impl MemTracker {
     pub fn report(&self) -> String {
         let p = &self.peak;
         format!(
-            "peak modeled: {} (weights {}, grads {}, m {}, v {}, extra {}); process RSS {}",
+            "peak modeled: {} (weights {}, grads {}, m {}, v {}, extra {}, activations {}); process RSS {}",
             human_bytes(self.peak_total),
             human_bytes(p.weights),
             human_bytes(p.grads),
             human_bytes(p.optim_m),
             human_bytes(p.optim_v),
             human_bytes(p.extra),
+            human_bytes(p.activations),
             human_bytes(self.peak_rss),
         )
     }
@@ -93,6 +100,7 @@ pub mod profiles {
             optim_m: n * F32,
             optim_v: n * F32,
             extra: 0,
+            activations: 0,
         }
     }
 
@@ -109,6 +117,7 @@ pub mod profiles {
             optim_m: active * F32,
             optim_v: active * F32,
             extra: mask_elems / 8, // packed bitmask
+            activations: 0,
         }
     }
 
@@ -121,6 +130,7 @@ pub mod profiles {
             optim_m: lowrank_state * F32,
             optim_v: lowrank_state * F32,
             extra: proj * F32,
+            activations: 0,
         }
     }
 
@@ -133,6 +143,7 @@ pub mod profiles {
             optim_m: adapter * F32,
             optim_v: adapter * F32,
             extra: 0,
+            activations: 0,
         }
     }
 
@@ -144,6 +155,7 @@ pub mod profiles {
             optim_m: block * F32,
             optim_v: block * F32,
             extra: 0,
+            activations: 0,
         }
     }
 }
@@ -189,6 +201,24 @@ mod tests {
         assert_eq!(t.peak_total, full_adam(100).total());
         assert!(t.peak_rss > 0);
         assert!(t.report().contains("peak modeled"));
+    }
+
+    #[test]
+    fn activations_count_toward_total_and_preserve_ordering() {
+        // the native backend charges the same activation bytes to every
+        // method, so totals shift but the paper's ordering is preserved
+        let act = 1_500_000u64;
+        let mut bl = blockllm(1_000_000, 50_000, 120_000, 50_000);
+        let mut fa = full_adam(1_000_000);
+        let base_gap = fa.total() - bl.total();
+        bl.activations = act;
+        fa.activations = act;
+        assert_eq!(bl.total(), bl.weights + bl.grads + bl.optim_m + bl.optim_v + bl.extra + act);
+        assert_eq!(fa.total() - bl.total(), base_gap);
+        let mut t = MemTracker::new();
+        t.record(bl);
+        assert_eq!(t.peak.activations, act);
+        assert!(t.report().contains("activations"));
     }
 
     #[test]

@@ -211,8 +211,12 @@ mod tests {
     #[test]
     fn real_manifest_parses_if_present() {
         // integration-ish: if `make artifacts` has run, the real manifest
-        // must parse and contain the nano pallas twin.
-        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        // must parse and contain the nano pallas twin. artifacts/ lives at
+        // the repo root, one level above this crate.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .join("artifacts/manifest.json");
         if p.exists() {
             let m = Manifest::load(&p).unwrap();
             assert!(m.find("nano", "lm", "train", true).is_ok());

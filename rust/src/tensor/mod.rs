@@ -169,6 +169,59 @@ impl Tensor {
         }
         Tensor { shape: vec![n, m], data: t }
     }
+
+    // ---- rowwise ops (native-backend substrate) ---------------------------
+
+    /// In-place numerically-stable softmax over each row. Rows that are
+    /// entirely -inf (fully masked) become all-zero rather than NaN.
+    pub fn softmax_rows(&mut self) {
+        let n = self.cols();
+        for row in self.data.chunks_mut(n) {
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            if m == f32::NEG_INFINITY {
+                row.fill(0.0);
+                continue;
+            }
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - m).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Gather rows by index: self [N, D] -> [idx.len(), D]. Panics on an
+    /// out-of-range index (the embedding table owns range checking upstream).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let d = self.cols();
+        let n = self.rows();
+        let mut out = Vec::with_capacity(idx.len() * d);
+        for &i in idx {
+            assert!(i < n, "gather_rows: row {i} out of {n}");
+            out.extend_from_slice(&self.data[i * d..(i + 1) * d]);
+        }
+        Tensor { shape: vec![idx.len(), d], data: out }
+    }
+
+    /// Scatter-add rows: self[idx[j]] += rows[j] (embedding gradient).
+    pub fn scatter_rows_add(&mut self, idx: &[usize], rows: &Tensor) {
+        let d = self.cols();
+        assert_eq!(rows.cols(), d, "scatter_rows_add: col mismatch");
+        assert_eq!(rows.rows(), idx.len(), "scatter_rows_add: row count mismatch");
+        let n = self.rows();
+        for (j, &i) in idx.iter().enumerate() {
+            assert!(i < n, "scatter_rows_add: row {i} out of {n}");
+            let dst = &mut self.data[i * d..(i + 1) * d];
+            let src = &rows.data[j * d..(j + 1) * d];
+            for (x, y) in dst.iter_mut().zip(src) {
+                *x += y;
+            }
+        }
+    }
 }
 
 /// Exact k-th largest |value| in a slice, O(n) via quickselect.
@@ -265,6 +318,33 @@ mod tests {
         assert_eq!(a.data, vec![3.0, 4.0, 5.0]);
         a.scale(0.5);
         assert_eq!(a.data, vec![1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_and_handles_mask() {
+        let mut a = t2(2, 3, vec![1.0, 2.0, 3.0, f32::NEG_INFINITY, 0.0, 0.0]);
+        a.softmax_rows();
+        let s0: f32 = a.data[0..3].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-6);
+        assert!(a.data[2] > a.data[1] && a.data[1] > a.data[0]);
+        assert_eq!(a.data[3], 0.0); // masked entry
+        assert!((a.data[4] - 0.5).abs() < 1e-6);
+        // fully-masked row -> zeros, not NaN
+        let mut b = t2(1, 2, vec![f32::NEG_INFINITY, f32::NEG_INFINITY]);
+        b.softmax_rows();
+        assert_eq!(b.data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let emb = t2(4, 2, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0, 30.0, 31.0]);
+        let g = emb.gather_rows(&[2, 0, 2]);
+        assert_eq!(g.shape, vec![3, 2]);
+        assert_eq!(g.data, vec![20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+        let mut acc = Tensor::zeros(&[4, 2]);
+        acc.scatter_rows_add(&[2, 0, 2], &g);
+        // row 2 accumulated twice
+        assert_eq!(acc.data, vec![0.0, 1.0, 0.0, 0.0, 40.0, 42.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -1,12 +1,15 @@
-//! The L3 training coordinator: executes the AOT fwd/bwd artifact, routes
-//! gradients to the active strategy, applies updates, tracks memory and
-//! wall-clock, and runs periodic evaluation.
+//! The L3 training coordinator: drives an execution `Backend` (PJRT
+//! artifact or the pure-Rust native engine) for fwd/bwd, routes gradients
+//! to the active strategy, applies updates, tracks memory and wall-clock,
+//! and runs periodic evaluation.
 //!
-//! Python never runs here — the artifact was lowered once by `make
-//! artifacts`; this loop is pure Rust + PJRT.
+//! The trainer is backend-agnostic: everything model-execution-specific
+//! (literal marshaling, artifact resolution, activation storage) lives
+//! behind `backend::Backend`. Python never runs here.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::backend::{self, Backend, Targets};
 use crate::baselines::{build, Strategy};
 use crate::config::{Task, TrainConfig};
 use crate::data::{ClsSource, LmStream};
@@ -14,7 +17,6 @@ use crate::memory::MemTracker;
 use crate::metrics::{perplexity, RunLogger};
 use crate::model::ParamStore;
 use crate::optim::schedule::LrSchedule;
-use crate::runtime::{copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, Runtime};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 
@@ -34,6 +36,8 @@ pub struct EvalPoint {
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub method: String,
+    /// which execution backend ran the model ("native" | "pjrt")
+    pub backend: String,
     pub train_losses: Vec<f64>,
     pub evals: Vec<EvalPoint>,
     pub peak_mem_gb: f64,
@@ -41,7 +45,7 @@ pub struct RunResult {
     pub wall_secs: f64,
     pub steps_per_sec: f64,
     pub exec_secs: f64,
-    /// cumulative per-phase seconds: [param upload, XLA execute,
+    /// cumulative per-phase seconds: [param upload, backend execute,
     /// grad download, strategy update] — §Perf instrumentation
     pub phase_secs: [f64; 4],
     /// method-specific counters (Magnitude's q, BlockLLM's selection count)
@@ -73,82 +77,48 @@ impl RunResult {
     }
 }
 
-/// The trainer owns the runtime, the parameter store and the strategy.
-pub struct Trainer<'rt> {
-    pub rt: &'rt mut Runtime,
+/// The trainer owns the backend, the parameter store and the strategy.
+pub struct Trainer {
+    pub backend: Box<dyn Backend>,
     pub cfg: TrainConfig,
     pub store: ParamStore,
     pub strategy: Box<dyn Strategy>,
     pub mem: MemTracker,
     pub logger: RunLogger,
-    train_art: ArtifactInfo,
-    eval_art: ArtifactInfo,
     sched: LrSchedule,
     grads: Vec<Vec<f32>>,
-    /// persistent input literals for the parameters: built once, refreshed
-    /// in place (copy_raw_from) only for layers the strategy touched — the
-    /// first hot-path optimization recorded in EXPERIMENTS.md §Perf
-    param_lits: Vec<xla::Literal>,
-    dirty: Vec<bool>,
-    phase_secs: [f64; 4],
+    /// per-microbatch gradient staging, allocated lazily on the first
+    /// accumulated step (the accum=1 hot path writes `grads` directly)
+    scratch: Vec<Vec<f32>>,
+    phase_strategy: f64,
     step: usize,
 }
 
-impl<'rt> Trainer<'rt> {
-    /// Build a trainer for a config; resolves artifacts from the manifest
-    /// and initializes parameters (or adopts `warm_start`).
+impl Trainer {
+    /// Build a trainer over a config-resolved backend (`--backend`), and
+    /// initialize parameters (or adopt `warm_start`).
+    pub fn open(cfg: TrainConfig, warm_start: Option<&ParamStore>) -> Result<Trainer> {
+        let be = backend::open(&cfg)?;
+        Self::new(be, cfg, warm_start)
+    }
+
+    /// Build a trainer over an explicit backend.
     pub fn new(
-        rt: &'rt mut Runtime,
+        backend: Box<dyn Backend>,
         cfg: TrainConfig,
         warm_start: Option<&ParamStore>,
-    ) -> Result<Trainer<'rt>> {
-        let head = match cfg.task {
-            Task::C4Pretrain | Task::AlpacaFinetune => "lm".to_string(),
-            Task::Glue(i) => {
-                let g = crate::data::gluesim::GlueSim::new(i, cfg.seed);
-                if g.regression() { "reg".into() } else { "cls".into() }
-            }
-            Task::DomainShift => "cls".into(),
-        };
-        let n_out = match cfg.task {
-            Task::Glue(i) => crate::data::gluesim::GlueSim::new(i, cfg.seed).n_classes(),
-            Task::DomainShift => 2,
-            _ => 0,
-        };
-        let find = |phase: &str| -> Result<ArtifactInfo> {
-            let cands: Vec<&ArtifactInfo> = rt
-                .manifest
-                .artifacts
-                .values()
-                .filter(|a| {
-                    a.preset == cfg.preset
-                        && a.head == head
-                        && a.kind.ends_with(phase)
-                        && a.pallas == cfg.use_pallas_artifact
-                        && (head == "lm" || a.n_out == n_out.max(1))
-                })
-                .collect();
-            match cands.first() {
-                Some(a) => Ok((*a).clone()),
-                None => bail!(
-                    "no artifact preset={} head={head} n_out={n_out} phase={phase} pallas={} — run `make artifacts`",
-                    cfg.preset, cfg.use_pallas_artifact
-                ),
-            }
-        };
-        let train_art = find("train")?;
-        let eval_art = find("eval")?;
-
-        let mut store = ParamStore::init(&train_art.params, cfg.seed);
+    ) -> Result<Trainer> {
+        let specs = backend.param_specs().to_vec();
+        let mut store = ParamStore::init(&specs, cfg.seed);
         if let Some(w) = warm_start {
             let n = store.load_overlapping(w);
             if n == 0 {
-                bail!("warm start shared no tensors with the target model");
+                anyhow::bail!("warm start shared no tensors with the target model");
             }
         }
 
-        let sizes: Vec<usize> = train_art.params.iter().map(|p| p.numel()).collect();
-        let names: Vec<String> = train_art.params.iter().map(|p| p.name.clone()).collect();
+        let sizes: Vec<usize> = specs.iter().map(|p| p.numel()).collect();
+        let names: Vec<String> = specs.iter().map(|p| p.name.clone()).collect();
         let strategy = build(&cfg, &sizes, &names);
         let sched = if cfg.cosine_lr {
             let min_frac = match cfg.task {
@@ -160,149 +130,98 @@ impl<'rt> Trainer<'rt> {
             LrSchedule::constant(cfg.lr)
         };
 
-        let param_lits = store.to_literals()?;
-        let n_tensors = store.n_tensors();
         Ok(Trainer {
-            rt,
+            backend,
             store,
             strategy,
             mem: MemTracker::new(),
             logger: RunLogger::null(),
-            train_art,
-            eval_art,
             sched,
             grads: sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
-            param_lits,
-            dirty: vec![false; n_tensors],
-            phase_secs: [0.0; 4],
+            scratch: Vec::new(),
+            phase_strategy: 0.0,
             step: 0,
             cfg,
         })
     }
 
-    /// Refresh the persistent parameter literals for layers marked dirty.
-    fn sync_param_lits(&mut self) -> Result<()> {
-        for (i, d) in self.dirty.iter_mut().enumerate() {
-            if *d {
-                self.param_lits[i]
-                    .copy_raw_from::<f32>(&self.store.bufs[i])
-                    .map_err(|e| anyhow::anyhow!("param upload {i}: {e}"))?;
-                *d = false;
-            }
-        }
-        Ok(())
-    }
-
-    /// Mark layers updated by the strategy (empty slice = all layers).
-    fn mark_dirty(&mut self, active: &[usize]) {
-        if active.is_empty() {
-            self.dirty.iter_mut().for_each(|d| *d = true);
-        } else {
-            for &l in active {
-                self.dirty[l] = true;
-            }
-        }
-    }
-
     pub fn batch_shape(&self) -> (usize, usize) {
-        (self.train_art.batch, self.train_art.seq)
+        self.backend.batch_shape()
     }
 
-    /// Single externally-driven LM step (bench harness entry point).
-    pub fn bench_step(&mut self, batch: &crate::data::LmBatch) -> Result<f64> {
-        let (b, t) = self.batch_shape();
-        let tgt = lit_i32(&batch.targets, &[b, t])?;
-        self.step_lm_like(&batch.tokens, tgt)
-    }
-
-    /// Externally-driven accumulated LM step over the given microbatches
-    /// (tests + bench harness). Returns the mean loss.
-    pub fn bench_accum_step(&mut self, micro: &[crate::data::LmBatch]) -> Result<f64> {
-        let (b, t) = self.batch_shape();
-        let scale = 1.0 / micro.len() as f32;
-        let mut mean_loss = 0.0;
-        for (k, batch) in micro.iter().enumerate() {
-            let tgt = lit_i32(&batch.targets, &[b, t])?;
-            mean_loss += self.forward_backward(&batch.tokens, &tgt, k == 0, scale)?;
-        }
-        mean_loss /= micro.len() as f64;
-        let t3 = std::time::Instant::now();
-        let lr = self.sched.at(self.step);
-        let info = self.strategy.step(&mut self.store, &self.grads, mean_loss, lr, self.step);
-        self.phase_secs[3] += t3.elapsed().as_secs_f64();
-        self.mark_dirty(&info.active_layers);
-        self.mem.record(info.mem);
-        self.step += 1;
-        Ok(mean_loss)
-    }
-
-    /// One fwd/bwd microbatch: execute the train artifact and accumulate
-    /// the scaled gradients into `self.grads` (`first` resets the
-    /// accumulator; `scale` = 1/grad_accum). Returns the microbatch loss.
+    /// One fwd/bwd microbatch through the backend, accumulating the scaled
+    /// gradients into `self.grads` (`first` resets the accumulator; `scale`
+    /// = 1/grad_accum). Returns the microbatch loss.
     fn forward_backward(
         &mut self,
         tokens: &[i32],
-        tgt_lit: &xla::Literal,
+        targets: Targets<'_>,
         first: bool,
         scale: f32,
     ) -> Result<f64> {
-        let (b, t) = (self.train_art.batch, self.train_art.seq);
-        let t0 = std::time::Instant::now();
-        self.sync_param_lits()?;
-        let tok_lit = lit_i32(tokens, &[b, t])?;
-        let t1 = std::time::Instant::now();
-        let outs = {
-            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
-            inputs.push(&tok_lit);
-            inputs.push(tgt_lit);
-            self.rt.execute(&self.train_art.id, &inputs)?
-        };
-        let t2 = std::time::Instant::now();
-        if outs.len() != 1 + self.grads.len() {
-            bail!("artifact returned {} outputs, want {}", outs.len(), 1 + self.grads.len());
+        if first && scale == 1.0 {
+            // no accumulation: the backend writes the gradients in place
+            return self
+                .backend
+                .forward_backward(&self.store, tokens, targets, &mut self.grads);
         }
-        let loss = scalar_f32(&outs[0])? as f64;
-        let mut tmp = Vec::new();
-        for (g, o) in self.grads.iter_mut().zip(&outs[1..]) {
-            if first && scale == 1.0 {
-                copy_f32_into(o, g)?;
+        if self.scratch.len() != self.grads.len() {
+            self.scratch = self.grads.iter().map(|g| vec![0.0f32; g.len()]).collect();
+        }
+        let loss = self
+            .backend
+            .forward_backward(&self.store, tokens, targets, &mut self.scratch)?;
+        for (g, s) in self.grads.iter_mut().zip(&self.scratch) {
+            if first {
+                g.iter_mut().zip(s).for_each(|(gi, &x)| *gi = scale * x);
             } else {
-                copy_f32_into(o, &mut tmp)?;
-                if first {
-                    g.iter_mut().zip(&tmp).for_each(|(gi, &x)| *gi = scale * x);
-                } else {
-                    g.iter_mut().zip(&tmp).for_each(|(gi, &x)| *gi += scale * x);
-                }
+                g.iter_mut().zip(s).for_each(|(gi, &x)| *gi += scale * x);
             }
         }
-        let t3 = std::time::Instant::now();
-        self.phase_secs[0] += (t1 - t0).as_secs_f64();
-        self.phase_secs[1] += (t2 - t1).as_secs_f64();
-        self.phase_secs[2] += (t3 - t2).as_secs_f64();
         Ok(loss)
     }
 
-    /// Execute the train artifact on (tokens, targets-as-i32) and apply one
-    /// strategy step. Returns the train loss.
-    fn step_lm_like(&mut self, tokens: &[i32], tgt_lit: xla::Literal) -> Result<f64> {
-        let loss = self.forward_backward(tokens, &tgt_lit, true, 1.0)?;
-        let t3 = std::time::Instant::now();
+    /// Apply one strategy step on the accumulated gradients.
+    fn apply_strategy(&mut self, loss: f64) -> Result<()> {
+        let t0 = std::time::Instant::now();
         let lr = self.sched.at(self.step);
         let info = self.strategy.step(&mut self.store, &self.grads, loss, lr, self.step);
-        let t4 = std::time::Instant::now();
-        self.phase_secs[3] += (t4 - t3).as_secs_f64();
-        self.mark_dirty(&info.active_layers);
-        self.mem.record(info.mem);
+        self.phase_strategy += t0.elapsed().as_secs_f64();
+        self.backend.params_updated(&info.active_layers);
+        let mut mem = info.mem;
+        mem.activations = self.backend.activation_bytes();
+        self.mem.record(mem);
         self.logger.log(&Json::obj(vec![
             ("step", Json::num(self.step as f64)),
             ("loss", Json::num(loss)),
             ("lr", Json::num(lr)),
             ("updated", Json::num(info.updated_coords as f64)),
             ("reselected", Json::Bool(info.reselected)),
-            ("mem_gb", Json::num(info.mem.total() as f64 / 1e9)),
+            ("mem_gb", Json::num(mem.total() as f64 / 1e9)),
         ]));
         self.step += 1;
+        Ok(())
+    }
+
+    /// Single externally-driven LM step (bench harness entry point).
+    pub fn bench_step(&mut self, batch: &crate::data::LmBatch) -> Result<f64> {
+        let loss = self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), true, 1.0)?;
+        self.apply_strategy(loss)?;
         Ok(loss)
+    }
+
+    /// Externally-driven accumulated LM step over the given microbatches
+    /// (tests + bench harness). Returns the mean loss.
+    pub fn bench_accum_step(&mut self, micro: &[crate::data::LmBatch]) -> Result<f64> {
+        let scale = 1.0 / micro.len() as f32;
+        let mut mean_loss = 0.0;
+        for (k, batch) in micro.iter().enumerate() {
+            mean_loss +=
+                self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), k == 0, scale)?;
+        }
+        mean_loss /= micro.len() as f64;
+        self.apply_strategy(mean_loss)?;
+        Ok(mean_loss)
     }
 
     /// Train on an LM stream for `steps`, evaluating every `eval_every`.
@@ -317,33 +236,19 @@ impl<'rt> Trainer<'rt> {
         let sw = Stopwatch::start();
         let mut train_losses = Vec::with_capacity(self.cfg.steps);
         let mut evals = Vec::new();
-        let exec0 = self.rt.exec_secs;
+        let exec0 = self.backend.exec_secs();
         let accum = self.cfg.grad_accum.max(1);
         for s in 0..self.cfg.steps {
-            let loss = if accum == 1 {
+            let scale = 1.0 / accum as f32;
+            let mut mean_loss = 0.0;
+            for k in 0..accum {
                 let batch = train.next_batch(b, t);
-                let tgt = lit_i32(&batch.targets, &[b, t])?;
-                self.step_lm_like(&batch.tokens, tgt)?
-            } else {
-                let scale = 1.0 / accum as f32;
-                let mut mean_loss = 0.0;
-                for k in 0..accum {
-                    let batch = train.next_batch(b, t);
-                    let tgt = lit_i32(&batch.targets, &[b, t])?;
-                    mean_loss += self.forward_backward(&batch.tokens, &tgt, k == 0, scale)?;
-                }
-                mean_loss /= accum as f64;
-                let t3 = std::time::Instant::now();
-                let lr = self.sched.at(self.step);
-                let info =
-                    self.strategy.step(&mut self.store, &self.grads, mean_loss, lr, self.step);
-                self.phase_secs[3] += t3.elapsed().as_secs_f64();
-                self.mark_dirty(&info.active_layers);
-                self.mem.record(info.mem);
-                self.step += 1;
-                mean_loss
-            };
-            train_losses.push(loss);
+                mean_loss +=
+                    self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), k == 0, scale)?;
+            }
+            mean_loss /= accum as f64;
+            self.apply_strategy(mean_loss)?;
+            train_losses.push(mean_loss);
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 evals.push(self.eval_lm(eval).context("eval")?);
             }
@@ -351,25 +256,21 @@ impl<'rt> Trainer<'rt> {
         if evals.is_empty() || evals.last().map(|e| e.step) != Some(self.step) {
             evals.push(self.eval_lm(eval)?);
         }
-        Ok(self.finish(train_losses, evals, sw.secs(), self.rt.exec_secs - exec0))
+        Ok(self.finish(train_losses, evals, sw.secs(), self.backend.exec_secs() - exec0))
     }
 
     /// LM evaluation: aggregate (loss_sum, valid_count) over eval batches.
     pub fn eval_lm(&mut self, eval: &mut dyn LmStream) -> Result<EvalPoint> {
-        let (b, t) = (self.eval_art.batch, self.eval_art.seq);
+        let (b, t) = self.batch_shape();
         let mut loss_sum = 0.0f64;
         let mut count = 0.0f64;
-        self.sync_param_lits()?;
         for _ in 0..self.cfg.eval_batches {
             let batch = eval.next_batch(b, t);
-            let tok_lit = lit_i32(&batch.tokens, &[b, t])?;
-            let tgt_lit = lit_i32(&batch.targets, &[b, t])?;
-            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
-            inputs.push(&tok_lit);
-            inputs.push(&tgt_lit);
-            let outs = self.rt.execute(&self.eval_art.id, &inputs)?;
-            loss_sum += scalar_f32(&outs[0])? as f64;
-            count += scalar_f32(&outs[1])? as f64;
+            let out = self
+                .backend
+                .eval_batch(&self.store, &batch.tokens, Targets::Lm(&batch.targets))?;
+            loss_sum += out.loss_sum;
+            count += out.aux;
         }
         let mean = loss_sum / count.max(1.0);
         Ok(EvalPoint {
@@ -387,16 +288,16 @@ impl<'rt> Trainer<'rt> {
         let sw = Stopwatch::start();
         let mut train_losses = Vec::with_capacity(self.cfg.steps);
         let mut evals = Vec::new();
-        let exec0 = self.rt.exec_secs;
+        let exec0 = self.backend.exec_secs();
         let regression = src.regression();
         for s in 0..self.cfg.steps {
             let batch = src.batch(b, t, true);
-            let tgt = if regression {
-                lit_f32(&batch.labels_f, &[b])?
+            let loss = if regression {
+                self.forward_backward(&batch.tokens, Targets::Reg(&batch.labels_f), true, 1.0)?
             } else {
-                lit_i32(&batch.labels_i, &[b])?
+                self.forward_backward(&batch.tokens, Targets::Cls(&batch.labels_i), true, 1.0)?
             };
-            let loss = self.step_lm_like(&batch.tokens, tgt)?;
+            self.apply_strategy(loss)?;
             train_losses.push(loss);
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 evals.push(self.eval_cls(src)?);
@@ -405,35 +306,30 @@ impl<'rt> Trainer<'rt> {
         if evals.is_empty() || evals.last().map(|e| e.step) != Some(self.step) {
             evals.push(self.eval_cls(src)?);
         }
-        Ok(self.finish(train_losses, evals, sw.secs(), self.rt.exec_secs - exec0))
+        Ok(self.finish(train_losses, evals, sw.secs(), self.backend.exec_secs() - exec0))
     }
 
     /// Classification eval: (loss_sum, metric_sum, preds) per batch.
     pub fn eval_cls(&mut self, src: &mut dyn ClsSource) -> Result<EvalPoint> {
-        let (b, t) = (self.eval_art.batch, self.eval_art.seq);
+        let (b, t) = self.batch_shape();
         let regression = src.regression();
         let mut loss_sum = 0.0;
         let mut metric_sum = 0.0;
         let mut n = 0.0;
         let mut preds = Vec::new();
         let mut labels = Vec::new();
-        self.sync_param_lits()?;
         for _ in 0..self.cfg.eval_batches {
             let batch = src.batch(b, t, false);
-            let tok_lit = lit_i32(&batch.tokens, &[b, t])?;
-            let tgt_lit = if regression {
-                lit_f32(&batch.labels_f, &[b])?
+            let out = if regression {
+                self.backend
+                    .eval_batch(&self.store, &batch.tokens, Targets::Reg(&batch.labels_f))?
             } else {
-                lit_i32(&batch.labels_i, &[b])?
+                self.backend
+                    .eval_batch(&self.store, &batch.tokens, Targets::Cls(&batch.labels_i))?
             };
-            let mut inputs: Vec<&xla::Literal> = self.param_lits.iter().collect();
-            inputs.push(&tok_lit);
-            inputs.push(&tgt_lit);
-            let outs = self.rt.execute(&self.eval_art.id, &inputs)?;
-            loss_sum += scalar_f32(&outs[0])? as f64;
-            metric_sum += scalar_f32(&outs[1])? as f64;
-            let p = outs[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("preds: {e}"))?;
-            preds.extend(p.iter().map(|&x| x as f64));
+            loss_sum += out.loss_sum;
+            metric_sum += out.aux;
+            preds.extend(out.preds.iter().map(|&x| x as f64));
             if regression {
                 labels.extend(batch.labels_f.iter().map(|&x| x as f64));
             } else {
@@ -441,11 +337,8 @@ impl<'rt> Trainer<'rt> {
             }
             n += b as f64;
         }
-        let metric = if regression {
-            metric_sum / n // MSE
-        } else {
-            metric_sum / n // accuracy
-        };
+        // metric: accuracy (cls) or MSE (reg) — both are sum / n
+        let metric = metric_sum / n;
         Ok(EvalPoint { step: self.step, loss: loss_sum / n, metric, preds, labels })
     }
 
@@ -456,15 +349,17 @@ impl<'rt> Trainer<'rt> {
         wall: f64,
         exec_secs: f64,
     ) -> RunResult {
+        let bp = self.backend.phase_secs();
         RunResult {
             method: self.strategy.name().to_string(),
+            backend: self.backend.name().to_string(),
             final_train_loss: *train_losses.last().unwrap_or(&f64::NAN),
             steps_per_sec: train_losses.len() as f64 / wall.max(1e-9),
             peak_mem_gb: self.mem.peak_gb(),
             peak_mem_bytes: self.mem.peak_total,
             wall_secs: wall,
             exec_secs,
-            phase_secs: self.phase_secs,
+            phase_secs: [bp[0], bp[1], bp[2], self.phase_strategy],
             telemetry: self.strategy.telemetry(),
             train_losses,
             evals,

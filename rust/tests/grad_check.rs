@@ -1,0 +1,161 @@
+//! Gradient-correctness tests for the native backend.
+//!
+//! 1. Finite-difference checks: for randomly chosen coordinates of every
+//!    parameter tensor of the nano model (lm AND cls heads), the analytic
+//!    gradient from `NativeBackend::forward_backward` must match the
+//!    central-difference quotient of the loss to 1e-3.
+//! 2. PJRT-vs-native parity: when AOT artifacts and a working PJRT client
+//!    are available, both backends must produce the same loss and
+//!    per-tensor gradient norms on an identical batch.
+
+use blockllm::backend::native::NativeBackend;
+use blockllm::backend::{Backend, Targets};
+use blockllm::model::ParamStore;
+use blockllm::util::rng::Pcg64;
+
+/// tokens[i*t + j] = (7i + 13j + salt) % vocab — aot.filler_tokens.
+fn filler_tokens(b: usize, t: usize, vocab: i64, salt: i64) -> Vec<i32> {
+    let mut out = Vec::with_capacity(b * t);
+    for i in 0..b as i64 {
+        for j in 0..t as i64 {
+            out.push(((7 * i + 13 * j + salt) % vocab) as i32);
+        }
+    }
+    out
+}
+
+fn zeros_like(store: &ParamStore) -> Vec<Vec<f32>> {
+    store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect()
+}
+
+/// Central-difference check of `grads` (d mean-loss / d w) at ~3 random
+/// coordinates per tensor.
+fn finite_difference_check(
+    be: &mut NativeBackend,
+    store: &mut ParamStore,
+    tokens: &[i32],
+    targets: Targets<'_>,
+    grads: &[Vec<f32>],
+) {
+    let mut scratch = zeros_like(store);
+    let mut rng = Pcg64::new(0xFD);
+    let eps = 3e-2f32;
+    let n_tensors = store.bufs.len();
+    for pi in 0..n_tensors {
+        let name = store.specs[pi].name.clone();
+        let numel = store.bufs[pi].len();
+        for _ in 0..3 {
+            let c = rng.below(numel);
+            let w0 = store.bufs[pi][c];
+            store.bufs[pi][c] = w0 + eps;
+            let lp = be.forward_backward(store, tokens, targets, &mut scratch).unwrap();
+            store.bufs[pi][c] = w0 - eps;
+            let lm = be.forward_backward(store, tokens, targets, &mut scratch).unwrap();
+            store.bufs[pi][c] = w0;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grads[pi][c] as f64;
+            let tol = 1e-3 * (1.0 + fd.abs().max(an.abs()));
+            assert!(
+                (fd - an).abs() <= tol,
+                "{name}[{c}]: finite-diff {fd} vs analytic {an} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_lm_gradients_match_finite_differences() {
+    let mut be = NativeBackend::with_shape("nano", "lm", 0, 2, 8).unwrap();
+    let specs = be.param_specs().to_vec();
+    let mut store = ParamStore::init(&specs, 17);
+    let tokens = filler_tokens(2, 8, 256, 0);
+    let mut targets = filler_tokens(2, 8, 256, 3);
+    targets[0] = -1; // exercise the ignore path
+    targets[1] = -1;
+    let mut grads = zeros_like(&store);
+    let loss = be
+        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    finite_difference_check(&mut be, &mut store, &tokens, Targets::Lm(&targets), &grads);
+}
+
+#[test]
+fn native_cls_gradients_match_finite_differences() {
+    let mut be = NativeBackend::with_shape("nano", "cls", 3, 2, 6).unwrap();
+    let specs = be.param_specs().to_vec();
+    let mut store = ParamStore::init(&specs, 23);
+    let tokens = filler_tokens(2, 6, 256, 1);
+    let labels = vec![2i32, 0];
+    let mut grads = zeros_like(&store);
+    let loss = be
+        .forward_backward(&store, &tokens, Targets::Cls(&labels), &mut grads)
+        .unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    finite_difference_check(&mut be, &mut store, &tokens, Targets::Cls(&labels), &grads);
+}
+
+#[test]
+fn native_reg_gradients_match_finite_differences() {
+    let mut be = NativeBackend::with_shape("nano", "reg", 1, 2, 6).unwrap();
+    let specs = be.param_specs().to_vec();
+    let mut store = ParamStore::init(&specs, 29);
+    let tokens = filler_tokens(2, 6, 256, 2);
+    let labels = vec![0.25f32, 0.75];
+    let mut grads = zeros_like(&store);
+    let loss = be
+        .forward_backward(&store, &tokens, Targets::Reg(&labels), &mut grads)
+        .unwrap();
+    assert!(loss.is_finite() && loss >= 0.0);
+    finite_difference_check(&mut be, &mut store, &tokens, Targets::Reg(&labels), &grads);
+}
+
+/// PJRT-vs-native parity on an identical deterministic batch. Runs only
+/// when artifacts exist and the real PJRT client opens (skipped under the
+/// vendored xla stub).
+#[test]
+fn pjrt_and_native_agree_on_loss_and_grad_norms() {
+    // artifacts/ lives at the REPO root (one level above <repo>/rust)
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP (pjrt-only test): artifacts/ missing; run `make artifacts`");
+        return;
+    }
+    let rt = match blockllm::runtime::Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP (pjrt-only test): runtime unavailable: {e}");
+            return;
+        }
+    };
+    let cfg = blockllm::config::TrainConfig::default(); // nano, C4Pretrain
+    let mut pjrt =
+        blockllm::backend::pjrt::PjrtBackend::with_runtime(rt, &cfg, "lm", 0).unwrap();
+    let (b, t) = pjrt.batch_shape();
+    let mut native = NativeBackend::with_shape("nano", "lm", 0, b, t).unwrap();
+    assert_eq!(pjrt.param_specs(), native.param_specs(), "spec-table ABI mismatch");
+
+    let store = ParamStore::fill_deterministic(pjrt.param_specs());
+    let tokens = filler_tokens(b, t, 256, 0);
+    let targets = filler_tokens(b, t, 256, 3);
+    let mut gp = zeros_like(&store);
+    let mut gn = zeros_like(&store);
+    let lp = pjrt
+        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut gp)
+        .unwrap();
+    let ln = native
+        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut gn)
+        .unwrap();
+    assert!((lp - ln).abs() < 1e-3 * lp.abs().max(1.0), "loss: pjrt {lp} vs native {ln}");
+    for (i, (a, c)) in gp.iter().zip(&gn).enumerate() {
+        let na: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let nc: f64 = c.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        assert!(
+            (na - nc).abs() < 5e-3 * na.max(1e-3),
+            "grad norm {i}: pjrt {na} vs native {nc}"
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Golden tests for the NATIVE backend — the artifact-free twin of
+//! tests/golden.rs. The constants below were computed by the JAX reference
+//! model (python/compile/model.py) through the numpy mirror in
+//! python/tests/test_native_mirror.py (run it as a script to regenerate):
+//! deterministic filler parameters + filler tokens on the nano lm model at
+//! the shipped artifact batch shape (8, 64). These tests always run, so the
+//! full cross-language ABI — parameter ordering, init formulas, model
+//! semantics — is pinned even on machines with no Python and no artifacts.
+
+use blockllm::backend::native::NativeBackend;
+use blockllm::backend::{Backend, Targets};
+use blockllm::model::ParamStore;
+
+/// jax: lm_loss_mean(filler params, filler tokens salt 0, targets salt 3)
+const GOLDEN_LOSS: f64 = 5.531864166259766;
+/// jax: ||grad||_2 for the first three tensors (tok_emb, layers.0.attn_norm,
+/// layers.0.wq)
+const GOLDEN_GRAD_NORMS: [f64; 3] = [
+    0.05102282017469406,
+    0.0018501117592677474,
+    0.01897336170077324,
+];
+
+fn filler_tokens(b: usize, t: usize, vocab: i64, salt: i64) -> Vec<i32> {
+    let mut out = Vec::with_capacity(b * t);
+    for i in 0..b as i64 {
+        for j in 0..t as i64 {
+            out.push(((7 * i + 13 * j + salt) % vocab) as i32);
+        }
+    }
+    out
+}
+
+fn setup() -> (NativeBackend, ParamStore, Vec<i32>, Vec<i32>) {
+    let be = NativeBackend::with_shape("nano", "lm", 0, 8, 64).unwrap();
+    let store = ParamStore::fill_deterministic(be.param_specs());
+    let tokens = filler_tokens(8, 64, 256, 0);
+    let targets = filler_tokens(8, 64, 256, 3);
+    (be, store, tokens, targets)
+}
+
+#[test]
+fn native_lm_train_matches_jax_golden() {
+    let (mut be, store, tokens, targets) = setup();
+    let mut grads: Vec<Vec<f32>> =
+        store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+    let loss = be
+        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .unwrap();
+    assert!(
+        (loss - GOLDEN_LOSS).abs() < 2e-3 * GOLDEN_LOSS,
+        "loss {loss} vs jax golden {GOLDEN_LOSS}"
+    );
+    for (k, want) in GOLDEN_GRAD_NORMS.iter().enumerate() {
+        let got: f64 = grads[k].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(
+            (got - want).abs() < 1e-2 * want.max(1e-4),
+            "grad norm {k}: {got} vs jax golden {want}"
+        );
+    }
+}
+
+#[test]
+fn native_lm_eval_matches_jax_golden() {
+    let (mut be, store, tokens, targets) = setup();
+    let out = be.eval_batch(&store, &tokens, Targets::Lm(&targets)).unwrap();
+    // no ignored targets in the filler batch: every token counts
+    assert_eq!(out.aux, (8 * 64) as f64);
+    let mean = out.loss_sum / out.aux;
+    assert!(
+        (mean - GOLDEN_LOSS).abs() < 2e-3 * GOLDEN_LOSS,
+        "eval mean {mean} vs jax golden {GOLDEN_LOSS}"
+    );
+}
+
+#[test]
+fn native_train_and_eval_agree() {
+    // the train path's mean loss and the eval path's loss_sum/count are two
+    // different code paths over the same math
+    let (mut be, store, tokens, targets) = setup();
+    let mut grads: Vec<Vec<f32>> =
+        store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
+    let train_loss = be
+        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .unwrap();
+    let out = be.eval_batch(&store, &tokens, Targets::Lm(&targets)).unwrap();
+    let eval_mean = out.loss_sum / out.aux;
+    assert!(
+        (train_loss - eval_mean).abs() < 1e-9,
+        "{train_loss} vs {eval_mean}"
+    );
+}

@@ -1,0 +1,272 @@
+//! Offline stub of the `xla` (xla_extension) PJRT binding.
+//!
+//! The build container has no XLA shared library and no crates.io access, so
+//! this path dependency keeps the crate compiling everywhere. `Literal` is a
+//! REAL host-side implementation (shape + typed buffer) because the
+//! coordinator marshals through it; the PJRT client/compile/execute surface
+//! is stubbed to return errors at runtime. `Runtime::open` therefore fails
+//! cleanly on a machine without the real binding, and the L2.5 backend layer
+//! (rust/src/backend/) falls back to the pure-Rust `NativeBackend`.
+//!
+//! To run the AOT HLO artifacts for real, replace this path dependency in
+//! rust/Cargo.toml with the upstream `xla` crate (xla_extension 0.5.1) — the
+//! API subset below matches it exactly.
+
+use std::fmt;
+
+/// Stub error: a plain message (the real binding wraps XLA statuses).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB: &str = "xla stub: PJRT is unavailable in this build (vendored rust/vendor/xla); \
+use the native backend or link the real xla_extension binding";
+
+fn stub_err() -> Error {
+    Error(STUB.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Literal: functional host implementation
+// ---------------------------------------------------------------------------
+
+/// Typed host buffer payload.
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types the coordinator marshals (f32 weights/grads, i32 tokens).
+pub trait NativeType: Copy + 'static {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+    fn unwrap_mut(data: &mut Data) -> Option<&mut [Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn unwrap_mut(data: &mut Data) -> Option<&mut [f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn unwrap_mut(data: &mut Data) -> Option<&mut [i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host literal: shape (i64 dims, XLA convention) + typed buffer.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub dims: Vec<i64>,
+    pub data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Same buffer, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} wants {} elements, literal has {}",
+                dims,
+                n,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Overwrite the payload in place from a host slice (same length/type).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        let dst = T::unwrap_mut(&mut self.data)
+            .ok_or_else(|| Error("copy_raw_from: element type mismatch".into()))?;
+        if dst.len() != src.len() {
+            return Err(Error(format!(
+                "copy_raw_from: length mismatch {} vs {}",
+                dst.len(),
+                src.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Copy the payload out into a host slice (same length/type).
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let src = T::unwrap(&self.data)
+            .ok_or_else(|| Error("copy_raw_to: element type mismatch".into()))?;
+        if dst.len() != src.len() {
+            return Err(Error(format!(
+                "copy_raw_to: length mismatch {} vs {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or type mismatch".into()))
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (they only
+    /// come back from PJRT execution), so this is unreachable in practice.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("to_tuple: stub literals are never tuples".into()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface: stubbed
+// ---------------------------------------------------------------------------
+
+/// Stub PJRT client — `cpu()` always fails, so anything holding a client is
+/// unreachable at runtime in stub builds.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err())
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let l2 = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l2.dims, vec![2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        l.copy_raw_from::<f32>(&[5.0, 6.0, 7.0, 8.0]).unwrap();
+        let mut out = [0.0f32; 4];
+        l.copy_raw_to::<f32>(&mut out).unwrap();
+        assert_eq!(out, [5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 5.0);
+        assert_eq!(l.to_vec::<f32>().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn literal_type_mismatch_rejected() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.get_first_element::<f32>().is_err());
+        let mut buf = [0.0f32; 3];
+        assert!(l.copy_raw_to::<f32>(&mut buf).is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_is_stubbed() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
