@@ -40,8 +40,11 @@ class Preset:
 
 # Stand-ins for the paper's LLaMA 60M / 130M / 350M / 7B ladder, scaled for a
 # single CPU core.  Ratios between rungs (~2.4-3x) roughly match the paper's.
+# "grain" is test-only: deliberately odd dims (non-multiples of the Rust GEMM
+# block/unroll sizes) whose golden pins lock the kernels' remainder paths.
 PRESETS = {
     "nano": Preset("nano", vocab=256, d_model=64, n_layers=2, n_heads=2, d_ff=176, max_seq=64),
+    "grain": Preset("grain", vocab=101, d_model=18, n_layers=2, n_heads=1, d_ff=29, max_seq=32),
     "micro": Preset("micro", vocab=256, d_model=128, n_layers=4, n_heads=4, d_ff=352, max_seq=64),
     "tiny": Preset("tiny", vocab=256, d_model=256, n_layers=6, n_heads=4, d_ff=688, max_seq=64),
     "small": Preset("small", vocab=256, d_model=320, n_layers=8, n_heads=8, d_ff=864, max_seq=64),

@@ -352,6 +352,46 @@ def golden_native_losses():
     return loss, norms
 
 
+def golden_grain_losses():
+    """Odd-dims pins (rust/tests/native_golden.rs grain cases): run the
+    mirror in float64 end-to-end so the pins are JAX-grade references; the
+    Rust f32 engine lands within ~1e-6 of them (asserted at 1e-5)."""
+    p = PRESETS["grain"]
+    out = {}
+    # lm head, b=3 t=13
+    specs = model.param_specs(p, "lm")
+    params = {k: v.astype(np.float64) for k, v in deterministic_filler(specs).items()}
+    tokens = filler_tokens(3, 13, p.vocab, 0)
+    targets = filler_tokens(3, 13, p.vocab, 3)
+    loss, grads = lm_fwd_bwd(params, tokens, targets, p)
+    out["lm"] = (loss, [float(np.linalg.norm(grads[n])) for n, _ in specs])
+    # cls head (n_out=3), b=2 t=7, labels [0, 2]
+    cspecs = model.param_specs(p, "cls", 3)
+    cparams = {k: v.astype(np.float64) for k, v in deterministic_filler(cspecs).items()}
+    ctokens = filler_tokens(2, 7, p.vocab, 1)
+    labels = np.array([0, 2], np.int32)
+    closs, cgrads = cls_fwd_bwd(cparams, ctokens, labels, p)
+    out["cls"] = (closs, [float(np.linalg.norm(cgrads[n])) for n, _ in cspecs])
+    return out
+
+
+def test_grain_mirror_matches_jax():
+    """The odd-dims preset exercises shapes the nano tests never hit; keep
+    the mirror JAX-validated there too."""
+    p = PRESETS["grain"]
+    b, t = 3, 13
+    specs, params = named_params(p, "lm", 0, seed=11)
+    tokens = filler_tokens(b, t, p.vocab, 0)
+    targets = filler_tokens(b, t, p.vocab, 3)
+    loss, grads = lm_fwd_bwd(params, tokens, targets, p)
+    flat = [jnp.asarray(params[name]) for name, _ in specs]
+    jloss, jgrads = jax.value_and_grad(
+        lambda ps: model.lm_loss_mean(ps, jnp.asarray(tokens), jnp.asarray(targets), p)
+    )(flat)
+    assert abs(loss - float(jloss)) < 1e-4 * max(1.0, abs(float(jloss)))
+    _assert_grads_close(specs, grads, jgrads)
+
+
 def test_golden_matches_jax_reference():
     p = PRESETS["nano"]
     specs = model.param_specs(p, "lm")
@@ -371,6 +411,11 @@ if __name__ == "__main__":
     print("cls mirror OK")
     test_reg_mirror_matches_jax()
     print("reg mirror OK")
+    test_grain_mirror_matches_jax()
+    print("grain (odd dims) mirror OK")
     loss, norms = golden_native_losses()
     print(f"native golden: nano lm b8t64 loss = {loss!r}")
     print(f"grad_norms_first3 = {norms!r}")
+    for head, (gl, gn) in golden_grain_losses().items():
+        print(f"grain golden {head}: loss = {gl!r}")
+        print(f"  grad_norms = {gn!r}")

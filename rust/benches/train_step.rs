@@ -4,7 +4,17 @@
 //!
 //! Always produces numbers: with AOT artifacts present it drives PJRT,
 //! otherwise the pure-Rust native backend. The backend that ran is printed
-//! with every row.
+//! with every row, and the results are written as JSON (default
+//! `BENCH_train_step.json`) so CI's bench-smoke step can track the perf
+//! trajectory across PRs.
+//!
+//! Args (after `cargo bench --bench train_step --`):
+//!   --preset NAME   model preset (default micro)
+//!   --iters N       timed iterations per method (default 24)
+//!   --warmup N      warmup iterations per method (default 3)
+//!   --threads N     pin the kernel worker count (default: PALLAS_NUM_THREADS
+//!                   or all cores; results are identical at any setting)
+//!   --out PATH      JSON output path (default BENCH_train_step.json)
 
 #[path = "harness.rs"]
 mod harness;
@@ -13,14 +23,34 @@ use blockllm::config::{Method, Task, TrainConfig};
 use blockllm::data::c4sim::C4Sim;
 use blockllm::data::LmStream;
 use blockllm::trainer::Trainer;
+use blockllm::util::json::Json;
 use harness::bench;
 
-fn main() {
-    let preset = std::env::args()
-        .skip_while(|a| a != "--preset")
-        .nth(1)
-        .unwrap_or_else(|| "micro".to_string());
+fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
 
+fn arg_usize(name: &str, default: usize) -> usize {
+    arg(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let preset = arg("--preset").unwrap_or_else(|| "micro".to_string());
+    let iters = arg_usize("--iters", 24).max(1);
+    let warmup = arg_usize("--warmup", 3);
+    if let Some(v) = arg("--threads") {
+        match v.parse() {
+            Ok(t) => blockllm::util::set_num_threads(t),
+            Err(_) => {
+                eprintln!("--threads wants a number, got {v:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let out_path = arg("--out").unwrap_or_else(|| "BENCH_train_step.json".to_string());
+    let threads = blockllm::util::num_threads();
+
+    let mut rows: Vec<Json> = Vec::new();
     for method in [Method::BlockLlm, Method::FullAdam, Method::GaLore, Method::LoRa, Method::BAdam] {
         let mut cfg = TrainConfig::default();
         cfg.preset = preset.clone();
@@ -36,21 +66,40 @@ fn main() {
                 continue;
             }
         };
-        let backend = tr.backend.name();
+        let backend = tr.backend.name().to_string();
         let (b, t) = tr.batch_shape();
         let mut stream = C4Sim::new(9);
         // pre-generate batches so data gen is outside the timed region
         let batches: Vec<_> = (0..12).map(|_| stream.next_batch(b, t)).collect();
         let mut i = 0;
-        bench(
+        let r = bench(
             &format!("train_step {preset} {} [{backend}]", method.name()),
-            3,
-            24,
+            warmup,
+            iters,
             || {
                 let batch = &batches[i % batches.len()];
                 i += 1;
                 tr.bench_step(batch).expect("step");
             },
         );
+        rows.push(Json::obj(vec![
+            ("method", Json::str(method.name())),
+            ("backend", Json::str(backend)),
+            ("ms_per_step", Json::num(r.median_ns / 1e6)),
+            ("p10_ms", Json::num(r.p10_ns / 1e6)),
+            ("p90_ms", Json::num(r.p90_ns / 1e6)),
+            ("iters", Json::num(r.iters as f64)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("train_step")),
+        ("preset", Json::str(preset.clone())),
+        ("threads", Json::num(threads as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
 }

@@ -10,18 +10,26 @@
 //! Correctness provenance: python/tests/test_native_mirror.py holds a
 //! line-for-line numpy mirror of this file asserted against
 //! jax.value_and_grad on every head; rust/tests/grad_check.rs
-//! finite-difference-checks this implementation directly, and
-//! rust/tests/native_golden.rs pins the deterministic-filler loss against
-//! the JAX-computed golden value.
+//! finite-difference-checks this implementation directly (including
+//! thread-count invariance), and rust/tests/native_golden.rs pins the
+//! deterministic-filler losses against JAX-computed golden values.
+//!
+//! Performance: every matmul runs on the blocked multi-threaded kernels in
+//! `linalg::gemm`; parameters are read through borrowed `tensor::View`s
+//! straight out of the `ParamStore` (the pass allocates only activations);
+//! per-(batch, head) attention work fans out over `gemm::parallel_map` with
+//! its inner GEMMs pinned to 1 thread. All kernels are bit-for-bit
+//! deterministic at any `PALLAS_NUM_THREADS` setting.
 
 use anyhow::{bail, Result};
 
 use super::{EvalOut, Targets};
 use crate::config::presets::{self, Preset};
 use crate::config::TrainConfig;
+use crate::linalg::gemm;
 use crate::model::ParamStore;
 use crate::runtime::ParamSpec;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, View};
 
 const RMS_EPS: f32 = 1e-6;
 
@@ -93,10 +101,10 @@ impl NativeBackend {
         })
     }
 
-    /// Clone a parameter tensor out of the store by spec index.
-    fn param(&self, store: &ParamStore, idx: usize) -> Tensor {
-        let s = &self.specs[idx];
-        Tensor { shape: s.shape.clone(), data: store.bufs[idx].clone() }
+    /// Borrow a parameter tensor out of the store by spec index (zero-copy;
+    /// the old per-use clone was the native engine's biggest waste).
+    fn paramv<'s>(&self, store: &'s ParamStore, idx: usize) -> View<'s> {
+        View::new(&self.specs[idx].shape, &store.bufs[idx])
     }
 
     fn tok_indices(&self, tokens: &[i32]) -> Result<Vec<usize>> {
@@ -155,19 +163,18 @@ impl NativeBackend {
         let (d, h) = (self.preset.d_model, self.preset.n_heads);
         let dh = self.preset.d_head();
         let scale = 1.0 / (dh as f32).sqrt();
-        let tok_emb = self.param(store, 0);
-        let mut x = tok_emb.gather_rows(tok_idx); // [N, D]
+        let mut x = self.paramv(store, 0).gather_rows(tok_idx); // [N, D]
         let mut caches = Vec::with_capacity(if want_grads { self.preset.n_layers } else { 0 });
         for layer in 0..self.preset.n_layers {
             let attn_norm = &store.bufs[self.idx_layer(layer, 0)];
-            let wq = self.param(store, self.idx_layer(layer, 1));
-            let wk = self.param(store, self.idx_layer(layer, 2));
-            let wv = self.param(store, self.idx_layer(layer, 3));
-            let wo = self.param(store, self.idx_layer(layer, 4));
+            let wq = self.paramv(store, self.idx_layer(layer, 1));
+            let wk = self.paramv(store, self.idx_layer(layer, 2));
+            let wv = self.paramv(store, self.idx_layer(layer, 3));
+            let wo = self.paramv(store, self.idx_layer(layer, 4));
             let mlp_norm = &store.bufs[self.idx_layer(layer, 5)];
-            let w_gate = self.param(store, self.idx_layer(layer, 6));
-            let w_up = self.param(store, self.idx_layer(layer, 7));
-            let w_down = self.param(store, self.idx_layer(layer, 8));
+            let w_gate = self.paramv(store, self.idx_layer(layer, 6));
+            let w_up = self.paramv(store, self.idx_layer(layer, 7));
+            let w_down = self.paramv(store, self.idx_layer(layer, 8));
 
             // -- attention sublayer
             let (ha, ra) = rmsnorm_fwd(&x, attn_norm);
@@ -176,29 +183,34 @@ impl NativeBackend {
             let v = ha.matmul(&wv);
             rope_apply(&mut q, t, h, dh, &self.cos, &self.sin, false);
             rope_apply(&mut k, t, h, dh, &self.cos, &self.sin, false);
-            let mut probs = Vec::with_capacity(b * h);
-            let mut ctx = Tensor::zeros(&[b * t, d]);
-            for bi in 0..b {
-                for hi in 0..h {
-                    let qh = head_slice(&q, bi, t, hi, dh);
-                    let kh = head_slice(&k, bi, t, hi, dh);
-                    let vh = head_slice(&v, bi, t, hi, dh);
-                    let mut s = qh.matmul_nt(&kh); // [t, t]
-                    for i in 0..t {
-                        for j in 0..t {
-                            let cell = &mut s.data[i * t + j];
-                            if j > i {
-                                *cell = f32::NEG_INFINITY; // causal mask
-                            } else {
-                                *cell *= scale;
-                            }
+            // fan the (batch, head) pairs out across threads; the per-head
+            // GEMMs run at 1 thread (the outer map owns the parallelism)
+            let heads = gemm::parallel_map(b * h, |bh| {
+                let (bi, hi) = (bh / h, bh % h);
+                let qh = head_slice(&q, bi, t, hi, dh);
+                let kh = head_slice(&k, bi, t, hi, dh);
+                let vh = head_slice(&v, bi, t, hi, dh);
+                let mut s = gemm::matmul_nt_threads(&qh, &kh, 1); // [t, t]
+                for i in 0..t {
+                    for j in 0..t {
+                        let cell = &mut s.data[i * t + j];
+                        if j > i {
+                            *cell = f32::NEG_INFINITY; // causal mask
+                        } else {
+                            *cell *= scale;
                         }
                     }
-                    s.softmax_rows();
-                    let ctx_h = s.matmul(&vh); // [t, dh]
-                    write_head_slice(&mut ctx, bi, t, hi, dh, &ctx_h);
-                    probs.push(s);
                 }
+                s.softmax_rows();
+                let ctx_h = gemm::matmul_threads(&s, &vh, 1); // [t, dh]
+                (s, ctx_h)
+            });
+            let mut probs = Vec::with_capacity(b * h);
+            let mut ctx = Tensor::zeros(&[b * t, d]);
+            for (bh, (s, ctx_h)) in heads.into_iter().enumerate() {
+                let (bi, hi) = (bh / h, bh % h);
+                write_head_slice(&mut ctx, bi, t, hi, dh, &ctx_h);
+                probs.push(s);
             }
             let x1 = {
                 let mut out = ctx.matmul(&wo);
@@ -210,12 +222,7 @@ impl NativeBackend {
             let (hm, rm) = rmsnorm_fwd(&x1, mlp_norm);
             let g = hm.matmul(&w_gate); // [N, ff]
             let u = hm.matmul(&w_up);
-            let mut prod = Tensor::zeros(&[b * t, self.preset.d_ff]);
-            for i in 0..prod.data.len() {
-                let gv = g.data[i];
-                let sg = 1.0 / (1.0 + (-gv).exp());
-                prod.data[i] = gv * sg * u.data[i]; // silu(g) * u
-            }
+            let prod = gemm::silu_mul(&g, &u); // silu(g) * u
             let x2 = {
                 let mut out = prod.matmul(&w_down);
                 out.axpy(1.0, &x1); // residual
@@ -259,32 +266,22 @@ impl NativeBackend {
 
         for layer in (0..self.preset.n_layers).rev() {
             let c = &caches[layer];
-            let wq = self.param(store, self.idx_layer(layer, 1));
-            let wk = self.param(store, self.idx_layer(layer, 2));
-            let wv = self.param(store, self.idx_layer(layer, 3));
-            let wo = self.param(store, self.idx_layer(layer, 4));
-            let w_gate = self.param(store, self.idx_layer(layer, 6));
-            let w_up = self.param(store, self.idx_layer(layer, 7));
-            let w_down = self.param(store, self.idx_layer(layer, 8));
+            let wq = self.paramv(store, self.idx_layer(layer, 1));
+            let wk = self.paramv(store, self.idx_layer(layer, 2));
+            let wv = self.paramv(store, self.idx_layer(layer, 3));
+            let wo = self.paramv(store, self.idx_layer(layer, 4));
+            let w_gate = self.paramv(store, self.idx_layer(layer, 6));
+            let w_up = self.paramv(store, self.idx_layer(layer, 7));
+            let w_down = self.paramv(store, self.idx_layer(layer, 8));
 
             // -- mlp sublayer: x2 = x1 + prod @ w_down
             let dprod = dx.matmul_nt(&w_down); // [N, ff]
-            acc(&mut grads[self.idx_layer(layer, 8)], &c.prod.matmul_tn(&dx).data);
-            let n_ff = dprod.data.len();
-            let mut dg_t = Tensor::zeros(&[b * t, self.preset.d_ff]);
-            let mut du_t = Tensor::zeros(&[b * t, self.preset.d_ff]);
-            for i in 0..n_ff {
-                let gv = c.g.data[i];
-                let sg = 1.0 / (1.0 + (-gv).exp());
-                let sil = gv * sg;
-                du_t.data[i] = dprod.data[i] * sil;
-                // d silu(g)/dg = sg * (1 + g * (1 - sg))
-                dg_t.data[i] = dprod.data[i] * c.u.data[i] * (sg * (1.0 + gv * (1.0 - sg)));
-            }
-            acc(&mut grads[self.idx_layer(layer, 7)], &c.hm.matmul_tn(&du_t).data);
-            acc(&mut grads[self.idx_layer(layer, 6)], &c.hm.matmul_tn(&dg_t).data);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 8)], &c.prod, &dx);
+            let (dg_t, du_t) = gemm::silu_mul_vjp(&dprod, &c.g, &c.u);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 7)], &c.hm, &du_t);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 6)], &c.hm, &dg_t);
             let mut dhm = dg_t.matmul_nt(&w_gate); // [N, d]
-            dhm.axpy(1.0, &du_t.matmul_nt(&w_up));
+            gemm::matmul_nt_acc(&mut dhm, &du_t, &w_up);
             let mlp_norm = &store.bufs[self.idx_layer(layer, 5)];
             let (dx1_norm, dgm) = rmsnorm_bwd(&dhm, &c.x1, mlp_norm, &c.rm);
             acc(&mut grads[self.idx_layer(layer, 5)], &dgm);
@@ -292,48 +289,51 @@ impl NativeBackend {
 
             // -- attention sublayer: x1 = x0 + ctx @ wo
             let dctx = dx.matmul_nt(&wo); // [N, d]
-            acc(&mut grads[self.idx_layer(layer, 4)], &c.ctx.matmul_tn(&dx).data);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 4)], &c.ctx, &dx);
+            let heads = gemm::parallel_map(b * h, |bh| {
+                let (bi, hi) = (bh / h, bh % h);
+                let pr = &c.probs[bi * h + hi]; // [t, t]
+                let do_h = head_slice(&dctx, bi, t, hi, dh);
+                let vh = head_slice(&c.v, bi, t, hi, dh);
+                let qh = head_slice(&c.q, bi, t, hi, dh);
+                let kh = head_slice(&c.k, bi, t, hi, dh);
+                let dv_h = gemm::matmul_tn_threads(pr, &do_h, 1); // P^T dO
+                let dp = gemm::matmul_nt_threads(&do_h, &vh, 1); // dO V^T  [t, t]
+                let mut ds = Tensor::zeros(&[t, t]);
+                for i in 0..t {
+                    let mut dot = 0.0f32;
+                    for j in 0..t {
+                        dot += dp.data[i * t + j] * pr.data[i * t + j];
+                    }
+                    for j in 0..t {
+                        ds.data[i * t + j] =
+                            pr.data[i * t + j] * (dp.data[i * t + j] - dot);
+                    }
+                }
+                let mut dq_h = gemm::matmul_threads(&ds, &kh, 1); // [t, dh]
+                dq_h.scale(scale);
+                let mut dk_h = gemm::matmul_tn_threads(&ds, &qh, 1); // dS^T Q
+                dk_h.scale(scale);
+                (dq_h, dk_h, dv_h)
+            });
             let mut dq = Tensor::zeros(&[b * t, d]);
             let mut dk = Tensor::zeros(&[b * t, d]);
             let mut dv = Tensor::zeros(&[b * t, d]);
-            for bi in 0..b {
-                for hi in 0..h {
-                    let pr = &c.probs[bi * h + hi]; // [t, t]
-                    let do_h = head_slice(&dctx, bi, t, hi, dh);
-                    let vh = head_slice(&c.v, bi, t, hi, dh);
-                    let qh = head_slice(&c.q, bi, t, hi, dh);
-                    let kh = head_slice(&c.k, bi, t, hi, dh);
-                    let dv_h = pr.matmul_tn(&do_h); // P^T dO
-                    let dp = do_h.matmul_nt(&vh); // dO V^T  [t, t]
-                    let mut ds = Tensor::zeros(&[t, t]);
-                    for i in 0..t {
-                        let mut dot = 0.0f32;
-                        for j in 0..t {
-                            dot += dp.data[i * t + j] * pr.data[i * t + j];
-                        }
-                        for j in 0..t {
-                            ds.data[i * t + j] =
-                                pr.data[i * t + j] * (dp.data[i * t + j] - dot);
-                        }
-                    }
-                    let mut dq_h = ds.matmul(&kh); // [t, dh]
-                    dq_h.scale(scale);
-                    let mut dk_h = ds.matmul_tn(&qh); // dS^T Q
-                    dk_h.scale(scale);
-                    write_head_slice(&mut dq, bi, t, hi, dh, &dq_h);
-                    write_head_slice(&mut dk, bi, t, hi, dh, &dk_h);
-                    write_head_slice(&mut dv, bi, t, hi, dh, &dv_h);
-                }
+            for (bh, (dq_h, dk_h, dv_h)) in heads.into_iter().enumerate() {
+                let (bi, hi) = (bh / h, bh % h);
+                write_head_slice(&mut dq, bi, t, hi, dh, &dq_h);
+                write_head_slice(&mut dk, bi, t, hi, dh, &dk_h);
+                write_head_slice(&mut dv, bi, t, hi, dh, &dv_h);
             }
             // undo rope (orthogonal rotation: backward = inverse rotation)
             rope_apply(&mut dq, t, h, dh, &self.cos, &self.sin, true);
             rope_apply(&mut dk, t, h, dh, &self.cos, &self.sin, true);
-            acc(&mut grads[self.idx_layer(layer, 1)], &c.ha.matmul_tn(&dq).data);
-            acc(&mut grads[self.idx_layer(layer, 2)], &c.ha.matmul_tn(&dk).data);
-            acc(&mut grads[self.idx_layer(layer, 3)], &c.ha.matmul_tn(&dv).data);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 1)], &c.ha, &dq);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 2)], &c.ha, &dk);
+            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 3)], &c.ha, &dv);
             let mut dha = dq.matmul_nt(&wq);
-            dha.axpy(1.0, &dk.matmul_nt(&wk));
-            dha.axpy(1.0, &dv.matmul_nt(&wv));
+            gemm::matmul_nt_acc(&mut dha, &dk, &wk);
+            gemm::matmul_nt_acc(&mut dha, &dv, &wv);
             let attn_norm = &store.bufs[self.idx_layer(layer, 0)];
             let (dx0_norm, dga) = rmsnorm_bwd(&dha, &c.x0, attn_norm, &c.ra);
             acc(&mut grads[self.idx_layer(layer, 0)], &dga);
@@ -442,7 +442,7 @@ impl super::Backend for NativeBackend {
                 if tgts.len() != b * t {
                     bail!("lm targets len {} != b*t {}", tgts.len(), b * t);
                 }
-                let lm_head = self.param(store, self.idx_head()); // [d, v]
+                let lm_head = self.paramv(store, self.idx_head()); // [d, v]
                 let mut logits = xf.matmul(&lm_head); // [N, v]
                 let (loss_sum, count) = self.lm_loss_grad(&mut logits, tgts, true);
                 let count = count.max(1.0);
@@ -455,7 +455,7 @@ impl super::Backend for NativeBackend {
                     }
                 }
                 logits.scale(inv);
-                acc(&mut grads_out[self.idx_head()], &xf.matmul_tn(&logits).data);
+                gemm::matmul_tn_acc(&mut grads_out[self.idx_head()], &xf, &logits);
                 let dxf = logits.matmul_nt(&lm_head); // [N, d]
                 self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, grads_out);
                 loss_sum / count
@@ -483,14 +483,10 @@ impl super::Backend for NativeBackend {
                     }
                 }
                 pooled.scale(1.0 / t as f32);
-                let w = self.param(store, self.idx_head()); // [d, n_out]
+                let w = self.paramv(store, self.idx_head()); // [d, n_out]
                 let bias = &store.bufs[self.idx_bias()];
-                let mut logits = pooled.matmul(&w); // [b, n_out]
-                for bi in 0..b {
-                    for j in 0..self.n_out {
-                        logits.data[bi * self.n_out + j] += bias[j];
-                    }
-                }
+                // fused bias epilogue: logits = pooled @ w + bias
+                let logits = gemm::matmul_bias(&pooled, &w, bias);
                 let (loss, dlogits) = if regression {
                     let mut dl = Tensor::zeros(&[b, 1]);
                     let mut loss = 0.0f64;
@@ -528,7 +524,7 @@ impl super::Backend for NativeBackend {
                     dl2.scale(1.0 / b as f32);
                     (loss / b as f64, dl2)
                 };
-                acc(&mut grads_out[self.idx_head()], &pooled.matmul_tn(&dlogits).data);
+                gemm::matmul_tn_acc(&mut grads_out[self.idx_head()], &pooled, &dlogits);
                 let dbias = &mut grads_out[self.idx_bias()];
                 for bi in 0..b {
                     for j in 0..dlogits.cols() {
@@ -574,7 +570,7 @@ impl super::Backend for NativeBackend {
                 if tgts.len() != b * t {
                     bail!("lm targets len {} != b*t {}", tgts.len(), b * t);
                 }
-                let lm_head = self.param(store, self.idx_head());
+                let lm_head = self.paramv(store, self.idx_head());
                 let mut logits = xf.matmul(&lm_head);
                 let (loss_sum, count) = self.lm_loss_grad(&mut logits, tgts, false);
                 EvalOut { loss_sum, aux: count, preds: Vec::new() }
@@ -591,15 +587,10 @@ impl super::Backend for NativeBackend {
                     }
                 }
                 pooled.scale(1.0 / t as f32);
-                let w = self.param(store, self.idx_head());
+                let w = self.paramv(store, self.idx_head());
                 let bias = &store.bufs[self.idx_bias()];
-                let mut logits = pooled.matmul(&w);
+                let logits = gemm::matmul_bias(&pooled, &w, bias);
                 let no = self.n_out;
-                for bi in 0..b {
-                    for j in 0..no {
-                        logits.data[bi * no + j] += bias[j];
-                    }
-                }
                 match targets {
                     Targets::Reg(labels) => {
                         if labels.len() != b {
@@ -686,7 +677,10 @@ impl super::Backend for NativeBackend {
 /// Bytes of forward activations the engine materializes host-side (the
 /// memory-accounting contract: forward caches kept for backward, plus the
 /// head tensors). Backward temporaries are bounded by one extra layer-set
-/// and are charged implicitly via the same formula's margin.
+/// and are charged implicitly via the same formula's margin. Parameters are
+/// read through borrowed views (never cloned per use), so this formula
+/// charges genuine activations only — weights are already accounted in
+/// `MemBreakdown::weights`.
 fn model_activation_bytes(p: &Preset, head: &str, n_out: usize, b: usize, t: usize) -> u64 {
     let n = (b * t) as u64;
     let (d, ff, v) = (p.d_model as u64, p.d_ff as u64, p.vocab as u64);

@@ -1,14 +1,15 @@
 //! Intra-layer coordinate masks (Alg. 2 lines 11-18).
 //!
-//! For each selected layer, keep only coordinates with |G̃[i,j]| >= τ where
-//! τ is the per-layer (1−ζ)-style percentile such that the kept fraction is
-//! `keep_frac = n_s / Σ_p` (see selector.rs for why that's the well-defined
-//! reading of the paper's ζ). Three policies are exposed for the ablation
-//! bench (DESIGN.md §6.1).
+//! For each selected layer, keep exactly the top `floor(n_l · keep_frac)`
+//! coordinates by |G̃| with `keep_frac = n_s / Σ_p` (see selector.rs for why
+//! that's the well-defined reading of the paper's ζ). Using an exact top-k
+//! (`BitMask::top_k`, ties broken by index) instead of a percentile
+//! threshold makes the sparsity level a HARD bound: Σ_l floor(n_l·n_s/Σ_p)
+//! <= n_s <= (1−s)·n, property-tested in tests/blockllm_props.rs. Three
+//! policies are exposed for the ablation bench (DESIGN.md §6.1).
 
 use crate::config::MaskMode;
 use crate::optim::masked_adam::BitMask;
-use crate::tensor::abs_quantile_keep;
 
 use super::selector::Selection;
 
@@ -28,10 +29,10 @@ pub fn build_masks(
         }
         MaskMode::Alg2 => {
             // paper-literal: every selected layer masked with the same keep
-            // fraction, thresholded on its own |G̃| percentile
+            // fraction, exact top-k on its own |G̃| so the budget holds
             for &l in &sel.layers {
-                let tau = abs_quantile_keep(&grads[l], sel.keep_frac);
-                out.push((l, BitMask::from_threshold(&grads[l], tau)));
+                let k = ((grads[l].len() as f64) * sel.keep_frac).floor() as usize;
+                out.push((l, BitMask::top_k(&grads[l], k)));
             }
         }
         MaskMode::OvershootOnly => {
@@ -45,9 +46,7 @@ pub fn build_masks(
                     covered += n;
                 } else {
                     let remaining = sel.n_s.saturating_sub(covered).max(1);
-                    let keep = remaining as f64 / n as f64;
-                    let tau = abs_quantile_keep(&grads[l], keep);
-                    out.push((l, BitMask::from_threshold(&grads[l], tau)));
+                    out.push((l, BitMask::top_k(&grads[l], remaining)));
                     covered += remaining;
                 }
             }
@@ -92,8 +91,10 @@ mod tests {
         let sel = toy_selection(vec![0, 1], 1500, 600);
         let masks = build_masks(&sel, &grads, crate::config::MaskMode::Alg2);
         let active = active_coords(&masks);
-        // keep_frac = 0.4 -> ~600 coords, quantile rounding gives slack
-        assert!((550..=650).contains(&active), "active={active}");
+        // keep_frac = 0.4 -> exactly floor(1000*.4) + floor(500*.4) = 600,
+        // and never above the budget (exact top-k)
+        assert_eq!(active, 600);
+        assert!(active <= sel.n_s, "active={active} > budget {}", sel.n_s);
     }
 
     #[test]

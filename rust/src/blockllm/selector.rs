@@ -50,7 +50,9 @@ pub fn select_layers(
     rule: SelectionRule,
 ) -> Selection {
     let n: usize = sizes.iter().sum();
-    let n_s = (((1.0 - sparsity) * n as f64).round() as usize).max(1);
+    // floor (not round): the budget may never exceed (1-s)·n, so the mask
+    // stage can guarantee active_coords <= (1-s)·n exactly
+    let n_s = (((1.0 - sparsity) * n as f64).floor() as usize).max(1);
 
     let mut order: Vec<usize> = (0..sizes.len()).collect();
     match rule {

@@ -79,6 +79,9 @@ Any TrainConfig key can be overridden with --key value (see config/mod.rs).
 --backend selects the execution engine: `pjrt` runs the AOT HLO artifacts
 (`make artifacts`), `native` runs the pure-Rust model engine, and `auto`
 (default) prefers pjrt when artifacts exist, falling back to native.
+--threads N (or the PALLAS_NUM_THREADS env var) pins the worker count of the
+native engine's blocked GEMM kernels; default is all cores. The kernels are
+bit-for-bit deterministic at any setting, so this is purely a speed knob.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

@@ -77,9 +77,13 @@ impl Preset {
     }
 }
 
-/// The nano..base ladder (stand-ins for the paper's LLaMA 60M..7B).
-pub const PRESETS: [Preset; 5] = [
+/// The nano..base ladder (stand-ins for the paper's LLaMA 60M..7B), plus
+/// `grain`: a deliberately odd-dimensioned preset (nothing is a multiple of
+/// the GEMM block/unroll sizes) that pins the blocked kernels' remainder
+/// paths in tests/native_golden.rs and tests/grad_check.rs.
+pub const PRESETS: [Preset; 6] = [
     Preset { name: "nano", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 176, max_seq: 64 },
+    Preset { name: "grain", vocab: 101, d_model: 18, n_layers: 2, n_heads: 1, d_ff: 29, max_seq: 32 },
     Preset { name: "micro", vocab: 256, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 352, max_seq: 64 },
     Preset { name: "tiny", vocab: 256, d_model: 256, n_layers: 6, n_heads: 4, d_ff: 688, max_seq: 64 },
     Preset { name: "small", vocab: 256, d_model: 320, n_layers: 8, n_heads: 8, d_ff: 864, max_seq: 64 },

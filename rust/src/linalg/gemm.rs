@@ -1,0 +1,613 @@
+//! Cache-blocked, multi-threaded GEMM kernel family — the native engine's
+//! compute substrate.
+//!
+//! Three layouts cover every matmul in the model and its backward pass (all
+//! matrices row-major f32, remainders of any size handled):
+//!   * `nn`: C = A·B   (A [m,k], B [k,n]) — forward projections
+//!   * `tn`: C = Aᵀ·B  (A [k,m], B [k,n]) — weight gradients
+//!   * `nt`: C = A·Bᵀ  (A [m,k], B [n,k]) — activation gradients
+//! each with an accumulating variant (C += …) so the backward pass fuses its
+//! reductions instead of materializing temporaries, plus fused epilogues for
+//! the head (row-broadcast bias) and SwiGLU (SiLU·mul forward + VJP).
+//!
+//! Parallelism: output rows are split into contiguous per-thread chunks run
+//! under `std::thread::scope`. Each output element is owned by exactly one
+//! thread and accumulated in a fixed k-order (the kb/jb/unroll grid is a
+//! compile-time constant), so results are bit-for-bit identical at ANY
+//! thread count — the property the golden pins, grad checks and
+//! thread-invariance tests rely on. The worker count comes from
+//! `util::num_threads()` (`PALLAS_NUM_THREADS`, parsed once) unless a
+//! caller pins it explicitly (per-head attention work runs its inner GEMMs
+//! at 1 thread to avoid oversubscription).
+
+use crate::tensor::Tensor;
+use crate::util;
+
+/// Depth (k) blocking: a KB x NB panel of B stays L2-resident while it is
+/// streamed over a chunk's rows. Multiple of the 4-way unroll so unroll
+/// groups never straddle a block boundary (fixed summation order).
+const KB: usize = 128;
+/// Width (j) blocking: C-row segments of NB f32 stay in L1.
+const NB: usize = 256;
+/// Below this m*n*k, thread-spawn cost outweighs the parallel win.
+const PAR_MNK: usize = 64 * 1024;
+/// Below this element count, elementwise kernels stay single-threaded.
+const PAR_ELEMS: usize = 1 << 15;
+
+/// Anything readable as a row-major 2-D f32 matrix (rank-1 = a single row,
+/// matching `Tensor::rows`). Lets the kernels consume owned activations and
+/// borrowed parameter views interchangeably.
+pub trait Mat {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn data(&self) -> &[f32];
+}
+
+/// Contiguous per-thread row ranges: first `m % t` chunks get one extra row.
+fn split_rows(m: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(m.max(1));
+    let (base, rem) = (m / t, m % t);
+    let mut out = Vec::with_capacity(t);
+    let mut i0 = 0;
+    for c in 0..t {
+        let len = base + usize::from(c < rem);
+        out.push((i0, i0 + len));
+        i0 += len;
+    }
+    out
+}
+
+/// Run `body(i0, i1, c_rows)` over disjoint row chunks of `c` in parallel.
+/// Chunk boundaries depend only on (m, threads); each chunk's work is
+/// self-contained, so any thread count computes identical bits.
+fn par_rows<F>(c: &mut [f32], m: usize, n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(c.len(), m * n);
+    let chunks = split_rows(m, threads);
+    if chunks.len() == 1 {
+        body(0, m, c);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut first: Option<(usize, usize, &mut [f32])> = None;
+        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((i1 - i0) * n);
+            rest = tail;
+            if ci == 0 {
+                first = Some((i0, i1, head));
+            } else {
+                let b = &body;
+                s.spawn(move || b(i0, i1, head));
+            }
+        }
+        // the caller's thread works the first chunk while workers run
+        if let Some((i0, i1, head)) = first {
+            body(i0, i1, head);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// serial chunk kernels (fixed summation order per output element)
+// ---------------------------------------------------------------------------
+
+/// nn rows [i0, i0+rows): c_rows += A[i0.., :] · B. `a` is the FULL A [m,k].
+fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { c_rows.len() / n };
+    for jb in (0..n).step_by(NB) {
+        let je = (jb + NB).min(n);
+        let w = je - jb;
+        for kb in (0..k).step_by(KB) {
+            let ke = (kb + KB).min(k);
+            for li in 0..rows {
+                let arow = &a[(i0 + li) * k..(i0 + li) * k + k];
+                let crow = &mut c_rows[li * n + jb..li * n + je];
+                let mut kk = kb;
+                // 4-deep k-unroll: one pass over the C segment per 4 B rows
+                while kk + 4 <= ke {
+                    let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    let b0 = &b[kk * n + jb..kk * n + jb + w];
+                    let b1 = &b[(kk + 1) * n + jb..(kk + 1) * n + jb + w];
+                    let b2 = &b[(kk + 2) * n + jb..(kk + 2) * n + jb + w];
+                    let b3 = &b[(kk + 3) * n + jb..(kk + 3) * n + jb + w];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < ke {
+                    let av = arow[kk];
+                    let brow = &b[kk * n + jb..kk * n + je];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+}
+
+/// tn rows [i0, i0+rows): c_rows += Aᵀ[i0.., :] · B for A [k,m], B [k,n].
+fn tn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, m: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { c_rows.len() / n };
+    for jb in (0..n).step_by(NB) {
+        let je = (jb + NB).min(n);
+        for kb in (0..k).step_by(KB) {
+            let ke = (kb + KB).min(k);
+            for kk in kb..ke {
+                let arow = &a[kk * m..(kk + 1) * m];
+                let brow = &b[kk * n + jb..kk * n + je];
+                for li in 0..rows {
+                    let av = arow[i0 + li];
+                    let crow = &mut c_rows[li * n + jb..li * n + je];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// nt rows [i0, i0+rows): c_rows ⊕= A[i0.., :] · Bᵀ for A [m,k], B [n,k].
+/// Four independent dot accumulators per A row amortize the A loads; each
+/// accumulator still sums in pure ascending-k order.
+fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize, acc: bool) {
+    let rows = if n == 0 { 0 } else { c_rows.len() / n };
+    for li in 0..rows {
+        let arow = &a[(i0 + li) * k..(i0 + li + 1) * k];
+        let crow = &mut c_rows[li * n..(li + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (kk, &av) in arow.iter().enumerate() {
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            if acc {
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                crow[j + 2] += s2;
+                crow[j + 3] += s3;
+            } else {
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+            }
+            j += 4;
+        }
+        while j < n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                s += av * bv;
+            }
+            if acc {
+                crow[j] += s;
+            } else {
+                crow[j] = s;
+            }
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw slice API (explicit thread count — tests and nested callers pin it)
+// ---------------------------------------------------------------------------
+
+fn gemm_threads(m: usize, k: usize, n: usize, threads: usize) -> usize {
+    if m * n * k < PAR_MNK {
+        1
+    } else {
+        threads
+    }
+}
+
+/// c ⊕= A·B. `acc=false` overwrites, `acc=true` accumulates.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+    assert_eq!(a.len(), m * k, "gemm_nn: a len");
+    assert_eq!(b.len(), k * n, "gemm_nn: b len");
+    assert_eq!(c.len(), m * n, "gemm_nn: c len");
+    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
+        if !acc {
+            rows.fill(0.0);
+        }
+        nn_chunk(rows, a, b, i0, k, n);
+    });
+}
+
+/// c ⊕= Aᵀ·B for A [k,m], B [k,n].
+pub fn gemm_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+    assert_eq!(a.len(), k * m, "gemm_tn: a len");
+    assert_eq!(b.len(), k * n, "gemm_tn: b len");
+    assert_eq!(c.len(), m * n, "gemm_tn: c len");
+    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
+        if !acc {
+            rows.fill(0.0);
+        }
+        tn_chunk(rows, a, b, i0, k, m, n);
+    });
+}
+
+/// c ⊕= A·Bᵀ for A [m,k], B [n,k].
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+    assert_eq!(a.len(), m * k, "gemm_nt: a len");
+    assert_eq!(b.len(), n * k, "gemm_nt: b len");
+    assert_eq!(c.len(), m * n, "gemm_nt: c len");
+    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
+        nt_chunk(rows, a, b, i0, k, n, acc);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Mat-level API (thread count from the shared util knob)
+// ---------------------------------------------------------------------------
+
+fn dims_nn(a: &dyn Mat, b: &dyn Mat) -> (usize, usize, usize) {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    (m, k, n)
+}
+
+/// C = A·B at an explicit thread count (1 inside already-parallel regions).
+pub fn matmul_threads<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, threads: usize) -> Tensor {
+    let (m, k, n) = dims_nn(a, b);
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_nn(m, k, n, a.data(), b.data(), &mut c.data, true, threads);
+    c
+}
+
+/// C = A·B.
+pub fn matmul<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B) -> Tensor {
+    matmul_threads(a, b, util::num_threads())
+}
+
+/// C = Aᵀ·B at an explicit thread count.
+pub fn matmul_tn_threads<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, threads: usize) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_tn(k, m, n, a.data(), b.data(), &mut c.data, true, threads);
+    c
+}
+
+/// C = Aᵀ·B.
+pub fn matmul_tn<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B) -> Tensor {
+    matmul_tn_threads(a, b, util::num_threads())
+}
+
+/// C = A·Bᵀ at an explicit thread count.
+pub fn matmul_nt_threads<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, threads: usize) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_nt(m, k, n, a.data(), b.data(), &mut c.data, false, threads);
+    c
+}
+
+/// C = A·Bᵀ.
+pub fn matmul_nt<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B) -> Tensor {
+    matmul_nt_threads(a, b, util::num_threads())
+}
+
+/// dst += Aᵀ·B, accumulating straight into a raw gradient buffer (the
+/// backward pass's weight-gradient sink — no temporary + add pass).
+pub fn matmul_tn_acc<A: Mat + ?Sized, B: Mat + ?Sized>(dst: &mut [f32], a: &A, b: &B) {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_tn_acc inner dims {k} vs {k2}");
+    gemm_tn(k, m, n, a.data(), b.data(), dst, true, util::num_threads());
+}
+
+/// c += A·Bᵀ (fused accumulation for dx-style sums of products).
+pub fn matmul_nt_acc<A: Mat + ?Sized, B: Mat + ?Sized>(c: &mut Tensor, a: &A, b: &B) {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt_acc inner dims {k} vs {k2}");
+    assert_eq!(c.shape, vec![m, n], "matmul_nt_acc: c shape");
+    gemm_nt(m, k, n, a.data(), b.data(), &mut c.data, true, util::num_threads());
+}
+
+/// C = A·B + bias (bias broadcast over rows) — the cls/reg head forward,
+/// fused into the same parallel pass as the GEMM.
+pub fn matmul_bias<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, bias: &[f32]) -> Tensor {
+    let (m, k, n) = dims_nn(a, b);
+    assert_eq!(bias.len(), n, "matmul_bias: bias len");
+    let mut c = Tensor::zeros(&[m, n]);
+    let threads = gemm_threads(m, k, n, util::num_threads());
+    let (ad, bd) = (a.data(), b.data());
+    par_rows(&mut c.data, m, n, threads, |i0, i1, rows| {
+        nn_chunk(rows, ad, bd, i0, k, n);
+        for li in 0..(i1 - i0) {
+            let crow = &mut rows[li * n..(li + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(bias) {
+                *cv += bv;
+            }
+        }
+    });
+    c
+}
+
+// ---------------------------------------------------------------------------
+// fused activation kernels (SwiGLU)
+// ---------------------------------------------------------------------------
+
+/// prod = silu(g) ⊙ u, elementwise over equal-shape tensors.
+pub fn silu_mul(g: &Tensor, u: &Tensor) -> Tensor {
+    assert_eq!(g.shape, u.shape, "silu_mul shape");
+    let mut prod = Tensor::zeros(&g.shape);
+    let threads = if g.numel() < PAR_ELEMS { 1 } else { util::num_threads() };
+    let (gd, ud) = (&g.data, &u.data);
+    par_rows(&mut prod.data, g.numel(), 1, threads, |i0, i1, out| {
+        for (li, pv) in out.iter_mut().enumerate() {
+            let gv = gd[i0 + li];
+            let sg = 1.0 / (1.0 + (-gv).exp());
+            *pv = gv * sg * ud[i0 + li];
+        }
+        let _ = i1;
+    });
+    prod
+}
+
+/// VJP of `silu_mul`: given dprod and the cached (g, u), returns (dg, du).
+/// Parallelized as a `parallel_map` over element chunks (one per worker);
+/// each chunk computes its (dg, du) pair independently, so stitching the
+/// in-order results back together is thread-count-invariant.
+pub fn silu_mul_vjp(dprod: &Tensor, g: &Tensor, u: &Tensor) -> (Tensor, Tensor) {
+    assert_eq!(dprod.shape, g.shape, "silu_mul_vjp shape");
+    assert_eq!(g.shape, u.shape, "silu_mul_vjp shape");
+    let nlen = g.numel();
+    let threads = if nlen < PAR_ELEMS { 1 } else { util::num_threads() };
+    let chunks = split_rows(nlen, threads);
+    let (dpd, gd, ud) = (&dprod.data, &g.data, &u.data);
+    let parts = parallel_map(chunks.len(), |ci| {
+        let (i0, i1) = chunks[ci];
+        let mut dgc = vec![0.0f32; i1 - i0];
+        let mut duc = vec![0.0f32; i1 - i0];
+        for li in 0..(i1 - i0) {
+            let gv = gd[i0 + li];
+            let sg = 1.0 / (1.0 + (-gv).exp());
+            let sil = gv * sg;
+            let dp = dpd[i0 + li];
+            duc[li] = dp * sil;
+            // d silu(g)/dg = sg * (1 + g * (1 - sg))
+            dgc[li] = dp * ud[i0 + li] * (sg * (1.0 + gv * (1.0 - sg)));
+        }
+        (dgc, duc)
+    });
+    let mut dg = Vec::with_capacity(nlen);
+    let mut du = Vec::with_capacity(nlen);
+    for (dgc, duc) in parts {
+        dg.extend_from_slice(&dgc);
+        du.extend_from_slice(&duc);
+    }
+    (
+        Tensor { shape: g.shape.clone(), data: dg },
+        Tensor { shape: g.shape.clone(), data: du },
+    )
+}
+
+/// Deterministic parallel map over `0..n`: results in index order. Work item
+/// `i` always computes the same bits regardless of which thread runs it, so
+/// the output is thread-count-invariant. Items should pin their own inner
+/// kernels to 1 thread (`*_threads(.., 1)`) to avoid oversubscription.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = util::num_threads().min(n.max(1));
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunks = split_rows(n, threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [Option<T>] = &mut out;
+        let mut first: Option<(usize, &mut [Option<T>])> = None;
+        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(i1 - i0);
+            rest = tail;
+            if ci == 0 {
+                first = Some((i0, head));
+            } else {
+                let g = &f;
+                s.spawn(move || {
+                    for (li, slot) in head.iter_mut().enumerate() {
+                        *slot = Some(g(i0 + li));
+                    }
+                });
+            }
+        }
+        if let Some((i0, head)) = first {
+            for (li, slot) in head.iter_mut().enumerate() {
+                *slot = Some(f(i0 + li));
+            }
+        }
+    });
+    out.into_iter().map(|x| x.expect("parallel_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += (a[i * k + kk] as f64) * (b[kk * n + j] as f64);
+                }
+            }
+        }
+        c.into_iter().map(|x| x as f32).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!((g - w).abs() <= tol * (1.0 + w.abs()), "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn all_layouts_match_naive_incl_remainders() {
+        let mut rng = Pcg64::new(1);
+        // dims straddle the KB/NB blocks and the 4-way unroll remainders
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (7, 17, 9), (13, 129, 31), (33, 260, 257), (5, 1, 4)] {
+            let a = rand_vec(m * k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let want = naive_nn(m, k, n, &a, &b);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c, false, 2);
+            assert_close(&c, &want, 1e-4);
+
+            // tn: build At [k x m] column-major of a, i.e. At^T = A
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut c2 = vec![0.0f32; m * n];
+            gemm_tn(k, m, n, &at, &b, &mut c2, false, 3);
+            assert_close(&c2, &want, 1e-4);
+
+            // nt: Bt [n x k] with Bt^T = B
+            let mut bt = vec![0.0f32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            let mut c3 = vec![0.0f32; m * n];
+            gemm_nt(m, k, n, &a, &bt, &mut c3, false, 2);
+            assert_close(&c3, &want, 1e-4);
+        }
+    }
+
+    #[test]
+    fn results_are_bitwise_identical_at_any_thread_count() {
+        let mut rng = Pcg64::new(2);
+        let (m, k, n) = (37, 141, 53);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let bt: Vec<f32> = {
+            let mut t = vec![0.0f32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    t[j * k + kk] = b[kk * n + j];
+                }
+            }
+            t
+        };
+        let mut base_nn = vec![0.0f32; m * n];
+        let mut base_nt = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut base_nn, false, 1);
+        gemm_nt(m, k, n, &a, &bt, &mut base_nt, false, 1);
+        for threads in [2, 3, 4, 7, 64] {
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c, false, threads);
+            assert_eq!(c, base_nn, "nn differs at {threads} threads");
+            let mut c2 = vec![0.0f32; m * n];
+            gemm_nt(m, k, n, &a, &bt, &mut c2, false, threads);
+            assert_eq!(c2, base_nt, "nt differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn accumulating_variants_add_on_top() {
+        let mut rng = Pcg64::new(3);
+        let (m, k, n) = (6, 10, 8);
+        let a = rand_vec(m * k, &mut rng);
+        let b = rand_vec(k * n, &mut rng);
+        let want = naive_nn(m, k, n, &a, &b);
+        let mut c = vec![1.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c, true, 2);
+        let shifted: Vec<f32> = want.iter().map(|w| w + 1.0).collect();
+        assert_close(&c, &shifted, 1e-4);
+    }
+
+    #[test]
+    fn matmul_bias_fuses_row_broadcast() {
+        let mut rng = Pcg64::new(4);
+        let a = Tensor::from_vec(&[3, 4], rand_vec(12, &mut rng)).unwrap();
+        let b = Tensor::from_vec(&[4, 5], rand_vec(20, &mut rng)).unwrap();
+        let bias = rand_vec(5, &mut rng);
+        let got = matmul_bias(&a, &b, &bias);
+        let plain = matmul(&a, &b);
+        for i in 0..3 {
+            for j in 0..5 {
+                let want = plain.at(i, j) + bias[j];
+                assert!((got.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn silu_mul_and_vjp_match_reference_and_finite_difference() {
+        let mut rng = Pcg64::new(5);
+        let g = Tensor::from_vec(&[2, 9], rand_vec(18, &mut rng)).unwrap();
+        let u = Tensor::from_vec(&[2, 9], rand_vec(18, &mut rng)).unwrap();
+        let prod = silu_mul(&g, &u);
+        for i in 0..g.numel() {
+            let gv = g.data[i];
+            let want = gv / (1.0 + (-gv).exp()) * u.data[i];
+            assert!((prod.data[i] - want).abs() < 1e-6);
+        }
+        // scalar objective sum(prod): dprod = 1
+        let ones = Tensor::from_vec(&[2, 9], vec![1.0; 18]).unwrap();
+        let (dg, du) = silu_mul_vjp(&ones, &g, &u);
+        let f = |g: &Tensor, u: &Tensor| -> f64 {
+            silu_mul(g, u).data.iter().map(|&x| x as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for &i in &[0usize, 7, 17] {
+            let mut gp = g.clone();
+            gp.data[i] += eps;
+            let mut gm = g.clone();
+            gm.data[i] -= eps;
+            let fd = (f(&gp, &u) - f(&gm, &u)) / (2.0 * eps as f64);
+            assert!((fd - dg.data[i] as f64).abs() < 1e-2 * (1.0 + fd.abs()), "dg[{i}]");
+            let mut up = u.clone();
+            up.data[i] += eps;
+            let mut um = u.clone();
+            um.data[i] -= eps;
+            let fdu = (f(&g, &up) - f(&g, &um)) / (2.0 * eps as f64);
+            assert!((fdu - du.data[i] as f64).abs() < 1e-2 * (1.0 + fdu.abs()), "du[{i}]");
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        assert!(parallel_map(0, |i| i).is_empty());
+    }
+}

@@ -1,4 +1,7 @@
-//! Numerical linear algebra substrate for the GaLore baseline.
+//! Numerical linear algebra substrate: the blocked multi-threaded GEMM
+//! kernel layer (`gemm`) that the tensor matmul family and the native
+//! backend's hot paths run on, plus the randomized range finder the GaLore
+//! baseline uses.
 //!
 //! GaLore (Zhao et al., 2024) projects each 2-D gradient G [m,n] onto a
 //! rank-r subspace: with m <= n it uses the top-r left singular vectors P
@@ -6,6 +9,10 @@
 //! T steps; we use a randomized range finder (Halko et al.) with a few
 //! power iterations — the same subspace class at a fraction of the cost
 //! (documented substitution, DESIGN.md §6.6).
+
+pub mod gemm;
+
+pub use gemm::Mat;
 
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;

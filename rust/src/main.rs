@@ -21,6 +21,10 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
+    if let Some(v) = args.get("threads") {
+        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--threads wants a number, got {v:?}"))?;
+        blockllm::util::set_num_threads(n);
+    }
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
@@ -37,7 +41,8 @@ fn run() -> Result<()> {
 fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     for (k, v) in &args.kv {
-        if k == "ckpt" || k == "save" || k == "id" {
+        // non-config keys: checkpoint paths, experiment id, kernel threads
+        if k == "ckpt" || k == "save" || k == "id" || k == "threads" {
             continue;
         }
         cfg.set(k, v)?;

@@ -28,7 +28,10 @@ pub struct MemBreakdown {
     /// (native backend keeps fwd caches for its backward pass; 0 under
     /// PJRT, where they live in XLA's arena) — filled in by the trainer
     /// from `Backend::activation_bytes` so cross-backend peak-memory
-    /// comparisons stay honest
+    /// comparisons stay honest. Since the blocked-GEMM kernel layer the
+    /// native engine reads parameters through borrowed views, so this
+    /// number charges genuine activations only (weights live solely in
+    /// `weights`; there are no per-use parameter clones left to model)
     pub activations: u64,
 }
 

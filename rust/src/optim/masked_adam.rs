@@ -65,6 +65,50 @@ impl BitMask {
         BitMask { words, len, popcount: pop }
     }
 
+    /// Exactly the top-k coordinates by |g| (fewer if the tensor has fewer
+    /// than k nonzeros — zero-magnitude coordinates are never selected, same
+    /// rationale as `from_threshold`). Ties break toward the lower index, so
+    /// the popcount is exact and the result deterministic — this is what
+    /// lets `blockllm::mask` honor the sparsity budget as a hard bound.
+    pub fn top_k(g: &[f32], k: usize) -> BitMask {
+        let len = g.len();
+        let mut words = vec![0u64; len.div_ceil(64)];
+        let nz = g.iter().filter(|x| **x != 0.0).count();
+        let k = k.min(nz);
+        if k == 0 {
+            return BitMask { words, len, popcount: 0 };
+        }
+        let mut pop = 0usize;
+        if k == nz {
+            for (i, &x) in g.iter().enumerate() {
+                if x != 0.0 {
+                    words[i / 64] |= 1u64 << (i % 64);
+                    pop += 1;
+                }
+            }
+            return BitMask { words, len, popcount: pop };
+        }
+        // k < nz: threshold at the k-th largest |g|, then admit strict
+        // winners and fill remaining slots with ties in index order
+        let tau = crate::tensor::kth_largest_abs(g, k);
+        for (i, &x) in g.iter().enumerate() {
+            if x.abs() > tau {
+                words[i / 64] |= 1u64 << (i % 64);
+                pop += 1;
+            }
+        }
+        for (i, &x) in g.iter().enumerate() {
+            if pop == k {
+                break;
+            }
+            if x != 0.0 && x.abs() == tau {
+                words[i / 64] |= 1u64 << (i % 64);
+                pop += 1;
+            }
+        }
+        BitMask { words, len, popcount: pop }
+    }
+
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         (self.words[i / 64] >> (i % 64)) & 1 == 1

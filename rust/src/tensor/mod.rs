@@ -1,11 +1,15 @@
 //! Host f32 tensor substrate.
 //!
-//! The L3 coordinator only needs host-side tensor math for the *optimizer*
-//! layer (GaLore projections, LoRA adapter algebra, gradient statistics) —
-//! model fwd/bwd runs inside the AOT XLA artifact. Shapes here are small
-//! (at most d_model x d_ff), so a cache-blocked native matmul is plenty.
+//! `Tensor` owns its buffer (activations, optimizer math); [`View`] borrows
+//! one (parameter tensors read straight out of the `ParamStore`, no per-use
+//! clone). Both feed the matmul family, which delegates to the blocked
+//! multi-threaded kernel layer in `linalg::gemm` — the native backend's
+//! model fwd/bwd and the optimizer-side algebra (GaLore projections, LoRA
+//! adapters, gradient statistics) all run on the same kernels.
 
 use anyhow::{bail, Result};
+
+use crate::linalg::gemm::{self, Mat};
 
 /// Dense row-major f32 tensor, rank 1 or 2 in practice.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,69 +98,28 @@ impl Tensor {
     }
 
     // ---- matmul family -----------------------------------------------------
+    // All three delegate to the blocked multi-threaded kernels in
+    // `linalg::gemm` (thread count: util::num_threads()). `b` is any `Mat`,
+    // so parameter `View`s plug in without cloning.
 
-    /// C = A @ B for A [m,k], B [k,n]. Cache-friendly i-k-j loop order.
-    pub fn matmul(&self, b: &Tensor) -> Tensor {
-        let (m, k) = (self.rows(), self.cols());
-        let (k2, n) = (b.rows(), b.cols());
-        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-        let mut c = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += a * bv;
-                }
-            }
-        }
-        Tensor { shape: vec![m, n], data: c }
+    /// C = A @ B for A [m,k], B [k,n].
+    pub fn matmul<B: Mat + ?Sized>(&self, b: &B) -> Tensor {
+        gemm::matmul(self, b)
     }
 
     /// C = Aᵀ @ B for A [k,m], B [k,n] (no explicit transpose).
-    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
-        let (k, m) = (self.rows(), self.cols());
-        let (k2, n) = (b.rows(), b.cols());
-        assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
-        let mut c = vec![0.0f32; m * n];
-        for kk in 0..k {
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += a * bv;
-                }
-            }
-        }
-        Tensor { shape: vec![m, n], data: c }
+    pub fn matmul_tn<B: Mat + ?Sized>(&self, b: &B) -> Tensor {
+        gemm::matmul_tn(self, b)
     }
 
     /// C = A @ Bᵀ for A [m,k], B [n,k].
-    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
-        let (m, k) = (self.rows(), self.cols());
-        let (n, k2) = (b.rows(), b.cols());
-        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
-        let mut c = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (av, bv) in arow.iter().zip(brow) {
-                    acc += av * bv;
-                }
-                c[i * n + j] = acc;
-            }
-        }
-        Tensor { shape: vec![m, n], data: c }
+    pub fn matmul_nt<B: Mat + ?Sized>(&self, b: &B) -> Tensor {
+        gemm::matmul_nt(self, b)
+    }
+
+    /// Borrow this tensor as a zero-copy matrix view.
+    pub fn view(&self) -> View<'_> {
+        View { rows: self.rows(), cols: self.cols(), data: &self.data }
     }
 
     pub fn transpose(&self) -> Tensor {
@@ -197,14 +160,7 @@ impl Tensor {
     /// Gather rows by index: self [N, D] -> [idx.len(), D]. Panics on an
     /// out-of-range index (the embedding table owns range checking upstream).
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
-        let d = self.cols();
-        let n = self.rows();
-        let mut out = Vec::with_capacity(idx.len() * d);
-        for &i in idx {
-            assert!(i < n, "gather_rows: row {i} out of {n}");
-            out.extend_from_slice(&self.data[i * d..(i + 1) * d]);
-        }
-        Tensor { shape: vec![idx.len(), d], data: out }
+        gather_rows_impl(&self.data, self.rows(), self.cols(), idx)
     }
 
     /// Scatter-add rows: self[idx[j]] += rows[j] (embedding gradient).
@@ -224,6 +180,76 @@ impl Tensor {
     }
 }
 
+impl Mat for Tensor {
+    fn rows(&self) -> usize {
+        Tensor::rows(self)
+    }
+    fn cols(&self) -> usize {
+        Tensor::cols(self)
+    }
+    fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Zero-copy row-major matrix view over a borrowed buffer — how the native
+/// backend reads parameter tensors straight out of the `ParamStore` (the
+/// fwd/bwd pass allocates only activations, never parameter copies).
+#[derive(Debug, Clone, Copy)]
+pub struct View<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> View<'a> {
+    /// View a raw buffer under a spec shape (rank 1 = one row, like Tensor).
+    pub fn new(shape: &[usize], data: &'a [f32]) -> View<'a> {
+        let (rows, cols) = match shape.len() {
+            1 => (1, shape[0]),
+            2 => (shape[0], shape[1]),
+            r => panic!("rank {r} buffer has no matrix view"),
+        };
+        assert_eq!(rows * cols, data.len(), "view shape {shape:?} vs len {}", data.len());
+        View { rows, cols, data }
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Gather rows by index: [N, D] -> owned [idx.len(), D].
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        gather_rows_impl(self.data, self.rows, self.cols, idx)
+    }
+
+    /// Materialize the view as an owned tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor { shape: vec![self.rows, self.cols], data: self.data.to_vec() }
+    }
+}
+
+impl Mat for View<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn data(&self) -> &[f32] {
+        self.data
+    }
+}
+
+fn gather_rows_impl(data: &[f32], n: usize, d: usize, idx: &[usize]) -> Tensor {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        assert!(i < n, "gather_rows: row {i} out of {n}");
+        out.extend_from_slice(&data[i * d..(i + 1) * d]);
+    }
+    Tensor { shape: vec![idx.len(), d], data: out }
+}
+
 /// Exact k-th largest |value| in a slice, O(n) via quickselect.
 /// Returns the threshold t such that exactly >= k entries satisfy |x| >= t
 /// (ties may admit more). k must satisfy 1 <= k <= len.
@@ -237,23 +263,6 @@ pub fn kth_largest_abs(xs: &[f32], k: usize) -> f32 {
     let (_, v, _) = a.select_nth_unstable_by(pos, |x, y| x.partial_cmp(y).unwrap());
     let _ = idx;
     *v
-}
-
-/// The (1-zeta) upper-quantile of |xs| (zeta in [0,1]): the threshold tau
-/// keeping ~zeta fraction of entries. zeta=1 keeps everything (tau=0).
-pub fn abs_quantile_keep(xs: &[f32], zeta: f64) -> f32 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let zeta = zeta.clamp(0.0, 1.0);
-    let keep = ((xs.len() as f64) * zeta).round() as usize;
-    if keep == 0 {
-        return f32::INFINITY;
-    }
-    if keep >= xs.len() {
-        return 0.0;
-    }
-    kth_largest_abs(xs, keep)
 }
 
 #[cfg(test)]
@@ -294,6 +303,21 @@ mod tests {
         let got = a.matmul_nt(&b);
         let want = a.matmul(&b.transpose());
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn views_are_zero_copy_twins_of_owned_tensors() {
+        let a = t2(3, 4, (0..12).map(|x| x as f32).collect());
+        let w = t2(4, 2, (0..8).map(|x| x as f32).collect());
+        let v = View::new(&[4, 2], &w.data);
+        assert_eq!(a.matmul(&v), a.matmul(&w), "View operand must match Tensor operand");
+        assert_eq!(v.at(1, 1), w.at(1, 1));
+        assert_eq!(v.to_tensor(), w);
+        // rank-1 buffers view as a single row, like Tensor::rows
+        let bias = [1.0f32, 2.0, 3.0];
+        let bv = View::new(&[3], &bias);
+        assert_eq!((bv.rows, bv.cols), (1, 3));
+        assert_eq!(a.gather_rows(&[2, 0]), a.view().gather_rows(&[2, 0]));
     }
 
     #[test]
@@ -355,29 +379,4 @@ mod tests {
         assert_eq!(kth_largest_abs(&xs, 5), 1.0);
     }
 
-    #[test]
-    fn abs_quantile_keep_semantics() {
-        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
-        // keep top 10% -> threshold 91; count(|x| >= 91) == 10
-        let tau = abs_quantile_keep(&xs, 0.10);
-        let kept = xs.iter().filter(|x| x.abs() >= tau).count();
-        assert_eq!(kept, 10);
-        assert_eq!(abs_quantile_keep(&xs, 1.0), 0.0);
-        assert_eq!(abs_quantile_keep(&xs, 0.0), f32::INFINITY);
-    }
-
-    #[test]
-    fn quantile_keep_counts_randomised() {
-        let mut rng = crate::util::rng::Pcg64::new(17);
-        for _ in 0..20 {
-            let n = 1 + rng.below(2000);
-            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
-            let zeta = rng.uniform();
-            let tau = abs_quantile_keep(&xs, zeta);
-            let kept = xs.iter().filter(|x| x.abs() >= tau).count();
-            let want = ((n as f64) * zeta).round() as usize;
-            // ties can only add; quickselect threshold keeps at least `want`
-            assert!(kept >= want, "kept {kept} < want {want} (n={n})");
-        }
-    }
 }

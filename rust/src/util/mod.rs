@@ -4,7 +4,44 @@
 pub mod json;
 pub mod rng;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+/// Resolved kernel worker count; 0 = not yet resolved. One shared knob so
+/// every blocked kernel agrees (DESIGN: the env var is parsed exactly once).
+static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker-thread count for the blocked kernel layer (`linalg::gemm`).
+///
+/// Resolution order: an explicit [`set_num_threads`] call (CLI `--threads`,
+/// tests), else the `PALLAS_NUM_THREADS` env var, else the machine's
+/// available parallelism. Always >= 1; parsed once and cached. The kernels
+/// are bit-for-bit deterministic at ANY setting (they only partition output
+/// rows), so this is a pure throughput knob.
+pub fn num_threads() -> usize {
+    let cur = NUM_THREADS.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let n = std::env::var("PALLAS_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+        .max(1);
+    // first-time resolution must never clobber a concurrent explicit
+    // set_num_threads() override — on a lost race, honor the winner
+    match NUM_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => n,
+        Err(winner) => winner,
+    }
+}
+
+/// Override the kernel worker count (clamped >= 1). Used by `--threads` and
+/// by the thread-count-invariance tests; takes effect on the next kernel
+/// call.
+pub fn set_num_threads(n: usize) {
+    NUM_THREADS.store(n.max(1), Ordering::Relaxed);
+}
 
 /// Simple wall-clock stopwatch used by the trainer and bench harness.
 #[derive(Debug)]
@@ -73,6 +110,17 @@ mod tests {
     #[test]
     fn rss_is_positive() {
         assert!(rss_bytes() > 0);
+    }
+
+    #[test]
+    fn thread_knob_is_clamped_and_overridable() {
+        assert!(num_threads() >= 1);
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0); // clamped to >= 1
+        assert_eq!(num_threads(), 1);
+        set_num_threads(2);
+        assert_eq!(num_threads(), 2);
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Property tests for the BlockLLM core (selector / mask / patience): many
+//! randomized instances checked against the algorithm's contracts rather
+//! than hand-picked examples. The offline crate set has no proptest, so the
+//! repo's own Pcg64 drives the case generation.
+
+use blockllm::blockllm::mask::{active_coords, build_masks};
+use blockllm::blockllm::scorer::NormDictionary;
+use blockllm::blockllm::selector::{select_layers, SelectionRule};
+use blockllm::blockllm::PatienceController;
+use blockllm::config::{MaskMode, NormKind};
+use blockllm::optim::masked_adam::BitMask;
+use blockllm::util::rng::Pcg64;
+
+fn rand_sizes(rng: &mut Pcg64, max_layers: usize, max_size: usize) -> Vec<usize> {
+    let n_layers = 1 + rng.below(max_layers);
+    (0..n_layers).map(|_| 1 + rng.below(max_size)).collect()
+}
+
+fn rand_dict(rng: &mut Pcg64, n_layers: usize) -> NormDictionary {
+    let mut d = NormDictionary::new(n_layers, NormKind::Rms, rng.next_u64());
+    for l in 0..n_layers {
+        d.record_norm(l, rng.uniform() * 10.0, 0);
+    }
+    d
+}
+
+fn rand_grads(rng: &mut Pcg64, sizes: &[usize]) -> Vec<Vec<f32>> {
+    sizes
+        .iter()
+        .map(|&n| (0..n).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+/// `build_masks` respects the configured sparsity level EXACTLY: for any
+/// layer-size vector and any s, active_coords <= max(1, floor((1-s)·n)).
+#[test]
+fn masks_never_exceed_the_sparsity_budget() {
+    let mut rng = Pcg64::new(0xB10C);
+    for trial in 0..200 {
+        let sizes = rand_sizes(&mut rng, 12, 2000);
+        let n: usize = sizes.iter().sum();
+        // sparsity across the whole operating range, incl. extremes
+        let sparsity = match trial % 4 {
+            0 => 0.95,
+            1 => 0.5,
+            2 => rng.uniform() * 0.999,
+            _ => 0.999,
+        };
+        let dict = rand_dict(&mut rng, sizes.len());
+        let grads = rand_grads(&mut rng, &sizes);
+        let budget = (((1.0 - sparsity) * n as f64).floor() as usize).max(1);
+        for mode in [MaskMode::Alg2, MaskMode::OvershootOnly] {
+            let sel = select_layers(&dict, &sizes, sparsity, SelectionRule::TopScore);
+            let masks = build_masks(&sel, &grads, mode);
+            let active = active_coords(&masks);
+            assert!(
+                active <= budget,
+                "trial {trial} {mode:?}: active {active} > budget {budget} \
+                 (s={sparsity}, sizes={sizes:?})"
+            );
+            // the budget must also be reasonably used, not just bounded
+            assert!(
+                active * 2 + sizes.len() >= budget.min(sel.sigma_p),
+                "trial {trial} {mode:?}: active {active} far below budget {budget}"
+            );
+        }
+    }
+}
+
+/// `select_layers` never returns duplicates or out-of-range indices, covers
+/// the budget (or runs out of layers), and reports a consistent Σ_p.
+#[test]
+fn selection_indices_are_unique_in_range_and_cover_the_budget() {
+    let mut rng = Pcg64::new(0x5E1E);
+    for trial in 0..300 {
+        let sizes = rand_sizes(&mut rng, 16, 5000);
+        let n: usize = sizes.iter().sum();
+        let sparsity = rng.uniform();
+        let dict = rand_dict(&mut rng, sizes.len());
+        let rule = match trial % 3 {
+            0 => SelectionRule::TopScore,
+            1 => SelectionRule::BottomScore,
+            _ => SelectionRule::TopScoreNoFreq,
+        };
+        let sel = select_layers(&dict, &sizes, sparsity, rule);
+        assert!(!sel.layers.is_empty(), "trial {trial}: empty selection");
+        let mut seen = std::collections::HashSet::new();
+        for &l in &sel.layers {
+            assert!(l < sizes.len(), "trial {trial}: layer {l} out of range");
+            assert!(seen.insert(l), "trial {trial}: duplicate layer {l}");
+        }
+        let sum: usize = sel.layers.iter().map(|&l| sizes[l]).sum();
+        assert_eq!(sum, sel.sigma_p, "trial {trial}: Σ_p inconsistent");
+        assert!(sel.n_s >= 1 && sel.n_s <= n.max(1));
+        assert!(
+            sel.sigma_p >= sel.n_s || sel.layers.len() == sizes.len(),
+            "trial {trial}: budget not covered and layers remain"
+        );
+        assert!(sel.keep_frac > 0.0 && sel.keep_frac <= 1.0);
+        assert!((0.0..=1.0).contains(&sel.zeta));
+    }
+}
+
+/// `PatienceController::observe` fires iff the loss window stagnates: an
+/// independent reference model (t=0 always fires; otherwise fire iff the
+/// window holds m entries and loss >= window mean; reset on fire) must agree
+/// on every step of random loss trajectories.
+#[test]
+fn patience_fires_iff_the_loss_window_stagnates() {
+    let mut rng = Pcg64::new(0xA71E);
+    for trial in 0..50 {
+        let m = 1 + rng.below(8);
+        let mut p = PatienceController::new(m);
+        let mut window: Vec<f64> = Vec::new();
+        let mut started = false;
+        let mut loss = 5.0 + rng.uniform();
+        let mut fires = 0u64;
+        for step in 0..400 {
+            // random walk with a downward drift and occasional spikes
+            loss += rng.normal() * 0.1 - 0.02;
+            if rng.below(20) == 0 {
+                loss += rng.uniform() * 2.0;
+            }
+            let want = if !started {
+                true
+            } else {
+                window.len() >= m && loss >= window.iter().sum::<f64>() / window.len() as f64
+            };
+            let got = p.observe(loss);
+            assert_eq!(got, want, "trial {trial} step {step} (m={m}): {got} vs reference {want}");
+            if !started {
+                started = true;
+                window.push(loss);
+            } else {
+                if want {
+                    fires += 1;
+                    window.clear();
+                }
+                if window.len() == m {
+                    window.remove(0);
+                }
+                window.push(loss);
+            }
+        }
+        assert_eq!(p.triggers, fires + 1, "trial {trial}: trigger count");
+        assert!(p.history_len() <= m);
+    }
+}
+
+/// `BitMask::top_k` picks exactly min(k, #nonzero) coordinates and they
+/// dominate every unselected coordinate by |value|.
+#[test]
+fn top_k_is_exact_and_magnitude_dominant() {
+    let mut rng = Pcg64::new(0x70C0);
+    for trial in 0..200 {
+        let n = 1 + rng.below(500);
+        let mut g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        // inject zeros and ties
+        for _ in 0..rng.below(n / 2 + 1) {
+            let i = rng.below(n);
+            g[i] = 0.0;
+        }
+        if n > 3 {
+            let v = g[0];
+            g[n / 2] = v;
+            g[n - 1] = -v;
+        }
+        let k = rng.below(n + 2);
+        let mask = BitMask::top_k(&g, k);
+        let nz = g.iter().filter(|x| **x != 0.0).count();
+        assert_eq!(mask.popcount, k.min(nz), "trial {trial}: popcount");
+        let mut min_sel = f32::INFINITY;
+        let mut max_unsel = 0.0f32;
+        for (i, &x) in g.iter().enumerate() {
+            if mask.get(i) {
+                assert!(x != 0.0, "trial {trial}: zero coordinate selected");
+                min_sel = min_sel.min(x.abs());
+            } else {
+                max_unsel = max_unsel.max(x.abs());
+            }
+        }
+        if mask.popcount > 0 && mask.popcount < nz {
+            assert!(
+                min_sel >= max_unsel,
+                "trial {trial}: unselected |{max_unsel}| beats selected |{min_sel}|"
+            );
+        }
+        // determinism: identical input -> identical mask
+        assert_eq!(mask, BitMask::top_k(&g, k), "trial {trial}: nondeterministic");
+    }
+}

@@ -110,6 +110,42 @@ fn native_reg_gradients_match_finite_differences() {
     finite_difference_check(&mut be, &mut store, &tokens, Targets::Reg(&labels), &grads);
 }
 
+/// The blocked GEMM layer partitions output rows across workers with a
+/// fixed per-element summation order, so the whole fwd/bwd must be
+/// bit-for-bit identical at ANY thread count — and still pass the
+/// finite-difference check at each. Uses the odd-dims "grain" preset so
+/// every remainder path of the kernels is crossed at 1, 2 and 4 threads.
+#[test]
+fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
+    let mut results: Vec<(f64, Vec<Vec<f32>>)> = Vec::new();
+    for &threads in &[1usize, 2, 4] {
+        blockllm::util::set_num_threads(threads);
+        let mut be = NativeBackend::with_shape("grain", "lm", 0, 2, 5).unwrap();
+        let specs = be.param_specs().to_vec();
+        let mut store = ParamStore::init(&specs, 41);
+        let tokens = filler_tokens(2, 5, 101, 0);
+        let targets = filler_tokens(2, 5, 101, 3);
+        let mut grads = zeros_like(&store);
+        let loss = be
+            .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // full finite-difference sweep at THIS thread count
+        finite_difference_check(&mut be, &mut store, &tokens, Targets::Lm(&targets), &grads);
+        results.push((loss, grads));
+    }
+    let (l0, g0) = &results[0];
+    for (i, (l, g)) in results.iter().enumerate().skip(1) {
+        assert_eq!(
+            l0.to_bits(),
+            l.to_bits(),
+            "loss at {} threads differs from 1 thread: {l0} vs {l}",
+            [1, 2, 4][i]
+        );
+        assert_eq!(g0, g, "gradients differ between 1 and {} threads", [1, 2, 4][i]);
+    }
+}
+
 /// PJRT-vs-native parity on an identical deterministic batch. Runs only
 /// when artifacts exist and the real PJRT client opens (skipped under the
 /// vendored xla stub).
