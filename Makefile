@@ -2,7 +2,7 @@
 # needs only a Rust toolchain — no Python, no artifacts: tests fall back to
 # the pure-Rust NativeBackend when artifacts/ is absent.
 
-.PHONY: check build test bench artifacts clean
+.PHONY: check build test bench bench-baseline artifacts clean
 
 check: build test
 
@@ -14,6 +14,14 @@ test:
 
 bench:
 	cargo bench
+
+# Regenerate the checked-in bench-smoke baseline (run on the host class that
+# gates CI; ms/step is host-ratio-rescaled via calib_ms, but a same-class
+# baseline keeps the 25% regression margin tight). --threads must match the
+# pinned worker count in ci.yml: the gate only arms when the baseline's
+# recorded thread count equals the gated run's.
+bench-baseline:
+	cargo bench --bench train_step -- --preset tiny --warmup 1 --iters 4 --threads 4 --out BENCH_train_step.baseline.json
 
 # AOT-lower the JAX model to HLO artifacts (enables the PJRT backend).
 # Requires jax; run from a machine with the Python toolchain.

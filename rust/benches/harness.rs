@@ -44,6 +44,24 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
+/// Single-core calibration: time a fixed integer-arithmetic loop (an LCG
+/// with a xor fold the optimizer cannot elide). The result normalizes
+/// ms/step across machines, so a checked-in bench baseline from one host is
+/// comparable on another: scale the baseline's numbers by
+/// `calibrate_ms(now) / calibrate_ms(baseline)` before diffing.
+#[allow(dead_code)]
+pub fn calibrate_ms() -> f64 {
+    let t0 = Instant::now();
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    let mut acc = 0u64;
+    for _ in 0..30_000_000u64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        acc ^= x >> 33;
+    }
+    std::hint::black_box(acc);
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")

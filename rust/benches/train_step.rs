@@ -9,12 +9,18 @@
 //! trajectory across PRs.
 //!
 //! Args (after `cargo bench --bench train_step --`):
-//!   --preset NAME   model preset (default micro)
-//!   --iters N       timed iterations per method (default 24)
-//!   --warmup N      warmup iterations per method (default 3)
-//!   --threads N     pin the kernel worker count (default: PALLAS_NUM_THREADS
-//!                   or all cores; results are identical at any setting)
-//!   --out PATH      JSON output path (default BENCH_train_step.json)
+//!   --preset NAME     model preset (default micro)
+//!   --iters N         timed iterations per method (default 24)
+//!   --warmup N        warmup iterations per method (default 3)
+//!   --threads N       pin the kernel worker count (default: PALLAS_NUM_THREADS
+//!                     or all cores; results are identical at any setting)
+//!   --out PATH        JSON output path (default BENCH_train_step.json)
+//!   --baseline PATH   diff ms/step against a checked-in baseline JSON and
+//!                     exit 1 on a >25% regression. Baseline numbers are
+//!                     rescaled by the ratio of the two hosts' `calib_ms`
+//!                     (a fixed arithmetic loop timed at startup), so a
+//!                     baseline recorded on one machine gates another.
+//!                     Regenerate with `make bench-baseline`.
 
 #[path = "harness.rs"]
 mod harness;
@@ -48,9 +54,12 @@ fn main() {
         }
     }
     let out_path = arg("--out").unwrap_or_else(|| "BENCH_train_step.json".to_string());
+    let baseline_path = arg("--baseline");
     let threads = blockllm::util::num_threads();
+    let calib_ms = harness::calibrate_ms();
 
     let mut rows: Vec<Json> = Vec::new();
+    let mut measured: Vec<(String, String, f64)> = Vec::new(); // (method, backend, ms)
     for method in [Method::BlockLlm, Method::FullAdam, Method::GaLore, Method::LoRa, Method::BAdam] {
         let mut cfg = TrainConfig::default();
         cfg.preset = preset.clone();
@@ -82,6 +91,7 @@ fn main() {
                 tr.bench_step(batch).expect("step");
             },
         );
+        measured.push((method.name().to_string(), backend.clone(), r.median_ns / 1e6));
         rows.push(Json::obj(vec![
             ("method", Json::str(method.name())),
             ("backend", Json::str(backend)),
@@ -96,10 +106,102 @@ fn main() {
         ("bench", Json::str("train_step")),
         ("preset", Json::str(preset.clone())),
         ("threads", Json::num(threads as f64)),
+        ("calib_ms", Json::num(calib_ms)),
         ("rows", Json::Arr(rows)),
     ]);
     match std::fs::write(&out_path, doc.to_string() + "\n") {
         Ok(()) => println!("wrote {out_path}"),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
+
+    if let Some(path) = baseline_path {
+        let regressions = check_baseline(&path, &preset, threads, &measured, calib_ms);
+        if regressions > 0 {
+            eprintln!("BENCH GATE: {regressions} method(s) regressed >25% vs {path}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Diff measured ms/step against a baseline JSON (same schema as --out).
+/// The baseline's numbers are rescaled by the single-core host-speed ratio
+/// `calib_now / calib_base` (clamped to [0.25, 4] as a fabrication guard)
+/// before the 25% margin is applied, so baselines travel across same-shape
+/// machines. The gate only arms when the baseline's `threads` matches the
+/// current worker count — calib measures one core, so a different thread
+/// count would make the rescale meaningless. Methods missing from the
+/// baseline, backend mismatches (pjrt vs native), preset and thread-count
+/// mismatches are reported but never gate. Returns the regression count.
+fn check_baseline(
+    path: &str,
+    preset: &str,
+    threads: usize,
+    measured: &[(String, String, f64)],
+    calib_now: f64,
+) -> usize {
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("baseline {path} unreadable ({e}); skipping bench gate");
+            return 0;
+        }
+    };
+    let base = match Json::parse(&src) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("baseline {path} unparseable ({e}); skipping bench gate");
+            return 0;
+        }
+    };
+    let base_preset = base.get("preset").and_then(|j| j.as_str().ok()).unwrap_or("");
+    if base_preset != preset {
+        eprintln!("baseline preset {base_preset:?} != current {preset:?}; skipping bench gate");
+        return 0;
+    }
+    let base_threads = base.get("threads").and_then(|j| j.as_usize().ok()).unwrap_or(0);
+    if base_threads != threads {
+        eprintln!(
+            "baseline recorded {base_threads} worker threads, this run uses {threads}; \
+             skipping bench gate (regenerate with `make bench-baseline` on this host class)"
+        );
+        return 0;
+    }
+    let calib_base = base.get("calib_ms").and_then(|j| j.as_f64().ok()).unwrap_or(0.0);
+    let scale = if calib_base > 0.0 && calib_now > 0.0 {
+        (calib_now / calib_base).clamp(0.25, 4.0)
+    } else {
+        1.0
+    };
+    let empty: Vec<Json> = Vec::new();
+    let base_rows = base.get("rows").and_then(|j| j.as_arr().ok().map(<[Json]>::to_vec)).unwrap_or(empty);
+    let mut regressions = 0usize;
+    for (method, backend, ms) in measured {
+        let found = base_rows.iter().find(|r| {
+            r.get("method").and_then(|j| j.as_str().ok()) == Some(method.as_str())
+        });
+        let Some(row) = found else {
+            println!("bench-gate {method:12} {ms:9.2} ms  (no baseline row — skipped)");
+            continue;
+        };
+        let base_backend = row.get("backend").and_then(|j| j.as_str().ok()).unwrap_or("");
+        let base_ms = row.get("ms_per_step").and_then(|j| j.as_f64().ok()).unwrap_or(0.0);
+        if base_backend != backend.as_str() || base_ms <= 0.0 {
+            println!("bench-gate {method:12} {ms:9.2} ms  (backend/ms mismatch vs baseline — skipped)");
+            continue;
+        }
+        let limit = base_ms * scale * 1.25;
+        if *ms > limit {
+            println!(
+                "bench-gate {method:12} {ms:9.2} ms  REGRESSION: limit {limit:.2} ms \
+                 (baseline {base_ms:.2} ms x host-scale {scale:.2} x 1.25)"
+            );
+            regressions += 1;
+        } else {
+            println!(
+                "bench-gate {method:12} {ms:9.2} ms  ok (limit {limit:.2} ms, \
+                 baseline {base_ms:.2} ms, host-scale {scale:.2})"
+            );
+        }
+    }
+    regressions
 }

@@ -14,12 +14,18 @@
 //! thread-count invariance), and rust/tests/native_golden.rs pins the
 //! deterministic-filler losses against JAX-computed golden values.
 //!
-//! Performance: every matmul runs on the blocked multi-threaded kernels in
-//! `linalg::gemm`; parameters are read through borrowed `tensor::View`s
-//! straight out of the `ParamStore` (the pass allocates only activations);
-//! per-(batch, head) attention work fans out over `gemm::parallel_map` with
-//! its inner GEMMs pinned to 1 thread. All kernels are bit-for-bit
-//! deterministic at any `PALLAS_NUM_THREADS` setting.
+//! Performance: every matmul runs on the packed-panel microkernel GEMM
+//! layer in `linalg::gemm`; parameters are read through borrowed
+//! `tensor::View`s straight out of the `ParamStore` (the pass allocates only
+//! activations). Per-(batch, head) attention work fans out over
+//! `gemm::parallel_map`, handing each head's inner GEMMs + softmax the
+//! leftover thread budget (`threads / (b·h)`, ≥1) so few-head shapes still
+//! fill the machine. The formerly-serial rowwise sweeps — rmsnorm fwd/bwd,
+//! rope, attention softmax, embedding gather/scatter — are row-partitioned
+//! the same way; reductions (rmsnorm's dγ, the embedding scatter) use
+//! thread-count-INDEPENDENT grouping (fixed row blocks / destination-row
+//! ownership), so the whole fwd/bwd stays bit-for-bit deterministic at any
+//! `PALLAS_NUM_THREADS` setting.
 
 use anyhow::{bail, Result};
 
@@ -30,8 +36,14 @@ use crate::linalg::gemm;
 use crate::model::ParamStore;
 use crate::runtime::ParamSpec;
 use crate::tensor::{Tensor, View};
+use crate::util;
 
 const RMS_EPS: f32 = 1e-6;
+
+/// Fixed row-block size for parallel reductions (rmsnorm's dγ): partial sums
+/// are grouped by these CONSTANT blocks and combined in block order, so the
+/// reduction tree never depends on the thread count.
+const REDUCE_ROWS: usize = 64;
 
 /// Pure-Rust model engine for one (preset, head, batch-shape).
 pub struct NativeBackend {
@@ -183,14 +195,16 @@ impl NativeBackend {
             let v = ha.matmul(&wv);
             rope_apply(&mut q, t, h, dh, &self.cos, &self.sin, false);
             rope_apply(&mut k, t, h, dh, &self.cos, &self.sin, false);
-            // fan the (batch, head) pairs out across threads; the per-head
-            // GEMMs run at 1 thread (the outer map owns the parallelism)
+            // fan the (batch, head) pairs out across threads; each head's
+            // inner GEMMs + per-row softmax get the leftover thread budget
+            // (1 when there are at least as many heads as workers)
+            let inner = inner_threads(b * h);
             let heads = gemm::parallel_map(b * h, |bh| {
                 let (bi, hi) = (bh / h, bh % h);
                 let qh = head_slice(&q, bi, t, hi, dh);
                 let kh = head_slice(&k, bi, t, hi, dh);
                 let vh = head_slice(&v, bi, t, hi, dh);
-                let mut s = gemm::matmul_nt_threads(&qh, &kh, 1); // [t, t]
+                let mut s = gemm::matmul_nt_threads(&qh, &kh, inner); // [t, t]
                 for i in 0..t {
                     for j in 0..t {
                         let cell = &mut s.data[i * t + j];
@@ -201,8 +215,8 @@ impl NativeBackend {
                         }
                     }
                 }
-                s.softmax_rows();
-                let ctx_h = gemm::matmul_threads(&s, &vh, 1); // [t, dh]
+                s.softmax_rows_threads(inner);
+                let ctx_h = gemm::matmul_threads(&s, &vh, inner); // [t, dh]
                 (s, ctx_h)
             });
             let mut probs = Vec::with_capacity(b * h);
@@ -290,6 +304,7 @@ impl NativeBackend {
             // -- attention sublayer: x1 = x0 + ctx @ wo
             let dctx = dx.matmul_nt(&wo); // [N, d]
             gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 4)], &c.ctx, &dx);
+            let inner = inner_threads(b * h);
             let heads = gemm::parallel_map(b * h, |bh| {
                 let (bi, hi) = (bh / h, bh % h);
                 let pr = &c.probs[bi * h + hi]; // [t, t]
@@ -297,22 +312,12 @@ impl NativeBackend {
                 let vh = head_slice(&c.v, bi, t, hi, dh);
                 let qh = head_slice(&c.q, bi, t, hi, dh);
                 let kh = head_slice(&c.k, bi, t, hi, dh);
-                let dv_h = gemm::matmul_tn_threads(pr, &do_h, 1); // P^T dO
-                let dp = gemm::matmul_nt_threads(&do_h, &vh, 1); // dO V^T  [t, t]
-                let mut ds = Tensor::zeros(&[t, t]);
-                for i in 0..t {
-                    let mut dot = 0.0f32;
-                    for j in 0..t {
-                        dot += dp.data[i * t + j] * pr.data[i * t + j];
-                    }
-                    for j in 0..t {
-                        ds.data[i * t + j] =
-                            pr.data[i * t + j] * (dp.data[i * t + j] - dot);
-                    }
-                }
-                let mut dq_h = gemm::matmul_threads(&ds, &kh, 1); // [t, dh]
+                let dv_h = gemm::matmul_tn_threads(pr, &do_h, inner); // P^T dO
+                let dp = gemm::matmul_nt_threads(&do_h, &vh, inner); // dO V^T  [t, t]
+                let ds = softmax_rows_bwd(pr, &dp);
+                let mut dq_h = gemm::matmul_threads(&ds, &kh, inner); // [t, dh]
                 dq_h.scale(scale);
-                let mut dk_h = gemm::matmul_tn_threads(&ds, &qh, 1); // dS^T Q
+                let mut dk_h = gemm::matmul_tn_threads(&ds, &qh, inner); // dS^T Q
                 dk_h.scale(scale);
                 (dq_h, dk_h, dv_h)
             });
@@ -695,48 +700,114 @@ fn model_activation_bytes(p: &Preset, head: &str, n_out: usize, b: usize, t: usi
     4 * (p.n_layers as u64 * per_layer + head_elems)
 }
 
-/// y = x * g / rms(x), rms = sqrt(mean(x^2) + eps). Returns (y, 1/rms per row).
+/// Thread budget for work nested inside a `parallel_map` over `items`:
+/// whatever the outer fan-out cannot use. Purely a throughput decision —
+/// every kernel is thread-count-invariant, so any value computes the same
+/// bits.
+fn inner_threads(items: usize) -> usize {
+    (util::num_threads() / items.max(1)).max(1)
+}
+
+/// y = x * g / rms(x), rms = sqrt(mean(x^2) + eps). Returns (y, 1/rms per
+/// row). Rows are independent, so the sweep row-partitions across threads
+/// (both outputs split by the same chunks via `par_rows2`).
 fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> (Tensor, Vec<f32>) {
     let d = x.cols();
     assert_eq!(g.len(), d);
     let rows = x.rows();
     let mut y = Tensor::zeros(&[rows, d]);
-    let mut r = Vec::with_capacity(rows);
-    for i in 0..rows {
-        let xr = &x.data[i * d..(i + 1) * d];
-        let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
-        let ri = 1.0 / (ms + RMS_EPS).sqrt();
-        r.push(ri);
-        let yr = &mut y.data[i * d..(i + 1) * d];
-        for j in 0..d {
-            yr[j] = xr[j] * ri * g[j];
+    let mut r = vec![0.0f32; rows];
+    let threads = if x.numel() < util::par_min_elems() { 1 } else { util::num_threads() };
+    let xd = &x.data;
+    gemm::par_rows2(&mut y.data, &mut r, rows, d, 1, threads, |i0, i1, yc, rc| {
+        for li in 0..(i1 - i0) {
+            let xr = &xd[(i0 + li) * d..(i0 + li + 1) * d];
+            let ms: f32 = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let ri = 1.0 / (ms + RMS_EPS).sqrt();
+            rc[li] = ri;
+            let yr = &mut yc[li * d..(li + 1) * d];
+            for j in 0..d {
+                yr[j] = xr[j] * ri * g[j];
+            }
         }
-    }
+    });
     (y, r)
 }
 
 /// Backward of rmsnorm_fwd. Returns (dx, dg).
+///
+/// dx rows are independent; dγ is a cross-row reduction, so rows are
+/// grouped into FIXED `REDUCE_ROWS` blocks whose partial dγ sums are
+/// combined in block order — the grouping depends only on the row count,
+/// never the thread count, keeping the result bitwise thread-invariant.
 fn rmsnorm_bwd(dy: &Tensor, x: &Tensor, g: &[f32], r: &[f32]) -> (Tensor, Vec<f32>) {
     let d = x.cols();
     let rows = x.rows();
+    let nblocks = rows.div_ceil(REDUCE_ROWS).max(1);
+    let block = |bi: usize| -> (Vec<f32>, Vec<f32>) {
+        let i0 = bi * REDUCE_ROWS;
+        let i1 = ((bi + 1) * REDUCE_ROWS).min(rows);
+        let mut dxb = vec![0.0f32; (i1 - i0) * d];
+        let mut dgb = vec![0.0f32; d];
+        for li in 0..(i1 - i0) {
+            let i = i0 + li;
+            let xr = &x.data[i * d..(i + 1) * d];
+            let dyr = &dy.data[i * d..(i + 1) * d];
+            let ri = r[i];
+            let mut s = 0.0f32; // sum_j dy_j * g_j * x_j
+            for j in 0..d {
+                s += dyr[j] * g[j] * xr[j];
+                dgb[j] += dyr[j] * xr[j] * ri;
+            }
+            let k = ri * ri * ri * s / d as f32;
+            let dxr = &mut dxb[li * d..(li + 1) * d];
+            for j in 0..d {
+                dxr[j] = dyr[j] * g[j] * ri - xr[j] * k;
+            }
+        }
+        (dxb, dgb)
+    };
+    let parts: Vec<(Vec<f32>, Vec<f32>)> = if x.numel() < util::par_min_elems() {
+        (0..nblocks).map(block).collect()
+    } else {
+        gemm::parallel_map(nblocks, block)
+    };
     let mut dx = Tensor::zeros(&[rows, d]);
     let mut dg = vec![0.0f32; d];
-    for i in 0..rows {
-        let xr = &x.data[i * d..(i + 1) * d];
-        let dyr = &dy.data[i * d..(i + 1) * d];
-        let ri = r[i];
-        let mut s = 0.0f32; // sum_j dy_j * g_j * x_j
-        for j in 0..d {
-            s += dyr[j] * g[j] * xr[j];
-            dg[j] += dyr[j] * xr[j] * ri;
-        }
-        let k = ri * ri * ri * s / d as f32;
-        let dxr = &mut dx.data[i * d..(i + 1) * d];
-        for j in 0..d {
-            dxr[j] = dyr[j] * g[j] * ri - xr[j] * k;
+    let mut off = 0;
+    for (dxb, dgb) in parts {
+        dx.data[off..off + dxb.len()].copy_from_slice(&dxb);
+        off += dxb.len();
+        for (a, b) in dg.iter_mut().zip(&dgb) {
+            *a += b;
         }
     }
     (dx, dg)
+}
+
+/// Row-wise softmax VJP: ds[i] = p[i] ⊙ (dp[i] - ⟨dp[i], p[i]⟩).
+///
+/// A fully-masked attention row has p ≡ 0 (`softmax_rows` maps all-(-inf)
+/// rows to zeros rather than NaN); here that propagates an exactly-zero
+/// gradient row — consistent "no probability mass, no gradient" semantics,
+/// pinned by `softmax_bwd_zero_row_gives_zero_grad` below.
+fn softmax_rows_bwd(p: &Tensor, dp: &Tensor) -> Tensor {
+    let (m, n) = (p.rows(), p.cols());
+    debug_assert_eq!(dp.shape, p.shape);
+    let mut ds = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let pr = &p.data[i * n..(i + 1) * n];
+        let dpr = &dp.data[i * n..(i + 1) * n];
+        let mut dot = 0.0f32;
+        for j in 0..n {
+            dot += dpr[j] * pr[j];
+        }
+        let dsr = &mut ds.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            dsr[j] = pr[j] * (dpr[j] - dot);
+        }
+    }
+    ds
 }
 
 /// cos/sin rope tables: [t, dh/2] flattened row-major.
@@ -756,31 +827,36 @@ fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
 }
 
 /// Apply rotary embedding in place on [B*T, H*Dh] (backward = inverse
-/// rotation, since the rotation matrix is orthogonal).
+/// rotation, since the rotation matrix is orthogonal). Rows are independent
+/// pure rotations, so the sweep row-partitions across threads.
 fn rope_apply(x: &mut Tensor, t: usize, h: usize, dh: usize, cos: &[f32], sin: &[f32], backward: bool) {
     let half = dh / 2;
     let d = h * dh;
     debug_assert_eq!(x.cols(), d);
-    for row in 0..x.rows() {
-        let ti = row % t;
-        let tab = ti * half;
-        let xr = &mut x.data[row * d..(row + 1) * d];
-        for hi in 0..h {
-            let base = hi * dh;
-            for j in 0..half {
-                let (c, s) = (cos[tab + j], sin[tab + j]);
-                let x1 = xr[base + j];
-                let x2 = xr[base + half + j];
-                if backward {
-                    xr[base + j] = x1 * c + x2 * s;
-                    xr[base + half + j] = -x1 * s + x2 * c;
-                } else {
-                    xr[base + j] = x1 * c - x2 * s;
-                    xr[base + half + j] = x1 * s + x2 * c;
+    let rows = x.rows();
+    let threads = if x.numel() < util::par_min_elems() { 1 } else { util::num_threads() };
+    gemm::par_rows(&mut x.data, rows, d, threads, |i0, i1, chunk| {
+        for li in 0..(i1 - i0) {
+            let ti = (i0 + li) % t;
+            let tab = ti * half;
+            let xr = &mut chunk[li * d..(li + 1) * d];
+            for hi in 0..h {
+                let base = hi * dh;
+                for j in 0..half {
+                    let (c, s) = (cos[tab + j], sin[tab + j]);
+                    let x1 = xr[base + j];
+                    let x2 = xr[base + half + j];
+                    if backward {
+                        xr[base + j] = x1 * c + x2 * s;
+                        xr[base + half + j] = -x1 * s + x2 * c;
+                    } else {
+                        xr[base + j] = x1 * c - x2 * s;
+                        xr[base + half + j] = x1 * s + x2 * c;
+                    }
                 }
             }
         }
-    }
+    });
 }
 
 /// Copy one attention head's [t, dh] block out of an [B*T, H*Dh] tensor.
@@ -857,6 +933,70 @@ mod tests {
             let fd = (f(&x, &gp) - f(&x, &gm)) / (2.0 * eps as f64);
             let an = dg[j] as f64;
             assert!((fd - an).abs() < 1e-2 * fd.abs().max(1.0), "dg[{j}]: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn softmax_bwd_zero_row_gives_zero_grad() {
+        // a fully-masked (all -inf) attention scores row softmaxes to zeros;
+        // its backward must be exactly zero — never NaN
+        let t = 4;
+        let mut s = Tensor::zeros(&[t, t]);
+        for i in 0..t {
+            for j in 0..t {
+                s.data[i * t + j] = if i == 0 || j > i {
+                    f32::NEG_INFINITY
+                } else {
+                    (i * t + j) as f32 * 0.1
+                };
+            }
+        }
+        s.softmax_rows();
+        assert!(s.data[..t].iter().all(|&p| p == 0.0), "masked row must be zeros");
+        assert!(s.data.iter().all(|p| p.is_finite()));
+        let mut dp = Tensor::zeros(&[t, t]);
+        for (i, x) in dp.data.iter_mut().enumerate() {
+            *x = (i as f32) * 0.3 - 1.0;
+        }
+        let ds = softmax_rows_bwd(&s, &dp);
+        assert!(ds.data.iter().all(|x| x.is_finite()), "softmax bwd produced NaN/inf");
+        assert!(
+            ds.data[..t].iter().all(|&x| x == 0.0),
+            "zero-probability row must propagate exactly zero gradient"
+        );
+        // live rows: softmax VJP is mean-free under p (Σ_j ds_j = 0)
+        for i in 1..t {
+            let sum: f32 = ds.data[i * t..(i + 1) * t].iter().sum();
+            assert!(sum.abs() < 1e-5, "row {i} ds sum {sum}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_block_reduction_matches_serial_reference() {
+        let mut rng = Pcg64::new(31);
+        let rows = 3 * REDUCE_ROWS + 7; // dγ partials cross several fixed blocks
+        let d = 5;
+        let x = rand_tensor(&[rows, d], &mut rng);
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 1.0);
+        let (y, r) = rmsnorm_fwd(&x, &g);
+        let dy = y.clone();
+        let (dx, dg) = rmsnorm_bwd(&dy, &x, &g, &r);
+        assert_eq!(dx.rows(), rows);
+        // f64 serial reference for the dγ reduction
+        let mut want = vec![0.0f64; d];
+        for i in 0..rows {
+            for j in 0..d {
+                want[j] += dy.data[i * d + j] as f64 * x.data[i * d + j] as f64 * r[i] as f64;
+            }
+        }
+        for j in 0..d {
+            assert!(
+                (dg[j] as f64 - want[j]).abs() < 1e-3 * (1.0 + want[j].abs()),
+                "dg[{j}]: {} vs {}",
+                dg[j],
+                want[j]
+            );
         }
     }
 

@@ -5,16 +5,26 @@
 //! persistent parameter literals (built once, refreshed in place only for
 //! layers the strategy touched — the first hot-path optimization recorded in
 //! EXPERIMENTS.md §Perf), the input marshaling, and the output untupling.
+//!
+//! The runtime itself is PROCESS-SHARED (`runtime::open_shared`): backends
+//! are constructed per run, but every backend pointing at the same
+//! artifacts dir reuses one `Runtime` and therefore one compiled-executable
+//! cache — the experiment harnesses no longer recompile identical HLO on
+//! every run. Perf counters are tracked per backend at the execute call
+//! site, so concurrent backends on one shared runtime never cross-attribute
+//! each other's executions.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::{EvalOut, Targets};
 use crate::config::TrainConfig;
 use crate::model::ParamStore;
-use crate::runtime::{copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime};
+use crate::runtime::{self, copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime};
 
 pub struct PjrtBackend {
-    rt: Runtime,
+    rt: Arc<Mutex<Runtime>>,
     train_art: ArtifactInfo,
     eval_art: ArtifactInfo,
     /// persistent parameter literals; built lazily from the store on first
@@ -23,46 +33,63 @@ pub struct PjrtBackend {
     dirty: Vec<bool>,
     /// [param upload, execute, grad download] cumulative seconds
     phase: [f64; 3],
+    /// THIS backend's execute time/count (the shared runtime's counters
+    /// aggregate across every backend on it, so they cannot be used here)
+    exec_secs: f64,
+    exec_calls: u64,
 }
 
 impl PjrtBackend {
     /// Resolve the train/eval artifacts for a config from the default
-    /// artifacts directory. Fails cleanly when artifacts are absent or the
-    /// PJRT client cannot start (e.g. the vendored xla stub) — `auto`
-    /// backend selection falls back to native in that case.
+    /// artifacts directory, sharing the process-wide runtime (and its
+    /// compiled-executable cache). Fails cleanly when artifacts are absent
+    /// or the PJRT client cannot start (e.g. the vendored xla stub) —
+    /// `auto` backend selection falls back to native in that case.
     pub fn open(cfg: &TrainConfig, head: &str, n_out: usize) -> Result<PjrtBackend> {
-        let rt = Runtime::open_default()?;
-        Self::with_runtime(rt, cfg, head, n_out)
+        let rt = runtime::open_default_shared()?;
+        Self::with_shared(rt, cfg, head, n_out)
     }
 
+    /// Wrap an exclusively-owned runtime (tests construct these directly).
     pub fn with_runtime(
         rt: Runtime,
         cfg: &TrainConfig,
         head: &str,
         n_out: usize,
     ) -> Result<PjrtBackend> {
-        let find = |phase: &str| -> Result<ArtifactInfo> {
-            rt.manifest
-                .artifacts
-                .values()
-                .find(|a| {
-                    a.preset == cfg.preset
-                        && a.head == head
-                        && a.kind.ends_with(phase)
-                        && a.pallas == cfg.use_pallas_artifact
-                        && (head == "lm" || a.n_out == n_out.max(1))
-                })
-                .cloned()
-                .ok_or_else(|| {
-                    anyhow!(
-                        "no artifact preset={} head={head} n_out={n_out} phase={phase} pallas={} — run `make artifacts`",
-                        cfg.preset,
-                        cfg.use_pallas_artifact
-                    )
-                })
+        Self::with_shared(Arc::new(Mutex::new(rt)), cfg, head, n_out)
+    }
+
+    pub fn with_shared(
+        rt: Arc<Mutex<Runtime>>,
+        cfg: &TrainConfig,
+        head: &str,
+        n_out: usize,
+    ) -> Result<PjrtBackend> {
+        let (train_art, eval_art) = {
+            let g = rt.lock().expect("runtime lock");
+            let find = |phase: &str| -> Result<ArtifactInfo> {
+                g.manifest
+                    .artifacts
+                    .values()
+                    .find(|a| {
+                        a.preset == cfg.preset
+                            && a.head == head
+                            && a.kind.ends_with(phase)
+                            && a.pallas == cfg.use_pallas_artifact
+                            && (head == "lm" || a.n_out == n_out.max(1))
+                    })
+                    .cloned()
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no artifact preset={} head={head} n_out={n_out} phase={phase} pallas={} — run `make artifacts`",
+                            cfg.preset,
+                            cfg.use_pallas_artifact
+                        )
+                    })
+            };
+            (find("train")?, find("eval")?)
         };
-        let train_art = find("train")?;
-        let eval_art = find("eval")?;
         // the trainer generates both train and eval batches at one shape
         // (Backend::batch_shape); reject manifests where the pair disagrees
         // rather than marshaling wrongly-shaped eval literals later
@@ -86,6 +113,8 @@ impl PjrtBackend {
             param_lits: None,
             dirty: vec![false; n_tensors],
             phase: [0.0; 3],
+            exec_secs: 0.0,
+            exec_calls: 0,
         })
     }
 
@@ -131,8 +160,11 @@ impl PjrtBackend {
         inputs.push(tok_lit);
         inputs.push(tgt_lit);
         let t0 = std::time::Instant::now();
-        let outs = self.rt.execute(art_id, &inputs)?;
-        self.phase[1] += t0.elapsed().as_secs_f64();
+        let outs = self.rt.lock().expect("runtime lock").execute(art_id, &inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.phase[1] += dt;
+        self.exec_secs += dt;
+        self.exec_calls += 1;
         Ok(outs)
     }
 }
@@ -213,11 +245,11 @@ impl super::Backend for PjrtBackend {
     }
 
     fn exec_secs(&self) -> f64 {
-        self.rt.exec_secs
+        self.exec_secs
     }
 
     fn exec_calls(&self) -> u64 {
-        self.rt.exec_calls
+        self.exec_calls
     }
 
     fn phase_secs(&self) -> [f64; 3] {

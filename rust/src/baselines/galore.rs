@@ -107,8 +107,7 @@ fn dense_adam_update(
     let b2 = h.beta2 as f32;
     let eps = h.eps as f32;
     let lr = lr as f32;
-    let bc1 = 1.0 - b1.powi(step as i32);
-    let bc2 = 1.0 - b2.powi(step as i32);
+    let (bc1, bc2) = crate::optim::masked_adam::bias_corrections(h, step);
     for i in 0..w.len() {
         m[i] = b1 * m[i] + (1.0 - b1) * g[i];
         v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
@@ -167,8 +166,8 @@ impl Strategy for GaLore {
             let b1 = self.hypers.beta1 as f32;
             let b2 = self.hypers.beta2 as f32;
             let eps = self.hypers.eps as f32;
-            let bc1 = 1.0 - b1.powi(self.step as i32);
-            let bc2 = 1.0 - b2.powi(self.step as i32);
+            let (bc1, bc2) =
+                crate::optim::masked_adam::bias_corrections(&self.hypers, self.step);
             let mut dir = vec![0.0f32; lowg.numel()];
             for i in 0..lowg.numel() {
                 let gi = lowg.data[i];

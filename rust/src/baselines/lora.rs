@@ -104,8 +104,7 @@ fn adam_inplace(
     let b1 = h.beta1 as f32;
     let b2 = h.beta2 as f32;
     let eps = h.eps as f32;
-    let bc1 = 1.0 - b1.powi(step as i32);
-    let bc2 = 1.0 - b2.powi(step as i32);
+    let (bc1, bc2) = crate::optim::masked_adam::bias_corrections(h, step);
     for i in 0..w.len() {
         m[i] = b1 * m[i] + (1.0 - b1) * g[i];
         v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];

@@ -101,8 +101,9 @@ impl BlockLlmStrategy {
     /// ||G̃|| over the masked coordinates of a just-updated layer — the
     /// paper's processed-gradient norm, free to compute from (m, v).
     fn processed_norm(&self, st: &LayerState, step: u64) -> f64 {
-        let bc1 = 1.0 - self.hypers.beta1.powi(step as i32);
-        let bc2 = 1.0 - self.hypers.beta2.powi(step as i32);
+        // shared f64 helper: the old f32/powi form drifted at large step
+        // counts and `step as i32` wrapped past i32::MAX
+        let (bc1, bc2) = crate::optim::masked_adam::bias_corrections_f64(&self.hypers, step);
         let eps = self.hypers.eps;
         let mut sq = 0.0f64;
         let mut cnt = 0usize;

@@ -80,8 +80,13 @@ Any TrainConfig key can be overridden with --key value (see config/mod.rs).
 (`make artifacts`), `native` runs the pure-Rust model engine, and `auto`
 (default) prefers pjrt when artifacts exist, falling back to native.
 --threads N (or the PALLAS_NUM_THREADS env var) pins the worker count of the
-native engine's blocked GEMM kernels; default is all cores. The kernels are
-bit-for-bit deterministic at any setting, so this is purely a speed knob.
+native engine's GEMM kernels and rowwise sweeps; default is all cores.
+--pack-min N (or PALLAS_PACK_MIN) sets the minimum m*n*k before a GEMM runs
+through the packed-panel SIMD microkernel instead of the direct kernels
+(0 = always pack; default 32768). --par-min N (or PALLAS_PAR_MIN) sets the
+minimum work size before kernels go multi-threaded (0 = always parallel).
+All three are pure throughput knobs: the packed and direct paths agree bit
+for bit and every kernel is deterministic at any thread count.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

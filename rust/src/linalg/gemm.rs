@@ -1,5 +1,5 @@
-//! Cache-blocked, multi-threaded GEMM kernel family — the native engine's
-//! compute substrate.
+//! Packed-panel, register-tiled, multi-threaded GEMM kernel family — the
+//! native engine's compute substrate.
 //!
 //! Three layouts cover every matmul in the model and its backward pass (all
 //! matrices row-major f32, remainders of any size handled):
@@ -7,32 +7,56 @@
 //!   * `tn`: C = Aᵀ·B  (A [k,m], B [k,n]) — weight gradients
 //!   * `nt`: C = A·Bᵀ  (A [m,k], B [n,k]) — activation gradients
 //! each with an accumulating variant (C += …) so the backward pass fuses its
-//! reductions instead of materializing temporaries, plus fused epilogues for
-//! the head (row-broadcast bias) and SwiGLU (SiLU·mul forward + VJP).
+//! reductions instead of materializing temporaries, plus a fused
+//! row-broadcast-bias epilogue for the cls/reg head and the SiLU·mul
+//! elementwise pair for SwiGLU.
+//!
+//! ## Two execution paths, one summation contract
+//!
+//! Above `util::pack_min_mnk()` (m·n·k, `PALLAS_PACK_MIN`) B is packed ONCE
+//! per call into cache-resident column panels of `NR` lanes (shared,
+//! read-only, reused by every row block and every thread), and a 4×NR
+//! register-tiled microkernel streams A over each panel. The accumulator
+//! tile is a plain `[[f32; NR]; 4]` lane array — rustc/LLVM lower the fixed
+//! NR-wide inner loops to SIMD on any target (an explicit `std::simd` or
+//! intrinsics microkernel can slot in behind a feature flag later without
+//! changing the contract). Below the threshold the direct blocked kernels
+//! run (packing would cost more than it saves).
+//!
+//! Both paths implement the SAME per-element summation contract:
+//!
+//! > acc starts from C's prior value (0 when overwriting); the k products
+//! > are added ONE AT A TIME in strictly ascending k order (no pairwise
+//! > regrouping, no fused mul-add — rustc does not contract float ops);
+//! > the bias epilogue, when present, is added once at the very end.
+//!
+//! so the packed and direct paths agree BIT FOR BIT (pinned by a property
+//! test below), and the path choice — a pure throughput knob — can never
+//! change a result.
 //!
 //! Parallelism: output rows are split into contiguous per-thread chunks run
 //! under `std::thread::scope`. Each output element is owned by exactly one
-//! thread and accumulated in a fixed k-order (the kb/jb/unroll grid is a
-//! compile-time constant), so results are bit-for-bit identical at ANY
-//! thread count — the property the golden pins, grad checks and
-//! thread-invariance tests rely on. The worker count comes from
-//! `util::num_threads()` (`PALLAS_NUM_THREADS`, parsed once) unless a
-//! caller pins it explicitly (per-head attention work runs its inner GEMMs
-//! at 1 thread to avoid oversubscription).
+//! thread and its summation order is fixed by the contract above, so results
+//! are bit-for-bit identical at ANY thread count — the property the golden
+//! pins, grad checks and thread-invariance tests rely on. The worker count
+//! comes from `util::num_threads()` (`PALLAS_NUM_THREADS`, parsed once)
+//! unless a caller pins it explicitly (per-head attention work runs its
+//! inner GEMMs at a reduced count to avoid oversubscription).
 
 use crate::tensor::Tensor;
 use crate::util;
 
-/// Depth (k) blocking: a KB x NB panel of B stays L2-resident while it is
-/// streamed over a chunk's rows. Multiple of the 4-way unroll so unroll
-/// groups never straddle a block boundary (fixed summation order).
+/// Microkernel tile height: rows of C computed per register tile.
+const MR: usize = 4;
+/// Microkernel tile width: C lanes per packed B panel strip. 16 f32 = one
+/// 64-byte line = 2×AVX2 / 1×AVX-512 / 4×NEON vectors.
+pub const NR: usize = 16;
+/// Depth (k) blocking for the DIRECT path: a KB×NB panel of B stays
+/// L2-resident while it is streamed over a chunk's rows. Blocking never
+/// regroups sums — the contract's ascending-k single-add order holds.
 const KB: usize = 128;
-/// Width (j) blocking: C-row segments of NB f32 stay in L1.
+/// Width (j) blocking for the direct path: C-row segments of NB f32 in L1.
 const NB: usize = 256;
-/// Below this m*n*k, thread-spawn cost outweighs the parallel win.
-const PAR_MNK: usize = 64 * 1024;
-/// Below this element count, elementwise kernels stay single-threaded.
-const PAR_ELEMS: usize = 1 << 15;
 
 /// Anything readable as a row-major 2-D f32 matrix (rank-1 = a single row,
 /// matching `Tensor::rows`). Lets the kernels consume owned activations and
@@ -60,7 +84,7 @@ fn split_rows(m: usize, threads: usize) -> Vec<(usize, usize)> {
 /// Run `body(i0, i1, c_rows)` over disjoint row chunks of `c` in parallel.
 /// Chunk boundaries depend only on (m, threads); each chunk's work is
 /// self-contained, so any thread count computes identical bits.
-fn par_rows<F>(c: &mut [f32], m: usize, n: usize, threads: usize, body: F)
+pub(crate) fn par_rows<F>(c: &mut [f32], m: usize, n: usize, threads: usize, body: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
@@ -90,8 +114,197 @@ where
     });
 }
 
+/// Two-output variant of [`par_rows`]: splits `a` (rows of width `na`) and
+/// `b` (rows of width `nb`) by the SAME row chunks — the rowwise sweeps
+/// that produce a pair (rmsnorm's (y, 1/rms), SiLU·mul's (dg, du)) write
+/// both outputs in one parallel pass with no stitching copies.
+pub(crate) fn par_rows2<F>(
+    a: &mut [f32],
+    b: &mut [f32],
+    m: usize,
+    na: usize,
+    nb: usize,
+    threads: usize,
+    body: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(a.len(), m * na);
+    debug_assert_eq!(b.len(), m * nb);
+    let chunks = split_rows(m, threads);
+    if chunks.len() == 1 {
+        body(0, m, a, b);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut ra = a;
+        let mut rb = b;
+        let mut first: Option<(usize, usize, &mut [f32], &mut [f32])> = None;
+        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
+            let (ha, ta) = std::mem::take(&mut ra).split_at_mut((i1 - i0) * na);
+            let (hb, tb) = std::mem::take(&mut rb).split_at_mut((i1 - i0) * nb);
+            ra = ta;
+            rb = tb;
+            if ci == 0 {
+                first = Some((i0, i1, ha, hb));
+            } else {
+                let f = &body;
+                s.spawn(move || f(i0, i1, ha, hb));
+            }
+        }
+        if let Some((i0, i1, ha, hb)) = first {
+            body(i0, i1, ha, hb);
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
-// serial chunk kernels (fixed summation order per output element)
+// packed path: B panels + register-tiled microkernel
+// ---------------------------------------------------------------------------
+
+/// B packed into column-panel strips: strip `s` holds columns
+/// `[s*NR, s*NR + NR)` as `k` consecutive NR-wide lanes (zero-padded past
+/// `n`), so the microkernel's B loads are perfectly sequential. Packed once
+/// per GEMM call and shared read-only across all row chunks and threads.
+struct PackedB {
+    k: usize,
+    data: Vec<f32>,
+}
+
+/// Pack B [k, n] row-major (the `nn`/`tn` operand).
+fn pack_b_nn(b: &[f32], k: usize, n: usize) -> PackedB {
+    let strips = n.div_ceil(NR);
+    let mut data = vec![0.0f32; strips * k * NR];
+    for s in 0..strips {
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let base = s * k * NR;
+        for kk in 0..k {
+            data[base + kk * NR..base + kk * NR + w]
+                .copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+    PackedB { k, data }
+}
+
+/// Pack B [n, k] row-major as the transposed operand of `nt` (effective
+/// B'[kk, j] = B[j, kk]); reads each B row once, contiguously.
+fn pack_b_nt(b: &[f32], n: usize, k: usize) -> PackedB {
+    let strips = n.div_ceil(NR);
+    let mut data = vec![0.0f32; strips * k * NR];
+    for s in 0..strips {
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let base = s * k * NR;
+        for jr in 0..w {
+            let brow = &b[(j0 + jr) * k..(j0 + jr + 1) * k];
+            for (kk, &bv) in brow.iter().enumerate() {
+                data[base + kk * NR + jr] = bv;
+            }
+        }
+    }
+    PackedB { k, data }
+}
+
+/// The register-tiled microkernel: an R×NR accumulator tile swept over one
+/// packed strip's full k range. A's element (row, kk) lives at
+/// `a[row*ars + kk*aks]` (`nn`/`nt`: ars=k, aks=1; `tn`: ars=1, aks=m), so
+/// one kernel serves every layout. The fixed-size lane loops lower to SIMD;
+/// each of the R×NR accumulators follows the ascending-k single-add
+/// contract, so grouping rows into tiles never changes bits.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_tile<const R: usize>(
+    c: &mut [f32],
+    c0: usize,
+    cs: usize,
+    w: usize,
+    a: &[f32],
+    a0: usize,
+    ars: usize,
+    aks: usize,
+    strip: &[f32],
+    k: usize,
+    acc: bool,
+    bias: Option<(&[f32], usize)>,
+) {
+    let mut t = [[0.0f32; NR]; R];
+    if acc {
+        for r in 0..R {
+            t[r][..w].copy_from_slice(&c[c0 + r * cs..c0 + r * cs + w]);
+        }
+    }
+    for kk in 0..k {
+        let bl = &strip[kk * NR..kk * NR + NR];
+        for r in 0..R {
+            let av = a[a0 + r * ars + kk * aks];
+            let tr = &mut t[r];
+            for j in 0..NR {
+                tr[j] += av * bl[j];
+            }
+        }
+    }
+    match bias {
+        Some((bv, j0)) => {
+            for r in 0..R {
+                let crow = &mut c[c0 + r * cs..c0 + r * cs + w];
+                for j in 0..w {
+                    crow[j] = t[r][j] + bv[j0 + j];
+                }
+            }
+        }
+        None => {
+            for r in 0..R {
+                c[c0 + r * cs..c0 + r * cs + w].copy_from_slice(&t[r][..w]);
+            }
+        }
+    }
+}
+
+/// One thread's row chunk of the packed path: for each strip (kept hot in
+/// cache) sweep the chunk's rows in MR-high tiles. Tile grouping starts at
+/// the chunk base, but per-row accumulation order is identical whatever the
+/// grouping, so chunk boundaries (= thread count) never change bits.
+#[allow(clippy::too_many_arguments)]
+fn packed_chunk(
+    c_rows: &mut [f32],
+    i0: usize,
+    n: usize,
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    pb: &PackedB,
+    acc: bool,
+    bias: Option<&[f32]>,
+) {
+    if n == 0 {
+        return;
+    }
+    let k = pb.k;
+    let rows = c_rows.len() / n;
+    let strips = n.div_ceil(NR);
+    for s in 0..strips {
+        let strip = &pb.data[s * k * NR..(s + 1) * k * NR];
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let b = bias.map(|bv| (bv, j0));
+        let mut li = 0;
+        while li + MR <= rows {
+            micro_tile::<MR>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b);
+            li += MR;
+        }
+        match rows - li {
+            3 => micro_tile::<3>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
+            2 => micro_tile::<2>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
+            1 => micro_tile::<1>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// direct path: serial chunk kernels (same per-element order as the packed
+// path — ascending k, one add per product)
 // ---------------------------------------------------------------------------
 
 /// nn rows [i0, i0+rows): c_rows += A[i0.., :] · B. `a` is the FULL A [m,k].
@@ -106,7 +319,9 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
                 let arow = &a[(i0 + li) * k..(i0 + li) * k + k];
                 let crow = &mut c_rows[li * n + jb..li * n + je];
                 let mut kk = kb;
-                // 4-deep k-unroll: one pass over the C segment per 4 B rows
+                // 4-deep k-unroll: one pass over the C segment per 4 B rows.
+                // Four SEPARATE adds per element keep the contract's
+                // ascending-k single-add order (no pairwise regrouping).
                 while kk + 4 <= ke {
                     let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
                     let b0 = &b[kk * n + jb..kk * n + jb + w];
@@ -114,7 +329,10 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
                     let b2 = &b[(kk + 2) * n + jb..(kk + 2) * n + jb + w];
                     let b3 = &b[(kk + 3) * n + jb..(kk + 3) * n + jb + w];
                     for (j, cv) in crow.iter_mut().enumerate() {
-                        *cv += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                        *cv += a0 * b0[j];
+                        *cv += a1 * b1[j];
+                        *cv += a2 * b2[j];
+                        *cv += a3 * b3[j];
                     }
                     kk += 4;
                 }
@@ -155,7 +373,7 @@ fn tn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, m: us
 
 /// nt rows [i0, i0+rows): c_rows ⊕= A[i0.., :] · Bᵀ for A [m,k], B [n,k].
 /// Four independent dot accumulators per A row amortize the A loads; each
-/// accumulator still sums in pure ascending-k order.
+/// accumulator starts from C's prior value (contract) and sums ascending k.
 fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize, acc: bool) {
     let rows = if n == 0 { 0 } else { c_rows.len() / n };
     for li in 0..rows {
@@ -167,37 +385,30 @@ fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
             let b1 = &b[(j + 1) * k..(j + 2) * k];
             let b2 = &b[(j + 2) * k..(j + 3) * k];
             let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let (mut s0, mut s1, mut s2, mut s3) = if acc {
+                (crow[j], crow[j + 1], crow[j + 2], crow[j + 3])
+            } else {
+                (0.0f32, 0.0f32, 0.0f32, 0.0f32)
+            };
             for (kk, &av) in arow.iter().enumerate() {
                 s0 += av * b0[kk];
                 s1 += av * b1[kk];
                 s2 += av * b2[kk];
                 s3 += av * b3[kk];
             }
-            if acc {
-                crow[j] += s0;
-                crow[j + 1] += s1;
-                crow[j + 2] += s2;
-                crow[j + 3] += s3;
-            } else {
-                crow[j] = s0;
-                crow[j + 1] = s1;
-                crow[j + 2] = s2;
-                crow[j + 3] = s3;
-            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
             j += 4;
         }
         while j < n {
             let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
+            let mut s = if acc { crow[j] } else { 0.0f32 };
             for (&av, &bv) in arow.iter().zip(brow) {
                 s += av * bv;
             }
-            if acc {
-                crow[j] += s;
-            } else {
-                crow[j] = s;
-            }
+            crow[j] = s;
             j += 1;
         }
     }
@@ -208,10 +419,98 @@ fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
 // ---------------------------------------------------------------------------
 
 fn gemm_threads(m: usize, k: usize, n: usize, threads: usize) -> usize {
-    if m * n * k < PAR_MNK {
+    if m.saturating_mul(n).saturating_mul(k) < util::par_min_mnk() {
         1
     } else {
         threads
+    }
+}
+
+/// Packed-path predicate: depends only on the problem shape and the (env /
+/// `set_pack_min`) knob — never on the thread count — so the chosen path is
+/// deterministic per call site. Both paths agree bitwise regardless.
+fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    k > 0 && n > 0 && m.saturating_mul(n).saturating_mul(k) >= util::pack_min_mnk()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_impl(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    let threads = gemm_threads(m, k, n, threads);
+    if packed {
+        let pb = pack_b_nn(b, k, n);
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
+        });
+    } else {
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            if !acc {
+                rows.fill(0.0);
+            }
+            nn_chunk(rows, a, b, i0, k, n);
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_impl(
+    k: usize,
+    m: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    let threads = gemm_threads(m, k, n, threads);
+    if packed {
+        let pb = pack_b_nn(b, k, n);
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            packed_chunk(rows, i0, n, a, 1, m, &pb, acc, None);
+        });
+    } else {
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            if !acc {
+                rows.fill(0.0);
+            }
+            tn_chunk(rows, a, b, i0, k, m, n);
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_impl(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    let threads = gemm_threads(m, k, n, threads);
+    if packed {
+        let pb = pack_b_nt(b, n, k);
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
+        });
+    } else {
+        par_rows(c, m, n, threads, |i0, _i1, rows| {
+            nt_chunk(rows, a, b, i0, k, n, acc);
+        });
     }
 }
 
@@ -220,12 +519,7 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     assert_eq!(a.len(), m * k, "gemm_nn: a len");
     assert_eq!(b.len(), k * n, "gemm_nn: b len");
     assert_eq!(c.len(), m * n, "gemm_nn: c len");
-    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
-        if !acc {
-            rows.fill(0.0);
-        }
-        nn_chunk(rows, a, b, i0, k, n);
-    });
+    gemm_nn_impl(m, k, n, a, b, c, acc, threads, use_packed(m, k, n));
 }
 
 /// c ⊕= Aᵀ·B for A [k,m], B [k,n].
@@ -233,12 +527,7 @@ pub fn gemm_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     assert_eq!(a.len(), k * m, "gemm_tn: a len");
     assert_eq!(b.len(), k * n, "gemm_tn: b len");
     assert_eq!(c.len(), m * n, "gemm_tn: c len");
-    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
-        if !acc {
-            rows.fill(0.0);
-        }
-        tn_chunk(rows, a, b, i0, k, m, n);
-    });
+    gemm_tn_impl(k, m, n, a, b, c, acc, threads, use_packed(m, k, n));
 }
 
 /// c ⊕= A·Bᵀ for A [m,k], B [n,k].
@@ -246,9 +535,7 @@ pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     assert_eq!(a.len(), m * k, "gemm_nt: a len");
     assert_eq!(b.len(), n * k, "gemm_nt: b len");
     assert_eq!(c.len(), m * n, "gemm_nt: c len");
-    par_rows(c, m, n, gemm_threads(m, k, n, threads), |i0, _i1, rows| {
-        nt_chunk(rows, a, b, i0, k, n, acc);
-    });
+    gemm_nt_impl(m, k, n, a, b, c, acc, threads, use_packed(m, k, n));
 }
 
 // ---------------------------------------------------------------------------
@@ -262,11 +549,12 @@ fn dims_nn(a: &dyn Mat, b: &dyn Mat) -> (usize, usize, usize) {
     (m, k, n)
 }
 
-/// C = A·B at an explicit thread count (1 inside already-parallel regions).
+/// C = A·B at an explicit thread count (reduced inside already-parallel
+/// regions).
 pub fn matmul_threads<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, threads: usize) -> Tensor {
     let (m, k, n) = dims_nn(a, b);
     let mut c = Tensor::zeros(&[m, n]);
-    gemm_nn(m, k, n, a.data(), b.data(), &mut c.data, true, threads);
+    gemm_nn(m, k, n, a.data(), b.data(), &mut c.data, false, threads);
     c
 }
 
@@ -281,7 +569,7 @@ pub fn matmul_tn_threads<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, threads
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
     let mut c = Tensor::zeros(&[m, n]);
-    gemm_tn(k, m, n, a.data(), b.data(), &mut c.data, true, threads);
+    gemm_tn(k, m, n, a.data(), b.data(), &mut c.data, false, threads);
     c
 }
 
@@ -323,24 +611,38 @@ pub fn matmul_nt_acc<A: Mat + ?Sized, B: Mat + ?Sized>(c: &mut Tensor, a: &A, b:
     gemm_nt(m, k, n, a.data(), b.data(), &mut c.data, true, util::num_threads());
 }
 
-/// C = A·B + bias (bias broadcast over rows) — the cls/reg head forward,
-/// fused into the same parallel pass as the GEMM.
-pub fn matmul_bias<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, bias: &[f32]) -> Tensor {
+fn matmul_bias_impl(a: &dyn Mat, b: &dyn Mat, bias: &[f32], packed: bool) -> Tensor {
     let (m, k, n) = dims_nn(a, b);
     assert_eq!(bias.len(), n, "matmul_bias: bias len");
     let mut c = Tensor::zeros(&[m, n]);
     let threads = gemm_threads(m, k, n, util::num_threads());
     let (ad, bd) = (a.data(), b.data());
-    par_rows(&mut c.data, m, n, threads, |i0, i1, rows| {
-        nn_chunk(rows, ad, bd, i0, k, n);
-        for li in 0..(i1 - i0) {
-            let crow = &mut rows[li * n..(li + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(bias) {
-                *cv += bv;
+    if packed {
+        let pb = pack_b_nn(bd, k, n);
+        par_rows(&mut c.data, m, n, threads, |i0, _i1, rows| {
+            packed_chunk(rows, i0, n, ad, k, 1, &pb, false, Some(bias));
+        });
+    } else {
+        par_rows(&mut c.data, m, n, threads, |i0, i1, rows| {
+            nn_chunk(rows, ad, bd, i0, k, n);
+            for li in 0..(i1 - i0) {
+                let crow = &mut rows[li * n..(li + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv += bv;
+                }
             }
-        }
-    });
+        });
+    }
     c
+}
+
+/// C = A·B + bias (bias broadcast over rows) — the cls/reg head forward,
+/// fused into the same parallel pass as the GEMM (the packed path adds the
+/// bias in the microkernel's write-back).
+pub fn matmul_bias<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, bias: &[f32]) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    matmul_bias_impl(a, b, bias, use_packed(m, k, n))
 }
 
 // ---------------------------------------------------------------------------
@@ -351,7 +653,7 @@ pub fn matmul_bias<A: Mat + ?Sized, B: Mat + ?Sized>(a: &A, b: &B, bias: &[f32])
 pub fn silu_mul(g: &Tensor, u: &Tensor) -> Tensor {
     assert_eq!(g.shape, u.shape, "silu_mul shape");
     let mut prod = Tensor::zeros(&g.shape);
-    let threads = if g.numel() < PAR_ELEMS { 1 } else { util::num_threads() };
+    let threads = if g.numel() < util::par_min_elems() { 1 } else { util::num_threads() };
     let (gd, ud) = (&g.data, &u.data);
     par_rows(&mut prod.data, g.numel(), 1, threads, |i0, i1, out| {
         for (li, pv) in out.iter_mut().enumerate() {
@@ -365,20 +667,18 @@ pub fn silu_mul(g: &Tensor, u: &Tensor) -> Tensor {
 }
 
 /// VJP of `silu_mul`: given dprod and the cached (g, u), returns (dg, du).
-/// Parallelized as a `parallel_map` over element chunks (one per worker);
-/// each chunk computes its (dg, du) pair independently, so stitching the
-/// in-order results back together is thread-count-invariant.
+/// One parallel rowwise sweep writes both outputs in place (`par_rows2`);
+/// each element's math is self-contained, so the result is
+/// thread-count-invariant.
 pub fn silu_mul_vjp(dprod: &Tensor, g: &Tensor, u: &Tensor) -> (Tensor, Tensor) {
     assert_eq!(dprod.shape, g.shape, "silu_mul_vjp shape");
     assert_eq!(g.shape, u.shape, "silu_mul_vjp shape");
     let nlen = g.numel();
-    let threads = if nlen < PAR_ELEMS { 1 } else { util::num_threads() };
-    let chunks = split_rows(nlen, threads);
+    let threads = if nlen < util::par_min_elems() { 1 } else { util::num_threads() };
+    let mut dg = Tensor::zeros(&g.shape);
+    let mut du = Tensor::zeros(&g.shape);
     let (dpd, gd, ud) = (&dprod.data, &g.data, &u.data);
-    let parts = parallel_map(chunks.len(), |ci| {
-        let (i0, i1) = chunks[ci];
-        let mut dgc = vec![0.0f32; i1 - i0];
-        let mut duc = vec![0.0f32; i1 - i0];
+    par_rows2(&mut dg.data, &mut du.data, nlen, 1, 1, threads, |i0, i1, dgc, duc| {
         for li in 0..(i1 - i0) {
             let gv = gd[i0 + li];
             let sg = 1.0 / (1.0 + (-gv).exp());
@@ -388,24 +688,14 @@ pub fn silu_mul_vjp(dprod: &Tensor, g: &Tensor, u: &Tensor) -> (Tensor, Tensor) 
             // d silu(g)/dg = sg * (1 + g * (1 - sg))
             dgc[li] = dp * ud[i0 + li] * (sg * (1.0 + gv * (1.0 - sg)));
         }
-        (dgc, duc)
     });
-    let mut dg = Vec::with_capacity(nlen);
-    let mut du = Vec::with_capacity(nlen);
-    for (dgc, duc) in parts {
-        dg.extend_from_slice(&dgc);
-        du.extend_from_slice(&duc);
-    }
-    (
-        Tensor { shape: g.shape.clone(), data: dg },
-        Tensor { shape: g.shape.clone(), data: du },
-    )
+    (dg, du)
 }
 
 /// Deterministic parallel map over `0..n`: results in index order. Work item
 /// `i` always computes the same bits regardless of which thread runs it, so
 /// the output is thread-count-invariant. Items should pin their own inner
-/// kernels to 1 thread (`*_threads(.., 1)`) to avoid oversubscription.
+/// kernels to a reduced thread count to avoid oversubscription.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -473,39 +763,84 @@ mod tests {
         }
     }
 
+    fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                t[j * rows + i] = src[i * cols + j];
+            }
+        }
+        t
+    }
+
     #[test]
-    fn all_layouts_match_naive_incl_remainders() {
+    fn all_layouts_match_naive_incl_remainders_on_both_paths() {
         let mut rng = Pcg64::new(1);
-        // dims straddle the KB/NB blocks and the 4-way unroll remainders
+        // dims straddle the NR strips, MR tiles, KB/NB blocks and the 4-way
+        // unroll remainders
         for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (7, 17, 9), (13, 129, 31), (33, 260, 257), (5, 1, 4)] {
             let a = rand_vec(m * k, &mut rng);
             let b = rand_vec(k * n, &mut rng);
             let want = naive_nn(m, k, n, &a, &b);
-            let mut c = vec![0.0f32; m * n];
-            gemm_nn(m, k, n, &a, &b, &mut c, false, 2);
-            assert_close(&c, &want, 1e-4);
+            let at = transpose(&a, m, k); // [k, m]
+            let bt = transpose(&b, k, n); // [n, k]
+            for packed in [false, true] {
+                let mut c = vec![0.0f32; m * n];
+                gemm_nn_impl(m, k, n, &a, &b, &mut c, false, 2, packed);
+                assert_close(&c, &want, 1e-4);
+                let mut c2 = vec![0.0f32; m * n];
+                gemm_tn_impl(k, m, n, &at, &b, &mut c2, false, 3, packed);
+                assert_close(&c2, &want, 1e-4);
+                let mut c3 = vec![0.0f32; m * n];
+                gemm_nt_impl(m, k, n, &a, &bt, &mut c3, false, 2, packed);
+                assert_close(&c3, &want, 1e-4);
+            }
+        }
+    }
 
-            // tn: build At [k x m] column-major of a, i.e. At^T = A
-            let mut at = vec![0.0f32; k * m];
-            for i in 0..m {
-                for kk in 0..k {
-                    at[kk * m + i] = a[i * k + kk];
+    /// The contract that makes the packing threshold a pure throughput knob:
+    /// the packed microkernel and the direct kernels produce IDENTICAL BITS
+    /// for every layout, accumulate mode and thread count, bias included.
+    #[test]
+    fn packed_and_direct_paths_agree_bitwise() {
+        let mut rng = Pcg64::new(0xACED);
+        for trial in 0..40 {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(50);
+            let a = rand_vec(m * k, &mut rng);
+            let b = rand_vec(k * n, &mut rng);
+            let at = transpose(&a, m, k);
+            let bt = transpose(&b, k, n);
+            let init = rand_vec(m * n, &mut rng);
+            let bias = rand_vec(n, &mut rng);
+            for acc in [false, true] {
+                for &threads in &[1usize, 3] {
+                    let mut dir = init.clone();
+                    let mut pac = init.clone();
+                    gemm_nn_impl(m, k, n, &a, &b, &mut dir, acc, threads, false);
+                    gemm_nn_impl(m, k, n, &a, &b, &mut pac, acc, threads, true);
+                    assert_eq!(dir, pac, "nn trial {trial} acc={acc} t={threads}");
+
+                    let mut dir = init.clone();
+                    let mut pac = init.clone();
+                    gemm_tn_impl(k, m, n, &at, &b, &mut dir, acc, threads, false);
+                    gemm_tn_impl(k, m, n, &at, &b, &mut pac, acc, threads, true);
+                    assert_eq!(dir, pac, "tn trial {trial} acc={acc} t={threads}");
+
+                    let mut dir = init.clone();
+                    let mut pac = init.clone();
+                    gemm_nt_impl(m, k, n, &a, &bt, &mut dir, acc, threads, false);
+                    gemm_nt_impl(m, k, n, &a, &bt, &mut pac, acc, threads, true);
+                    assert_eq!(dir, pac, "nt trial {trial} acc={acc} t={threads}");
                 }
             }
-            let mut c2 = vec![0.0f32; m * n];
-            gemm_tn(k, m, n, &at, &b, &mut c2, false, 3);
-            assert_close(&c2, &want, 1e-4);
-
-            // nt: Bt [n x k] with Bt^T = B
-            let mut bt = vec![0.0f32; n * k];
-            for kk in 0..k {
-                for j in 0..n {
-                    bt[j * k + kk] = b[kk * n + j];
-                }
-            }
-            let mut c3 = vec![0.0f32; m * n];
-            gemm_nt(m, k, n, &a, &bt, &mut c3, false, 2);
-            assert_close(&c3, &want, 1e-4);
+            // fused bias epilogue (always overwriting)
+            let av = Tensor::from_vec(&[m, k], a.clone()).unwrap();
+            let bv = Tensor::from_vec(&[k, n], b.clone()).unwrap();
+            let dir = matmul_bias_impl(&av, &bv, &bias, false);
+            let pac = matmul_bias_impl(&av, &bv, &bias, true);
+            assert_eq!(dir.data, pac.data, "bias trial {trial}");
         }
     }
 
@@ -515,26 +850,20 @@ mod tests {
         let (m, k, n) = (37, 141, 53);
         let a = rand_vec(m * k, &mut rng);
         let b = rand_vec(k * n, &mut rng);
-        let bt: Vec<f32> = {
-            let mut t = vec![0.0f32; n * k];
-            for kk in 0..k {
-                for j in 0..n {
-                    t[j * k + kk] = b[kk * n + j];
-                }
+        let bt = transpose(&b, k, n);
+        for packed in [false, true] {
+            let mut base_nn = vec![0.0f32; m * n];
+            let mut base_nt = vec![0.0f32; m * n];
+            gemm_nn_impl(m, k, n, &a, &b, &mut base_nn, false, 1, packed);
+            gemm_nt_impl(m, k, n, &a, &bt, &mut base_nt, false, 1, packed);
+            for threads in [2, 3, 4, 7, 64] {
+                let mut c = vec![0.0f32; m * n];
+                gemm_nn_impl(m, k, n, &a, &b, &mut c, false, threads, packed);
+                assert_eq!(c, base_nn, "nn differs at {threads} threads (packed={packed})");
+                let mut c2 = vec![0.0f32; m * n];
+                gemm_nt_impl(m, k, n, &a, &bt, &mut c2, false, threads, packed);
+                assert_eq!(c2, base_nt, "nt differs at {threads} threads (packed={packed})");
             }
-            t
-        };
-        let mut base_nn = vec![0.0f32; m * n];
-        let mut base_nt = vec![0.0f32; m * n];
-        gemm_nn(m, k, n, &a, &b, &mut base_nn, false, 1);
-        gemm_nt(m, k, n, &a, &bt, &mut base_nt, false, 1);
-        for threads in [2, 3, 4, 7, 64] {
-            let mut c = vec![0.0f32; m * n];
-            gemm_nn(m, k, n, &a, &b, &mut c, false, threads);
-            assert_eq!(c, base_nn, "nn differs at {threads} threads");
-            let mut c2 = vec![0.0f32; m * n];
-            gemm_nt(m, k, n, &a, &bt, &mut c2, false, threads);
-            assert_eq!(c2, base_nt, "nt differs at {threads} threads");
         }
     }
 
@@ -545,10 +874,12 @@ mod tests {
         let a = rand_vec(m * k, &mut rng);
         let b = rand_vec(k * n, &mut rng);
         let want = naive_nn(m, k, n, &a, &b);
-        let mut c = vec![1.0f32; m * n];
-        gemm_nn(m, k, n, &a, &b, &mut c, true, 2);
         let shifted: Vec<f32> = want.iter().map(|w| w + 1.0).collect();
-        assert_close(&c, &shifted, 1e-4);
+        for packed in [false, true] {
+            let mut c = vec![1.0f32; m * n];
+            gemm_nn_impl(m, k, n, &a, &b, &mut c, true, 2, packed);
+            assert_close(&c, &shifted, 1e-4);
+        }
     }
 
     #[test]
@@ -609,5 +940,27 @@ mod tests {
             assert_eq!(*v, i * i);
         }
         assert!(parallel_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_rows2_splits_both_outputs_by_the_same_rows() {
+        let m = 103;
+        let (na, nb) = (3, 1);
+        let mut a = vec![0.0f32; m * na];
+        let mut b = vec![0.0f32; m * nb];
+        par_rows2(&mut a, &mut b, m, na, nb, 4, |i0, i1, ac, bc| {
+            for li in 0..(i1 - i0) {
+                for j in 0..na {
+                    ac[li * na + j] = (i0 + li) as f32 + j as f32 / 10.0;
+                }
+                bc[li] = (i0 + li) as f32;
+            }
+        });
+        for i in 0..m {
+            assert_eq!(b[i], i as f32);
+            for j in 0..na {
+                assert_eq!(a[i * na + j], i as f32 + j as f32 / 10.0);
+            }
+        }
     }
 }

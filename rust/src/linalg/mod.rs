@@ -1,7 +1,8 @@
-//! Numerical linear algebra substrate: the blocked multi-threaded GEMM
-//! kernel layer (`gemm`) that the tensor matmul family and the native
-//! backend's hot paths run on, plus the randomized range finder the GaLore
-//! baseline uses.
+//! Numerical linear algebra substrate: the packed-panel, register-tiled,
+//! multi-threaded GEMM kernel layer (`gemm`) that the tensor matmul family
+//! and the native backend's hot paths run on — see gemm's module docs for
+//! the two execution paths and the bitwise summation contract — plus the
+//! randomized range finder the GaLore baseline uses.
 //!
 //! GaLore (Zhao et al., 2024) projects each 2-D gradient G [m,n] onto a
 //! rank-r subspace: with m <= n it uses the top-r left singular vectors P

@@ -25,6 +25,14 @@ fn run() -> Result<()> {
         let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--threads wants a number, got {v:?}"))?;
         blockllm::util::set_num_threads(n);
     }
+    if let Some(v) = args.get("pack-min") {
+        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--pack-min wants a number, got {v:?}"))?;
+        blockllm::util::set_pack_min(n);
+    }
+    if let Some(v) = args.get("par-min") {
+        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--par-min wants a number, got {v:?}"))?;
+        blockllm::util::set_par_min(n);
+    }
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
@@ -41,8 +49,8 @@ fn run() -> Result<()> {
 fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     for (k, v) in &args.kv {
-        // non-config keys: checkpoint paths, experiment id, kernel threads
-        if k == "ckpt" || k == "save" || k == "id" || k == "threads" {
+        // non-config keys: checkpoint paths, experiment id, kernel knobs
+        if k == "ckpt" || k == "save" || k == "id" || k == "threads" || k == "pack-min" || k == "par-min" {
             continue;
         }
         cfg.set(k, v)?;

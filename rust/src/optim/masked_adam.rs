@@ -171,6 +171,24 @@ impl SparseAdamState {
     }
 }
 
+/// Adam bias corrections 1 - βᵗ, computed in f64 and cast to f32 ONCE.
+///
+/// The former f32 `powi(step as i32)` had two failure modes: f32
+/// accumulation drifts from the dense f64 Adam reference at large step
+/// counts, and `step as i32` wraps past `i32::MAX` (flipping the exponent
+/// sign). `DenseAdam` and the masked step share this helper so the
+/// sparse-vs-dense parity holds at every step count.
+pub fn bias_corrections(h: &AdamHypers, step: u64) -> (f32, f32) {
+    let (bc1, bc2) = bias_corrections_f64(h, step);
+    (bc1 as f32, bc2 as f32)
+}
+
+/// Full-precision variant for consumers that stay in f64 (the BlockLLM
+/// strategy's processed-gradient norms).
+pub fn bias_corrections_f64(h: &AdamHypers, step: u64) -> (f64, f64) {
+    (1.0 - h.beta1.powf(step as f64), 1.0 - h.beta2.powf(step as f64))
+}
+
 /// One masked Adam step for a single layer. Returns the number of
 /// coordinates updated.
 pub fn masked_adam_step(
@@ -188,8 +206,7 @@ pub fn masked_adam_step(
     let eps = h.eps as f32;
     let wd = h.weight_decay as f32;
     let lr = lr as f32;
-    let bc1 = 1.0 - (h.beta1 as f32).powi(step as i32);
-    let bc2 = 1.0 - (h.beta2 as f32).powi(step as i32);
+    let (bc1, bc2) = bias_corrections(h, step);
     let mut updated = 0usize;
 
     // word-at-a-time: skip 64 coordinates per zero word (cheap at high
@@ -292,6 +309,59 @@ mod tests {
         }
         for i in 0..n {
             assert!((w[i] - w2[0][i]).abs() < 1e-6, "coord {i}: {} vs {}", w[i], w2[0][i]);
+        }
+    }
+
+    #[test]
+    fn bias_corrections_are_exact_at_large_steps_and_never_wrap() {
+        let h = AdamHypers::default();
+        // step 1: bc = 1 - beta exactly (up to one f64->f32 rounding)
+        let (bc1, bc2) = bias_corrections(&h, 1);
+        assert!((bc1 as f64 - (1.0 - h.beta1)).abs() < 1e-7);
+        assert!((bc2 as f64 - (1.0 - h.beta2)).abs() < 1e-9);
+        // past i32::MAX the old `step as i32` wrapped negative, flipping the
+        // exponent sign; the f64 path must saturate cleanly to 1.0
+        let big = i32::MAX as u64 + 12_345;
+        let (bc1, bc2) = bias_corrections(&h, big);
+        assert!(bc1 > 0.0 && bc2 > 0.0, "wrapped bias correction went non-positive");
+        assert!((bc1 - 1.0).abs() < 1e-6 && (bc2 - 1.0).abs() < 1e-6);
+        // monotone in step (sanity across the whole range)
+        let mut last = 0.0f32;
+        for step in [1u64, 10, 1_000, 1_000_000, 1 << 40] {
+            let (_, bc2) = bias_corrections(&h, step);
+            assert!(bc2 >= last, "bc2 not monotone at step {step}");
+            last = bc2;
+        }
+    }
+
+    #[test]
+    fn full_mask_matches_dense_adam_in_the_large_step_regime() {
+        // sparse-vs-dense parity where the old f32 powi drifted and the
+        // i32 cast wrapped: both paths share bias_corrections, so the
+        // updates must agree exactly
+        let n = 130;
+        let big = i32::MAX as u64 + 7; // would wrap as `step as i32`
+        let mut rng = Pcg64::new(6);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut w2 = vec![w.clone()];
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let h = AdamHypers::default();
+        let mut st = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask: BitMask::all_set(n) };
+        let mut dense = crate::optim::DenseAdam::new(&[n], h);
+        dense.step = big - 1; // DenseAdam increments before it uses the count
+        for k in 0..3u64 {
+            masked_adam_step(&mut w, &g, &mut st, big + k, 1e-2, &h);
+            let gg = g.clone();
+            dense.step(&mut w2, &[&gg], 1e-2);
+        }
+        for i in 0..n {
+            assert_eq!(
+                w[i].to_bits(),
+                w2[0][i].to_bits(),
+                "coord {i}: sparse {} vs dense {}",
+                w[i],
+                w2[0][i]
+            );
         }
     }
 

@@ -30,8 +30,9 @@ impl DenseAdam {
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[&[f32]], lr: f64) {
         self.step += 1;
         let h = self.hypers;
-        let bc1 = 1.0 - h.beta1.powi(self.step as i32);
-        let bc2 = 1.0 - h.beta2.powi(self.step as i32);
+        // f64 bias corrections shared with the masked step: exact at large
+        // step counts, no i32 wrap (see masked_adam::bias_corrections)
+        let (bc1, bc2) = masked_adam::bias_corrections(&h, self.step);
         for ((p, g), (m, v)) in params
             .iter_mut()
             .zip(grads)
@@ -41,7 +42,6 @@ impl DenseAdam {
             let (b1, b2) = (h.beta1 as f32, h.beta2 as f32);
             let lr = lr as f32;
             let eps = h.eps as f32;
-            let (bc1, bc2) = (bc1 as f32, bc2 as f32);
             let wd = h.weight_decay as f32;
             for i in 0..p.len() {
                 let gi = g[i] + wd * p[i];

@@ -12,10 +12,58 @@ pub mod manifest;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 pub use manifest::{ArtifactInfo, Manifest, ParamSpec};
+
+/// Process-wide registry of shared runtimes, one per canonical artifacts
+/// dir. Sharing the `Runtime` shares its compiled-executable cache: the
+/// experiment harnesses open a fresh backend per run, and before this
+/// registry existed each run re-parsed and re-compiled identical HLO
+/// (the regression introduced when backends became per-run — ROADMAP).
+static SHARED: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<Runtime>>>>> = OnceLock::new();
+
+/// Open (or fetch the already-open) shared runtime for an artifacts dir.
+/// Every `PjrtBackend` in the process that points at the same dir gets the
+/// same `Runtime`, so an artifact id compiles at most once per process.
+/// Fails like [`Runtime::open`] (missing manifest / stubbed PJRT) without
+/// poisoning the registry.
+pub fn open_shared(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Mutex<Runtime>>> {
+    let dir = artifacts_dir.as_ref();
+    let key = dir.canonicalize().unwrap_or_else(|_| dir.to_path_buf());
+    let reg = SHARED.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = reg.lock().expect("runtime registry lock");
+    if let Some(rt) = map.get(&key) {
+        return Ok(rt.clone());
+    }
+    let rt = Arc::new(Mutex::new(Runtime::open(&key)?));
+    map.insert(key, rt.clone());
+    Ok(rt)
+}
+
+/// Shared-runtime twin of [`Runtime::open_default`]: walk up from cwd to
+/// find artifacts/, then hand out the process-shared runtime for it.
+pub fn open_default_shared() -> Result<Arc<Mutex<Runtime>>> {
+    open_shared(find_default_artifacts_dir()?)
+}
+
+/// Locate the artifacts dir by walking up from cwd (so examples work from
+/// any working directory inside the repo) — the single discovery rule used
+/// by both the shared and exclusive open paths.
+fn find_default_artifacts_dir() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("artifacts/manifest.json not found above cwd; run `make artifacts`");
+        }
+    }
+}
 
 /// Lazily-compiled executable registry over an artifacts directory.
 pub struct Runtime {
@@ -37,19 +85,10 @@ impl Runtime {
         Ok(Runtime { client, dir, manifest, cache: HashMap::new(), exec_secs: 0.0, exec_calls: 0 })
     }
 
-    /// Locate the artifacts dir by walking up from cwd (so examples work
-    /// from any working directory inside the repo).
+    /// Open an EXCLUSIVE runtime for the default artifacts dir (see
+    /// [`open_default_shared`] for the cache-sharing variant backends use).
     pub fn open_default() -> Result<Runtime> {
-        let mut dir = std::env::current_dir()?;
-        loop {
-            let cand = dir.join("artifacts");
-            if cand.join("manifest.json").exists() {
-                return Runtime::open(cand);
-            }
-            if !dir.pop() {
-                bail!("artifacts/manifest.json not found above cwd; run `make artifacts`");
-            }
-        }
+        Runtime::open(find_default_artifacts_dir()?)
     }
 
     pub fn artifact(&self, id: &str) -> Result<&ArtifactInfo> {
@@ -145,4 +184,32 @@ pub fn copy_f32_into(l: &xla::Literal, buf: &mut Vec<f32>) -> Result<()> {
     let n = l.element_count();
     buf.resize(n, 0.0);
     l.copy_raw_to::<f32>(buf).map_err(|e| anyhow!("copy_raw_to: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_registry_fails_cleanly_and_stays_usable() {
+        // no artifacts dir: every call must surface the open error without
+        // caching a broken runtime (a later `make artifacts` must be able to
+        // succeed in the same process)
+        let missing = std::path::Path::new("/nonexistent/blockllm-artifacts");
+        assert!(open_shared(missing).is_err());
+        assert!(open_shared(missing).is_err(), "registry cached a failed open");
+        // with a manifest but the stubbed PJRT client the open still fails
+        // (falls back to native upstream); the full reuse path — two
+        // backends sharing one compiled executable — runs under the real
+        // xla_extension binding, like the pjrt parity test in grad_check.rs
+        let dir = std::env::temp_dir().join("blockllm_shared_rt_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(
+            dir.join("manifest.json"),
+            "{\"version\": 1, \"presets\": {}, \"artifacts\": {}}",
+        );
+        let first = open_shared(&dir).err().map(|e| e.to_string());
+        let second = open_shared(&dir).err().map(|e| e.to_string());
+        assert_eq!(first, second, "repeated opens must behave identically");
+    }
 }

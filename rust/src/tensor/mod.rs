@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 use crate::linalg::gemm::{self, Mat};
+use crate::util;
 
 /// Dense row-major f32 tensor, rank 1 or 2 in practice.
 #[derive(Debug, Clone, PartialEq)]
@@ -137,24 +138,40 @@ impl Tensor {
 
     /// In-place numerically-stable softmax over each row. Rows that are
     /// entirely -inf (fully masked) become all-zero rather than NaN.
+    /// Parallelizes over rows when the tensor is large enough.
     pub fn softmax_rows(&mut self) {
+        self.softmax_rows_threads(util::num_threads());
+    }
+
+    /// `softmax_rows` at an explicit worker-count budget (callers inside an
+    /// already-parallel region pass their leftover threads). Small tensors
+    /// stay serial (`util::par_min_elems`). Each row is self-contained, so
+    /// any thread count computes identical bits.
+    pub fn softmax_rows_threads(&mut self, threads: usize) {
         let n = self.cols();
-        for row in self.data.chunks_mut(n) {
-            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            if m == f32::NEG_INFINITY {
-                row.fill(0.0);
-                continue;
-            }
-            let mut sum = 0.0f32;
-            for x in row.iter_mut() {
-                *x = (*x - m).exp();
-                sum += *x;
-            }
-            let inv = 1.0 / sum;
-            for x in row.iter_mut() {
-                *x *= inv;
-            }
+        if n == 0 {
+            return;
         }
+        let threads = if self.numel() < util::par_min_elems() { 1 } else { threads };
+        let rows = self.rows();
+        gemm::par_rows(&mut self.data, rows, n, threads, |_i0, _i1, chunk| {
+            for row in chunk.chunks_mut(n) {
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                if m == f32::NEG_INFINITY {
+                    row.fill(0.0);
+                    continue;
+                }
+                let mut sum = 0.0f32;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    sum += *x;
+                }
+                let inv = 1.0 / sum;
+                for x in row.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        });
     }
 
     /// Gather rows by index: self [N, D] -> [idx.len(), D]. Panics on an
@@ -164,19 +181,43 @@ impl Tensor {
     }
 
     /// Scatter-add rows: self[idx[j]] += rows[j] (embedding gradient).
+    ///
+    /// Parallelized by DESTINATION row ranges: each worker scans the full
+    /// index list in order and applies only the rows it owns, so every
+    /// destination element accumulates its duplicates in ascending-j order
+    /// regardless of the thread count — the same bits as the serial sweep.
     pub fn scatter_rows_add(&mut self, idx: &[usize], rows: &Tensor) {
         let d = self.cols();
         assert_eq!(rows.cols(), d, "scatter_rows_add: col mismatch");
         assert_eq!(rows.rows(), idx.len(), "scatter_rows_add: row count mismatch");
         let n = self.rows();
-        for (j, &i) in idx.iter().enumerate() {
+        for &i in idx {
             assert!(i < n, "scatter_rows_add: row {i} out of {n}");
-            let dst = &mut self.data[i * d..(i + 1) * d];
-            let src = &rows.data[j * d..(j + 1) * d];
-            for (x, y) in dst.iter_mut().zip(src) {
-                *x += y;
-            }
         }
+        let work = idx.len().saturating_mul(d);
+        let threads = if work < util::par_min_elems() { 1 } else { util::num_threads() };
+        if threads <= 1 || n <= 1 {
+            for (j, &i) in idx.iter().enumerate() {
+                let dst = &mut self.data[i * d..(i + 1) * d];
+                let src = &rows.data[j * d..(j + 1) * d];
+                for (x, y) in dst.iter_mut().zip(src) {
+                    *x += y;
+                }
+            }
+            return;
+        }
+        let src_data = &rows.data;
+        gemm::par_rows(&mut self.data, n, d, threads, |i0, i1, dst_rows| {
+            for (j, &i) in idx.iter().enumerate() {
+                if i >= i0 && i < i1 {
+                    let dst = &mut dst_rows[(i - i0) * d..(i - i0 + 1) * d];
+                    let src = &src_data[j * d..(j + 1) * d];
+                    for (x, y) in dst.iter_mut().zip(src) {
+                        *x += y;
+                    }
+                }
+            }
+        });
     }
 }
 
@@ -241,11 +282,21 @@ impl Mat for View<'_> {
     }
 }
 
+/// Row gather, parallelized over OUTPUT rows (pure copies, so any thread
+/// count produces identical bits). Bounds are checked up front so the
+/// parallel path can never partially fill the output.
 fn gather_rows_impl(data: &[f32], n: usize, d: usize, idx: &[usize]) -> Tensor {
-    let mut out = Vec::with_capacity(idx.len() * d);
     for &i in idx {
         assert!(i < n, "gather_rows: row {i} out of {n}");
-        out.extend_from_slice(&data[i * d..(i + 1) * d]);
+    }
+    let mut out = vec![0.0f32; idx.len() * d];
+    if d > 0 {
+        let threads = if out.len() < util::par_min_elems() { 1 } else { util::num_threads() };
+        gemm::par_rows(&mut out, idx.len(), d, threads, |i0, i1, rows| {
+            for (li, &src) in idx[i0..i1].iter().enumerate() {
+                rows[li * d..(li + 1) * d].copy_from_slice(&data[src * d..(src + 1) * d]);
+            }
+        });
     }
     Tensor { shape: vec![idx.len(), d], data: out }
 }
@@ -369,6 +420,44 @@ mod tests {
         acc.scatter_rows_add(&[2, 0, 2], &g);
         // row 2 accumulated twice
         assert_eq!(acc.data, vec![0.0, 1.0, 0.0, 0.0, 40.0, 42.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn parallel_rowwise_paths_match_serial_bits() {
+        // force every rowwise sweep parallel on small tensors; the chunked
+        // paths must reproduce the serial bits exactly (restored below)
+        let _g = crate::util::test_knob_lock();
+        crate::util::set_par_min(0);
+        let d = 7;
+        let nrows = 23;
+        let mut emb = Tensor::zeros(&[nrows, d]);
+        for (i, x) in emb.data.iter_mut().enumerate() {
+            *x = ((i * 37 % 101) as f32) * 0.3 - 5.0;
+        }
+        let idx: Vec<usize> = (0..64).map(|j| (j * 13 + 5) % nrows).collect();
+        // serial reference computed by hand (duplicates accumulate in j order)
+        let g = emb.gather_rows(&idx);
+        let mut want_g = Vec::new();
+        for &i in &idx {
+            want_g.extend_from_slice(&emb.data[i * d..(i + 1) * d]);
+        }
+        assert_eq!(g.data, want_g);
+        let mut acc = Tensor::zeros(&[nrows, d]);
+        acc.scatter_rows_add(&idx, &g);
+        let mut want = vec![0.0f32; nrows * d];
+        for (j, &i) in idx.iter().enumerate() {
+            for c in 0..d {
+                want[i * d + c] += g.data[j * d + c];
+            }
+        }
+        assert_eq!(acc.data, want, "parallel scatter must match serial bits");
+        // softmax: parallel-over-rows equals per-row serial math
+        let mut s = g.clone();
+        s.softmax_rows();
+        let mut s1 = g.clone();
+        s1.softmax_rows_threads(1);
+        assert_eq!(s.data, s1.data, "softmax thread count changed bits");
+        crate::util::reset_par_min();
     }
 
     #[test]

@@ -43,6 +43,98 @@ pub fn set_num_threads(n: usize) {
     NUM_THREADS.store(n.max(1), Ordering::Relaxed);
 }
 
+/// Default minimum m*n*k before `linalg::gemm` packs B into column panels
+/// and runs the register-tiled microkernel (below it, the direct kernels
+/// win — packing a panel costs one pass over B).
+pub const DEFAULT_PACK_MIN: usize = 32 * 1024;
+/// Default minimum m*n*k before a GEMM fans output rows out across threads.
+pub const DEFAULT_PAR_MIN: usize = 64 * 1024;
+/// Default minimum element count before an elementwise/rowwise sweep
+/// (rmsnorm, rope, softmax, gather/scatter, SiLU·mul) goes parallel.
+pub const DEFAULT_PAR_ELEMS: usize = 1 << 15;
+
+// Tuning knobs follow the NUM_THREADS pattern: 0 = unresolved sentinel, the
+// resolved value is stored +1 so an explicit 0 ("always on") is
+// representable. All knobs are pure THROUGHPUT controls: the packed and
+// direct GEMM paths agree bitwise and every parallel sweep is
+// thread-count-invariant, so flipping them never changes results.
+static PACK_MIN: AtomicUsize = AtomicUsize::new(0);
+static PAR_MIN: AtomicUsize = AtomicUsize::new(0);
+static PAR_ELEMS_MIN: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_knob(cell: &AtomicUsize, env: &str, default: usize) -> usize {
+    let cur = cell.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur - 1;
+    }
+    let n = std::env::var(env)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(default);
+    let stored = n.saturating_add(1);
+    match cell.compare_exchange(0, stored, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => n,
+        Err(winner) => winner - 1,
+    }
+}
+
+/// Minimum m*n*k for the packed-panel microkernel GEMM path
+/// (`PALLAS_PACK_MIN` / `--pack-min`; 0 = always pack).
+pub fn pack_min_mnk() -> usize {
+    resolve_knob(&PACK_MIN, "PALLAS_PACK_MIN", DEFAULT_PACK_MIN)
+}
+
+/// Override the packing threshold (tests force 0 = packed everywhere or
+/// usize::MAX = direct everywhere; saturates at usize::MAX - 1).
+pub fn set_pack_min(n: usize) {
+    PACK_MIN.store(n.saturating_add(1), Ordering::Relaxed);
+}
+
+/// Minimum m*n*k before a GEMM call goes multi-threaded
+/// (`PALLAS_PAR_MIN` / `--par-min`; 0 = parallelize everything).
+pub fn par_min_mnk() -> usize {
+    resolve_knob(&PAR_MIN, "PALLAS_PAR_MIN", DEFAULT_PAR_MIN)
+}
+
+/// Minimum element count before a rowwise/elementwise sweep goes
+/// multi-threaded. Shares the `PALLAS_PAR_MIN` knob (with its own default
+/// when the knob is unset).
+pub fn par_min_elems() -> usize {
+    resolve_knob(&PAR_ELEMS_MIN, "PALLAS_PAR_MIN", DEFAULT_PAR_ELEMS)
+}
+
+/// Override both parallelism thresholds at once.
+pub fn set_par_min(n: usize) {
+    let stored = n.saturating_add(1);
+    PAR_MIN.store(stored, Ordering::Relaxed);
+    PAR_ELEMS_MIN.store(stored, Ordering::Relaxed);
+}
+
+/// Restore the packing threshold to its built-in default (tests that force
+/// a kernel path use this to hand back the production default; an env
+/// override is intentionally not re-read).
+pub fn reset_pack_min() {
+    PACK_MIN.store(DEFAULT_PACK_MIN + 1, Ordering::Relaxed);
+}
+
+/// Restore BOTH parallelism thresholds to their DISTINCT built-in defaults
+/// (`set_par_min` collapses them to one value; a bare
+/// `set_par_min(DEFAULT_PAR_MIN)` would leave the elementwise threshold
+/// doubled).
+pub fn reset_par_min() {
+    PAR_MIN.store(DEFAULT_PAR_MIN + 1, Ordering::Relaxed);
+    PAR_ELEMS_MIN.store(DEFAULT_PAR_ELEMS + 1, Ordering::Relaxed);
+}
+
+/// Serializes tests that mutate the process-global tuning knobs AND assert
+/// on their values (the kernels themselves are knob-invariant, so only
+/// value assertions need the lock).
+#[cfg(test)]
+pub(crate) fn test_knob_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Simple wall-clock stopwatch used by the trainer and bench harness.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -121,6 +213,26 @@ mod tests {
         assert_eq!(num_threads(), 1);
         set_num_threads(2);
         assert_eq!(num_threads(), 2);
+    }
+
+    #[test]
+    fn tuning_knobs_resolve_and_override() {
+        let _g = test_knob_lock(); // other tests mutate the same atomics
+        set_pack_min(7);
+        assert_eq!(pack_min_mnk(), 7);
+        set_pack_min(0); // "always pack" must be representable
+        assert_eq!(pack_min_mnk(), 0);
+        set_pack_min(usize::MAX); // saturates one below MAX: effectively "never"
+        assert_eq!(pack_min_mnk(), usize::MAX - 1);
+        set_par_min(5);
+        assert_eq!(par_min_mnk(), 5);
+        assert_eq!(par_min_elems(), 5);
+        // the reset must restore the DISTINCT built-in defaults
+        reset_pack_min();
+        reset_par_min();
+        assert_eq!(pack_min_mnk(), DEFAULT_PACK_MIN);
+        assert_eq!(par_min_mnk(), DEFAULT_PAR_MIN);
+        assert_eq!(par_min_elems(), DEFAULT_PAR_ELEMS);
     }
 
     #[test]

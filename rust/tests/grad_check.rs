@@ -110,16 +110,37 @@ fn native_reg_gradients_match_finite_differences() {
     finite_difference_check(&mut be, &mut store, &tokens, Targets::Reg(&labels), &grads);
 }
 
-/// The blocked GEMM layer partitions output rows across workers with a
-/// fixed per-element summation order, so the whole fwd/bwd must be
-/// bit-for-bit identical at ANY thread count — and still pass the
-/// finite-difference check at each. Uses the odd-dims "grain" preset so
-/// every remainder path of the kernels is crossed at 1, 2 and 4 threads.
+/// The GEMM layer partitions output rows across workers with a fixed
+/// per-element summation order, so the whole fwd/bwd must be bit-for-bit
+/// identical at ANY thread count — and still pass the finite-difference
+/// check at each. Runs the full matrix {1, 2, 4 threads} × {direct kernels,
+/// forced packed-microkernel + forced-parallel sweeps} on the odd-dims
+/// "grain" preset, so every remainder path of BOTH kernel paths is crossed
+/// AND the packed/direct paths are pinned bitwise-equal on a real model.
 #[test]
 fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
+    struct ResetKnobs;
+    impl Drop for ResetKnobs {
+        fn drop(&mut self) {
+            blockllm::util::reset_pack_min();
+            blockllm::util::reset_par_min();
+        }
+    }
+    let _reset = ResetKnobs; // restore defaults even if an assert fires
     let mut results: Vec<(f64, Vec<Vec<f32>>)> = Vec::new();
-    for &threads in &[1usize, 2, 4] {
+    let cases: &[(usize, bool)] =
+        &[(1, false), (2, false), (4, false), (1, true), (2, true), (4, true)];
+    for &(threads, forced_packed) in cases {
         blockllm::util::set_num_threads(threads);
+        if forced_packed {
+            // every GEMM through the packed microkernel, every rowwise
+            // sweep parallel, no matter how small the model is
+            blockllm::util::set_pack_min(0);
+            blockllm::util::set_par_min(0);
+        } else {
+            // every GEMM through the direct kernels
+            blockllm::util::set_pack_min(usize::MAX);
+        }
         let mut be = NativeBackend::with_shape("grain", "lm", 0, 2, 5).unwrap();
         let specs = be.param_specs().to_vec();
         let mut store = ParamStore::init(&specs, 41);
@@ -130,19 +151,19 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
             .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
             .unwrap();
         assert!(loss.is_finite() && loss > 0.0);
-        // full finite-difference sweep at THIS thread count
+        // full finite-difference sweep at THIS thread count / kernel path
         finite_difference_check(&mut be, &mut store, &tokens, Targets::Lm(&targets), &grads);
         results.push((loss, grads));
     }
     let (l0, g0) = &results[0];
     for (i, (l, g)) in results.iter().enumerate().skip(1) {
+        let (threads, packed) = cases[i];
         assert_eq!(
             l0.to_bits(),
             l.to_bits(),
-            "loss at {} threads differs from 1 thread: {l0} vs {l}",
-            [1, 2, 4][i]
+            "loss at {threads} threads (packed={packed}) differs from 1-thread direct: {l0} vs {l}"
         );
-        assert_eq!(g0, g, "gradients differ between 1 and {} threads", [1, 2, 4][i]);
+        assert_eq!(g0, g, "gradients differ at {threads} threads (packed={packed})");
     }
 }
 

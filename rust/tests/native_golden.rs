@@ -151,8 +151,7 @@ fn assert_pin(got: f64, want: f64, what: &str) {
     );
 }
 
-#[test]
-fn native_grain_lm_matches_jax_golden_at_odd_dims() {
+fn check_grain_lm(what: &str) {
     let mut be = NativeBackend::with_shape("grain", "lm", 0, 3, 13).unwrap();
     let store = ParamStore::fill_deterministic(be.param_specs());
     let tokens = filler_tokens(3, 13, 101, 0);
@@ -162,19 +161,18 @@ fn native_grain_lm_matches_jax_golden_at_odd_dims() {
     let loss = be
         .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
         .unwrap();
-    assert_pin(loss, GRAIN_LM_LOSS, "grain lm loss");
+    assert_pin(loss, GRAIN_LM_LOSS, &format!("grain lm loss [{what}]"));
     assert_eq!(grads.len(), GRAIN_LM_GRAD_NORMS.len());
     for (k, want) in GRAIN_LM_GRAD_NORMS.iter().enumerate() {
-        assert_pin(grad_norm(&grads[k]), *want, &format!("grain lm grad norm {k}"));
+        assert_pin(grad_norm(&grads[k]), *want, &format!("grain lm grad norm {k} [{what}]"));
     }
     // the forward-only path crosses the same remainder kernels
     let ev = be.eval_batch(&store, &tokens, Targets::Lm(&targets)).unwrap();
     assert_eq!(ev.aux, (3 * 13) as f64);
-    assert_pin(ev.loss_sum / ev.aux, GRAIN_LM_LOSS, "grain lm eval mean");
+    assert_pin(ev.loss_sum / ev.aux, GRAIN_LM_LOSS, &format!("grain lm eval mean [{what}]"));
 }
 
-#[test]
-fn native_grain_cls_matches_jax_golden_at_odd_dims() {
+fn check_grain_cls(what: &str) {
     let mut be = NativeBackend::with_shape("grain", "cls", 3, 2, 7).unwrap();
     let store = ParamStore::fill_deterministic(be.param_specs());
     let tokens = filler_tokens(2, 7, 101, 1);
@@ -184,11 +182,49 @@ fn native_grain_cls_matches_jax_golden_at_odd_dims() {
     let loss = be
         .forward_backward(&store, &tokens, Targets::Cls(&labels), &mut grads)
         .unwrap();
-    assert_pin(loss, GRAIN_CLS_LOSS, "grain cls loss");
+    assert_pin(loss, GRAIN_CLS_LOSS, &format!("grain cls loss [{what}]"));
     assert_eq!(grads.len(), GRAIN_CLS_GRAD_NORMS.len());
     for (k, want) in GRAIN_CLS_GRAD_NORMS.iter().enumerate() {
-        assert_pin(grad_norm(&grads[k]), *want, &format!("grain cls grad norm {k}"));
+        assert_pin(grad_norm(&grads[k]), *want, &format!("grain cls grad norm {k} [{what}]"));
     }
+}
+
+#[test]
+fn native_grain_lm_matches_jax_golden_at_odd_dims() {
+    check_grain_lm("default path");
+}
+
+#[test]
+fn native_grain_cls_matches_jax_golden_at_odd_dims() {
+    check_grain_cls("default path");
+}
+
+/// The odd-dims pins must hold on BOTH kernel paths: once with every GEMM
+/// forced through the direct kernels, once forced through the packed-panel
+/// microkernel with every rowwise sweep parallel — so the packed path's
+/// remainder handling (partial NR strips, sub-MR row tiles, fused bias
+/// epilogue on the cls head, SiLU·mul in the MLP) and the direct kernels
+/// each get DETERMINISTIC golden coverage in one test, regardless of test
+/// scheduling. Flipping the process-global knobs is safe for concurrent
+/// tests (the paths agree bitwise — they see identical results), and a
+/// drop guard restores the defaults even if an assert fires mid-test.
+#[test]
+fn native_grain_pins_hold_on_both_kernel_paths() {
+    struct ResetKnobs;
+    impl Drop for ResetKnobs {
+        fn drop(&mut self) {
+            blockllm::util::reset_pack_min();
+            blockllm::util::reset_par_min();
+        }
+    }
+    let _reset = ResetKnobs;
+    blockllm::util::set_pack_min(usize::MAX); // every GEMM direct
+    check_grain_lm("forced direct");
+    check_grain_cls("forced direct");
+    blockllm::util::set_pack_min(0); // every GEMM packed, sweeps parallel
+    blockllm::util::set_par_min(0);
+    check_grain_lm("forced packed");
+    check_grain_cls("forced packed");
 }
 
 #[test]
