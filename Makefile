@@ -2,7 +2,7 @@
 # needs only a Rust toolchain — no Python, no artifacts: tests fall back to
 # the pure-Rust NativeBackend when artifacts/ is absent.
 
-.PHONY: check build test bench bench-baseline artifacts clean
+.PHONY: check build test lint bench bench-attention bench-baseline artifacts clean
 
 check: build test
 
@@ -12,8 +12,18 @@ build:
 test:
 	cargo test -q
 
+# Mirrors CI's lint job (scoped to the blockllm package; the vendored
+# offline crates under rust/vendor/ are frozen subsets, not house code).
+lint:
+	cargo fmt -p blockllm --check
+	cargo clippy --release -p blockllm -- -D warnings
+
 bench:
 	cargo bench
+
+# Isolated attention ms/step: batched strided-GEMM path vs per-head loop.
+bench-attention:
+	cargo bench --bench attention -- --preset tiny --out BENCH_attention.json
 
 # Regenerate the checked-in bench-smoke baseline (run on the host class that
 # gates CI; ms/step is host-ratio-rescaled via calib_ms, but a same-class

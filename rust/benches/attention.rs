@@ -1,0 +1,174 @@
+//! Bench: isolates the attention core's ms/step — QKᵀ scores + causal
+//! mask/scale + row softmax + probs·V on the forward side, plus the four
+//! backward contractions (PᵀdO, dO·Vᵀ, dS·K, dSᵀ·Q) — at a preset's lm
+//! batch shape, comparing the BATCHED strided-GEMM path (one
+//! `gemm_batched` call per contraction over all b·h heads) against the
+//! legacy per-head loop (head-slice copies + `parallel_map` fan-out with a
+//! `threads/(b·h)` inner budget). The two paths are bitwise-identical by
+//! contract; this harness measures what the batching buys in wall clock.
+//!
+//! Args (after `cargo bench --bench attention --`):
+//!   --preset NAME     model preset (default tiny)
+//!   --iters N         timed iterations per case (default 16)
+//!   --warmup N        warmup iterations per case (default 2)
+//!   --threads N       pin the kernel worker count
+//!   --out PATH        JSON output path (default BENCH_attention.json)
+
+#[path = "harness.rs"]
+mod harness;
+
+use blockllm::backend::native::mask_scale_causal;
+use blockllm::config::presets;
+use blockllm::linalg::{gemm, gemm_batched};
+use blockllm::tensor::{BatchView, Tensor};
+use blockllm::util::json::Json;
+use blockllm::util::rng::Pcg64;
+use harness::{arg, arg_usize, bench};
+
+/// Copy one head's [t, dh] block out of interleaved [b*t, h*dh] (what the
+/// per-head loop pays that the batched path does not).
+fn head_copy(x: &Tensor, bi: usize, t: usize, hi: usize, dh: usize) -> Tensor {
+    let d = x.cols();
+    let mut out = Tensor::zeros(&[t, dh]);
+    for ti in 0..t {
+        let src = &x.data[(bi * t + ti) * d + hi * dh..(bi * t + ti) * d + (hi + 1) * dh];
+        out.data[ti * dh..(ti + 1) * dh].copy_from_slice(src);
+    }
+    out
+}
+
+fn main() {
+    let preset_name = arg("--preset").unwrap_or_else(|| "tiny".to_string());
+    let iters = arg_usize("--iters", 16).max(1);
+    let warmup = arg_usize("--warmup", 2);
+    if let Some(v) = arg("--threads") {
+        match v.parse() {
+            Ok(n) => blockllm::util::set_num_threads(n),
+            Err(_) => {
+                eprintln!("--threads wants a number, got {v:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let out_path = arg("--out").unwrap_or_else(|| "BENCH_attention.json".to_string());
+    let threads = blockllm::util::num_threads();
+    let calib_ms = harness::calibrate_ms();
+
+    let Some(p) = presets::get(&preset_name) else {
+        eprintln!("unknown preset {preset_name:?}");
+        std::process::exit(2);
+    };
+    let (b, t) = p.lm_batch();
+    let (h, dh) = (p.n_heads, p.d_head());
+    let (bh, d) = (b * h, p.d_model);
+    let scale = 1.0 / (dh as f32).sqrt();
+    println!(
+        "attention bench: preset {preset_name} b={b} t={t} h={h} dh={dh} ({threads} threads)"
+    );
+
+    let mut rng = Pcg64::new(0xA77);
+    let mut q = Tensor::zeros(&[b * t, d]);
+    let mut k = Tensor::zeros(&[b * t, d]);
+    let mut v = Tensor::zeros(&[b * t, d]);
+    let mut dctx = Tensor::zeros(&[b * t, d]);
+    for x in [&mut q, &mut k, &mut v, &mut dctx] {
+        rng.fill_normal(&mut x.data, 1.0);
+    }
+    // probs stand in for the softmax output / dS in the backward timings
+    let mut probs = gemm_batched::matmul_batched_nt(
+        &BatchView::heads(&q, b, t, h, dh),
+        &BatchView::heads(&k, b, t, h, dh),
+        threads,
+    );
+    mask_scale_causal(&mut probs, t, scale, threads);
+    probs.softmax_rows_threads(threads);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut push = |path: &str, phase: &str, r: &harness::BenchResult| {
+        rows.push(Json::obj(vec![
+            ("path", Json::str(path)),
+            ("phase", Json::str(phase)),
+            ("ms_per_step", Json::num(r.median_ns / 1e6)),
+            ("p10_ms", Json::num(r.p10_ns / 1e6)),
+            ("p90_ms", Json::num(r.p90_ns / 1e6)),
+            ("iters", Json::num(r.iters as f64)),
+        ]));
+    };
+
+    // ---- batched strided-GEMM path
+    let r = bench(&format!("attn fwd {preset_name} [batched]"), warmup, iters, || {
+        let qv = BatchView::heads(&q, b, t, h, dh);
+        let kv = BatchView::heads(&k, b, t, h, dh);
+        let vv = BatchView::heads(&v, b, t, h, dh);
+        let mut s = gemm_batched::matmul_batched_nt(&qv, &kv, threads);
+        mask_scale_causal(&mut s, t, scale, threads);
+        s.softmax_rows_threads(threads);
+        let ctx = gemm_batched::matmul_batched_nn(
+            &BatchView::dense(&s.data, bh, t, t),
+            &vv,
+            threads,
+        );
+        harness::black_box(ctx);
+    });
+    push("batched", "fwd", &r);
+    let r = bench(&format!("attn bwd {preset_name} [batched]"), warmup, iters, || {
+        let pv = BatchView::dense(&probs.data, bh, t, t);
+        let dov = BatchView::heads(&dctx, b, t, h, dh);
+        let vv = BatchView::heads(&v, b, t, h, dh);
+        let qv = BatchView::heads(&q, b, t, h, dh);
+        let kv = BatchView::heads(&k, b, t, h, dh);
+        let dv_heads = gemm_batched::matmul_batched_tn(&pv, &dov, threads);
+        let dp = gemm_batched::matmul_batched_nt(&dov, &vv, threads);
+        let dq = gemm_batched::matmul_batched_nn(&pv, &kv, threads);
+        let dk = gemm_batched::matmul_batched_tn(&pv, &qv, threads);
+        harness::black_box((dv_heads, dp, dq, dk));
+    });
+    push("batched", "bwd", &r);
+
+    // ---- legacy per-head loop
+    let inner = (threads / bh.max(1)).max(1);
+    let r = bench(&format!("attn fwd {preset_name} [looped]"), warmup, iters, || {
+        let heads = gemm::parallel_map(bh, |i| {
+            let (bi, hi) = (i / h, i % h);
+            let qh = head_copy(&q, bi, t, hi, dh);
+            let kh = head_copy(&k, bi, t, hi, dh);
+            let vh = head_copy(&v, bi, t, hi, dh);
+            let mut s = gemm::matmul_nt_threads(&qh, &kh, inner);
+            mask_scale_causal(&mut s, t, scale, 1);
+            s.softmax_rows_threads(inner);
+            gemm::matmul_threads(&s, &vh, inner)
+        });
+        harness::black_box(heads);
+    });
+    push("looped", "fwd", &r);
+    let r = bench(&format!("attn bwd {preset_name} [looped]"), warmup, iters, || {
+        let heads = gemm::parallel_map(bh, |i| {
+            let (bi, hi) = (i / h, i % h);
+            let pr =
+                blockllm::tensor::View::new(&[t, t], &probs.data[i * t * t..(i + 1) * t * t]);
+            let do_h = head_copy(&dctx, bi, t, hi, dh);
+            let vh = head_copy(&v, bi, t, hi, dh);
+            let qh = head_copy(&q, bi, t, hi, dh);
+            let kh = head_copy(&k, bi, t, hi, dh);
+            let dv_h = gemm::matmul_tn_threads(&pr, &do_h, inner);
+            let dp = gemm::matmul_nt_threads(&do_h, &vh, inner);
+            let dq_h = gemm::matmul_threads(&pr, &kh, inner);
+            let dk_h = gemm::matmul_tn_threads(&pr, &qh, inner);
+            (dv_h, dp, dq_h, dk_h)
+        });
+        harness::black_box(heads);
+    });
+    push("looped", "bwd", &r);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("attention")),
+        ("preset", Json::str(preset_name.clone())),
+        ("threads", Json::num(threads as f64)),
+        ("calib_ms", Json::num(calib_ms)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+}

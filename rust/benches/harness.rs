@@ -5,6 +5,18 @@
 
 use std::time::Instant;
 
+/// `--key value` CLI lookup shared by the bench binaries (each bench is a
+/// separate bin including this module, so unused helpers are expected).
+#[allow(dead_code)]
+pub fn arg(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
+#[allow(dead_code)]
+pub fn arg_usize(name: &str, default: usize) -> usize {
+    arg(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 pub struct BenchResult {
     pub name: String,
     pub median_ns: f64,

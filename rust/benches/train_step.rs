@@ -30,15 +30,7 @@ use blockllm::data::c4sim::C4Sim;
 use blockllm::data::LmStream;
 use blockllm::trainer::Trainer;
 use blockllm::util::json::Json;
-use harness::bench;
-
-fn arg(name: &str) -> Option<String> {
-    std::env::args().skip_while(|a| a != name).nth(1)
-}
-
-fn arg_usize(name: &str, default: usize) -> usize {
-    arg(name).and_then(|v| v.parse().ok()).unwrap_or(default)
-}
+use harness::{arg, arg_usize, bench};
 
 fn main() {
     let preset = arg("--preset").unwrap_or_else(|| "micro".to_string());

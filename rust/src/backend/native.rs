@@ -17,12 +17,17 @@
 //! Performance: every matmul runs on the packed-panel microkernel GEMM
 //! layer in `linalg::gemm`; parameters are read through borrowed
 //! `tensor::View`s straight out of the `ParamStore` (the pass allocates only
-//! activations). Per-(batch, head) attention work fans out over
-//! `gemm::parallel_map`, handing each head's inner GEMMs + softmax the
-//! leftover thread budget (`threads / (b·h)`, ≥1) so few-head shapes still
-//! fill the machine. The formerly-serial rowwise sweeps — rmsnorm fwd/bwd,
-//! rope, attention softmax, embedding gather/scatter — are row-partitioned
-//! the same way; reductions (rmsnorm's dγ, the embedding scatter) use
+//! activations). Attention — QKᵀ scores, probs·V, and all four backward
+//! contractions — runs as ONE batched strided GEMM per contraction over all
+//! b·h heads (`linalg::gemm_batched`; head operands are `BatchView` column
+//! slices of the interleaved activations, zero gather copies, threads
+//! scheduled across the whole (batch·head × row) grid). The legacy
+//! per-head `gemm::parallel_map` fan-out is kept behind
+//! `PALLAS_ATTN_BATCHED=0` / `--attn-batched 0` as the bitwise-identical
+//! parity reference. The formerly-serial rowwise sweeps — rmsnorm fwd/bwd,
+//! rope, attention softmax, embedding gather/scatter, and the LM-head
+//! loss/softmax sweep — are row-partitioned the same way; cross-row
+//! reductions (rmsnorm's dγ, the LM loss sum, the embedding scatter) use
 //! thread-count-INDEPENDENT grouping (fixed row blocks / destination-row
 //! ownership), so the whole fwd/bwd stays bit-for-bit deterministic at any
 //! `PALLAS_NUM_THREADS` setting.
@@ -32,17 +37,18 @@ use anyhow::{bail, Result};
 use super::{EvalOut, Targets};
 use crate::config::presets::{self, Preset};
 use crate::config::TrainConfig;
-use crate::linalg::gemm;
+use crate::linalg::{gemm, gemm_batched};
 use crate::model::ParamStore;
 use crate::runtime::ParamSpec;
-use crate::tensor::{Tensor, View};
+use crate::tensor::{BatchView, Tensor, View};
 use crate::util;
 
 const RMS_EPS: f32 = 1e-6;
 
-/// Fixed row-block size for parallel reductions (rmsnorm's dγ): partial sums
-/// are grouped by these CONSTANT blocks and combined in block order, so the
-/// reduction tree never depends on the thread count.
+/// Fixed row-block size for parallel reductions (rmsnorm's dγ, the LM-head
+/// loss/count sums): partial sums are grouped by these CONSTANT blocks and
+/// combined in block order, so the reduction tree never depends on the
+/// thread count.
 const REDUCE_ROWS: usize = 64;
 
 /// Pure-Rust model engine for one (preset, head, batch-shape).
@@ -172,7 +178,7 @@ impl NativeBackend {
         want_grads: bool,
     ) -> (Tensor, Vec<f32>, Tensor, Vec<LayerCache>) {
         let (b, t) = (self.batch, self.seq);
-        let (d, h) = (self.preset.d_model, self.preset.n_heads);
+        let h = self.preset.n_heads;
         let dh = self.preset.d_head();
         let scale = 1.0 / (dh as f32).sqrt();
         let mut x = self.paramv(store, 0).gather_rows(tok_idx); // [N, D]
@@ -195,37 +201,58 @@ impl NativeBackend {
             let v = ha.matmul(&wv);
             rope_apply(&mut q, t, h, dh, &self.cos, &self.sin, false);
             rope_apply(&mut k, t, h, dh, &self.cos, &self.sin, false);
-            // fan the (batch, head) pairs out across threads; each head's
-            // inner GEMMs + per-row softmax get the leftover thread budget
-            // (1 when there are at least as many heads as workers)
-            let inner = inner_threads(b * h);
-            let heads = gemm::parallel_map(b * h, |bh| {
-                let (bi, hi) = (bh / h, bh % h);
-                let qh = head_slice(&q, bi, t, hi, dh);
-                let kh = head_slice(&k, bi, t, hi, dh);
-                let vh = head_slice(&v, bi, t, hi, dh);
-                let mut s = gemm::matmul_nt_threads(&qh, &kh, inner); // [t, t]
-                for i in 0..t {
-                    for j in 0..t {
-                        let cell = &mut s.data[i * t + j];
-                        if j > i {
-                            *cell = f32::NEG_INFINITY; // causal mask
-                        } else {
-                            *cell *= scale;
-                        }
-                    }
+            // attention core. Batched path (default): QKᵀ scores and
+            // probs·V for ALL b·h heads in one strided batched GEMM each —
+            // head operands are read in place out of the interleaved
+            // activations, and threads schedule across the whole
+            // (batch·head × row) grid. The per-head fan-out below it is the
+            // bitwise-identical legacy reference (`--attn-batched 0`).
+            let bh = b * h;
+            let mut scores = Tensor::zeros(&[bh * t, t]); // head-dense probs
+            let ctx = if util::attn_batched() {
+                let threads = util::num_threads();
+                gemm_batched::gemm_batched_nt(
+                    &BatchView::heads(&q, b, t, h, dh),
+                    &BatchView::heads(&k, b, t, h, dh),
+                    &mut scores.data,
+                    false,
+                    threads,
+                );
+                mask_scale_causal(&mut scores, t, scale, threads);
+                scores.softmax_rows_threads(threads);
+                let mut ctx_heads = Tensor::zeros(&[bh * t, dh]);
+                gemm_batched::gemm_batched_nn(
+                    &BatchView::dense(&scores.data, bh, t, t),
+                    &BatchView::heads(&v, b, t, h, dh),
+                    &mut ctx_heads.data,
+                    false,
+                    threads,
+                );
+                interleave_heads(&ctx_heads, b, t, h, dh) // [N, d]
+            } else {
+                // fan the (batch, head) pairs out across threads; each
+                // head's inner GEMMs + per-row softmax get the leftover
+                // thread budget (1 when heads >= workers)
+                let inner = inner_threads(bh);
+                let heads = gemm::parallel_map(bh, |i| {
+                    let (bi, hi) = (i / h, i % h);
+                    let qh = head_slice(&q, bi, t, hi, dh);
+                    let kh = head_slice(&k, bi, t, hi, dh);
+                    let vh = head_slice(&v, bi, t, hi, dh);
+                    let mut s = gemm::matmul_nt_threads(&qh, &kh, inner); // [t, t]
+                    mask_scale_causal(&mut s, t, scale, 1);
+                    s.softmax_rows_threads(inner);
+                    let ctx_h = gemm::matmul_threads(&s, &vh, inner); // [t, dh]
+                    (s, ctx_h)
+                });
+                let mut ctx = Tensor::zeros(&[b * t, h * dh]);
+                for (i, (s, ctx_h)) in heads.into_iter().enumerate() {
+                    let (bi, hi) = (i / h, i % h);
+                    scores.data[i * t * t..(i + 1) * t * t].copy_from_slice(&s.data);
+                    write_head_slice(&mut ctx, bi, t, hi, dh, &ctx_h);
                 }
-                s.softmax_rows_threads(inner);
-                let ctx_h = gemm::matmul_threads(&s, &vh, inner); // [t, dh]
-                (s, ctx_h)
-            });
-            let mut probs = Vec::with_capacity(b * h);
-            let mut ctx = Tensor::zeros(&[b * t, d]);
-            for (bh, (s, ctx_h)) in heads.into_iter().enumerate() {
-                let (bi, hi) = (bh / h, bh % h);
-                write_head_slice(&mut ctx, bi, t, hi, dh, &ctx_h);
-                probs.push(s);
-            }
+                ctx
+            };
             let x1 = {
                 let mut out = ctx.matmul(&wo);
                 out.axpy(1.0, &x); // residual
@@ -243,7 +270,22 @@ impl NativeBackend {
                 out
             };
             if want_grads {
-                caches.push(LayerCache { x0: x, ha, ra, q, k, v, probs, ctx, x1, hm, rm, g, u, prod });
+                caches.push(LayerCache {
+                    x0: x,
+                    ha,
+                    ra,
+                    q,
+                    k,
+                    v,
+                    probs: scores,
+                    ctx,
+                    x1,
+                    hm,
+                    rm,
+                    g,
+                    u,
+                    prod,
+                });
             }
             x = x2;
         }
@@ -304,32 +346,60 @@ impl NativeBackend {
             // -- attention sublayer: x1 = x0 + ctx @ wo
             let dctx = dx.matmul_nt(&wo); // [N, d]
             gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 4)], &c.ctx, &dx);
-            let inner = inner_threads(b * h);
-            let heads = gemm::parallel_map(b * h, |bh| {
-                let (bi, hi) = (bh / h, bh % h);
-                let pr = &c.probs[bi * h + hi]; // [t, t]
-                let do_h = head_slice(&dctx, bi, t, hi, dh);
-                let vh = head_slice(&c.v, bi, t, hi, dh);
-                let qh = head_slice(&c.q, bi, t, hi, dh);
-                let kh = head_slice(&c.k, bi, t, hi, dh);
-                let dv_h = gemm::matmul_tn_threads(pr, &do_h, inner); // P^T dO
-                let dp = gemm::matmul_nt_threads(&do_h, &vh, inner); // dO V^T  [t, t]
-                let ds = softmax_rows_bwd(pr, &dp);
-                let mut dq_h = gemm::matmul_threads(&ds, &kh, inner); // [t, dh]
-                dq_h.scale(scale);
-                let mut dk_h = gemm::matmul_tn_threads(&ds, &qh, inner); // dS^T Q
-                dk_h.scale(scale);
-                (dq_h, dk_h, dv_h)
-            });
-            let mut dq = Tensor::zeros(&[b * t, d]);
-            let mut dk = Tensor::zeros(&[b * t, d]);
-            let mut dv = Tensor::zeros(&[b * t, d]);
-            for (bh, (dq_h, dk_h, dv_h)) in heads.into_iter().enumerate() {
-                let (bi, hi) = (bh / h, bh % h);
-                write_head_slice(&mut dq, bi, t, hi, dh, &dq_h);
-                write_head_slice(&mut dk, bi, t, hi, dh, &dk_h);
-                write_head_slice(&mut dv, bi, t, hi, dh, &dv_h);
-            }
+            let bh = b * h;
+            let (mut dq, mut dk, dv) = if util::attn_batched() {
+                // all four contractions over all b·h heads, one batched
+                // strided GEMM each: dV = PᵀdO, dP = dO·Vᵀ, then the
+                // rowwise softmax VJP, dQ = scale·(dS·K), dK = scale·(dSᵀ·Q)
+                let threads = util::num_threads();
+                let pv = BatchView::dense(&c.probs.data, bh, t, t);
+                let dov = BatchView::heads(&dctx, b, t, h, dh);
+                let vv = BatchView::heads(&c.v, b, t, h, dh);
+                let qv = BatchView::heads(&c.q, b, t, h, dh);
+                let kv = BatchView::heads(&c.k, b, t, h, dh);
+                let dv_heads = gemm_batched::matmul_batched_tn(&pv, &dov, threads);
+                let dp = gemm_batched::matmul_batched_nt(&dov, &vv, threads);
+                let ds = softmax_rows_bwd(&c.probs, &dp);
+                let dsv = BatchView::dense(&ds.data, bh, t, t);
+                let mut dq_heads = gemm_batched::matmul_batched_nn(&dsv, &kv, threads);
+                dq_heads.scale(scale);
+                let mut dk_heads = gemm_batched::matmul_batched_tn(&dsv, &qv, threads);
+                dk_heads.scale(scale);
+                (
+                    interleave_heads(&dq_heads, b, t, h, dh),
+                    interleave_heads(&dk_heads, b, t, h, dh),
+                    interleave_heads(&dv_heads, b, t, h, dh),
+                )
+            } else {
+                // legacy per-head fan-out (bitwise-identical reference)
+                let inner = inner_threads(bh);
+                let heads = gemm::parallel_map(bh, |i| {
+                    let (bi, hi) = (i / h, i % h);
+                    let pr = View::new(&[t, t], &c.probs.data[i * t * t..(i + 1) * t * t]);
+                    let do_h = head_slice(&dctx, bi, t, hi, dh);
+                    let vh = head_slice(&c.v, bi, t, hi, dh);
+                    let qh = head_slice(&c.q, bi, t, hi, dh);
+                    let kh = head_slice(&c.k, bi, t, hi, dh);
+                    let dv_h = gemm::matmul_tn_threads(&pr, &do_h, inner); // P^T dO
+                    let dp = gemm::matmul_nt_threads(&do_h, &vh, inner); // dO V^T  [t, t]
+                    let ds = softmax_rows_bwd_slice(pr.data, &dp.data, t, t, 1);
+                    let mut dq_h = gemm::matmul_threads(&ds, &kh, inner); // [t, dh]
+                    dq_h.scale(scale);
+                    let mut dk_h = gemm::matmul_tn_threads(&ds, &qh, inner); // dS^T Q
+                    dk_h.scale(scale);
+                    (dq_h, dk_h, dv_h)
+                });
+                let mut dq = Tensor::zeros(&[b * t, d]);
+                let mut dk = Tensor::zeros(&[b * t, d]);
+                let mut dv = Tensor::zeros(&[b * t, d]);
+                for (i, (dq_h, dk_h, dv_h)) in heads.into_iter().enumerate() {
+                    let (bi, hi) = (i / h, i % h);
+                    write_head_slice(&mut dq, bi, t, hi, dh, &dq_h);
+                    write_head_slice(&mut dk, bi, t, hi, dh, &dk_h);
+                    write_head_slice(&mut dv, bi, t, hi, dh, &dv_h);
+                }
+                (dq, dk, dv)
+            };
             // undo rope (orthogonal rotation: backward = inverse rotation)
             rope_apply(&mut dq, t, h, dh, &self.cos, &self.sin, true);
             rope_apply(&mut dk, t, h, dh, &self.cos, &self.sin, true);
@@ -357,14 +427,90 @@ impl NativeBackend {
 
     /// LM loss + dlogits. `logits` is consumed and overwritten with dloss/
     /// dlogits. Returns (loss_sum, valid_count).
+    ///
+    /// Rows are independent (per-row log-sum-exp + softmax), so the sweep —
+    /// formerly the last serial slice of the lm path — row-partitions
+    /// across threads. The cross-row loss/count sums are grouped by FIXED
+    /// `REDUCE_ROWS` blocks (the rmsnorm-dγ pattern): thread chunks split
+    /// at block boundaries and the per-block partials are combined in block
+    /// order, so the reduction tree — and therefore the loss bits — never
+    /// depends on the thread count.
     fn lm_loss_grad(&self, logits: &mut Tensor, targets: &[i32], want_grad: bool) -> (f64, f64) {
         let v = self.preset.vocab;
+        let rows = targets.len();
+        debug_assert_eq!(logits.data.len(), rows * v);
+        let nblocks = rows.div_ceil(REDUCE_ROWS).max(1);
+        let threads = if logits.numel() < util::par_min_elems() {
+            1
+        } else {
+            util::num_threads().min(nblocks)
+        };
+        let mut parts = vec![(0.0f64, 0.0f64); nblocks];
+        if threads <= 1 {
+            lm_loss_blocks(&mut logits.data, targets, v, want_grad, &mut parts);
+        } else {
+            // contiguous BLOCK ranges per thread (blocks, not raw rows, so
+            // every fixed block is computed whole by exactly one thread)
+            let chunks = gemm::split_rows(nblocks, threads);
+            std::thread::scope(|s| {
+                let mut rest_rows: &mut [f32] = &mut logits.data;
+                let mut rest_parts: &mut [(f64, f64)] = &mut parts;
+                let mut first: Option<(usize, usize, &mut [f32], &mut [(f64, f64)])> = None;
+                for (ci, &(c0, c1)) in chunks.iter().enumerate() {
+                    let r0 = c0 * REDUCE_ROWS;
+                    let r1 = (c1 * REDUCE_ROWS).min(rows);
+                    let (rh, rt) = std::mem::take(&mut rest_rows).split_at_mut((r1 - r0) * v);
+                    rest_rows = rt;
+                    let (ph, pt) = std::mem::take(&mut rest_parts).split_at_mut(c1 - c0);
+                    rest_parts = pt;
+                    if ci == 0 {
+                        first = Some((r0, r1, rh, ph));
+                    } else {
+                        let tg = &targets[r0..r1];
+                        s.spawn(move || lm_loss_blocks(rh, tg, v, want_grad, ph));
+                    }
+                }
+                if let Some((r0, r1, rh, ph)) = first {
+                    lm_loss_blocks(rh, &targets[r0..r1], v, want_grad, ph);
+                }
+            });
+        }
         let mut loss_sum = 0.0f64;
         let mut count = 0.0f64;
-        for (row, &tgt) in targets.iter().enumerate() {
-            let r = &mut logits.data[row * v..(row + 1) * v];
-            // negative = ignore (the Alpaca-sim prefix mask); out-of-vocab
-            // would be a data bug — treat it as ignored rather than panic
+        for &(l, c) in &parts {
+            loss_sum += l;
+            count += c;
+        }
+        (loss_sum, count)
+    }
+}
+
+/// One thread's span of the LM-head loss sweep: `rows_data` holds the
+/// logits rows for `tgts` (the span starts on a `REDUCE_ROWS` boundary),
+/// and `parts` receives one (loss_sum, count) partial per fixed block, each
+/// accumulated in ascending row order. Rows with a negative target are
+/// ignored (the Alpaca-sim prefix mask); out-of-vocab would be a data bug —
+/// treated as ignored rather than a panic. With `want_grad`, each live row
+/// is overwritten with softmax(row); the -1 at the target is applied by the
+/// caller once it knows the final 1/count scale.
+fn lm_loss_blocks(
+    rows_data: &mut [f32],
+    tgts: &[i32],
+    v: usize,
+    want_grad: bool,
+    parts: &mut [(f64, f64)],
+) {
+    let nrows = tgts.len();
+    debug_assert_eq!(rows_data.len(), nrows * v);
+    debug_assert_eq!(parts.len(), nrows.div_ceil(REDUCE_ROWS).max(1));
+    for (pbi, part) in parts.iter_mut().enumerate() {
+        let l0 = pbi * REDUCE_ROWS;
+        let l1 = ((pbi + 1) * REDUCE_ROWS).min(nrows);
+        let mut loss = 0.0f64;
+        let mut count = 0.0f64;
+        for li in l0..l1 {
+            let r = &mut rows_data[li * v..(li + 1) * v];
+            let tgt = tgts[li];
             if tgt < 0 || tgt as usize >= v {
                 if want_grad {
                     r.fill(0.0);
@@ -377,17 +523,15 @@ impl NativeBackend {
                 sum += ((x - m) as f64).exp();
             }
             let lse = m as f64 + sum.ln();
-            loss_sum += lse - r[tgt as usize] as f64;
+            loss += lse - r[tgt as usize] as f64;
             count += 1.0;
             if want_grad {
-                // row := softmax(row); the -1 at the target is applied by
-                // the caller after it knows the final 1/count scale
                 for x in r.iter_mut() {
                     *x = ((*x as f64 - lse).exp()) as f32;
                 }
             }
         }
-        (loss_sum, count)
+        *part = (loss, count);
     }
 }
 
@@ -399,7 +543,8 @@ struct LayerCache {
     q: Tensor,
     k: Tensor,
     v: Tensor,
-    probs: Vec<Tensor>,
+    /// softmaxed attention probabilities, head-dense [b*h*t, t]
+    probs: Tensor,
     ctx: Tensor,
     x1: Tensor,
     hm: Tensor,
@@ -681,8 +826,10 @@ impl super::Backend for NativeBackend {
 
 /// Bytes of forward activations the engine materializes host-side (the
 /// memory-accounting contract: forward caches kept for backward, plus the
-/// head tensors). Backward temporaries are bounded by one extra layer-set
-/// and are charged implicitly via the same formula's margin. Parameters are
+/// head tensors). Backward temporaries — including the batched attention
+/// path's transient head-dense buffers (one N·d ctx/dq/dk/dv staging
+/// tensor at a time) — are bounded by one extra layer-set and are charged
+/// implicitly via the same formula's margin. Parameters are
 /// read through borrowed views (never cloned per use), so this formula
 /// charges genuine activations only — weights are already accounted in
 /// `MemBreakdown::weights`.
@@ -785,29 +932,88 @@ fn rmsnorm_bwd(dy: &Tensor, x: &Tensor, g: &[f32], r: &[f32]) -> (Tensor, Vec<f3
     (dx, dg)
 }
 
-/// Row-wise softmax VJP: ds[i] = p[i] ⊙ (dp[i] - ⟨dp[i], p[i]⟩).
+/// Row-wise softmax VJP over dense [m, n] slice pairs:
+/// ds[i] = p[i] ⊙ (dp[i] - ⟨dp[i], p[i]⟩), row-partitioned at `threads`
+/// (each row is self-contained, so any worker count computes identical
+/// bits; small inputs stay serial via `util::par_min_elems`).
 ///
 /// A fully-masked attention row has p ≡ 0 (`softmax_rows` maps all-(-inf)
 /// rows to zeros rather than NaN); here that propagates an exactly-zero
 /// gradient row — consistent "no probability mass, no gradient" semantics,
 /// pinned by `softmax_bwd_zero_row_gives_zero_grad` below.
-fn softmax_rows_bwd(p: &Tensor, dp: &Tensor) -> Tensor {
-    let (m, n) = (p.rows(), p.cols());
-    debug_assert_eq!(dp.shape, p.shape);
+fn softmax_rows_bwd_slice(p: &[f32], dp: &[f32], m: usize, n: usize, threads: usize) -> Tensor {
+    debug_assert_eq!(p.len(), m * n);
+    debug_assert_eq!(dp.len(), m * n);
     let mut ds = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let pr = &p.data[i * n..(i + 1) * n];
-        let dpr = &dp.data[i * n..(i + 1) * n];
-        let mut dot = 0.0f32;
-        for j in 0..n {
-            dot += dpr[j] * pr[j];
+    let threads = if m * n < util::par_min_elems() { 1 } else { threads };
+    gemm::par_rows(&mut ds.data, m, n, threads, |i0, i1, chunk| {
+        for li in 0..(i1 - i0) {
+            let pr = &p[(i0 + li) * n..(i0 + li + 1) * n];
+            let dpr = &dp[(i0 + li) * n..(i0 + li + 1) * n];
+            let mut dot = 0.0f32;
+            for j in 0..n {
+                dot += dpr[j] * pr[j];
+            }
+            let dsr = &mut chunk[li * n..(li + 1) * n];
+            for j in 0..n {
+                dsr[j] = pr[j] * (dpr[j] - dot);
+            }
         }
-        let dsr = &mut ds.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            dsr[j] = pr[j] * (dpr[j] - dot);
-        }
-    }
+    });
     ds
+}
+
+/// [`softmax_rows_bwd_slice`] over whole tensors at the shared worker
+/// count — the batched attention backward runs all b·h·t rows in one call.
+fn softmax_rows_bwd(p: &Tensor, dp: &Tensor) -> Tensor {
+    debug_assert_eq!(dp.shape, p.shape);
+    softmax_rows_bwd_slice(&p.data, &dp.data, p.rows(), p.cols(), util::num_threads())
+}
+
+/// Causal mask + 1/√dh scale over head-dense scores [rows, t] (row `r`
+/// belongs to query position `r % t`): entries past the diagonal become
+/// -inf, the rest are scaled. Elementwise per row → thread-count-invariant.
+/// Public so the attention bench drives the exact production sweep.
+pub fn mask_scale_causal(s: &mut Tensor, t: usize, scale: f32, threads: usize) {
+    debug_assert_eq!(s.cols(), t);
+    let rows = s.rows();
+    let threads = if s.numel() < util::par_min_elems() { 1 } else { threads };
+    gemm::par_rows(&mut s.data, rows, t, threads, |i0, _i1, chunk| {
+        for (li, row) in chunk.chunks_mut(t).enumerate() {
+            let ti = (i0 + li) % t;
+            for (j, cell) in row.iter_mut().enumerate() {
+                if j > ti {
+                    *cell = f32::NEG_INFINITY; // causal mask
+                } else {
+                    *cell *= scale;
+                }
+            }
+        }
+    });
+}
+
+/// Head-dense [b*h*t, dh] → interleaved [b*t, h*dh] (the batched attention
+/// outputs back into the model's activation layout). Pure copies
+/// partitioned by destination row, so any thread count writes the same
+/// bits.
+fn interleave_heads(src: &Tensor, b: usize, t: usize, h: usize, dh: usize) -> Tensor {
+    let d = h * dh;
+    debug_assert_eq!(src.rows(), b * h * t);
+    debug_assert_eq!(src.cols(), dh);
+    let mut dst = Tensor::zeros(&[b * t, d]);
+    let threads = if dst.numel() < util::par_min_elems() { 1 } else { util::num_threads() };
+    let sd = &src.data;
+    gemm::par_rows(&mut dst.data, b * t, d, threads, |i0, i1, rows| {
+        for li in 0..(i1 - i0) {
+            let (bi, ti) = ((i0 + li) / t, (i0 + li) % t);
+            let drow = &mut rows[li * d..(li + 1) * d];
+            for hi in 0..h {
+                let s0 = ((bi * h + hi) * t + ti) * dh;
+                drow[hi * dh..(hi + 1) * dh].copy_from_slice(&sd[s0..s0 + dh]);
+            }
+        }
+    });
+    dst
 }
 
 /// cos/sin rope tables: [t, dh/2] flattened row-major.
@@ -829,7 +1035,16 @@ fn rope_tables(t: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
 /// Apply rotary embedding in place on [B*T, H*Dh] (backward = inverse
 /// rotation, since the rotation matrix is orthogonal). Rows are independent
 /// pure rotations, so the sweep row-partitions across threads.
-fn rope_apply(x: &mut Tensor, t: usize, h: usize, dh: usize, cos: &[f32], sin: &[f32], backward: bool) {
+#[allow(clippy::too_many_arguments)]
+fn rope_apply(
+    x: &mut Tensor,
+    t: usize,
+    h: usize,
+    dh: usize,
+    cos: &[f32],
+    sin: &[f32],
+    backward: bool,
+) {
     let half = dh / 2;
     let d = h * dh;
     debug_assert_eq!(x.cols(), d);
@@ -1036,6 +1251,116 @@ mod tests {
     }
 
     #[test]
+    fn interleave_heads_inverts_head_slice() {
+        let mut rng = Pcg64::new(13);
+        let (b, t, h, dh) = (2, 5, 3, 4);
+        let x = rand_tensor(&[b * t, h * dh], &mut rng);
+        // head-dense staging built the way the batched path sees it
+        let mut dense = Tensor::zeros(&[b * h * t, dh]);
+        for bi in 0..b {
+            for hi in 0..h {
+                let s = head_slice(&x, bi, t, hi, dh);
+                let i = bi * h + hi;
+                dense.data[i * t * dh..(i + 1) * t * dh].copy_from_slice(&s.data);
+            }
+        }
+        let back = interleave_heads(&dense, b, t, h, dh);
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn mask_scale_causal_matches_per_head_reference() {
+        let mut rng = Pcg64::new(17);
+        let (bh, t) = (3usize, 5usize);
+        let s = rand_tensor(&[bh * t, t], &mut rng);
+        let mut got = s.clone();
+        mask_scale_causal(&mut got, t, 0.37, 2);
+        for head in 0..bh {
+            for i in 0..t {
+                for j in 0..t {
+                    let x = got.data[(head * t + i) * t + j];
+                    if j > i {
+                        assert_eq!(x, f32::NEG_INFINITY);
+                    } else {
+                        assert_eq!(x, s.data[(head * t + i) * t + j] * 0.37);
+                    }
+                }
+            }
+        }
+    }
+
+    /// THE attention acceptance pin: with identical params and batch, the
+    /// batched strided-GEMM path and the legacy per-head loop produce
+    /// bit-for-bit identical loss AND gradients (grad_check.rs extends this
+    /// across the full {threads} x {kernel path} matrix).
+    #[test]
+    fn batched_attention_matches_per_head_loop_bitwise() {
+        let _g = crate::util::test_knob_lock();
+        let run = |batched: bool| {
+            crate::util::set_attn_batched(batched);
+            let mut be = NativeBackend::with_shape("nano", "lm", 0, 2, 8).unwrap();
+            let specs = be.param_specs().to_vec();
+            let store = ParamStore::init(&specs, 3);
+            let tokens: Vec<i32> = (0..16).map(|i| (7 * i + 3) % 256).collect();
+            let targets: Vec<i32> = (0..16).map(|i| (7 * i + 10) % 256).collect();
+            let mut g: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
+            let l = be.forward_backward(&store, &tokens, Targets::Lm(&targets), &mut g).unwrap();
+            (l, g)
+        };
+        let (lb, gb) = run(true);
+        let (ll, gl) = run(false);
+        crate::util::reset_attn_batched();
+        assert_eq!(lb.to_bits(), ll.to_bits(), "loss: batched {lb} vs looped {ll}");
+        assert_eq!(gb, gl, "gradients differ between batched and per-head attention");
+    }
+
+    #[test]
+    fn lm_loss_blocked_reduction_matches_serial_reference() {
+        // enough rows to cross several fixed blocks AND several threads;
+        // v comes from the backend's preset (lm_loss_grad reads it there)
+        let mut rng = Pcg64::new(37);
+        let be = NativeBackend::with_shape("grain", "lm", 0, 2, 8).unwrap();
+        let v = be.preset.vocab;
+        let rows = 3 * REDUCE_ROWS + 5;
+        let logits0 = rand_tensor(&[rows, v], &mut rng);
+        let targets: Vec<i32> =
+            (0..rows).map(|i| if i % 7 == 3 { -1 } else { (i % v) as i32 }).collect();
+        // serial f64 reference (plain row loop, no blocking)
+        let mut want_loss = 0.0f64;
+        let mut want_count = 0.0f64;
+        for (i, &tgt) in targets.iter().enumerate() {
+            if tgt < 0 {
+                continue;
+            }
+            let r = &logits0.data[i * v..(i + 1) * v];
+            let m = r.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let sum: f64 = r.iter().map(|&x| ((x - m) as f64).exp()).sum();
+            want_loss += m as f64 + sum.ln() - r[tgt as usize] as f64;
+            want_count += 1.0;
+        }
+        // blocked sweep, serial and forced-parallel, must agree with the
+        // reference to f64 regrouping tolerance and with EACH OTHER exactly
+        let _g = crate::util::test_knob_lock();
+        crate::util::set_par_min(0);
+        let mut l1 = logits0.clone();
+        let (ls1, c1) = be.lm_loss_grad(&mut l1, &targets, true);
+        crate::util::reset_par_min();
+        let mut l2 = logits0.clone();
+        let (ls2, c2) = be.lm_loss_grad(&mut l2, &targets, true);
+        assert_eq!(ls1.to_bits(), ls2.to_bits(), "loss bits depend on threading");
+        assert_eq!(c1, c2);
+        assert_eq!(l1.data, l2.data, "dlogits bits depend on threading");
+        assert!((ls1 - want_loss).abs() < 1e-9 * (1.0 + want_loss.abs()), "{ls1} vs {want_loss}");
+        assert_eq!(c1, want_count);
+        // ignored rows must have exactly-zero grad rows
+        for (i, &tgt) in targets.iter().enumerate() {
+            if tgt < 0 {
+                assert!(l1.data[i * v..(i + 1) * v].iter().all(|&x| x == 0.0));
+            }
+        }
+    }
+
+    #[test]
     fn activation_bytes_scale_with_model() {
         let nano = presets::get("nano").unwrap();
         let micro = presets::get("micro").unwrap();
@@ -1087,7 +1412,8 @@ mod tests {
         let rstore = ParamStore::init(&rspecs, 5);
         let labels_f = vec![0.1f32, 0.9, 0.4, 0.6];
         let mut rg: Vec<Vec<f32>> = rspecs.iter().map(|s| vec![0.0; s.numel()]).collect();
-        let rloss = rb.forward_backward(&rstore, &tokens, Targets::Reg(&labels_f), &mut rg).unwrap();
+        let rloss =
+            rb.forward_backward(&rstore, &tokens, Targets::Reg(&labels_f), &mut rg).unwrap();
         assert!(rloss.is_finite() && rloss >= 0.0);
         let rev = rb.eval_batch(&rstore, &tokens, Targets::Reg(&labels_f)).unwrap();
         assert_eq!(rev.preds.len(), 4);

@@ -83,10 +83,15 @@ Any TrainConfig key can be overridden with --key value (see config/mod.rs).
 native engine's GEMM kernels and rowwise sweeps; default is all cores.
 --pack-min N (or PALLAS_PACK_MIN) sets the minimum m*n*k before a GEMM runs
 through the packed-panel SIMD microkernel instead of the direct kernels
-(0 = always pack; default 32768). --par-min N (or PALLAS_PAR_MIN) sets the
-minimum work size before kernels go multi-threaded (0 = always parallel).
-All three are pure throughput knobs: the packed and direct paths agree bit
-for bit and every kernel is deterministic at any thread count.
+(0 = always pack; default 32768); the batched attention GEMMs apply the
+same threshold to their per-head shape. --par-min N (or PALLAS_PAR_MIN)
+sets the minimum work size before kernels go multi-threaded (0 = always
+parallel). --attn-batched {0|1} (or PALLAS_ATTN_BATCHED; default 1) selects
+between the batched strided-GEMM attention path (one kernel call over all
+batch*heads per contraction) and the legacy per-head loop.
+All four are pure throughput knobs: the packed and direct paths agree bit
+for bit, batched and per-head attention agree bit for bit, and every
+kernel is deterministic at any thread count.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

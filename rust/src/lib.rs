@@ -22,6 +22,18 @@
 //!   hot-spot and the fused masked-Adam update, validated against pure-jnp
 //!   oracles and (for nano) lowered into the shipped artifacts.
 
+// Kernel-heavy numeric code: index-driven loops over multiple slices and
+// wide kernel signatures are the house style (see linalg::gemm's summation
+// contract — rewriting loops as iterator chains obscures the per-element
+// order the bitwise pins rely on). CI lints with `-D warnings`; these
+// style lints are opted out wholesale rather than per-site.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::type_complexity
+)]
+
 pub mod backend;
 pub mod baselines;
 pub mod blockllm;

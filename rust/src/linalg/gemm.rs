@@ -42,6 +42,11 @@
 //! comes from `util::num_threads()` (`PALLAS_NUM_THREADS`, parsed once)
 //! unless a caller pins it explicitly (per-head attention work runs its
 //! inner GEMMs at a reduced count to avoid oversubscription).
+//!
+//! The pack and chunk kernels below take explicit leading dimensions
+//! (`lda`/`ldb`), so the batched strided sibling (`linalg::gemm_batched`)
+//! reuses them verbatim over matrices carved out of larger buffers — same
+//! per-element contract, therefore the same bits.
 
 use crate::tensor::Tensor;
 use crate::util;
@@ -68,7 +73,7 @@ pub trait Mat {
 }
 
 /// Contiguous per-thread row ranges: first `m % t` chunks get one extra row.
-fn split_rows(m: usize, threads: usize) -> Vec<(usize, usize)> {
+pub(crate) fn split_rows(m: usize, threads: usize) -> Vec<(usize, usize)> {
     let t = threads.max(1).min(m.max(1));
     let (base, rem) = (m / t, m % t);
     let mut out = Vec::with_capacity(t);
@@ -166,13 +171,15 @@ pub(crate) fn par_rows2<F>(
 /// `[s*NR, s*NR + NR)` as `k` consecutive NR-wide lanes (zero-padded past
 /// `n`), so the microkernel's B loads are perfectly sequential. Packed once
 /// per GEMM call and shared read-only across all row chunks and threads.
-struct PackedB {
+pub(crate) struct PackedB {
     k: usize,
     data: Vec<f32>,
 }
 
-/// Pack B [k, n] row-major (the `nn`/`tn` operand).
-fn pack_b_nn(b: &[f32], k: usize, n: usize) -> PackedB {
+/// Pack B [k, n] with row stride `ldb` (the `nn`/`tn` operand; contiguous
+/// callers pass `ldb = n`). Packing is a pure copy, so a strided source
+/// packs to the identical panel bytes as its dense twin.
+pub(crate) fn pack_b_nn(b: &[f32], k: usize, n: usize, ldb: usize) -> PackedB {
     let strips = n.div_ceil(NR);
     let mut data = vec![0.0f32; strips * k * NR];
     for s in 0..strips {
@@ -181,15 +188,16 @@ fn pack_b_nn(b: &[f32], k: usize, n: usize) -> PackedB {
         let base = s * k * NR;
         for kk in 0..k {
             data[base + kk * NR..base + kk * NR + w]
-                .copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+                .copy_from_slice(&b[kk * ldb + j0..kk * ldb + j0 + w]);
         }
     }
     PackedB { k, data }
 }
 
-/// Pack B [n, k] row-major as the transposed operand of `nt` (effective
-/// B'[kk, j] = B[j, kk]); reads each B row once, contiguously.
-fn pack_b_nt(b: &[f32], n: usize, k: usize) -> PackedB {
+/// Pack B [n, k] with row stride `ldb` as the transposed operand of `nt`
+/// (effective B'[kk, j] = B[j, kk]); reads each B row once, contiguously.
+/// Contiguous callers pass `ldb = k`.
+pub(crate) fn pack_b_nt(b: &[f32], n: usize, k: usize, ldb: usize) -> PackedB {
     let strips = n.div_ceil(NR);
     let mut data = vec![0.0f32; strips * k * NR];
     for s in 0..strips {
@@ -197,7 +205,7 @@ fn pack_b_nt(b: &[f32], n: usize, k: usize) -> PackedB {
         let w = NR.min(n - j0);
         let base = s * k * NR;
         for jr in 0..w {
-            let brow = &b[(j0 + jr) * k..(j0 + jr + 1) * k];
+            let brow = &b[(j0 + jr) * ldb..(j0 + jr) * ldb + k];
             for (kk, &bv) in brow.iter().enumerate() {
                 data[base + kk * NR + jr] = bv;
             }
@@ -264,9 +272,11 @@ fn micro_tile<const R: usize>(
 /// One thread's row chunk of the packed path: for each strip (kept hot in
 /// cache) sweep the chunk's rows in MR-high tiles. Tile grouping starts at
 /// the chunk base, but per-row accumulation order is identical whatever the
-/// grouping, so chunk boundaries (= thread count) never change bits.
+/// grouping, so chunk boundaries (= thread count) never change bits. `a` is
+/// addressed as `a[(i0 + li) * ars + kk * aks]`, so strided A operands plug
+/// in by passing their row stride as `ars` (`nn`/`nt`) or `aks` (`tn`).
 #[allow(clippy::too_many_arguments)]
-fn packed_chunk(
+pub(crate) fn packed_chunk(
     c_rows: &mut [f32],
     i0: usize,
     n: usize,
@@ -290,13 +300,15 @@ fn packed_chunk(
         let b = bias.map(|bv| (bv, j0));
         let mut li = 0;
         while li + MR <= rows {
-            micro_tile::<MR>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b);
+            let (c0, a0) = (li * n + j0, (i0 + li) * ars);
+            micro_tile::<MR>(c_rows, c0, n, w, a, a0, ars, aks, strip, k, acc, b);
             li += MR;
         }
+        let (c0, a0) = (li * n + j0, (i0 + li) * ars);
         match rows - li {
-            3 => micro_tile::<3>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
-            2 => micro_tile::<2>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
-            1 => micro_tile::<1>(c_rows, li * n + j0, n, w, a, (i0 + li) * ars, ars, aks, strip, k, acc, b),
+            3 => micro_tile::<3>(c_rows, c0, n, w, a, a0, ars, aks, strip, k, acc, b),
+            2 => micro_tile::<2>(c_rows, c0, n, w, a, a0, ars, aks, strip, k, acc, b),
+            1 => micro_tile::<1>(c_rows, c0, n, w, a, a0, ars, aks, strip, k, acc, b),
             _ => {}
         }
     }
@@ -307,8 +319,20 @@ fn packed_chunk(
 // path — ascending k, one add per product)
 // ---------------------------------------------------------------------------
 
-/// nn rows [i0, i0+rows): c_rows += A[i0.., :] · B. `a` is the FULL A [m,k].
-fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize) {
+/// nn rows [i0, i0+rows): c_rows += A[i0.., :] · B. `a` is the FULL A
+/// [m,k] with row stride `lda`; `b` is B [k,n] with row stride `ldb`
+/// (contiguous callers pass `lda = k`, `ldb = n`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nn_chunk(
+    c_rows: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+) {
     let rows = if n == 0 { 0 } else { c_rows.len() / n };
     for jb in (0..n).step_by(NB) {
         let je = (jb + NB).min(n);
@@ -316,7 +340,7 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
         for kb in (0..k).step_by(KB) {
             let ke = (kb + KB).min(k);
             for li in 0..rows {
-                let arow = &a[(i0 + li) * k..(i0 + li) * k + k];
+                let arow = &a[(i0 + li) * lda..(i0 + li) * lda + k];
                 let crow = &mut c_rows[li * n + jb..li * n + je];
                 let mut kk = kb;
                 // 4-deep k-unroll: one pass over the C segment per 4 B rows.
@@ -324,10 +348,10 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
                 // ascending-k single-add order (no pairwise regrouping).
                 while kk + 4 <= ke {
                     let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-                    let b0 = &b[kk * n + jb..kk * n + jb + w];
-                    let b1 = &b[(kk + 1) * n + jb..(kk + 1) * n + jb + w];
-                    let b2 = &b[(kk + 2) * n + jb..(kk + 2) * n + jb + w];
-                    let b3 = &b[(kk + 3) * n + jb..(kk + 3) * n + jb + w];
+                    let b0 = &b[kk * ldb + jb..kk * ldb + jb + w];
+                    let b1 = &b[(kk + 1) * ldb + jb..(kk + 1) * ldb + jb + w];
+                    let b2 = &b[(kk + 2) * ldb + jb..(kk + 2) * ldb + jb + w];
+                    let b3 = &b[(kk + 3) * ldb + jb..(kk + 3) * ldb + jb + w];
                     for (j, cv) in crow.iter_mut().enumerate() {
                         *cv += a0 * b0[j];
                         *cv += a1 * b1[j];
@@ -338,7 +362,7 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
                 }
                 while kk < ke {
                     let av = arow[kk];
-                    let brow = &b[kk * n + jb..kk * n + je];
+                    let brow = &b[kk * ldb + jb..kk * ldb + je];
                     for (cv, &bv) in crow.iter_mut().zip(brow) {
                         *cv += av * bv;
                     }
@@ -349,16 +373,29 @@ fn nn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
     }
 }
 
-/// tn rows [i0, i0+rows): c_rows += Aᵀ[i0.., :] · B for A [k,m], B [k,n].
-fn tn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, m: usize, n: usize) {
+/// tn rows [i0, i0+rows): c_rows += Aᵀ[i0.., :] · B for A [k,m] (row stride
+/// `lda`), B [k,n] (row stride `ldb`); contiguous callers pass `lda = m`,
+/// `ldb = n`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tn_chunk(
+    c_rows: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+    lda: usize,
+    ldb: usize,
+) {
     let rows = if n == 0 { 0 } else { c_rows.len() / n };
     for jb in (0..n).step_by(NB) {
         let je = (jb + NB).min(n);
         for kb in (0..k).step_by(KB) {
             let ke = (kb + KB).min(k);
             for kk in kb..ke {
-                let arow = &a[kk * m..(kk + 1) * m];
-                let brow = &b[kk * n + jb..kk * n + je];
+                let arow = &a[kk * lda..kk * lda + m];
+                let brow = &b[kk * ldb + jb..kk * ldb + je];
                 for li in 0..rows {
                     let av = arow[i0 + li];
                     let crow = &mut c_rows[li * n + jb..li * n + je];
@@ -371,20 +408,33 @@ fn tn_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, m: us
     }
 }
 
-/// nt rows [i0, i0+rows): c_rows ⊕= A[i0.., :] · Bᵀ for A [m,k], B [n,k].
-/// Four independent dot accumulators per A row amortize the A loads; each
-/// accumulator starts from C's prior value (contract) and sums ascending k.
-fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize, acc: bool) {
+/// nt rows [i0, i0+rows): c_rows ⊕= A[i0.., :] · Bᵀ for A [m,k] (row stride
+/// `lda`), B [n,k] (row stride `ldb`); contiguous callers pass `lda = k`,
+/// `ldb = k`. Four independent dot accumulators per A row amortize the A
+/// loads; each accumulator starts from C's prior value (contract) and sums
+/// ascending k.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nt_chunk(
+    c_rows: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    lda: usize,
+    ldb: usize,
+) {
     let rows = if n == 0 { 0 } else { c_rows.len() / n };
     for li in 0..rows {
-        let arow = &a[(i0 + li) * k..(i0 + li + 1) * k];
+        let arow = &a[(i0 + li) * lda..(i0 + li) * lda + k];
         let crow = &mut c_rows[li * n..(li + 1) * n];
         let mut j = 0;
         while j + 4 <= n {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let b0 = &b[j * ldb..j * ldb + k];
+            let b1 = &b[(j + 1) * ldb..(j + 1) * ldb + k];
+            let b2 = &b[(j + 2) * ldb..(j + 2) * ldb + k];
+            let b3 = &b[(j + 3) * ldb..(j + 3) * ldb + k];
             let (mut s0, mut s1, mut s2, mut s3) = if acc {
                 (crow[j], crow[j + 1], crow[j + 2], crow[j + 3])
             } else {
@@ -403,7 +453,7 @@ fn nt_chunk(c_rows: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
             j += 4;
         }
         while j < n {
-            let brow = &b[j * k..(j + 1) * k];
+            let brow = &b[j * ldb..j * ldb + k];
             let mut s = if acc { crow[j] } else { 0.0f32 };
             for (&av, &bv) in arow.iter().zip(brow) {
                 s += av * bv;
@@ -428,8 +478,10 @@ fn gemm_threads(m: usize, k: usize, n: usize, threads: usize) -> usize {
 
 /// Packed-path predicate: depends only on the problem shape and the (env /
 /// `set_pack_min`) knob — never on the thread count — so the chosen path is
-/// deterministic per call site. Both paths agree bitwise regardless.
-fn use_packed(m: usize, k: usize, n: usize) -> bool {
+/// deterministic per call site. Both paths agree bitwise regardless. The
+/// batched layer applies the same predicate to its per-element shape, so
+/// one knob governs both call families.
+pub(crate) fn use_packed(m: usize, k: usize, n: usize) -> bool {
     k > 0 && n > 0 && m.saturating_mul(n).saturating_mul(k) >= util::pack_min_mnk()
 }
 
@@ -447,7 +499,7 @@ fn gemm_nn_impl(
 ) {
     let threads = gemm_threads(m, k, n, threads);
     if packed {
-        let pb = pack_b_nn(b, k, n);
+        let pb = pack_b_nn(b, k, n, n);
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
         });
@@ -456,7 +508,7 @@ fn gemm_nn_impl(
             if !acc {
                 rows.fill(0.0);
             }
-            nn_chunk(rows, a, b, i0, k, n);
+            nn_chunk(rows, a, b, i0, k, n, k, n);
         });
     }
 }
@@ -475,7 +527,7 @@ fn gemm_tn_impl(
 ) {
     let threads = gemm_threads(m, k, n, threads);
     if packed {
-        let pb = pack_b_nn(b, k, n);
+        let pb = pack_b_nn(b, k, n, n);
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, 1, m, &pb, acc, None);
         });
@@ -484,7 +536,7 @@ fn gemm_tn_impl(
             if !acc {
                 rows.fill(0.0);
             }
-            tn_chunk(rows, a, b, i0, k, m, n);
+            tn_chunk(rows, a, b, i0, k, m, n, m, n);
         });
     }
 }
@@ -503,19 +555,29 @@ fn gemm_nt_impl(
 ) {
     let threads = gemm_threads(m, k, n, threads);
     if packed {
-        let pb = pack_b_nt(b, n, k);
+        let pb = pack_b_nt(b, n, k, k);
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
         });
     } else {
         par_rows(c, m, n, threads, |i0, _i1, rows| {
-            nt_chunk(rows, a, b, i0, k, n, acc);
+            nt_chunk(rows, a, b, i0, k, n, acc, k, k);
         });
     }
 }
 
 /// c ⊕= A·B. `acc=false` overwrites, `acc=true` accumulates.
-pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "gemm_nn: a len");
     assert_eq!(b.len(), k * n, "gemm_nn: b len");
     assert_eq!(c.len(), m * n, "gemm_nn: c len");
@@ -523,7 +585,17 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 }
 
 /// c ⊕= Aᵀ·B for A [k,m], B [k,n].
-pub fn gemm_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn(
+    k: usize,
+    m: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
     assert_eq!(a.len(), k * m, "gemm_tn: a len");
     assert_eq!(b.len(), k * n, "gemm_tn: b len");
     assert_eq!(c.len(), m * n, "gemm_tn: c len");
@@ -531,7 +603,17 @@ pub fn gemm_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 }
 
 /// c ⊕= A·Bᵀ for A [m,k], B [n,k].
-pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], acc: bool, threads: usize) {
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "gemm_nt: a len");
     assert_eq!(b.len(), n * k, "gemm_nt: b len");
     assert_eq!(c.len(), m * n, "gemm_nt: c len");
@@ -618,13 +700,13 @@ fn matmul_bias_impl(a: &dyn Mat, b: &dyn Mat, bias: &[f32], packed: bool) -> Ten
     let threads = gemm_threads(m, k, n, util::num_threads());
     let (ad, bd) = (a.data(), b.data());
     if packed {
-        let pb = pack_b_nn(bd, k, n);
+        let pb = pack_b_nn(bd, k, n, n);
         par_rows(&mut c.data, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, ad, k, 1, &pb, false, Some(bias));
         });
     } else {
         par_rows(&mut c.data, m, n, threads, |i0, i1, rows| {
-            nn_chunk(rows, ad, bd, i0, k, n);
+            nn_chunk(rows, ad, bd, i0, k, n, k, n);
             for li in 0..(i1 - i0) {
                 let crow = &mut rows[li * n..(li + 1) * n];
                 for (cv, &bv) in crow.iter_mut().zip(bias) {
@@ -778,7 +860,8 @@ mod tests {
         let mut rng = Pcg64::new(1);
         // dims straddle the NR strips, MR tiles, KB/NB blocks and the 4-way
         // unroll remainders
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (7, 17, 9), (13, 129, 31), (33, 260, 257), (5, 1, 4)] {
+        let dims = [(1, 1, 1), (3, 5, 2), (7, 17, 9), (13, 129, 31), (33, 260, 257), (5, 1, 4)];
+        for &(m, k, n) in &dims {
             let a = rand_vec(m * k, &mut rng);
             let b = rand_vec(k * n, &mut rng);
             let want = naive_nn(m, k, n, &a, &b);

@@ -1,0 +1,391 @@
+//! Batched strided GEMM over a leading batch dimension — the attention
+//! path's kernel substrate.
+//!
+//! Computes `C_i ⊕= op(A_i) · op(B_i)` for `i = 0..batch` in ONE call:
+//! `nn` (C = A·B), `tn` (C = Aᵀ·B) and `nt` (C = A·Bᵀ), each with an
+//! accumulating variant. A and B are [`BatchView`]s — equally-shaped
+//! matrices carved out of larger buffers by per-matrix offsets and a row
+//! stride — so the per-(batch·head) operands of attention (column slices of
+//! an interleaved [b*t, h*dh] activation) feed the kernels with ZERO
+//! gather copies. C is written dense: `batch` matrices packed back to back.
+//!
+//! ## Why batched beats the per-head loop
+//!
+//! A loop of b·h tiny GEMMs either runs each call serially (starving the
+//! machine) or fans the heads out and hands each call a sliver of the
+//! thread budget (`threads / (b·h)`) — both leave row-tile parallelism on
+//! the table. Here the scheduling grid is the WHOLE (batch × row) space:
+//! `par_rows` splits `batch·m` output rows into contiguous per-thread
+//! chunks (a chunk may span several batch elements), so every thread
+//! stays busy regardless of how b·h compares to the worker count.
+//!
+//! ## Same contract, same bits
+//!
+//! Every per-element summation runs through the SAME kernels as the
+//! non-batched layer — `packed_chunk` over one `PackedB` panel set per
+//! batch element above `util::pack_min_mnk()` (applied to the per-element
+//! m·n·k, exactly the predicate a looped call would see), the direct
+//! strided chunk kernels below it. The per-element contract (init from C,
+//! single adds in strictly ascending k, epilogue last) is untouched, so a
+//! batched call is BITWISE identical to the equivalent loop of `gemm_nn` /
+//! `gemm_tn` / `gemm_nt` calls at any thread count and on either kernel
+//! path — pinned by the property tests below and relied on by the
+//! attention rewiring in `backend::native` (`PALLAS_ATTN_BATCHED` is a
+//! pure throughput knob).
+
+use crate::linalg::gemm::{
+    self, nn_chunk, nt_chunk, pack_b_nn, pack_b_nt, packed_chunk, par_rows, tn_chunk, use_packed,
+    PackedB,
+};
+use crate::tensor::{BatchView, Tensor};
+use crate::util;
+
+/// Thread clamp on the TOTAL batched work (batch·m·n·k against the shared
+/// `PALLAS_PAR_MIN` knob) — a batch of small matrices is still a big job.
+fn batched_threads(batch: usize, m: usize, k: usize, n: usize, threads: usize) -> usize {
+    let work = batch.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if work < util::par_min_mnk() {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Pack one B panel set per batch element (parallel across elements when
+/// the call is threaded — packing is pure copies, so order never matters).
+fn pack_all<F>(batch: usize, threads: usize, pack: F) -> Vec<PackedB>
+where
+    F: Fn(usize) -> PackedB + Sync,
+{
+    if threads > 1 && batch > 1 {
+        gemm::parallel_map(batch, pack)
+    } else {
+        (0..batch).map(pack).collect()
+    }
+}
+
+/// Drive `body(batch_idx, row0, row1, c_rows)` over the whole
+/// (batch × row) grid: the dense C buffer is split into contiguous
+/// per-thread row chunks spanning batch boundaries; each intersected batch
+/// element gets one call covering its rows inside the chunk. Chunk
+/// boundaries depend only on (batch·m, threads) and every output element
+/// is owned by exactly one thread, so any thread count computes the same
+/// bits (the chunk kernels' per-row math is grouping-invariant).
+fn for_each_span<F>(c: &mut [f32], batch: usize, m: usize, n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(c.len(), batch * m * n);
+    par_rows(c, batch * m, n, threads, |g0, g1, rows| {
+        let mut g = g0;
+        let mut off = 0;
+        while g < g1 {
+            let bi = g / m;
+            let l0 = g % m;
+            let take = (m - l0).min(g1 - g);
+            let len = take * n;
+            body(bi, l0, l0 + take, &mut rows[off..off + len]);
+            off += len;
+            g += take;
+        }
+    });
+}
+
+fn batched_nn_impl(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let batch = a.batch();
+    let threads = batched_threads(batch, m, k, n, threads);
+    if packed {
+        let packs = pack_all(batch, threads, |i| pack_b_nn(b.slice(i), k, n, b.row_stride));
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            packed_chunk(rows, l0, n, a.slice(bi), a.row_stride, 1, &packs[bi], acc, None);
+        });
+    } else {
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            if !acc {
+                rows.fill(0.0);
+            }
+            nn_chunk(rows, a.slice(bi), b.slice(bi), l0, k, n, a.row_stride, b.row_stride);
+        });
+    }
+}
+
+fn batched_tn_impl(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    // A_i is stored [k, m]: per output row the A step is 1, per k it is the
+    // row stride — the microkernel's (ars, aks) addressing handles both.
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let batch = a.batch();
+    let threads = batched_threads(batch, m, k, n, threads);
+    if packed {
+        let packs = pack_all(batch, threads, |i| pack_b_nn(b.slice(i), k, n, b.row_stride));
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            packed_chunk(rows, l0, n, a.slice(bi), 1, a.row_stride, &packs[bi], acc, None);
+        });
+    } else {
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            if !acc {
+                rows.fill(0.0);
+            }
+            tn_chunk(rows, a.slice(bi), b.slice(bi), l0, k, m, n, a.row_stride, b.row_stride);
+        });
+    }
+}
+
+fn batched_nt_impl(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+    packed: bool,
+) {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let batch = a.batch();
+    let threads = batched_threads(batch, m, k, n, threads);
+    if packed {
+        let packs = pack_all(batch, threads, |i| pack_b_nt(b.slice(i), n, k, b.row_stride));
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            packed_chunk(rows, l0, n, a.slice(bi), a.row_stride, 1, &packs[bi], acc, None);
+        });
+    } else {
+        for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
+            nt_chunk(rows, a.slice(bi), b.slice(bi), l0, k, n, acc, a.row_stride, b.row_stride);
+        });
+    }
+}
+
+/// c ⊕= A_i·B_i per batch element; c is dense [batch, m, n]. `acc=false`
+/// overwrites, `acc=true` accumulates.
+pub fn gemm_batched_nn(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(b.rows, k, "gemm_batched_nn: inner dims {k} vs {}", b.rows);
+    assert_eq!(a.batch(), b.batch(), "gemm_batched_nn: batch mismatch");
+    assert_eq!(c.len(), a.batch() * m * n, "gemm_batched_nn: c len");
+    batched_nn_impl(a, b, c, acc, threads, use_packed(m, k, n));
+}
+
+/// c ⊕= A_iᵀ·B_i per batch element for A_i [k,m], B_i [k,n]; c is dense
+/// [batch, m, n].
+pub fn gemm_batched_tn(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(b.rows, k, "gemm_batched_tn: inner dims {k} vs {}", b.rows);
+    assert_eq!(a.batch(), b.batch(), "gemm_batched_tn: batch mismatch");
+    assert_eq!(c.len(), a.batch() * m * n, "gemm_batched_tn: c len");
+    batched_tn_impl(a, b, c, acc, threads, use_packed(m, k, n));
+}
+
+/// c ⊕= A_i·B_iᵀ per batch element for A_i [m,k], B_i [n,k]; c is dense
+/// [batch, m, n].
+pub fn gemm_batched_nt(
+    a: &BatchView<'_>,
+    b: &BatchView<'_>,
+    c: &mut [f32],
+    acc: bool,
+    threads: usize,
+) {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    assert_eq!(b.cols, k, "gemm_batched_nt: inner dims {k} vs {}", b.cols);
+    assert_eq!(a.batch(), b.batch(), "gemm_batched_nt: batch mismatch");
+    assert_eq!(c.len(), a.batch() * m * n, "gemm_batched_nt: c len");
+    batched_nt_impl(a, b, c, acc, threads, use_packed(m, k, n));
+}
+
+/// C = A_i·B_i as an owned dense [batch*m, n] tensor.
+pub fn matmul_batched_nn(a: &BatchView<'_>, b: &BatchView<'_>, threads: usize) -> Tensor {
+    let mut c = Tensor::zeros(&[a.batch() * a.rows, b.cols]);
+    gemm_batched_nn(a, b, &mut c.data, false, threads);
+    c
+}
+
+/// C = A_iᵀ·B_i as an owned dense [batch*m, n] tensor.
+pub fn matmul_batched_tn(a: &BatchView<'_>, b: &BatchView<'_>, threads: usize) -> Tensor {
+    let mut c = Tensor::zeros(&[a.batch() * a.cols, b.cols]);
+    gemm_batched_tn(a, b, &mut c.data, false, threads);
+    c
+}
+
+/// C = A_i·B_iᵀ as an owned dense [batch*m, n] tensor.
+pub fn matmul_batched_nt(a: &BatchView<'_>, b: &BatchView<'_>, threads: usize) -> Tensor {
+    let mut c = Tensor::zeros(&[a.batch() * a.rows, b.rows]);
+    gemm_batched_nt(a, b, &mut c.data, false, threads);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// A random batch of matrices embedded in one backing buffer with a
+    /// random per-matrix gap and a random excess row stride — exercises
+    /// every strided-addressing path at once.
+    fn rand_batch(
+        rng: &mut Pcg64,
+        batch: usize,
+        rows: usize,
+        cols: usize,
+    ) -> (Vec<f32>, Vec<usize>, usize) {
+        let row_stride = cols + rng.below(4);
+        let mat_span = (rows - 1) * row_stride + cols;
+        let gap = rng.below(5);
+        let mut offsets = Vec::with_capacity(batch);
+        let mut end = 0usize;
+        for _ in 0..batch {
+            offsets.push(end);
+            end += mat_span + gap;
+        }
+        let mut data = vec![0.0f32; end.max(mat_span)];
+        rng.fill_normal(&mut data, 1.0);
+        (data, offsets, row_stride)
+    }
+
+    /// Reference: loop the public single-matrix GEMMs over dense copies of
+    /// each batch element (the per-head-loop shape this layer replaces).
+    fn looped(
+        layout: char,
+        a: &BatchView<'_>,
+        b: &BatchView<'_>,
+        init: &[f32],
+        acc: bool,
+        threads: usize,
+    ) -> Vec<f32> {
+        let batch = a.batch();
+        let (m, k, n) = match layout {
+            'n' => (a.rows, a.cols, b.cols),
+            't' => (a.cols, a.rows, b.cols),
+            _ => (a.rows, a.cols, b.rows),
+        };
+        let mut c = init.to_vec();
+        for i in 0..batch {
+            let ad = a.to_tensor(i);
+            let bd = b.to_tensor(i);
+            let ci = &mut c[i * m * n..(i + 1) * m * n];
+            match layout {
+                'n' => gemm::gemm_nn(m, k, n, &ad.data, &bd.data, ci, acc, threads),
+                't' => gemm::gemm_tn(k, m, n, &ad.data, &bd.data, ci, acc, threads),
+                _ => gemm::gemm_nt(m, k, n, &ad.data, &bd.data, ci, acc, threads),
+            }
+        }
+        c
+    }
+
+    /// THE batched contract: for every layout, accumulate mode, kernel
+    /// path and thread count, a batched call over strided views produces
+    /// the IDENTICAL BITS of the equivalent loop of single GEMM calls.
+    #[test]
+    fn batched_matches_looped_bitwise_for_all_layouts() {
+        let mut rng = Pcg64::new(0xBA7C);
+        for trial in 0..25 {
+            let batch = 1 + rng.below(5);
+            let m = 1 + rng.below(18);
+            let k = 1 + rng.below(23);
+            let n = 1 + rng.below(20);
+            // nn/tn share B [k, n]; nt uses B [n, k]
+            let (ad_nn, ao_nn, als_nn) = rand_batch(&mut rng, batch, m, k); // A [m,k]
+            let (ad_tn, ao_tn, als_tn) = rand_batch(&mut rng, batch, k, m); // A [k,m]
+            let (bd_nn, bo_nn, bls_nn) = rand_batch(&mut rng, batch, k, n); // B [k,n]
+            let (bd_nt, bo_nt, bls_nt) = rand_batch(&mut rng, batch, n, k); // B [n,k]
+            let mut init = vec![0.0f32; batch * m * n];
+            rng.fill_normal(&mut init, 1.0);
+            let a_nn = BatchView::from_offsets(&ad_nn, ao_nn, m, k, als_nn);
+            let a_tn = BatchView::from_offsets(&ad_tn, ao_tn, k, m, als_tn);
+            let b_nn = BatchView::from_offsets(&bd_nn, bo_nn, k, n, bls_nn);
+            let b_nt = BatchView::from_offsets(&bd_nt, bo_nt, n, k, bls_nt);
+            for acc in [false, true] {
+                for &threads in &[1usize, 3] {
+                    for packed in [false, true] {
+                        let want = looped('n', &a_nn, &b_nn, &init, acc, 1);
+                        let mut got = init.clone();
+                        batched_nn_impl(&a_nn, &b_nn, &mut got, acc, threads, packed);
+                        assert_eq!(got, want, "nn trial {trial} acc={acc} t={threads} p={packed}");
+
+                        let want = looped('t', &a_tn, &b_nn, &init, acc, 1);
+                        let mut got = init.clone();
+                        batched_tn_impl(&a_tn, &b_nn, &mut got, acc, threads, packed);
+                        assert_eq!(got, want, "tn trial {trial} acc={acc} t={threads} p={packed}");
+
+                        let want = looped('x', &a_nn, &b_nt, &init, acc, 1);
+                        let mut got = init.clone();
+                        batched_nt_impl(&a_nn, &b_nt, &mut got, acc, threads, packed);
+                        assert_eq!(got, want, "nt trial {trial} acc={acc} t={threads} p={packed}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Grid scheduling sanity: thread counts that split mid-matrix, one
+    /// matrix per thread, and far more threads than rows all agree with the
+    /// single-thread bits on both kernel paths.
+    #[test]
+    fn batched_is_thread_count_invariant() {
+        let mut rng = Pcg64::new(7);
+        let (batch, m, k, n) = (5, 7, 19, 11);
+        let (ad, ao, als) = rand_batch(&mut rng, batch, m, k);
+        let (bd, bo, bls) = rand_batch(&mut rng, batch, k, n);
+        let a = BatchView::from_offsets(&ad, ao, m, k, als);
+        let b = BatchView::from_offsets(&bd, bo, k, n, bls);
+        for packed in [false, true] {
+            let mut base = vec![0.0f32; batch * m * n];
+            batched_nn_impl(&a, &b, &mut base, false, 1, packed);
+            for threads in [2, 3, 5, 8, 64] {
+                let mut c = vec![0.0f32; batch * m * n];
+                batched_nn_impl(&a, &b, &mut c, false, threads, packed);
+                assert_eq!(c, base, "nn differs at {threads} threads (packed={packed})");
+            }
+        }
+    }
+
+    /// The interleaved-heads addressing pattern (two-level (batch, head)
+    /// offsets) round-trips through the batched kernels.
+    #[test]
+    fn batched_handles_interleaved_head_views() {
+        let mut rng = Pcg64::new(11);
+        let (b, t, h, dh) = (2usize, 5usize, 3usize, 4usize);
+        let d = h * dh;
+        let mut q = Tensor::zeros(&[b * t, d]);
+        let mut kx = Tensor::zeros(&[b * t, d]);
+        rng.fill_normal(&mut q.data, 1.0);
+        rng.fill_normal(&mut kx.data, 1.0);
+        let qv = BatchView::heads(&q, b, t, h, dh);
+        let kv = BatchView::heads(&kx, b, t, h, dh);
+        let s = matmul_batched_nt(&qv, &kv, 2); // [b*h*t, t]
+        assert_eq!(s.shape, vec![b * h * t, t]);
+        for bh in 0..b * h {
+            let qh = qv.to_tensor(bh);
+            let kh = kv.to_tensor(bh);
+            let want = qh.matmul_nt(&kh);
+            assert_eq!(
+                &s.data[bh * t * t..(bh + 1) * t * t],
+                &want.data[..],
+                "head {bh} scores differ"
+            );
+        }
+    }
+}

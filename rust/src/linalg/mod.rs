@@ -1,8 +1,10 @@
 //! Numerical linear algebra substrate: the packed-panel, register-tiled,
 //! multi-threaded GEMM kernel layer (`gemm`) that the tensor matmul family
 //! and the native backend's hot paths run on — see gemm's module docs for
-//! the two execution paths and the bitwise summation contract — plus the
-//! randomized range finder the GaLore baseline uses.
+//! the two execution paths and the bitwise summation contract — its
+//! batched strided sibling (`gemm_batched`: one call over a leading batch
+//! dimension, the attention path's substrate), plus the randomized range
+//! finder the GaLore baseline uses.
 //!
 //! GaLore (Zhao et al., 2024) projects each 2-D gradient G [m,n] onto a
 //! rank-r subspace: with m <= n it uses the top-r left singular vectors P
@@ -12,6 +14,7 @@
 //! (documented substitution, DESIGN.md §6.6).
 
 pub mod gemm;
+pub mod gemm_batched;
 
 pub use gemm::Mat;
 

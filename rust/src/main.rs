@@ -22,16 +22,25 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env()?;
     if let Some(v) = args.get("threads") {
-        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--threads wants a number, got {v:?}"))?;
+        let n: usize =
+            v.parse().map_err(|_| anyhow::anyhow!("--threads wants a number, got {v:?}"))?;
         blockllm::util::set_num_threads(n);
     }
     if let Some(v) = args.get("pack-min") {
-        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--pack-min wants a number, got {v:?}"))?;
+        let n: usize =
+            v.parse().map_err(|_| anyhow::anyhow!("--pack-min wants a number, got {v:?}"))?;
         blockllm::util::set_pack_min(n);
     }
     if let Some(v) = args.get("par-min") {
-        let n: usize = v.parse().map_err(|_| anyhow::anyhow!("--par-min wants a number, got {v:?}"))?;
+        let n: usize =
+            v.parse().map_err(|_| anyhow::anyhow!("--par-min wants a number, got {v:?}"))?;
         blockllm::util::set_par_min(n);
+    }
+    if let Some(v) = args.get("attn-batched") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--attn-batched wants 0 or 1, got {v:?}"))?;
+        blockllm::util::set_attn_batched(n != 0);
     }
     match args.command.as_str() {
         "train" => cmd_train(&args),
@@ -50,7 +59,14 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     for (k, v) in &args.kv {
         // non-config keys: checkpoint paths, experiment id, kernel knobs
-        if k == "ckpt" || k == "save" || k == "id" || k == "threads" || k == "pack-min" || k == "par-min" {
+        if k == "ckpt"
+            || k == "save"
+            || k == "id"
+            || k == "threads"
+            || k == "pack-min"
+            || k == "par-min"
+            || k == "attn-batched"
+        {
             continue;
         }
         cfg.set(k, v)?;

@@ -2,10 +2,12 @@
 //!
 //! `Tensor` owns its buffer (activations, optimizer math); [`View`] borrows
 //! one (parameter tensors read straight out of the `ParamStore`, no per-use
-//! clone). Both feed the matmul family, which delegates to the blocked
-//! multi-threaded kernel layer in `linalg::gemm` — the native backend's
-//! model fwd/bwd and the optimizer-side algebra (GaLore projections, LoRA
-//! adapters, gradient statistics) all run on the same kernels.
+//! clone); [`BatchView`] borrows a strided BATCH of equally-shaped matrices
+//! (per-head attention operands fed to `linalg::gemm_batched`). All feed
+//! the matmul family, which delegates to the blocked multi-threaded kernel
+//! layer in `linalg::gemm` — the native backend's model fwd/bwd and the
+//! optimizer-side algebra (GaLore projections, LoRA adapters, gradient
+//! statistics) all run on the same kernels.
 
 use anyhow::{bail, Result};
 
@@ -282,6 +284,100 @@ impl Mat for View<'_> {
     }
 }
 
+/// Zero-copy view of a BATCH of equally-shaped row-major matrices carved
+/// out of one borrowed buffer: matrix `i` starts at `offsets[i]` and its
+/// rows are `row_stride` elements apart (`row_stride >= cols`, so a matrix
+/// can be a column slice of a wider tensor — e.g. one attention head's
+/// [t, d_head] block inside an interleaved [b*t, h*d_head] activation).
+/// This is the operand type of `linalg::gemm_batched`; bounds are checked
+/// once at construction so the kernels can slice without re-validating.
+#[derive(Debug, Clone)]
+pub struct BatchView<'a> {
+    pub data: &'a [f32],
+    offsets: Vec<usize>,
+    pub rows: usize,
+    pub cols: usize,
+    pub row_stride: usize,
+}
+
+impl<'a> BatchView<'a> {
+    /// Batch from explicit per-matrix offsets (the fully general form —
+    /// `heads` uses it for the two-level (batch, head) stride pattern).
+    pub fn from_offsets(
+        data: &'a [f32],
+        offsets: Vec<usize>,
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+    ) -> BatchView<'a> {
+        assert!(rows > 0 && cols > 0, "BatchView: empty matrix shape {rows}x{cols}");
+        assert!(row_stride >= cols, "BatchView: row stride {row_stride} < cols {cols}");
+        for &off in &offsets {
+            let last = off + (rows - 1) * row_stride + cols;
+            assert!(
+                last <= data.len(),
+                "BatchView: matrix at offset {off} overruns buffer ({last} > {})",
+                data.len()
+            );
+        }
+        BatchView { data, offsets, rows, cols, row_stride }
+    }
+
+    /// Regularly strided batch: matrix `i` starts at `base + i * batch_stride`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn strided(
+        data: &'a [f32],
+        batch: usize,
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+        base: usize,
+        batch_stride: usize,
+    ) -> BatchView<'a> {
+        let offsets = (0..batch).map(|i| base + i * batch_stride).collect();
+        Self::from_offsets(data, offsets, rows, cols, row_stride)
+    }
+
+    /// Dense batch: `batch` matrices packed back to back ([batch, rows, cols]).
+    pub fn dense(data: &'a [f32], batch: usize, rows: usize, cols: usize) -> BatchView<'a> {
+        assert_eq!(data.len(), batch * rows * cols, "BatchView::dense: buffer len");
+        Self::strided(data, batch, rows, cols, cols, 0, rows * cols)
+    }
+
+    /// The b·h per-head [t, dh] matrices of an interleaved [b*t, h*dh]
+    /// activation tensor, in `bh = bi*h + hi` order — the attention path's
+    /// Q/K/V operands, viewed with zero copies.
+    pub fn heads(x: &'a Tensor, b: usize, t: usize, h: usize, dh: usize) -> BatchView<'a> {
+        let d = h * dh;
+        assert_eq!(x.rows(), b * t, "BatchView::heads: rows {} != b*t {}", x.rows(), b * t);
+        assert_eq!(x.cols(), d, "BatchView::heads: cols {} != h*dh {d}", x.cols());
+        let offsets = (0..b * h).map(|bh| (bh / h) * t * d + (bh % h) * dh).collect();
+        Self::from_offsets(&x.data, offsets, t, dh, d)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// The buffer tail starting at matrix `i`'s first element (the kernels
+    /// address rows relative to this; construction validated the extent).
+    pub fn slice(&self, i: usize) -> &'a [f32] {
+        &self.data[self.offsets[i]..]
+    }
+
+    /// Materialize matrix `i` as an owned contiguous tensor (tests and the
+    /// per-head reference path).
+    pub fn to_tensor(&self, i: usize) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let src = self.slice(i);
+        for r in 0..self.rows {
+            out.data[r * self.cols..(r + 1) * self.cols]
+                .copy_from_slice(&src[r * self.row_stride..r * self.row_stride + self.cols]);
+        }
+        out
+    }
+}
+
 /// Row gather, parallelized over OUTPUT rows (pure copies, so any thread
 /// count produces identical bits). Bounds are checked up front so the
 /// parallel path can never partially fill the output.
@@ -458,6 +554,39 @@ mod tests {
         s1.softmax_rows_threads(1);
         assert_eq!(s.data, s1.data, "softmax thread count changed bits");
         crate::util::reset_par_min();
+    }
+
+    #[test]
+    fn batch_view_slices_strided_matrices() {
+        // interleaved [b*t, h*dh] layout: heads() must carve out the same
+        // blocks as an explicit per-head copy loop
+        let (b, t, h, dh) = (2usize, 3usize, 2usize, 4usize);
+        let d = h * dh;
+        let x = t2(b * t, d, (0..b * t * d).map(|v| v as f32).collect());
+        let bv = BatchView::heads(&x, b, t, h, dh);
+        assert_eq!(bv.batch(), b * h);
+        assert_eq!((bv.rows, bv.cols, bv.row_stride), (t, dh, d));
+        for bi in 0..b {
+            for hi in 0..h {
+                let got = bv.to_tensor(bi * h + hi);
+                for ti in 0..t {
+                    for j in 0..dh {
+                        assert_eq!(got.at(ti, j), x.at(bi * t + ti, hi * dh + j));
+                    }
+                }
+            }
+        }
+        // dense batches are contiguous blocks
+        let y = t2(6, 2, (0..12).map(|v| v as f32).collect());
+        let dv = BatchView::dense(&y.data, 3, 2, 2);
+        assert_eq!(dv.to_tensor(1).data, &y.data[4..8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns buffer")]
+    fn batch_view_rejects_out_of_bounds_matrices() {
+        let data = vec![0.0f32; 10];
+        let _ = BatchView::strided(&data, 2, 2, 3, 3, 0, 6); // last elem at 11
     }
 
     #[test]

@@ -110,20 +110,50 @@ pub fn set_par_min(n: usize) {
     PAR_ELEMS_MIN.store(stored, Ordering::Relaxed);
 }
 
-/// Restore the packing threshold to its built-in default (tests that force
-/// a kernel path use this to hand back the production default; an env
-/// override is intentionally not re-read).
+/// Restore the packing threshold to its unresolved state: the next read
+/// re-resolves `PALLAS_PACK_MIN` (or the built-in default). Re-arming the
+/// env var matters in CI's {direct, packed} matrix legs — a test that
+/// forced a path must hand back the LEG's forcing, not the built-in
+/// default, or every test scheduled after it silently loses the leg's
+/// coverage.
 pub fn reset_pack_min() {
-    PACK_MIN.store(DEFAULT_PACK_MIN + 1, Ordering::Relaxed);
+    PACK_MIN.store(0, Ordering::Relaxed);
 }
 
-/// Restore BOTH parallelism thresholds to their DISTINCT built-in defaults
-/// (`set_par_min` collapses them to one value; a bare
-/// `set_par_min(DEFAULT_PAR_MIN)` would leave the elementwise threshold
-/// doubled).
+static ATTN_BATCHED: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether `NativeBackend` attention runs the batched strided-GEMM path
+/// (one `gemm_batched` call covering all b·h heads per contraction) or the
+/// legacy per-head loop (`PALLAS_ATTN_BATCHED` / `--attn-batched`; default
+/// on). The two paths are BITWISE identical at any thread count — pinned
+/// by grad_check's matrix test and native.rs unit tests — so this is a
+/// pure throughput knob kept for A/B benching and as the parity reference.
+pub fn attn_batched() -> bool {
+    resolve_knob(&ATTN_BATCHED, "PALLAS_ATTN_BATCHED", 1) != 0
+}
+
+/// Override the attention-path selection (tests pin the per-head loop
+/// against the batched path with this).
+pub fn set_attn_batched(on: bool) {
+    ATTN_BATCHED.store(usize::from(on) + 1, Ordering::Relaxed);
+}
+
+/// Restore the attention-path knob to its unresolved state: the next read
+/// re-resolves `PALLAS_ATTN_BATCHED` (else the batched default) — the same
+/// env-re-arming contract as [`reset_pack_min`], so a CI leg forcing the
+/// per-head path keeps its coverage after a knob-flipping test finishes.
+pub fn reset_attn_batched() {
+    ATTN_BATCHED.store(0, Ordering::Relaxed);
+}
+
+/// Restore BOTH parallelism thresholds to their unresolved state: the next
+/// read re-resolves `PALLAS_PAR_MIN` per knob (each with its own distinct
+/// default when the env var is unset — `set_par_min` collapses them to one
+/// value). Like [`reset_pack_min`], this re-arms an env override rather
+/// than pinning the built-in default.
 pub fn reset_par_min() {
-    PAR_MIN.store(DEFAULT_PAR_MIN + 1, Ordering::Relaxed);
-    PAR_ELEMS_MIN.store(DEFAULT_PAR_ELEMS + 1, Ordering::Relaxed);
+    PAR_MIN.store(0, Ordering::Relaxed);
+    PAR_ELEMS_MIN.store(0, Ordering::Relaxed);
 }
 
 /// Serializes tests that mutate the process-global tuning knobs AND assert
@@ -227,12 +257,21 @@ mod tests {
         set_par_min(5);
         assert_eq!(par_min_mnk(), 5);
         assert_eq!(par_min_elems(), 5);
-        // the reset must restore the DISTINCT built-in defaults
+        set_attn_batched(false);
+        assert!(!attn_batched());
+        set_attn_batched(true);
+        assert!(attn_batched());
+        reset_attn_batched(); // re-arms any env override
+        // the reset must re-resolve: the env override when present (CI's
+        // {direct, packed} matrix legs), else the DISTINCT built-in defaults
+        let env = |name: &str, default: usize| {
+            std::env::var(name).ok().and_then(|s| s.trim().parse().ok()).unwrap_or(default)
+        };
         reset_pack_min();
         reset_par_min();
-        assert_eq!(pack_min_mnk(), DEFAULT_PACK_MIN);
-        assert_eq!(par_min_mnk(), DEFAULT_PAR_MIN);
-        assert_eq!(par_min_elems(), DEFAULT_PAR_ELEMS);
+        assert_eq!(pack_min_mnk(), env("PALLAS_PACK_MIN", DEFAULT_PACK_MIN));
+        assert_eq!(par_min_mnk(), env("PALLAS_PAR_MIN", DEFAULT_PAR_MIN));
+        assert_eq!(par_min_elems(), env("PALLAS_PAR_MIN", DEFAULT_PAR_ELEMS));
     }
 
     #[test]

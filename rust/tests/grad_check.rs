@@ -113,10 +113,15 @@ fn native_reg_gradients_match_finite_differences() {
 /// The GEMM layer partitions output rows across workers with a fixed
 /// per-element summation order, so the whole fwd/bwd must be bit-for-bit
 /// identical at ANY thread count — and still pass the finite-difference
-/// check at each. Runs the full matrix {1, 2, 4 threads} × {direct kernels,
-/// forced packed-microkernel + forced-parallel sweeps} on the odd-dims
-/// "grain" preset, so every remainder path of BOTH kernel paths is crossed
-/// AND the packed/direct paths are pinned bitwise-equal on a real model.
+/// check at each. Runs the full matrix {1, 2, 4, 8 threads} x {direct
+/// kernels, forced packed-microkernel + forced-parallel sweeps} on the
+/// odd-dims "grain" preset, so every remainder path of BOTH kernel paths
+/// is crossed AND the packed/direct paths are pinned bitwise-equal on a
+/// real model. Every leg runs the BATCHED strided-GEMM attention path
+/// (the default) under the FD sweep, then re-runs the identical batch
+/// through the legacy per-head attention loop and pins the two bitwise
+/// equal — the batched-attention acceptance criterion, crossed with every
+/// thread count and kernel path.
 #[test]
 fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
     struct ResetKnobs;
@@ -124,12 +129,23 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
         fn drop(&mut self) {
             blockllm::util::reset_pack_min();
             blockllm::util::reset_par_min();
+            blockllm::util::reset_attn_batched();
         }
     }
     let _reset = ResetKnobs; // restore defaults even if an assert fires
     let mut results: Vec<(f64, Vec<Vec<f32>>)> = Vec::new();
-    let cases: &[(usize, bool)] =
-        &[(1, false), (2, false), (4, false), (1, true), (2, true), (4, true)];
+    // the 8-thread legs exceed both b·h = 2 heads and the per-head row
+    // count, so batched grid chunks split mid-head on each kernel path
+    let cases: &[(usize, bool)] = &[
+        (1, false),
+        (2, false),
+        (4, false),
+        (8, false),
+        (1, true),
+        (2, true),
+        (4, true),
+        (8, true),
+    ];
     for &(threads, forced_packed) in cases {
         blockllm::util::set_num_threads(threads);
         if forced_packed {
@@ -147,12 +163,29 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
         let tokens = filler_tokens(2, 5, 101, 0);
         let targets = filler_tokens(2, 5, 101, 3);
         let mut grads = zeros_like(&store);
+        blockllm::util::set_attn_batched(true);
         let loss = be
             .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
             .unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         // full finite-difference sweep at THIS thread count / kernel path
         finite_difference_check(&mut be, &mut store, &tokens, Targets::Lm(&targets), &grads);
+        // the legacy per-head attention loop must reproduce the exact bits
+        blockllm::util::set_attn_batched(false);
+        let mut grads_loop = zeros_like(&store);
+        let loss_loop = be
+            .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads_loop)
+            .unwrap();
+        blockllm::util::set_attn_batched(true);
+        assert_eq!(
+            loss.to_bits(),
+            loss_loop.to_bits(),
+            "per-head attention loss differs at {threads} threads (packed={forced_packed})"
+        );
+        assert_eq!(
+            grads, grads_loop,
+            "per-head attention grads differ at {threads} threads (packed={forced_packed})"
+        );
         results.push((loss, grads));
     }
     let (l0, g0) = &results[0];

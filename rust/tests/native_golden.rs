@@ -205,9 +205,12 @@ fn native_grain_cls_matches_jax_golden_at_odd_dims() {
 /// remainder handling (partial NR strips, sub-MR row tiles, fused bias
 /// epilogue on the cls head, SiLU·mul in the MLP) and the direct kernels
 /// each get DETERMINISTIC golden coverage in one test, regardless of test
-/// scheduling. Flipping the process-global knobs is safe for concurrent
-/// tests (the paths agree bitwise — they see identical results), and a
-/// drop guard restores the defaults even if an assert fires mid-test.
+/// scheduling — and on BOTH attention paths (the batched strided-GEMM
+/// default AND the legacy per-head loop), extending the same pin lattice
+/// over the batched rework instead of forking it. Flipping the
+/// process-global knobs is safe for concurrent tests (all paths agree
+/// bitwise — they see identical results), and a drop guard restores the
+/// defaults even if an assert fires mid-test.
 #[test]
 fn native_grain_pins_hold_on_both_kernel_paths() {
     struct ResetKnobs;
@@ -215,16 +218,24 @@ fn native_grain_pins_hold_on_both_kernel_paths() {
         fn drop(&mut self) {
             blockllm::util::reset_pack_min();
             blockllm::util::reset_par_min();
+            blockllm::util::reset_attn_batched();
         }
     }
     let _reset = ResetKnobs;
     blockllm::util::set_pack_min(usize::MAX); // every GEMM direct
     check_grain_lm("forced direct");
     check_grain_cls("forced direct");
+    blockllm::util::set_attn_batched(false); // direct + per-head attention
+    check_grain_lm("forced direct, per-head attention");
+    check_grain_cls("forced direct, per-head attention");
+    blockllm::util::set_attn_batched(true);
     blockllm::util::set_pack_min(0); // every GEMM packed, sweeps parallel
     blockllm::util::set_par_min(0);
     check_grain_lm("forced packed");
     check_grain_cls("forced packed");
+    blockllm::util::set_attn_batched(false); // packed + per-head attention
+    check_grain_lm("forced packed, per-head attention");
+    check_grain_cls("forced packed, per-head attention");
 }
 
 #[test]
