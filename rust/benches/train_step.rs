@@ -91,6 +91,11 @@ fn main() {
             ("p10_ms", Json::num(r.p10_ns / 1e6)),
             ("p90_ms", Json::num(r.p90_ns / 1e6)),
             ("iters", Json::num(r.iters as f64)),
+            // measured peak gradient-buffer bytes over the timed steps
+            // (sink retention + transient shard; the streaming-vs-dense
+            // memory trajectory per method). Informational only — the
+            // bench gate still compares ms/step exclusively.
+            ("peak_grad_bytes", Json::num(tr.mem.peak_grad_measured as f64)),
         ]));
     }
 

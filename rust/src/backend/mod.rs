@@ -3,13 +3,29 @@
 //! BlockLLM's claim is that coordinate-block selection works without touching
 //! the model or training procedure; this layer makes the claim testable
 //! against more than one execution engine. A `Backend` owns exactly one
-//! contract: *given parameters and a batch, return the loss and per-parameter
-//! gradients* (plus the forward-only eval variant). Everything above it —
-//! trainer, strategies, experiments — is backend-agnostic.
+//! contract: *given parameters and a batch, return the loss and STREAM the
+//! per-parameter gradients* (plus the forward-only eval variant). The
+//! backward pass emits each parameter tensor's gradient shard — `(param
+//! index, &[f32])`, in the order the shards finalize, reverse-layer order on
+//! the native engine — into a caller-supplied [`crate::grads::GradSink`],
+//! which decides what survives. The engine itself holds at most ONE dense
+//! shard at a time (a reused scratch buffer), so total gradient residency is
+//! `sink retention + largest tensor`: the paper's O(active + largest-layer)
+//! memory argument, made real at the API boundary instead of contradicted by
+//! it. `forward_backward_dense` (a provided method over
+//! [`crate::grads::DenseSink`]) recovers the legacy fill-every-buffer
+//! behavior for tests, finite-difference sweeps, and the `--grad-stream 0`
+//! parity reference; both retention paths consume identical shard bits, so
+//! they agree bit for bit end to end.
+//!
+//! Everything above this layer — trainer, strategies, experiments — is
+//! backend-agnostic.
 //!
 //! Two implementations ship:
 //! * [`pjrt::PjrtBackend`] — executes the AOT HLO artifacts via PJRT
-//!   (requires `make artifacts` + the real xla_extension binding);
+//!   (requires `make artifacts` + the real xla_extension binding); the
+//!   device result is untupled through one reusable host buffer, one shard
+//!   per `consume`, in spec-table order.
 //! * [`native::NativeBackend`] — the pure-Rust reference engine: the same
 //!   LLaMA-style model (embedding, RMSNorm, RoPE causal attention, SwiGLU,
 //!   lm/cls/reg heads) with a hand-derived backward pass, validated against
@@ -27,6 +43,7 @@ pub mod pjrt;
 use anyhow::Result;
 
 use crate::config::{BackendKind, Task, TrainConfig};
+use crate::grads::{DenseSink, GradSink};
 use crate::model::ParamStore;
 use crate::runtime::ParamSpec;
 
@@ -63,16 +80,40 @@ pub trait Backend {
     /// (batch, seq) the engine is built for.
     fn batch_shape(&self) -> (usize, usize);
 
-    /// One fwd+bwd microbatch: writes the gradient of the mean loss for
-    /// every parameter tensor into `grads_out` (overwriting; same order as
-    /// `param_specs`) and returns the loss.
+    /// One fwd+bwd microbatch: streams the gradient of the mean loss for
+    /// every parameter tensor into `sink` — exactly one
+    /// `sink.consume(idx, shard)` per `param_specs` entry, in the order the
+    /// backward pass finalizes them — and returns the loss. Shard buffers
+    /// are engine-owned and reused; a sink must copy what it keeps.
     fn forward_backward(
         &mut self,
         store: &ParamStore,
         tokens: &[i32],
         targets: Targets<'_>,
-        grads_out: &mut [Vec<f32>],
+        sink: &mut dyn GradSink,
     ) -> Result<f64>;
+
+    /// Legacy dense convenience: stream into a [`DenseSink`] over
+    /// caller-owned full-size buffers (one per `param_specs` entry, already
+    /// sized). Bitwise-identical values to the streaming path — only the
+    /// retention differs.
+    fn forward_backward_dense(
+        &mut self,
+        store: &ParamStore,
+        tokens: &[i32],
+        targets: Targets<'_>,
+        grads_out: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        if grads_out.len() != self.param_specs().len() {
+            anyhow::bail!(
+                "grads_out has {} tensors, want {}",
+                grads_out.len(),
+                self.param_specs().len()
+            );
+        }
+        let mut sink = DenseSink::new(grads_out);
+        self.forward_backward(store, tokens, targets, &mut sink)
+    }
 
     /// Forward-only eval batch.
     fn eval_batch(

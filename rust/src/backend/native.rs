@@ -37,6 +37,7 @@ use anyhow::{bail, Result};
 use super::{EvalOut, Targets};
 use crate::config::presets::{self, Preset};
 use crate::config::TrainConfig;
+use crate::grads::GradSink;
 use crate::linalg::{gemm, gemm_batched};
 use crate::model::ParamStore;
 use crate::runtime::ParamSpec;
@@ -158,6 +159,9 @@ impl NativeBackend {
     // spec-table index helpers (order fixed by Preset::param_specs)
     fn idx_layer(&self, layer: usize, off: usize) -> usize {
         1 + layer * 9 + off
+    }
+    fn numel(&self, idx: usize) -> usize {
+        self.specs[idx].numel()
     }
     fn idx_final_norm(&self) -> usize {
         1 + self.preset.n_layers * 9
@@ -294,8 +298,11 @@ impl NativeBackend {
         (xf, rf, x, caches)
     }
 
-    /// Backward through the trunk given d(loss)/d(xf). Accumulates into
-    /// `grads` (indexed by spec table).
+    /// Backward through the trunk given d(loss)/d(xf). Emits each
+    /// parameter's finalized gradient shard through `em` the moment it is
+    /// complete — reverse-layer order, one shard per spec-table entry —
+    /// so at most one dense weight-gradient (the emitter's reused scratch)
+    /// is ever live inside the engine.
     #[allow(clippy::too_many_arguments)]
     fn trunk_backward(
         &self,
@@ -305,7 +312,7 @@ impl NativeBackend {
         rf: &[f32],
         final_x: &Tensor,
         caches: &[LayerCache],
-        grads: &mut [Vec<f32>],
+        em: &mut ShardEmitter<'_>,
     ) {
         let (b, t) = (self.batch, self.seq);
         let (d, h) = (self.preset.d_model, self.preset.n_heads);
@@ -316,7 +323,7 @@ impl NativeBackend {
         let ifn = self.idx_final_norm();
         let mut dx = {
             let (dx, dg) = rmsnorm_bwd(dxf, final_x, final_norm, rf);
-            acc(&mut grads[ifn], &dg);
+            em.emit_slice(ifn, &dg);
             dx
         };
 
@@ -332,20 +339,24 @@ impl NativeBackend {
 
             // -- mlp sublayer: x2 = x1 + prod @ w_down
             let dprod = dx.matmul_nt(&w_down); // [N, ff]
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 8)], &c.prod, &dx);
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 8))), &c.prod, &dx);
+            em.emit(self.idx_layer(layer, 8));
             let (dg_t, du_t) = gemm::silu_mul_vjp(&dprod, &c.g, &c.u);
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 7)], &c.hm, &du_t);
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 6)], &c.hm, &dg_t);
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 7))), &c.hm, &du_t);
+            em.emit(self.idx_layer(layer, 7));
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 6))), &c.hm, &dg_t);
+            em.emit(self.idx_layer(layer, 6));
             let mut dhm = dg_t.matmul_nt(&w_gate); // [N, d]
             gemm::matmul_nt_acc(&mut dhm, &du_t, &w_up);
             let mlp_norm = &store.bufs[self.idx_layer(layer, 5)];
             let (dx1_norm, dgm) = rmsnorm_bwd(&dhm, &c.x1, mlp_norm, &c.rm);
-            acc(&mut grads[self.idx_layer(layer, 5)], &dgm);
+            em.emit_slice(self.idx_layer(layer, 5), &dgm);
             dx.axpy(1.0, &dx1_norm); // + residual path
 
             // -- attention sublayer: x1 = x0 + ctx @ wo
             let dctx = dx.matmul_nt(&wo); // [N, d]
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 4)], &c.ctx, &dx);
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 4))), &c.ctx, &dx);
+            em.emit(self.idx_layer(layer, 4));
             let bh = b * h;
             let (mut dq, mut dk, dv) = if util::attn_batched() {
                 // all four contractions over all b·h heads, one batched
@@ -403,26 +414,30 @@ impl NativeBackend {
             // undo rope (orthogonal rotation: backward = inverse rotation)
             rope_apply(&mut dq, t, h, dh, &self.cos, &self.sin, true);
             rope_apply(&mut dk, t, h, dh, &self.cos, &self.sin, true);
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 1)], &c.ha, &dq);
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 2)], &c.ha, &dk);
-            gemm::matmul_tn_acc(&mut grads[self.idx_layer(layer, 3)], &c.ha, &dv);
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 1))), &c.ha, &dq);
+            em.emit(self.idx_layer(layer, 1));
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 2))), &c.ha, &dk);
+            em.emit(self.idx_layer(layer, 2));
+            gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 3))), &c.ha, &dv);
+            em.emit(self.idx_layer(layer, 3));
             let mut dha = dq.matmul_nt(&wq);
             gemm::matmul_nt_acc(&mut dha, &dk, &wk);
             gemm::matmul_nt_acc(&mut dha, &dv, &wv);
             let attn_norm = &store.bufs[self.idx_layer(layer, 0)];
             let (dx0_norm, dga) = rmsnorm_bwd(&dha, &c.x0, attn_norm, &c.ra);
-            acc(&mut grads[self.idx_layer(layer, 0)], &dga);
+            em.emit_slice(self.idx_layer(layer, 0), &dga);
             dx.axpy(1.0, &dx0_norm);
         }
 
-        // embedding scatter-add: wrap the grad buffer as a [vocab, d] tensor
-        // (zero-copy via take/restore) and scatter dx's rows into it
+        // embedding scatter-add: wrap the emitter's zeroed scratch as a
+        // [vocab, d] tensor (zero-copy via take/restore), scatter dx's rows
+        // into it, and emit it as the final shard of the pass
         let mut demb = Tensor {
             shape: vec![self.preset.vocab, d],
-            data: std::mem::take(&mut grads[0]),
+            data: em.take_zeroed(self.preset.vocab * d),
         };
         demb.scatter_rows_add(tok_idx, &dx);
-        grads[0] = demb.data;
+        em.restore_and_emit(0, demb.data);
     }
 
     /// LM loss + dlogits. `logits` is consumed and overwritten with dloss/
@@ -535,6 +550,51 @@ fn lm_loss_blocks(
     }
 }
 
+/// Emits finalized gradient shards into a [`GradSink`] through ONE reused
+/// scratch buffer — the engine-side half of the streaming grad contract.
+/// GEMM-produced weight gradients are accumulated into `zeroed(n)` scratch
+/// (identical arithmetic to the old zeroed dense buffers) and handed to the
+/// sink with `emit`; reduction outputs that already own their buffer
+/// (rmsnorm dγ, the cls bias) go out directly via `emit_slice`. The scratch
+/// grows once to the largest tensor and is reused for every later shard, so
+/// the engine's dense-gradient residency is exactly one largest-tensor
+/// buffer.
+struct ShardEmitter<'s> {
+    sink: &'s mut dyn GradSink,
+    scratch: Vec<f32>,
+}
+
+impl ShardEmitter<'_> {
+    /// Zeroed scratch of length `n` for the next shard's accumulation.
+    fn zeroed(&mut self, n: usize) -> &mut [f32] {
+        self.scratch.clear();
+        self.scratch.resize(n, 0.0);
+        &mut self.scratch
+    }
+
+    /// Hand the current scratch contents to the sink as shard `idx`.
+    fn emit(&mut self, idx: usize) {
+        self.sink.consume(idx, &self.scratch);
+    }
+
+    /// Emit a shard the caller already owns (no scratch staging).
+    fn emit_slice(&mut self, idx: usize, data: &[f32]) {
+        self.sink.consume(idx, data);
+    }
+
+    /// Take the zeroed scratch by value (the embedding scatter wraps it in
+    /// a `Tensor`); pair with [`Self::restore_and_emit`].
+    fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        self.zeroed(n);
+        std::mem::take(&mut self.scratch)
+    }
+
+    fn restore_and_emit(&mut self, idx: usize, data: Vec<f32>) {
+        self.scratch = data;
+        self.emit(idx);
+    }
+}
+
 /// Per-layer forward activations kept for the backward pass.
 struct LayerCache {
     x0: Tensor,
@@ -572,20 +632,15 @@ impl super::Backend for NativeBackend {
         store: &ParamStore,
         tokens: &[i32],
         targets: Targets<'_>,
-        grads_out: &mut [Vec<f32>],
+        sink: &mut dyn GradSink,
     ) -> Result<f64> {
         let t0 = std::time::Instant::now();
         self.check_targets(&targets)?;
-        if grads_out.len() != self.specs.len() {
-            bail!("grads_out has {} tensors, want {}", grads_out.len(), self.specs.len());
-        }
-        for g in grads_out.iter_mut() {
-            g.iter_mut().for_each(|x| *x = 0.0);
-        }
         let tok_idx = self.tok_indices(tokens)?;
         let (b, t) = (self.batch, self.seq);
         let d = self.preset.d_model;
         let (xf, rf, final_x, caches) = self.trunk_forward(store, &tok_idx, true);
+        let mut em = ShardEmitter { sink, scratch: Vec::new() };
 
         let loss = match targets {
             Targets::Lm(tgts) => {
@@ -605,9 +660,10 @@ impl super::Backend for NativeBackend {
                     }
                 }
                 logits.scale(inv);
-                gemm::matmul_tn_acc(&mut grads_out[self.idx_head()], &xf, &logits);
+                gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_head())), &xf, &logits);
+                em.emit(self.idx_head());
                 let dxf = logits.matmul_nt(&lm_head); // [N, d]
-                self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, grads_out);
+                self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, &mut em);
                 loss_sum / count
             }
             Targets::Cls(_) | Targets::Reg(_) => {
@@ -674,13 +730,15 @@ impl super::Backend for NativeBackend {
                     dl2.scale(1.0 / b as f32);
                     (loss / b as f64, dl2)
                 };
-                gemm::matmul_tn_acc(&mut grads_out[self.idx_head()], &pooled, &dlogits);
-                let dbias = &mut grads_out[self.idx_bias()];
+                gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_head())), &pooled, &dlogits);
+                em.emit(self.idx_head());
+                let mut dbias = vec![0.0f32; self.specs[self.idx_bias()].numel()];
                 for bi in 0..b {
                     for j in 0..dlogits.cols() {
                         dbias[j] += dlogits.data[bi * dlogits.cols() + j];
                     }
                 }
+                em.emit_slice(self.idx_bias(), &dbias);
                 let dpooled = dlogits.matmul_nt(&w); // [b, d]
                 // dxf[bi, ti, :] = dpooled[bi, :] / t
                 let mut dxf = Tensor::zeros(&[b * t, d]);
@@ -694,7 +752,7 @@ impl super::Backend for NativeBackend {
                         }
                     }
                 }
-                self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, grads_out);
+                self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, &mut em);
                 loss
             }
         };
@@ -1095,14 +1153,6 @@ fn write_head_slice(dst: &mut Tensor, bi: usize, t: usize, hi: usize, dh: usize,
     }
 }
 
-/// dst += src (weight-gradient accumulation).
-fn acc(dst: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(dst.len(), src.len());
-    for (a, b) in dst.iter_mut().zip(src) {
-        *a += b;
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1304,7 +1354,9 @@ mod tests {
             let tokens: Vec<i32> = (0..16).map(|i| (7 * i + 3) % 256).collect();
             let targets: Vec<i32> = (0..16).map(|i| (7 * i + 10) % 256).collect();
             let mut g: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
-            let l = be.forward_backward(&store, &tokens, Targets::Lm(&targets), &mut g).unwrap();
+            let l = be
+                .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut g)
+                .unwrap();
             (l, g)
         };
         let (lb, gb) = run(true);
@@ -1378,8 +1430,12 @@ mod tests {
         let targets: Vec<i32> = (0..16).map(|i| (7 * i + 10) % 256).collect();
         let mut g1: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
         let mut g2 = g1.clone();
-        let l1 = be.forward_backward(&store, &tokens, Targets::Lm(&targets), &mut g1).unwrap();
-        let l2 = be.forward_backward(&store, &tokens, Targets::Lm(&targets), &mut g2).unwrap();
+        let l1 = be
+            .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut g1)
+            .unwrap();
+        let l2 = be
+            .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut g2)
+            .unwrap();
         assert_eq!(l1, l2, "native engine must be bitwise deterministic");
         assert_eq!(g1, g2);
         assert!(l1 > 0.0 && l1.is_finite());
@@ -1401,7 +1457,9 @@ mod tests {
         let tokens: Vec<i32> = (0..32).map(|i| (5 * i + 1) % 256).collect();
         let labels = vec![0i32, 1, 2, 1];
         let mut g: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
-        let loss = be.forward_backward(&store, &tokens, Targets::Cls(&labels), &mut g).unwrap();
+        let loss = be
+            .forward_backward_dense(&store, &tokens, Targets::Cls(&labels), &mut g)
+            .unwrap();
         assert!((loss - (3f64).ln()).abs() < 0.5, "cls loss {loss}"); // ~uniform
         let ev = be.eval_batch(&store, &tokens, Targets::Cls(&labels)).unwrap();
         assert_eq!(ev.preds.len(), 4);
@@ -1413,7 +1471,7 @@ mod tests {
         let labels_f = vec![0.1f32, 0.9, 0.4, 0.6];
         let mut rg: Vec<Vec<f32>> = rspecs.iter().map(|s| vec![0.0; s.numel()]).collect();
         let rloss =
-            rb.forward_backward(&rstore, &tokens, Targets::Reg(&labels_f), &mut rg).unwrap();
+            rb.forward_backward_dense(&rstore, &tokens, Targets::Reg(&labels_f), &mut rg).unwrap();
         assert!(rloss.is_finite() && rloss >= 0.0);
         let rev = rb.eval_batch(&rstore, &tokens, Targets::Reg(&labels_f)).unwrap();
         assert_eq!(rev.preds.len(), 4);
@@ -1428,14 +1486,14 @@ mod tests {
         let mut g: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0; s.numel()]).collect();
         let bad_tok = vec![300i32; 16];
         let tgts = vec![0i32; 16];
-        assert!(be.forward_backward(&store, &bad_tok, Targets::Lm(&tgts), &mut g).is_err());
+        assert!(be.forward_backward_dense(&store, &bad_tok, Targets::Lm(&tgts), &mut g).is_err());
         let short = vec![0i32; 4];
-        assert!(be.forward_backward(&store, &short, Targets::Lm(&tgts), &mut g).is_err());
+        assert!(be.forward_backward_dense(&store, &short, Targets::Lm(&tgts), &mut g).is_err());
         assert!(NativeBackend::with_shape("nope", "lm", 0, 2, 8).is_err());
         assert!(NativeBackend::with_shape("nano", "wat", 0, 2, 8).is_err());
         // targets kind must match the head
         let ok_tok = vec![0i32; 16];
         let labels = vec![0i32, 1];
-        assert!(be.forward_backward(&store, &ok_tok, Targets::Cls(&labels), &mut g).is_err());
+        assert!(be.forward_backward_dense(&store, &ok_tok, Targets::Cls(&labels), &mut g).is_err());
     }
 }

@@ -20,6 +20,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{EvalOut, Targets};
 use crate::config::TrainConfig;
+use crate::grads::GradSink;
 use crate::model::ParamStore;
 use crate::runtime::{self, copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime};
 
@@ -187,7 +188,7 @@ impl super::Backend for PjrtBackend {
         store: &ParamStore,
         tokens: &[i32],
         targets: Targets<'_>,
-        grads_out: &mut [Vec<f32>],
+        sink: &mut dyn GradSink,
     ) -> Result<f64> {
         let (b, t) = (self.train_art.batch, self.train_art.seq);
         self.sync_param_lits(store)?;
@@ -195,13 +196,19 @@ impl super::Backend for PjrtBackend {
         let tgt_lit = self.target_literal(targets, b, t)?;
         let art_id = self.train_art.id.clone();
         let outs = self.execute(&art_id, &tok_lit, &tgt_lit)?;
-        if outs.len() != 1 + grads_out.len() {
-            bail!("artifact returned {} outputs, want {}", outs.len(), 1 + grads_out.len());
+        let n_params = self.train_art.params.len();
+        if outs.len() != 1 + n_params {
+            bail!("artifact returned {} outputs, want {}", outs.len(), 1 + n_params);
         }
         let t2 = std::time::Instant::now();
         let loss = scalar_f32(&outs[0])? as f64;
-        for (g, o) in grads_out.iter_mut().zip(&outs[1..]) {
-            copy_f32_into(o, g)?;
+        // untuple the device result through ONE reusable host buffer, one
+        // shard per sink call in spec order — host-side grad residency is
+        // `sink retention + largest tensor`, same bound as the native engine
+        let mut scratch: Vec<f32> = Vec::new();
+        for (i, o) in outs[1..].iter().enumerate() {
+            copy_f32_into(o, &mut scratch)?;
+            sink.consume(i, &scratch);
         }
         self.phase[2] += t2.elapsed().as_secs_f64();
         Ok(loss)

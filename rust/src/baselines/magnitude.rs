@@ -5,10 +5,11 @@
 //! steps (§2.1, Tables 3-5). Tracks q — the fraction of UNIQUE coordinates
 //! ever updated — which is the quantity the paper analyses.
 
-use super::{StepInfo, Strategy};
+use super::{SparseOutcome, SparsePlan, StepInfo, Strategy};
+use crate::grads::{MaskedSink, Retain};
 use crate::memory::MemBreakdown;
 use crate::model::ParamStore;
-use crate::optim::masked_adam::{masked_adam_step, BitMask, LayerState};
+use crate::optim::masked_adam::{masked_adam_step, masked_adam_step_compact, BitMask, LayerState};
 use crate::optim::AdamHypers;
 use crate::tensor::kth_largest_abs;
 
@@ -26,6 +27,9 @@ pub struct Magnitude {
     adam_step: u64,
     n_params: u64,
     selected_once: bool,
+    /// whether the live streaming plan's `sparse_plan` ran a re-selection
+    /// (carried into `step_sparse`'s StepInfo)
+    pending_reselect: bool,
 }
 
 impl Magnitude {
@@ -41,6 +45,7 @@ impl Magnitude {
             adam_step: 0,
             n_params: sizes.iter().map(|&s| s as u64).sum(),
             selected_once: false,
+            pending_reselect: false,
         }
     }
 
@@ -94,6 +99,28 @@ impl Magnitude {
     pub fn active_coords(&self) -> u64 {
         self.states.iter().map(|s| s.mask.popcount as u64).sum()
     }
+
+    /// §2.1 re-selection cadence: once at t=0, then every `update_every`
+    /// steps (0 = fixed selection). Depends only on the step counter — and
+    /// `select` reads weights, not gradients — which is why the streaming
+    /// route can re-select BEFORE the fwd/bwd and retain exactly the new
+    /// masks' coordinates.
+    fn reselect_due(&self, step: usize) -> bool {
+        !self.selected_once
+            || (self.update_every > 0 && step > 0 && step % self.update_every == 0)
+    }
+
+    fn mem_breakdown(&self) -> MemBreakdown {
+        let active = self.active_coords();
+        MemBreakdown {
+            weights: self.n_params * 4,
+            grads: active * 4,
+            optim_m: active * 4,
+            optim_v: active * 4,
+            extra: self.ever_updated.iter().map(|m| m.bytes()).sum(),
+            activations: 0,
+        }
+    }
 }
 
 impl Strategy for Magnitude {
@@ -105,8 +132,7 @@ impl Strategy for Magnitude {
         lr: f64,
         step: usize,
     ) -> StepInfo {
-        let reselect = !self.selected_once
-            || (self.update_every > 0 && step > 0 && step % self.update_every == 0);
+        let reselect = self.reselect_due(step);
         if reselect {
             self.select(store);
         }
@@ -122,20 +148,67 @@ impl Strategy for Magnitude {
                 &self.hypers,
             ) as u64;
         }
-        let active = self.active_coords();
         StepInfo {
             updated_coords: updated,
             reselected: reselect,
-            mem: MemBreakdown {
-                weights: self.n_params * 4,
-                grads: active * 4,
-                optim_m: active * 4,
-                optim_v: active * 4,
-                extra: self.ever_updated.iter().map(|m| m.bytes()).sum(),
-                activations: 0,
-            },
+            mem: self.mem_breakdown(),
             active_layers: Vec::new(),
         }
+    }
+
+    /// Magnitude's masks come from |W|, never from gradients, so the whole
+    /// step fits the compact streaming route at any grad_accum: re-select
+    /// from the (pre-step) weights here, then retain exactly the masked
+    /// coordinates. Identical masks and update bits to the dense path,
+    /// which re-selects from the same pre-update weights inside `step`.
+    fn sparse_plan(
+        &mut self,
+        store: &ParamStore,
+        _grad_accum: usize,
+        step: usize,
+    ) -> Option<SparsePlan> {
+        let reselect = self.reselect_due(step);
+        if reselect {
+            self.select(store);
+        }
+        self.pending_reselect = reselect;
+        Some(SparsePlan {
+            retain: self
+                .states
+                .iter()
+                .enumerate()
+                .map(|(li, st)| (li, Retain::Mask(st.mask.clone())))
+                .collect(),
+        })
+    }
+
+    fn step_sparse(
+        &mut self,
+        store: &mut ParamStore,
+        sink: &MaskedSink,
+        _loss: f64,
+        lr: f64,
+        _step: usize,
+    ) -> SparseOutcome {
+        self.adam_step += 1;
+        let mut updated = 0u64;
+        for (li, st) in self.states.iter_mut().enumerate() {
+            let gc = sink.values(li).expect("every layer is masked-retained");
+            updated += masked_adam_step_compact(
+                &mut store.bufs[li],
+                gc,
+                st,
+                self.adam_step,
+                lr,
+                &self.hypers,
+            ) as u64;
+        }
+        SparseOutcome::Done(StepInfo {
+            updated_coords: updated,
+            reselected: self.pending_reselect,
+            mem: self.mem_breakdown(),
+            active_layers: Vec::new(),
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -203,5 +276,52 @@ mod tests {
         let (mut m, _, _) = setup(0.5, 0);
         let (before, after) = testutil::quadratic_descends(&mut m, 300);
         assert!(after < before * 0.8, "before={before} after={after}");
+    }
+
+    /// Streaming-vs-dense parity: identical shards through a MaskedSink
+    /// must update the same coordinates to the same bits as the dense
+    /// path, across re-selection boundaries and grad accumulation.
+    #[test]
+    fn streaming_route_matches_dense_route_bitwise() {
+        use crate::grads::{GradSink, MaskedSink};
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        for accum in [1usize, 2] {
+            let (mut dense, mut store_d, _) = setup(0.8, 3);
+            let (mut sparse, mut store_s, _) = setup(0.8, 3);
+            let scale = 1.0 / accum as f32;
+            for t in 0..8 {
+                let micros: Vec<Vec<Vec<f32>>> = (0..accum)
+                    .map(|k| testutil::rand_grads(&sizes, 40 + (t * accum + k) as u64))
+                    .collect();
+                let acc = testutil::accum_reference(&micros, &sizes);
+                let id = dense.step(&mut store_d, &acc, 1.0, 5e-2, t);
+                let plan = sparse.sparse_plan(&store_s, accum, t).expect("magnitude streams");
+                let mut sink = MaskedSink::new(sizes.len(), plan.retain, scale);
+                for (k, m) in micros.iter().enumerate() {
+                    sink.begin_micro(k == 0);
+                    for (l, g) in m.iter().enumerate() {
+                        sink.consume(l, g);
+                    }
+                }
+                let is = match sparse.step_sparse(&mut store_s, &sink, 1.0, 5e-2, t) {
+                    crate::baselines::SparseOutcome::Done(info) => info,
+                    _ => panic!("magnitude never replays"),
+                };
+                assert_eq!(id.reselected, is.reselected, "step {t} accum {accum}");
+                assert_eq!(id.updated_coords, is.updated_coords, "step {t} accum {accum}");
+                assert_eq!(id.mem, is.mem, "step {t} accum {accum}");
+                for (li, (a, b)) in store_d.bufs.iter().zip(&store_s.bufs).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "param {li}[{i}] diverged at step {t} (accum {accum})"
+                        );
+                    }
+                }
+            }
+            assert_eq!(dense.unique_updated_frac(), sparse.unique_updated_frac());
+        }
     }
 }

@@ -1,9 +1,15 @@
 //! Optimization strategies: the paper's comparison set behind one trait.
 //!
-//! The trainer executes the AOT fwd/bwd artifact and hands each strategy the
-//! full gradient set; the strategy owns *which* coordinates move and what
+//! The trainer drives the execution backend's fwd/bwd and routes gradients
+//! to the strategy; the strategy owns *which* coordinates move and what
 //! optimizer state exists — that difference is exactly what the paper
-//! compares (loss, peak memory, wall-clock).
+//! compares (loss, peak memory, wall-clock). Two gradient routes exist:
+//! the dense path (`step`, full gradient set staged by `grads::AccumSink` —
+//! what FFT/GaLore/LoRA/BAdam consume, since their math wants whole
+//! tensors) and the streaming path (`sparse_plan`/`step_sparse`, compact
+//! `grads::MaskedSink` retention — BlockLLM and Magnitude, whose updates
+//! only ever read masked coordinates). Both routes are bitwise-identical in
+//! what they compute; they differ only in gradient residency.
 
 pub mod badam;
 pub mod fft;
@@ -11,6 +17,7 @@ pub mod galore;
 pub mod lora;
 pub mod magnitude;
 
+use crate::grads::{MaskedSink, Retain};
 use crate::memory::MemBreakdown;
 use crate::model::ParamStore;
 
@@ -27,6 +34,32 @@ pub struct StepInfo {
     pub active_layers: Vec<usize>,
 }
 
+/// Retention plan for the streaming-gradient path (`PALLAS_GRAD_STREAM=1`):
+/// which layers a `grads::MaskedSink` must keep across the upcoming step's
+/// microbatches, and how. Layers absent from the plan are dropped after
+/// their streaming norm is taken.
+#[derive(Debug)]
+pub struct SparsePlan {
+    pub retain: Vec<(usize, Retain)>,
+}
+
+/// Outcome of a streamed optimizer step.
+pub enum SparseOutcome {
+    /// The step completed from the sink's compact retention alone.
+    Done(StepInfo),
+    /// Selection event (accum == 1): the caller must replay the step's
+    /// microbatches into a `MaskedSink` with this retention — masks built
+    /// on arrival, so residency stays within the streaming bound — and
+    /// finish via [`Strategy::step_selected`].
+    Replay(Vec<(usize, Retain)>),
+    /// Selection event under grad accumulation: accumulated-gradient norms
+    /// have cross-microbatch terms no streaming reduction can reconstruct,
+    /// so the caller must replay into dense staging buffers and finish via
+    /// [`Strategy::step_selected_dense`]. Costs one step of dense-path
+    /// memory, only on (patience-gated, rare) selection events.
+    ReplayDense,
+}
+
 /// A training method (BlockLLM or a baseline).
 pub trait Strategy {
     /// Consume this step's loss + full gradient set, update `store` in
@@ -41,6 +74,62 @@ pub trait Strategy {
     ) -> StepInfo;
 
     fn name(&self) -> &'static str;
+
+    /// Streaming-gradient support. A strategy that can consume compact
+    /// shards returns the retention plan for the upcoming step (called
+    /// BEFORE the fwd/bwd; `store` holds the pre-step weights); `None` —
+    /// the default, used by the dense baselines — keeps the trainer on the
+    /// dense staging path via `grads::AccumSink`.
+    fn sparse_plan(
+        &mut self,
+        _store: &ParamStore,
+        _grad_accum: usize,
+        _step: usize,
+    ) -> Option<SparsePlan> {
+        None
+    }
+
+    /// One optimizer step from a `MaskedSink`'s retained data (only called
+    /// after `sparse_plan` returned `Some`). Must produce bitwise the same
+    /// parameter updates as `step` fed dense gradients — the streaming
+    /// contract `tests/grad_check.rs` pins.
+    fn step_sparse(
+        &mut self,
+        _store: &mut ParamStore,
+        _sink: &MaskedSink,
+        _loss: f64,
+        _lr: f64,
+        _step: usize,
+    ) -> SparseOutcome {
+        unreachable!("{}: step_sparse without a sparse_plan", self.name())
+    }
+
+    /// Finish a `SparseOutcome::Replay` selection step from the replay
+    /// sink's on-arrival masks + compact values.
+    fn step_selected(
+        &mut self,
+        _store: &mut ParamStore,
+        _sink: MaskedSink,
+        _loss: f64,
+        _lr: f64,
+        _step: usize,
+    ) -> StepInfo {
+        unreachable!("{}: step_selected without a Replay outcome", self.name())
+    }
+
+    /// Finish a `SparseOutcome::ReplayDense` selection step from dense
+    /// accumulated gradients (the loss was already observed by
+    /// `step_sparse`; implementations must not re-observe it).
+    fn step_selected_dense(
+        &mut self,
+        _store: &mut ParamStore,
+        _grads: &[Vec<f32>],
+        _loss: f64,
+        _lr: f64,
+        _step: usize,
+    ) -> StepInfo {
+        unreachable!("{}: step_selected_dense without a ReplayDense outcome", self.name())
+    }
 
     /// Gradient elements the method must materialize simultaneously on the
     /// accelerator (the paper's memory model; the CPU artifact always
@@ -118,6 +207,28 @@ pub(crate) mod testutil {
     pub fn rand_grads(sizes: &[usize], seed: u64) -> Vec<Vec<f32>> {
         let mut rng = Pcg64::new(seed);
         sizes.iter().map(|&n| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    /// Dense reference for the trainer's `grads::AccumSink` arithmetic
+    /// (first microbatch: plain copy at accum 1, else `scale·g`; later
+    /// microbatches: `+= scale·g`). The streaming-vs-dense parity tests
+    /// feed their dense route through this so both strategy suites pin
+    /// against ONE accumulation contract.
+    pub fn accum_reference(micros: &[Vec<Vec<f32>>], sizes: &[usize]) -> Vec<Vec<f32>> {
+        let scale = 1.0 / micros.len() as f32;
+        let mut acc: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        for (k, m) in micros.iter().enumerate() {
+            for (a, g) in acc.iter_mut().zip(m) {
+                if k == 0 && micros.len() == 1 {
+                    a.copy_from_slice(g);
+                } else if k == 0 {
+                    a.iter_mut().zip(g).for_each(|(x, &v)| *x = scale * v);
+                } else {
+                    a.iter_mut().zip(g).for_each(|(x, &v)| *x += scale * v);
+                }
+            }
+        }
+        acc
     }
 
     /// Quadratic bowl: loss = 0.5||W||², grad = W. Any sane optimizer must

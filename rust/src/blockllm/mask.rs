@@ -13,26 +13,35 @@ use crate::optim::masked_adam::BitMask;
 
 use super::selector::Selection;
 
-/// Build per-layer masks for a selection. `grads[l]` must hold the gradient
-/// buffer for each selected layer l (others may be empty).
-pub fn build_masks(
-    sel: &Selection,
-    grads: &[Vec<f32>],
-    mode: MaskMode,
-) -> Vec<(usize, BitMask)> {
+/// Per-layer mask recipe, decided by selection geometry alone (layer sizes
+/// + budget — no gradient values needed). The streaming path resolves each
+/// rule against a layer's gradient shard the moment it arrives
+/// (`grads::Retain::{All, TopK}`), so selection events never require every
+/// selected layer's dense gradient to coexist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskRule {
+    /// keep every coordinate (all-set mask, zeros included)
+    All,
+    /// keep exactly the top-k coordinates by |G̃| (ties to lower index)
+    TopK(usize),
+}
+
+/// The per-layer mask rules for a selection, in `sel.layers` order.
+/// `sizes[l]` is layer l's coordinate count.
+pub fn mask_plan(sel: &Selection, sizes: &[usize], mode: MaskMode) -> Vec<(usize, MaskRule)> {
     let mut out = Vec::with_capacity(sel.layers.len());
     match mode {
         MaskMode::DenseLayers => {
             for &l in &sel.layers {
-                out.push((l, BitMask::all_set(grads[l].len())));
+                out.push((l, MaskRule::All));
             }
         }
         MaskMode::Alg2 => {
             // paper-literal: every selected layer masked with the same keep
             // fraction, exact top-k on its own |G̃| so the budget holds
             for &l in &sel.layers {
-                let k = ((grads[l].len() as f64) * sel.keep_frac).floor() as usize;
-                out.push((l, BitMask::top_k(&grads[l], k)));
+                let k = ((sizes[l] as f64) * sel.keep_frac).floor() as usize;
+                out.push((l, MaskRule::TopK(k)));
             }
         }
         MaskMode::OvershootOnly => {
@@ -40,19 +49,42 @@ pub fn build_masks(
             // trimmed so the total lands on the budget
             let mut covered = 0usize;
             for (i, &l) in sel.layers.iter().enumerate() {
-                let n = grads[l].len();
+                let n = sizes[l];
                 if i + 1 < sel.layers.len() || covered + n <= sel.n_s {
-                    out.push((l, BitMask::all_set(n)));
+                    out.push((l, MaskRule::All));
                     covered += n;
                 } else {
                     let remaining = sel.n_s.saturating_sub(covered).max(1);
-                    out.push((l, BitMask::top_k(&grads[l], remaining)));
+                    out.push((l, MaskRule::TopK(remaining)));
                     covered += remaining;
                 }
             }
         }
     }
     out
+}
+
+/// Resolve one rule against a layer's gradient.
+pub fn mask_from_rule(rule: MaskRule, grad: &[f32]) -> BitMask {
+    match rule {
+        MaskRule::All => BitMask::all_set(grad.len()),
+        MaskRule::TopK(k) => BitMask::top_k(grad, k),
+    }
+}
+
+/// Build per-layer masks for a selection. `grads[l]` must hold the gradient
+/// buffer for each selected layer l (others may be empty). Equivalent to
+/// resolving [`mask_plan`] layer by layer — the dense-path formulation.
+pub fn build_masks(
+    sel: &Selection,
+    grads: &[Vec<f32>],
+    mode: MaskMode,
+) -> Vec<(usize, BitMask)> {
+    let sizes: Vec<usize> = grads.iter().map(Vec::len).collect();
+    mask_plan(sel, &sizes, mode)
+        .into_iter()
+        .map(|(l, rule)| (l, mask_from_rule(rule, &grads[l])))
+        .collect()
 }
 
 /// Total active coordinates across a mask set.

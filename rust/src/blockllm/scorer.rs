@@ -89,12 +89,30 @@ impl NormDictionary {
     /// Record a freshly-computed gradient for layer `l` at `step`.
     pub fn record(&mut self, l: usize, grad: &[f32], step: usize) {
         let sq: f64 = grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        self.record_sq(l, sq, grad.len(), step);
+    }
+
+    /// Record from a precomputed Σg² over a `len`-element gradient — the
+    /// streaming sinks' reduction (`grads::NormProbeSink` folds the same
+    /// ascending-order f64 sum `record` does, so the resulting norm is
+    /// bitwise identical to one computed on a materialized vector).
+    pub fn record_sq(&mut self, l: usize, sq: f64, len: usize, step: usize) {
         let norm = match self.norm_kind {
             NormKind::Fro => sq.sqrt(),
-            NormKind::Rms => (sq / grad.len().max(1) as f64).sqrt(),
+            NormKind::Rms => (sq / len.max(1) as f64).sqrt(),
         };
         self.norms[l] = norm;
         self.last_update[l] = step;
+    }
+
+    /// What [`Self::layers_to_probe`] WOULD return, without advancing the
+    /// dictionary's rng or touching staleness state. The streaming trainer
+    /// peeks the probe set before the fwd/bwd (to plan dense retention under
+    /// grad accumulation); the real call happens after the loss is known —
+    /// and only on non-selection steps, exactly as the dense path does — so
+    /// the rng consumption sequence stays bitwise identical between paths.
+    pub fn peek_layers_to_probe(&self, active: &[usize], p: usize, step: usize) -> Vec<usize> {
+        self.clone().layers_to_probe(active, p, step)
     }
 
     /// Record a precomputed norm (used when the caller already reduced).
@@ -174,6 +192,33 @@ mod tests {
         let mut e = extras.clone();
         e.sort_unstable();
         assert_eq!(e, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn record_sq_matches_record_bitwise() {
+        for kind in [NormKind::Fro, NormKind::Rms] {
+            let mut a = NormDictionary::new(1, kind, 1);
+            let mut b = NormDictionary::new(1, kind, 1);
+            let g = [0.3f32, -1.7, 0.0, 4.2, -0.001];
+            a.record(0, &g, 3);
+            let sq: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            b.record_sq(0, sq, g.len(), 3);
+            assert_eq!(a.norms[0].to_bits(), b.norms[0].to_bits());
+            assert_eq!(b.last_update[0], 3);
+        }
+    }
+
+    #[test]
+    fn peek_probe_matches_real_probe_and_leaves_rng_untouched() {
+        let mut d = dict(12);
+        for l in 0..4 {
+            d.record(l, &[1.0], 1);
+        }
+        let peek1 = d.peek_layers_to_probe(&[0], 3, 2);
+        let peek2 = d.peek_layers_to_probe(&[0], 3, 2);
+        assert_eq!(peek1, peek2, "peek must not advance the rng");
+        let real = d.layers_to_probe(&[0], 3, 2);
+        assert_eq!(peek1, real, "peek must predict the committed probe set");
     }
 
     #[test]

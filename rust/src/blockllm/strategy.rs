@@ -8,17 +8,35 @@
 //! (5) refresh the active layers' dictionary entries with true
 //! processed-gradient norms ||G̃|| (the paper's criterion; inactive layers
 //! necessarily carry raw-gradient norms — DESIGN.md §6.2).
+//!
+//! Two gradient routes implement the identical math:
+//! * **dense** (`step`): the trainer stages full gradients; the legacy
+//!   parity reference (`--grad-stream 0`).
+//! * **streaming** (`sparse_plan`/`step_sparse`/`step_selected`): gradients
+//!   arrive as per-layer shards through a `grads::MaskedSink`. Non-selection
+//!   steps consume only the active block's compact coordinates plus
+//!   streaming norms — the paper's O(active + largest-layer) residency. A
+//!   selection event (patience-gated) asks the trainer to REPLAY the step's
+//!   microbatches: at accum == 1 the replay retains only each selected
+//!   layer's top-k coordinates (mask built on the live shard), keeping the
+//!   bound even while selecting; under grad accumulation the replay falls
+//!   back to dense staging, because an accumulated gradient's norm has
+//!   cross-microbatch terms no per-shard reduction can reconstruct. Both
+//!   routes produce bit-for-bit identical losses, dictionary norms, rng
+//!   consumption, and parameter updates — pinned by the unit tests below
+//!   and end-to-end by tests/grad_check.rs.
 
-use crate::baselines::{StepInfo, Strategy};
+use crate::baselines::{SparseOutcome, SparsePlan, StepInfo, Strategy};
 use crate::config::{MaskMode, Method, NormKind, StatePolicy, TrainConfig};
+use crate::grads::{MaskedSink, Retain};
 use crate::memory::{profiles, MemBreakdown};
 use crate::model::ParamStore;
-use crate::optim::masked_adam::{masked_adam_step, LayerState};
+use crate::optim::masked_adam::{masked_adam_step, masked_adam_step_compact, BitMask, LayerState};
 use crate::optim::{AdamHypers, SparseAdamState};
 
-use super::mask::build_masks;
+use super::mask::{build_masks, mask_plan, MaskRule};
 use super::scorer::NormDictionary;
-use super::selector::{select_layers, SelectionRule};
+use super::selector::{select_layers, Selection, SelectionRule};
 use super::PatienceController;
 
 pub struct BlockLlmStrategy {
@@ -41,6 +59,11 @@ pub struct BlockLlmStrategy {
     offloaded: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)>,
     /// telemetry: number of selection events
     pub n_selections: u64,
+    /// grad_accum the live streaming plan was built for (selects between
+    /// compact-with-streamed-norms and dense-probe retention)
+    plan_accum: usize,
+    /// selection computed by `step_sparse`, consumed by `step_selected`
+    pending: Option<Selection>,
 }
 
 impl BlockLlmStrategy {
@@ -70,6 +93,8 @@ impl BlockLlmStrategy {
             state_policy: StatePolicy::Reset,
             offloaded: std::collections::HashMap::new(),
             n_selections: 0,
+            plan_accum: 1,
+            pending: None,
         }
     }
 
@@ -119,20 +144,75 @@ impl BlockLlmStrategy {
             NormKind::Rms => (sq / cnt.max(1) as f64).sqrt(),
         }
     }
-}
 
-impl Strategy for BlockLlmStrategy {
-    fn step(
+    /// The paper's optimizer reset on re-selection (steps (3) of Alg. 1):
+    /// drop — or under `StatePolicy::Offload`, stash and partially restore —
+    /// the old block's moments, and rebuild the sparse state over the new
+    /// masks. Shared verbatim by the dense and streaming routes so their
+    /// state transitions cannot drift.
+    fn apply_selection(&mut self, masks: Vec<(usize, BitMask)>) {
+        let prev_step = self.state.step;
+        if self.state_policy == StatePolicy::Offload {
+            // stash the outgoing block's moments host-side (paper §2.2:
+            // the rejected alternative)
+            let old = std::mem::take(&mut self.state);
+            for (li, lst) in old.layers {
+                self.offloaded.insert(li, (lst.m, lst.v));
+            }
+        }
+        // dropping the old state IS the paper's optimizer reset
+        self.state = SparseAdamState::new(masks, &self.sizes);
+        if self.state_policy == StatePolicy::Offload {
+            for (li, lst) in self.state.layers.iter_mut() {
+                if let Some((m, v)) = self.offloaded.remove(li) {
+                    lst.m = m;
+                    lst.v = v;
+                }
+            }
+            // bias-correction step continues (restored moments are warm)
+            self.state.step = prev_step;
+        }
+        self.n_selections += 1;
+    }
+
+    /// Step (5): refresh active layers with processed-gradient norms.
+    fn refresh_processed_norms(&mut self, step: usize) {
+        let t = self.state.step;
+        let mut processed: Vec<(usize, f64)> = Vec::with_capacity(self.state.layers.len());
+        for (li, lst) in self.state.layers.iter() {
+            processed.push((*li, self.processed_norm(lst, t)));
+        }
+        for (li, n) in processed {
+            self.dict.record_norm(li, n, step);
+        }
+    }
+
+    fn step_info(&self, updated: u64, reselected: bool, probe_max: u64) -> StepInfo {
+        let active_coords = self.state.active_coords();
+        let mask_elems: u64 = self.state.layers.iter().map(|(_, s)| s.mask.len as u64).sum();
+        // modeled grad residency: active coords + the largest probed layer
+        let mem: MemBreakdown =
+            profiles::blockllm(self.n_params, active_coords, active_coords + probe_max, mask_elems);
+        StepInfo {
+            updated_coords: updated,
+            reselected,
+            mem,
+            active_layers: self.state.selected_layers(),
+        }
+    }
+
+    /// The dense-gradient step with the patience decision already made —
+    /// `step` observes the loss first; `step_selected_dense` (streaming
+    /// route, accumulated selection replay) forces `will_select` without
+    /// re-observing.
+    fn step_inner(
         &mut self,
         store: &mut ParamStore,
         grads: &[Vec<f32>],
-        loss: f64,
+        will_select: bool,
         lr: f64,
         step: usize,
     ) -> StepInfo {
-        // (2) patience decides whether this is a selection event
-        let will_select = self.patience.observe(loss);
-
         // (1) dictionary refresh. At selection events Alg. 2 scores EVERY
         // layer (||G_l|| is a streaming reduction during backward — no grad
         // storage needed); between events only the active block + p sampled
@@ -146,7 +226,6 @@ impl Strategy for BlockLlmStrategy {
         for &l in &probes {
             self.dict.record(l, &grads[l], step);
         }
-        // modeled grad residency: active coords + the largest probed layer
         let probe_max = probes.iter().map(|&l| self.sizes[l] as u64).max().unwrap_or(0);
 
         // (3) re-selection
@@ -155,28 +234,7 @@ impl Strategy for BlockLlmStrategy {
             let sel = select_layers(&self.dict, &self.sizes, self.sparsity, self.rule);
             let masks = build_masks(&sel, grads, self.mask_mode);
             self.dict.mark_selected(&sel.layers);
-            let prev_step = self.state.step;
-            if self.state_policy == StatePolicy::Offload {
-                // stash the outgoing block's moments host-side (paper §2.2:
-                // the rejected alternative)
-                let old = std::mem::take(&mut self.state);
-                for (li, lst) in old.layers {
-                    self.offloaded.insert(li, (lst.m, lst.v));
-                }
-            }
-            // dropping the old state IS the paper's optimizer reset
-            self.state = SparseAdamState::new(masks, &self.sizes);
-            if self.state_policy == StatePolicy::Offload {
-                for (li, lst) in self.state.layers.iter_mut() {
-                    if let Some((m, v)) = self.offloaded.remove(li) {
-                        lst.m = m;
-                        lst.v = v;
-                    }
-                }
-                // bias-correction step continues (restored moments are warm)
-                self.state.step = prev_step;
-            }
-            self.n_selections += 1;
+            self.apply_selection(masks);
             reselected = true;
         }
 
@@ -189,28 +247,174 @@ impl Strategy for BlockLlmStrategy {
                 masked_adam_step(&mut store.bufs[*li], &grads[*li], lst, t, lr, &self.hypers) as u64;
         }
 
-        // (5) refresh active layers with processed-gradient norms
-        let mut processed: Vec<(usize, f64)> = Vec::with_capacity(self.state.layers.len());
-        for (li, lst) in self.state.layers.iter() {
-            processed.push((*li, 0.0));
-            let n = self.processed_norm(lst, t);
-            processed.last_mut().expect("just pushed").1 = n;
-        }
-        for (li, n) in processed {
-            self.dict.record_norm(li, n, step);
+        self.refresh_processed_norms(step);
+        self.step_info(updated, reselected, probe_max)
+    }
+}
+
+impl Strategy for BlockLlmStrategy {
+    fn step(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo {
+        // (2) patience decides whether this is a selection event
+        let will_select = self.patience.observe(loss);
+        self.step_inner(store, grads, will_select, lr, step)
+    }
+
+    /// Streaming retention plan. At accum == 1, compact masks over the
+    /// active block suffice: every layer's norm streams through the sink's
+    /// embedded `NormProbeSink`. Under accumulation, probe-layer norms need
+    /// the ACCUMULATED vectors, so the probe candidates (always ⊇ the
+    /// active block) are retained densely instead — the probe set is peeked
+    /// with a cloned rng so the real rng advances exactly when the dense
+    /// path's would (in `step_sparse`, and only on non-selection steps).
+    fn sparse_plan(
+        &mut self,
+        _store: &ParamStore,
+        grad_accum: usize,
+        step: usize,
+    ) -> Option<SparsePlan> {
+        self.plan_accum = grad_accum.max(1);
+        let retain: Vec<(usize, Retain)> = if self.plan_accum == 1 {
+            self.state
+                .layers
+                .iter()
+                .map(|(li, lst)| (*li, Retain::Mask(lst.mask.clone())))
+                .collect()
+        } else {
+            let active = self.state.selected_layers();
+            self.dict
+                .peek_layers_to_probe(&active, self.sample_p, step)
+                .into_iter()
+                .map(|l| (l, Retain::Dense))
+                .collect()
+        };
+        Some(SparsePlan { retain })
+    }
+
+    fn step_sparse(
+        &mut self,
+        store: &mut ParamStore,
+        sink: &MaskedSink,
+        loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> SparseOutcome {
+        // (2) patience decides whether this is a selection event
+        let will_select = self.patience.observe(loss);
+
+        if will_select {
+            if self.plan_accum > 1 {
+                // accumulated selection: norms + masks need the accumulated
+                // dense gradients — hand the step back for a dense replay
+                return SparseOutcome::ReplayDense;
+            }
+            // (1) at selection events every layer is scored; the streamed
+            // Σg² sums ARE the dense `record` reduction bit for bit
+            for l in 0..self.sizes.len() {
+                self.dict.record_sq(l, sink.norm_sq(l), self.sizes[l], step);
+            }
+            let sel = select_layers(&self.dict, &self.sizes, self.sparsity, self.rule);
+            // per-layer mask recipes from selection geometry alone — the
+            // replay sink resolves each against the live shard (exact
+            // top-k on the same bits `build_masks` would see), so even a
+            // selection step stays within active + largest-layer residency
+            let retain: Vec<(usize, Retain)> = mask_plan(&sel, &self.sizes, self.mask_mode)
+                .into_iter()
+                .map(|(l, rule)| match rule {
+                    MaskRule::All => (l, Retain::All),
+                    MaskRule::TopK(k) => (l, Retain::TopK(k)),
+                })
+                .collect();
+            self.pending = Some(sel);
+            return SparseOutcome::Replay(retain);
         }
 
-        let active_coords = self.state.active_coords();
-        let mask_elems: u64 = self.state.layers.iter().map(|(_, s)| s.mask.len as u64).sum();
-        let mem: MemBreakdown =
-            profiles::blockllm(self.n_params, active_coords, active_coords + probe_max, mask_elems);
-
-        StepInfo {
-            updated_coords: updated,
-            reselected,
-            mem,
-            active_layers: self.state.selected_layers(),
+        // (1) non-selection refresh: active block + p sampled layers
+        let active = self.state.selected_layers();
+        let probes = self.dict.layers_to_probe(&active, self.sample_p, step);
+        for &l in &probes {
+            if self.plan_accum > 1 {
+                let g = sink.values(l).expect("probe layer retained densely under accumulation");
+                self.dict.record(l, g, step);
+            } else {
+                self.dict.record_sq(l, sink.norm_sq(l), self.sizes[l], step);
+            }
         }
+        let probe_max = probes.iter().map(|&l| self.sizes[l] as u64).max().unwrap_or(0);
+
+        // (4) masked sparse Adam over the active block's retained coords
+        self.state.step += 1;
+        let t = self.state.step;
+        let mut updated = 0u64;
+        for (li, lst) in self.state.layers.iter_mut() {
+            let g = sink.values(*li).expect("active layer retained by the plan");
+            let w = &mut store.bufs[*li];
+            updated += if self.plan_accum > 1 {
+                masked_adam_step(w, g, lst, t, lr, &self.hypers)
+            } else {
+                masked_adam_step_compact(w, g, lst, t, lr, &self.hypers)
+            } as u64;
+        }
+
+        self.refresh_processed_norms(step);
+        SparseOutcome::Done(self.step_info(updated, false, probe_max))
+    }
+
+    fn step_selected(
+        &mut self,
+        store: &mut ParamStore,
+        sink: MaskedSink,
+        _loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo {
+        let sel = self.pending.take().expect("step_selected without a pending selection");
+        // the replay sink resolved one mask per selected layer, in
+        // mask_plan (= sel.layers) order — the list build_masks would
+        // produce on the dense path, bit for bit
+        let mut masks = Vec::new();
+        let mut values = Vec::new();
+        for e in sink.into_entries() {
+            masks.push((e.idx, e.mask.expect("replay rules resolve masks on arrival")));
+            values.push((e.idx, e.values));
+        }
+        self.dict.mark_selected(&sel.layers);
+        self.apply_selection(masks);
+
+        // (4) first masked update of the new block, from the compact values
+        self.state.step += 1;
+        let t = self.state.step;
+        let mut updated = 0u64;
+        for ((li, lst), (vi, vals)) in self.state.layers.iter_mut().zip(&values) {
+            debug_assert_eq!(*li, *vi, "state/sink layer order mismatch");
+            updated +=
+                masked_adam_step_compact(&mut store.bufs[*li], vals, lst, t, lr, &self.hypers)
+                    as u64;
+        }
+
+        self.refresh_processed_norms(step);
+        // selection probes every layer: the largest layer was transiently live
+        let probe_max = self.sizes.iter().map(|&s| s as u64).max().unwrap_or(0);
+        self.step_info(updated, true, probe_max)
+    }
+
+    fn step_selected_dense(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[Vec<f32>],
+        _loss: f64,
+        lr: f64,
+        step: usize,
+    ) -> StepInfo {
+        // the loss was observed in step_sparse; this IS the dense selection
+        // branch, replayed on accumulated gradients
+        self.step_inner(store, grads, true, lr, step)
     }
 
     fn name(&self) -> &'static str {
@@ -239,6 +443,7 @@ impl Strategy for BlockLlmStrategy {
 mod tests {
     use super::*;
     use crate::baselines::testutil;
+    use crate::grads::GradSink;
 
     fn make(sparsity: f64, m: usize) -> BlockLlmStrategy {
         let sizes: Vec<usize> = testutil::toy_specs().iter().map(|s| s.numel()).collect();
@@ -388,6 +593,84 @@ mod tests {
         // warm restored moments accumulate across reselections -> larger
         assert!(m_off > m_reset, "offload {m_off} <= reset {m_reset}");
         assert!(step_off > 1, "offload must keep the Adam step counter");
+    }
+
+    /// THE streaming acceptance pin at the strategy level: fed identical
+    /// per-microbatch shards, the dense route (`step` on accumulated
+    /// gradients) and the streaming route (`sparse_plan`/`step_sparse`,
+    /// with selection replays) must produce bitwise-identical parameters,
+    /// dictionary norms, and telemetry — across selection events, at
+    /// accum 1 (compact + streamed norms + top-k replay) and accum 3
+    /// (dense probe retention + dense selection replay).
+    #[test]
+    fn streaming_route_matches_dense_route_bitwise() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        for accum in [1usize, 3] {
+            // patience 2 + a plateau-heavy loss schedule forces several
+            // mid-run selection events on both routes
+            let mut dense = make(0.7, 2);
+            let mut sparse = make(0.7, 2);
+            let mut store_d = ParamStore::init(&specs, 2);
+            let mut store_s = ParamStore::init(&specs, 2);
+            let scale = 1.0 / accum as f32;
+            for t in 0..12 {
+                let micros: Vec<Vec<Vec<f32>>> = (0..accum)
+                    .map(|k| testutil::rand_grads(&sizes, 100 + (t * accum + k) as u64))
+                    .collect();
+                let loss = if t % 4 == 0 { 5.0 } else { 5.0 - 0.01 * t as f64 };
+                // dense route: the trainer's AccumSink arithmetic
+                let acc = testutil::accum_reference(&micros, &sizes);
+                let id = dense.step(&mut store_d, &acc, loss, 1e-2, t);
+                // streaming route: plan -> shards through a MaskedSink
+                let plan = sparse.sparse_plan(&store_s, accum, t).expect("blockllm streams");
+                let mut sink = MaskedSink::new(sizes.len(), plan.retain, scale);
+                for (k, m) in micros.iter().enumerate() {
+                    sink.begin_micro(k == 0);
+                    for (l, g) in m.iter().enumerate() {
+                        sink.consume(l, g);
+                    }
+                }
+                let is = match sparse.step_sparse(&mut store_s, &sink, loss, 1e-2, t) {
+                    SparseOutcome::Done(info) => info,
+                    SparseOutcome::Replay(retain) => {
+                        assert_eq!(accum, 1, "compact replay only at accum 1");
+                        let mut rsink = MaskedSink::new(sizes.len(), retain, scale);
+                        rsink.begin_micro(true);
+                        for (l, g) in micros[0].iter().enumerate() {
+                            rsink.consume(l, g);
+                        }
+                        sparse.step_selected(&mut store_s, rsink, loss, 1e-2, t)
+                    }
+                    SparseOutcome::ReplayDense => {
+                        assert!(accum > 1, "dense replay only under accumulation");
+                        sparse.step_selected_dense(&mut store_s, &acc, loss, 1e-2, t)
+                    }
+                };
+                assert_eq!(id.reselected, is.reselected, "step {t} accum {accum}");
+                assert_eq!(id.updated_coords, is.updated_coords, "step {t} accum {accum}");
+                assert_eq!(id.active_layers, is.active_layers, "step {t} accum {accum}");
+                assert_eq!(id.mem, is.mem, "step {t} accum {accum}");
+                for (li, (a, b)) in store_d.bufs.iter().zip(&store_s.bufs).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "param {li}[{i}] diverged at step {t} (accum {accum})"
+                        );
+                    }
+                }
+                for l in 0..sizes.len() {
+                    assert_eq!(
+                        dense.dict.norms[l].to_bits(),
+                        sparse.dict.norms[l].to_bits(),
+                        "dict norm {l} diverged at step {t} (accum {accum})"
+                    );
+                }
+            }
+            assert_eq!(dense.n_selections, sparse.n_selections, "accum {accum}");
+            assert!(dense.n_selections >= 2, "schedule produced too few selections to test");
+        }
     }
 
     #[test]

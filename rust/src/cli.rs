@@ -89,9 +89,16 @@ sets the minimum work size before kernels go multi-threaded (0 = always
 parallel). --attn-batched {0|1} (or PALLAS_ATTN_BATCHED; default 1) selects
 between the batched strided-GEMM attention path (one kernel call over all
 batch*heads per contraction) and the legacy per-head loop.
-All four are pure throughput knobs: the packed and direct paths agree bit
-for bit, batched and per-head attention agree bit for bit, and every
-kernel is deterministic at any thread count.
+--grad-stream {0|1} (or PALLAS_GRAD_STREAM; default 1) selects the gradient
+retention path: 1 streams per-layer gradient shards into compact sinks so
+BlockLLM/magnitude runs keep only the active block's coordinates (+ one
+transient layer) instead of a full dense gradient table; 0 stages dense
+gradients for every method — the legacy parity reference. Measured peak
+gradient bytes are reported either way (MemTracker / results JSONL).
+All five are pure reproducibility-safe knobs: the packed and direct paths
+agree bit for bit, batched and per-head attention agree bit for bit,
+streaming and dense gradient retention agree bit for bit, and every kernel
+is deterministic at any thread count.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

@@ -1,0 +1,551 @@
+//! The streaming gradient layer: sinks that decide what survives backward.
+//!
+//! BlockLLM's memory claim is about the *optimization process*: gradients
+//! for inactive coordinates never need to exist all at once. The old
+//! `Backend::forward_backward(.., grads_out: &mut [Vec<f32>])` contract
+//! contradicted that — every engine materialized a dense gradient for every
+//! parameter, so the runtime's O(n) grad residency belied what
+//! `memory::profiles::blockllm` models as `grad_live`. This module replaces
+//! the dense output table with a visitor: the backward pass emits each
+//! parameter's gradient shard (`param index, &[f32]`) the moment it is
+//! finalized in reverse-layer order, and a [`GradSink`] decides what to
+//! keep. The engine itself only ever holds ONE dense shard (its reusable
+//! scratch buffer), so total gradient residency is
+//! `retained-by-the-sink + largest tensor` — the paper's bound (GaLore,
+//! arXiv:2403.03507, likewise pays only a transient full gradient per
+//! layer; AdaRankGrad, arXiv:2410.17881, streams per-layer processed
+//! gradients).
+//!
+//! Four sinks ship:
+//! * [`DenseSink`] — legacy behavior: copy every shard into caller-owned
+//!   dense buffers. The bitwise parity reference (`--grad-stream 0`) and
+//!   the convenience path behind `Backend::forward_backward_dense`.
+//! * [`AccumSink`] — scaled in-place accumulation over grad-accum
+//!   microbatches (`g = s·x` on the first, `g += s·x` after), straight into
+//!   the trainer's staging buffers. Kills the trainer's former full
+//!   `scratch` copy: accumulation happens at shard-consume time.
+//! * [`MaskedSink`] — retains only `BitMask`-active coordinates into
+//!   compact per-layer buffers, plus per-layer squared norms (via an
+//!   embedded [`NormProbeSink`]), so BlockLLM/magnitude strategies never
+//!   see dense gradients. Also supports building the mask *on arrival*
+//!   (exact top-k over the live shard — how selection events stay within
+//!   the streaming bound) and dense retention for designated layers (probe
+//!   norms under grad accumulation).
+//! * [`NormProbeSink`] — norms only, nothing retained: the scorer's
+//!   p-sampled dictionary refresh as a pure streaming reduction.
+//!
+//! Invariant the whole layer leans on: shard VALUES are identical no matter
+//! which sink consumes them (the backward pass does not change), so the
+//! streaming and dense retention paths are bit-for-bit interchangeable —
+//! only residency differs. `tests/grad_check.rs` pins this across the
+//! {1,4 threads} × {accum 1,4} grid.
+
+use crate::optim::masked_adam::BitMask;
+
+/// Consumer side of the streaming gradient contract.
+///
+/// `consume(idx, grad)` is called exactly once per parameter tensor per
+/// microbatch, in the order the backward pass finalizes them (reverse-layer
+/// order on the native engine; spec-table order on PJRT, which untuples a
+/// device result). `idx` indexes the backend's `param_specs` table; `grad`
+/// is the full dense gradient of the *mean* microbatch loss for that tensor
+/// and is only valid for the duration of the call — the backend reuses the
+/// underlying buffer for the next shard.
+pub trait GradSink {
+    fn consume(&mut self, idx: usize, grad: &[f32]);
+
+    /// Arm the next microbatch before its fwd/bwd (`first` resets any
+    /// accumulators). Stateless sinks ignore it.
+    fn begin_micro(&mut self, _first: bool) {}
+}
+
+/// Legacy dense retention: every shard copied into a caller-owned buffer.
+///
+/// This is the `--grad-stream 0` parity reference: with identical inputs
+/// the copied bits equal what the pre-streaming API wrote in place.
+pub struct DenseSink<'a> {
+    bufs: &'a mut [Vec<f32>],
+    retained: u64,
+    peak: u64,
+}
+
+impl<'a> DenseSink<'a> {
+    /// `bufs[idx]` must already be sized to the idx-th tensor's numel.
+    pub fn new(bufs: &'a mut [Vec<f32>]) -> DenseSink<'a> {
+        let retained: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+        DenseSink { bufs, retained, peak: retained }
+    }
+
+    /// Peak simultaneously-live gradient f32 elements (retained buffers +
+    /// the transient shard) — the measured counterpart of the modeled
+    /// `MemBreakdown::grads`.
+    pub fn peak_grad_elems(&self) -> u64 {
+        self.peak
+    }
+}
+
+impl GradSink for DenseSink<'_> {
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        self.bufs[idx].copy_from_slice(grad);
+        self.peak = self.peak.max(self.retained + grad.len() as u64);
+    }
+}
+
+/// Scaled in-place gradient accumulation over microbatches.
+///
+/// Reproduces the trainer's historical accumulation arithmetic exactly:
+/// the first microbatch writes `scale·x` (a plain copy when `scale == 1`,
+/// bitwise-equal to the old in-place fast path), later microbatches add
+/// `scale·x`, per coordinate in ascending order.
+pub struct AccumSink<'a> {
+    bufs: &'a mut [Vec<f32>],
+    scale: f32,
+    first: bool,
+    retained: u64,
+    peak: u64,
+}
+
+impl<'a> AccumSink<'a> {
+    pub fn new(bufs: &'a mut [Vec<f32>], scale: f32) -> AccumSink<'a> {
+        let retained: u64 = bufs.iter().map(|b| b.len() as u64).sum();
+        AccumSink { bufs, scale, first: true, retained, peak: retained }
+    }
+
+    pub fn peak_grad_elems(&self) -> u64 {
+        self.peak
+    }
+}
+
+impl GradSink for AccumSink<'_> {
+    fn begin_micro(&mut self, first: bool) {
+        self.first = first;
+    }
+
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        let b = &mut self.bufs[idx];
+        debug_assert_eq!(b.len(), grad.len(), "accum buffer {idx} size mismatch");
+        if self.first && self.scale == 1.0 {
+            b.copy_from_slice(grad);
+        } else if self.first {
+            for (d, &x) in b.iter_mut().zip(grad) {
+                *d = self.scale * x;
+            }
+        } else {
+            for (d, &x) in b.iter_mut().zip(grad) {
+                *d += self.scale * x;
+            }
+        }
+        self.peak = self.peak.max(self.retained + grad.len() as u64);
+    }
+}
+
+/// Norms only: per-tensor Σg² of the most recent microbatch's shard,
+/// computed in ascending coordinate order in f64 — bitwise the same sum
+/// `blockllm::scorer::NormDictionary::record` folds over a dense vector,
+/// so a dictionary refresh from these sums is indistinguishable from one
+/// computed on materialized gradients. Nothing is retained.
+///
+/// Validity: each `consume` overwrites the slot, so the sums describe one
+/// microbatch. With grad accumulation the *accumulated* gradient's norm has
+/// cross-microbatch terms these sums cannot reconstruct — accumulating
+/// consumers retain the layers they need densely instead (see
+/// [`Retain::Dense`]).
+pub struct NormProbeSink {
+    /// Σ g² per param table slot (last consumed microbatch)
+    pub sq: Vec<f64>,
+    max_shard: u64,
+}
+
+impl NormProbeSink {
+    pub fn new(n_params: usize) -> NormProbeSink {
+        NormProbeSink { sq: vec![0.0; n_params], max_shard: 0 }
+    }
+
+    pub fn peak_grad_elems(&self) -> u64 {
+        // nothing retained: only the engine's transient shard is ever live
+        self.max_shard
+    }
+}
+
+impl GradSink for NormProbeSink {
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        let mut s = 0.0f64;
+        for &x in grad {
+            s += (x as f64) * (x as f64);
+        }
+        self.sq[idx] = s;
+        self.max_shard = self.max_shard.max(grad.len() as u64);
+    }
+}
+
+/// Per-layer retention rule for a [`MaskedSink`].
+#[derive(Debug, Clone)]
+pub enum Retain {
+    /// Keep the coordinates this mask selects, packed in ascending
+    /// coordinate order (the order `masked_adam_step` visits them).
+    Mask(BitMask),
+    /// Build the mask on arrival: exact top-k by |g| over the live shard,
+    /// then pack. Only meaningful when the shard IS the step gradient
+    /// (accum == 1) — selection replays use this to stay within the
+    /// streaming memory bound.
+    TopK(usize),
+    /// All-set mask built on arrival (MaskMode::DenseLayers selections).
+    All,
+    /// Keep the full dense (accumulated) shard — probe-norm layers under
+    /// grad accumulation, where a streamed Σg² cannot describe the
+    /// accumulated vector.
+    Dense,
+}
+
+/// [`Retain`] with the `Mask` payload moved out (the resolved mask lives in
+/// `MaskedEntry::mask` for every masked rule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rule {
+    Compact,
+    TopK(usize),
+    AllSet,
+    Dense,
+}
+
+/// One retained layer inside a [`MaskedSink`].
+#[derive(Debug)]
+pub struct MaskedEntry {
+    pub idx: usize,
+    rule: Rule,
+    /// resolved coordinate mask (None for `Retain::Dense`; resolved on
+    /// first arrival for `TopK`/`All`)
+    pub mask: Option<BitMask>,
+    /// compact values in mask order, or the dense buffer for `Dense`
+    pub values: Vec<f32>,
+}
+
+/// Compact retention: per-layer masked coordinates + streaming norms.
+///
+/// This is what makes the paper's gradient-memory argument real in this
+/// codebase: with an active-block plan, total retention is
+/// `active coords (+ any dense probe layers)`, and the engine's transient
+/// shard adds at most one largest-tensor buffer on top.
+pub struct MaskedSink {
+    /// param idx -> entries slot (usize::MAX = shard dropped after norms)
+    slot: Vec<usize>,
+    pub entries: Vec<MaskedEntry>,
+    /// embedded norms-only reduction over EVERY shard (retained or not)
+    pub norms: NormProbeSink,
+    scale: f32,
+    first: bool,
+    retained: u64,
+    peak: u64,
+}
+
+impl MaskedSink {
+    /// `retain` pairs param indices with their retention rule; every other
+    /// shard is dropped after its norm is taken. `scale` = 1/grad_accum.
+    pub fn new(n_params: usize, retain: Vec<(usize, Retain)>, scale: f32) -> MaskedSink {
+        let mut slot = vec![usize::MAX; n_params];
+        let mut entries = Vec::with_capacity(retain.len());
+        for (idx, rule) in retain {
+            assert!(idx < n_params, "retained idx {idx} outside param table {n_params}");
+            assert_eq!(slot[idx], usize::MAX, "duplicate retention for param {idx}");
+            slot[idx] = entries.len();
+            let (rule, mask) = match rule {
+                Retain::Mask(m) => (Rule::Compact, Some(m)),
+                Retain::TopK(k) => (Rule::TopK(k), None),
+                Retain::All => (Rule::AllSet, None),
+                Retain::Dense => (Rule::Dense, None),
+            };
+            entries.push(MaskedEntry { idx, rule, mask, values: Vec::new() });
+        }
+        MaskedSink {
+            slot,
+            entries,
+            norms: NormProbeSink::new(n_params),
+            scale,
+            first: true,
+            retained: 0,
+            peak: 0,
+        }
+    }
+
+    /// Retained values for a param: compact (mask order) for masked rules,
+    /// dense for `Retain::Dense`. None if the layer was not retained.
+    pub fn values(&self, idx: usize) -> Option<&[f32]> {
+        let s = *self.slot.get(idx)?;
+        if s == usize::MAX {
+            return None;
+        }
+        Some(&self.entries[s].values)
+    }
+
+    /// Streaming Σg² of the last consumed microbatch for a param (the step
+    /// gradient's sum when accum == 1).
+    pub fn norm_sq(&self, idx: usize) -> f64 {
+        self.norms.sq[idx]
+    }
+
+    /// Peak simultaneously-live gradient f32 elements: retained values
+    /// plus the engine's transient shard, maximized over all consumes.
+    pub fn peak_grad_elems(&self) -> u64 {
+        self.peak
+    }
+
+    /// Move the retained entries out (selection consumers take the masks
+    /// and compact values by value).
+    pub fn into_entries(self) -> Vec<MaskedEntry> {
+        self.entries
+    }
+}
+
+/// Pack `grad`'s mask-selected coordinates into `values` in ascending
+/// coordinate order — the exact order `masked_adam_step` visits set bits —
+/// overwriting (`first`) or accumulating, scaled. `scale == 1.0` on the
+/// first microbatch preserves shard bits exactly.
+fn pack_masked(mask: &BitMask, grad: &[f32], values: &mut Vec<f32>, first: bool, scale: f32) {
+    debug_assert_eq!(mask.len, grad.len(), "mask/shard length mismatch");
+    if first {
+        values.clear();
+        values.reserve(mask.popcount);
+    } else {
+        debug_assert_eq!(values.len(), mask.popcount);
+    }
+    let mut p = 0usize;
+    for (wi, &word) in mask.words.iter().enumerate() {
+        if word == 0 {
+            continue;
+        }
+        let base = wi * 64;
+        let mut bits = word;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let i = base + b;
+            if first {
+                if scale == 1.0 {
+                    values.push(grad[i]);
+                } else {
+                    values.push(scale * grad[i]);
+                }
+            } else {
+                values[p] += scale * grad[i];
+                p += 1;
+            }
+        }
+    }
+}
+
+impl GradSink for MaskedSink {
+    fn begin_micro(&mut self, first: bool) {
+        self.first = first;
+    }
+
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        self.norms.consume(idx, grad);
+        let s = self.slot[idx];
+        if s != usize::MAX {
+            let e = &mut self.entries[s];
+            let before = e.values.len() as u64;
+            match e.rule {
+                Rule::Compact => {
+                    let mask = e.mask.as_ref().expect("Mask rule resolves at construction");
+                    pack_masked(mask, grad, &mut e.values, self.first, self.scale);
+                }
+                Rule::TopK(k) => {
+                    assert!(
+                        self.first,
+                        "TopK retention is single-microbatch only (selection \
+                         replays run at accum == 1)"
+                    );
+                    let mask = BitMask::top_k(grad, k);
+                    pack_masked(&mask, grad, &mut e.values, true, self.scale);
+                    e.mask = Some(mask);
+                }
+                Rule::AllSet | Rule::Dense => {
+                    // identical dense value retention; AllSet additionally
+                    // resolves an all-set mask (a DenseLayers selection)
+                    if self.first && e.rule == Rule::AllSet {
+                        e.mask = Some(BitMask::all_set(grad.len()));
+                    }
+                    if self.first {
+                        e.values.clear();
+                        if self.scale == 1.0 {
+                            e.values.extend_from_slice(grad);
+                        } else {
+                            e.values.extend(grad.iter().map(|&x| self.scale * x));
+                        }
+                    } else {
+                        debug_assert_eq!(e.values.len(), grad.len());
+                        for (d, &x) in e.values.iter_mut().zip(grad) {
+                            *d += self.scale * x;
+                        }
+                    }
+                }
+            }
+            self.retained += e.values.len() as u64 - before;
+        }
+        self.peak = self.peak.max(self.retained + grad.len() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn shards(sizes: &[usize], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed);
+        sizes.iter().map(|&n| (0..n).map(|_| rng.normal_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn dense_sink_copies_every_shard() {
+        let sizes = [5usize, 130, 7];
+        let g = shards(&sizes, 1);
+        let mut bufs: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![9.0; n]).collect();
+        let mut sink = DenseSink::new(&mut bufs);
+        for (i, s) in g.iter().enumerate() {
+            sink.consume(i, s);
+        }
+        let peak = sink.peak_grad_elems();
+        assert_eq!(peak, (5 + 130 + 7 + 130) as u64, "retained + largest shard");
+        assert_eq!(bufs, g);
+    }
+
+    #[test]
+    fn accum_sink_matches_manual_accumulation() {
+        let sizes = [66usize, 3];
+        let mb: Vec<Vec<Vec<f32>>> = (0..3).map(|k| shards(&sizes, 10 + k)).collect();
+        let scale = 1.0f32 / 3.0;
+        // manual reference: the trainer's historical loop
+        let mut want: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        for (k, m) in mb.iter().enumerate() {
+            for (w, s) in want.iter_mut().zip(m) {
+                if k == 0 {
+                    w.iter_mut().zip(s).for_each(|(d, &x)| *d = scale * x);
+                } else {
+                    w.iter_mut().zip(s).for_each(|(d, &x)| *d += scale * x);
+                }
+            }
+        }
+        let mut bufs: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        let mut sink = AccumSink::new(&mut bufs, scale);
+        for (k, m) in mb.iter().enumerate() {
+            sink.begin_micro(k == 0);
+            for (i, s) in m.iter().enumerate() {
+                sink.consume(i, s);
+            }
+        }
+        for (a, b) in bufs.iter().zip(&want) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn norm_probe_matches_dense_reduction_bitwise() {
+        let sizes = [200usize, 31];
+        let g = shards(&sizes, 2);
+        let mut sink = NormProbeSink::new(2);
+        for (i, s) in g.iter().enumerate() {
+            sink.consume(i, s);
+        }
+        for (i, s) in g.iter().enumerate() {
+            let want: f64 = s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            assert_eq!(sink.sq[i].to_bits(), want.to_bits(), "tensor {i}");
+        }
+        assert_eq!(sink.peak_grad_elems(), 200);
+    }
+
+    #[test]
+    fn masked_sink_packs_in_mask_order_and_keeps_bits() {
+        let n = 140usize; // crosses word boundaries
+        let g = shards(&[n], 3).pop().unwrap();
+        let maskv: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask = BitMask::from_threshold(&maskv, 0.5);
+        let mut sink = MaskedSink::new(1, vec![(0, Retain::Mask(mask.clone()))], 1.0);
+        sink.begin_micro(true);
+        sink.consume(0, &g);
+        let vals = sink.values(0).unwrap();
+        assert_eq!(vals.len(), mask.popcount);
+        let mut p = 0;
+        for i in 0..n {
+            if mask.get(i) {
+                assert_eq!(vals[p].to_bits(), g[i].to_bits(), "coord {i}");
+                p += 1;
+            }
+        }
+        // the transient shard + the compact retention bound the peak
+        assert_eq!(sink.peak_grad_elems(), (mask.popcount + n) as u64);
+        // non-retained norms still streamed
+        let want: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(sink.norm_sq(0).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn masked_sink_accumulates_compact_coords() {
+        let n = 70usize;
+        let m1 = shards(&[n], 4).pop().unwrap();
+        let m2 = shards(&[n], 5).pop().unwrap();
+        let mask = BitMask::top_k(&m1, 20);
+        let scale = 0.5f32;
+        let mut sink = MaskedSink::new(1, vec![(0, Retain::Mask(mask.clone()))], scale);
+        sink.begin_micro(true);
+        sink.consume(0, &m1);
+        sink.begin_micro(false);
+        sink.consume(0, &m2);
+        let vals = sink.values(0).unwrap();
+        let mut p = 0;
+        for i in 0..n {
+            if mask.get(i) {
+                let want = scale * m1[i] + scale * m2[i];
+                assert_eq!(vals[p].to_bits(), want.to_bits(), "coord {i}");
+                p += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn topk_rule_builds_the_same_mask_as_offline_topk() {
+        let n = 90usize;
+        let g = shards(&[n], 6).pop().unwrap();
+        let mut sink = MaskedSink::new(1, vec![(0, Retain::TopK(13))], 1.0);
+        sink.begin_micro(true);
+        sink.consume(0, &g);
+        let want = BitMask::top_k(&g, 13);
+        let e = &sink.entries[0];
+        assert_eq!(e.mask.as_ref().unwrap(), &want);
+        assert_eq!(e.values.len(), 13);
+    }
+
+    #[test]
+    fn dense_rule_retains_scaled_accumulated_shards() {
+        let n = 40usize;
+        let m1 = shards(&[n], 7).pop().unwrap();
+        let m2 = shards(&[n], 8).pop().unwrap();
+        let scale = 0.25f32;
+        let mut sink = MaskedSink::new(2, vec![(1, Retain::Dense)], scale);
+        sink.begin_micro(true);
+        sink.consume(0, &m2); // dropped (only norms)
+        sink.consume(1, &m1);
+        sink.begin_micro(false);
+        sink.consume(0, &m1);
+        sink.consume(1, &m2);
+        assert!(sink.values(0).is_none());
+        let vals = sink.values(1).unwrap();
+        for i in 0..n {
+            let want = scale * m1[i] + scale * m2[i];
+            assert_eq!(vals[i].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn all_rule_is_an_all_set_mask() {
+        let n = 33usize;
+        let g = shards(&[n], 9).pop().unwrap();
+        let mut sink = MaskedSink::new(1, vec![(0, Retain::All)], 1.0);
+        sink.begin_micro(true);
+        sink.consume(0, &g);
+        let e = &sink.entries[0];
+        assert_eq!(e.mask.as_ref().unwrap().popcount, n);
+        assert_eq!(e.values, g);
+    }
+}

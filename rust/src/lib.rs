@@ -41,6 +41,7 @@ pub mod cli;
 pub mod config;
 pub mod data;
 pub mod experiments;
+pub mod grads;
 pub mod linalg;
 pub mod memory;
 pub mod metrics;

@@ -42,6 +42,12 @@ fn run() -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--attn-batched wants 0 or 1, got {v:?}"))?;
         blockllm::util::set_attn_batched(n != 0);
     }
+    if let Some(v) = args.get("grad-stream") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--grad-stream wants 0 or 1, got {v:?}"))?;
+        blockllm::util::set_grad_stream(n != 0);
+    }
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
@@ -66,6 +72,7 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             || k == "pack-min"
             || k == "par-min"
             || k == "attn-batched"
+            || k == "grad-stream"
         {
             continue;
         }

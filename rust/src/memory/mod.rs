@@ -48,6 +48,14 @@ pub struct MemTracker {
     pub peak: MemBreakdown,
     pub peak_total: u64,
     pub peak_rss: u64,
+    /// MEASURED peak gradient-buffer bytes: the largest number of gradient
+    /// f32s simultaneously live in the trainer's sinks + the engine's
+    /// transient shard, as counted by the `grads` layer at consume time.
+    /// The ground-truth twin of the modeled `MemBreakdown::grads` — under
+    /// the streaming path (`--grad-stream 1`) this measures
+    /// ≈ active coords + largest layer for BlockLLM, vs ≈ n + largest
+    /// layer on the dense path (asserted in tests/grad_check.rs).
+    pub peak_grad_measured: u64,
 }
 
 impl MemTracker {
@@ -69,10 +77,18 @@ impl MemTracker {
         }
     }
 
+    /// Record one step's measured gradient-buffer bytes (sink + shard).
+    pub fn record_grad_bytes(&mut self, bytes: u64) {
+        if bytes > self.peak_grad_measured {
+            self.peak_grad_measured = bytes;
+        }
+    }
+
     pub fn report(&self) -> String {
         let p = &self.peak;
         format!(
-            "peak modeled: {} (weights {}, grads {}, m {}, v {}, extra {}, activations {}); process RSS {}",
+            "peak modeled: {} (weights {}, grads {}, m {}, v {}, extra {}, activations {}); \
+             measured grad peak {}; process RSS {}",
             human_bytes(self.peak_total),
             human_bytes(p.weights),
             human_bytes(p.grads),
@@ -80,6 +96,7 @@ impl MemTracker {
             human_bytes(p.optim_v),
             human_bytes(p.extra),
             human_bytes(p.activations),
+            human_bytes(self.peak_grad_measured),
             human_bytes(self.peak_rss),
         )
     }
@@ -204,6 +221,16 @@ mod tests {
         assert_eq!(t.peak_total, full_adam(100).total());
         assert!(t.peak_rss > 0);
         assert!(t.report().contains("peak modeled"));
+    }
+
+    #[test]
+    fn tracker_keeps_measured_grad_peak() {
+        let mut t = MemTracker::new();
+        t.record_grad_bytes(400);
+        t.record_grad_bytes(1000);
+        t.record_grad_bytes(700);
+        assert_eq!(t.peak_grad_measured, 1000);
+        assert!(t.report().contains("measured grad peak"));
     }
 
     #[test]

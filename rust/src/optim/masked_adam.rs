@@ -242,6 +242,62 @@ pub fn masked_adam_step(
     updated
 }
 
+/// One masked Adam step from COMPACT gradient values: `gc` holds exactly
+/// the masked-in coordinates' gradients, packed in ascending coordinate
+/// order (the order a `grads::MaskedSink` retains them). Visits words in
+/// the identical sequence as [`masked_adam_step`] and performs the same
+/// arithmetic on the same bits, so the two are bitwise interchangeable —
+/// this is what lets the streaming trainer update the active block without
+/// ever materializing a dense gradient. Returns the coordinate count
+/// updated.
+pub fn masked_adam_step_compact(
+    w: &mut [f32],
+    gc: &[f32],
+    st: &mut LayerState,
+    step: u64,
+    lr: f64,
+    h: &AdamHypers,
+) -> usize {
+    debug_assert_eq!(w.len(), st.mask.len);
+    debug_assert_eq!(gc.len(), st.mask.popcount, "compact grads must match the mask popcount");
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let wd = h.weight_decay as f32;
+    let lr = lr as f32;
+    let (bc1, bc2) = bias_corrections(h, step);
+    let mut p = 0usize;
+
+    for (wi, &word) in st.mask.words.iter().enumerate() {
+        if word == 0 {
+            continue;
+        }
+        let base = wi * 64;
+        if word == u64::MAX && base + 64 <= w.len() {
+            for i in base..base + 64 {
+                let gi = gc[p] + wd * w[i];
+                p += 1;
+                st.m[i] = b1 * st.m[i] + (1.0 - b1) * gi;
+                st.v[i] = b2 * st.v[i] + (1.0 - b2) * gi * gi;
+                w[i] -= lr * (st.m[i] / bc1) / ((st.v[i] / bc2).sqrt() + eps);
+            }
+            continue;
+        }
+        let mut bits = word;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let i = base + b;
+            let gi = gc[p] + wd * w[i];
+            p += 1;
+            st.m[i] = b1 * st.m[i] + (1.0 - b1) * gi;
+            st.v[i] = b2 * st.v[i] + (1.0 - b2) * gi * gi;
+            w[i] -= lr * (st.m[i] / bc1) / ((st.v[i] / bc2).sqrt() + eps);
+        }
+    }
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +418,34 @@ mod tests {
                 w[i],
                 w2[0][i]
             );
+        }
+    }
+
+    #[test]
+    fn compact_step_matches_dense_masked_step_bitwise() {
+        // crosses word boundaries AND exercises the full-word fast path
+        let n = 200;
+        let mut rng = Pcg64::new(9);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mut w2 = w.clone();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        // mask: first 64 coords dense (full word), then scattered
+        let maskv: Vec<f32> =
+            (0..n).map(|i| if i < 64 || i % 5 == 2 { 1.0 } else { 0.0 }).collect();
+        let mask = BitMask::from_threshold(&maskv, 0.5);
+        let gc: Vec<f32> = (0..n).filter(|&i| mask.get(i)).map(|i| g[i]).collect();
+        let h = AdamHypers { weight_decay: 0.01, ..AdamHypers::default() };
+        let mut st1 = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask: mask.clone() };
+        let mut st2 = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask };
+        for step in 1..=4 {
+            let u1 = masked_adam_step(&mut w, &g, &mut st1, step, 3e-3, &h);
+            let u2 = masked_adam_step_compact(&mut w2, &gc, &mut st2, step, 3e-3, &h);
+            assert_eq!(u1, u2);
+        }
+        for i in 0..n {
+            assert_eq!(w[i].to_bits(), w2[i].to_bits(), "coord {i}");
+            assert_eq!(st1.m[i].to_bits(), st2.m[i].to_bits(), "m {i}");
+            assert_eq!(st1.v[i].to_bits(), st2.v[i].to_bits(), "v {i}");
         }
     }
 

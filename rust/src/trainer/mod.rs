@@ -1,7 +1,23 @@
 //! The L3 training coordinator: drives an execution `Backend` (PJRT
-//! artifact or the pure-Rust native engine) for fwd/bwd, routes gradients
-//! to the active strategy, applies updates, tracks memory and wall-clock,
-//! and runs periodic evaluation.
+//! artifact or the pure-Rust native engine) for fwd/bwd, routes gradient
+//! shards to the active strategy, applies updates, tracks memory and
+//! wall-clock, and runs periodic evaluation.
+//!
+//! Gradient routing (the `grads` layer): each optimizer step collects its
+//! `grad_accum` microbatches, then — when `PALLAS_GRAD_STREAM`/
+//! `--grad-stream` is on and the strategy publishes a retention plan —
+//! streams every backward through a compact `MaskedSink`, so gradient
+//! residency is what the strategy retains plus one transient shard, never
+//! an O(n) staging table. Selection events replay the step's microbatches
+//! (the backend is bitwise-deterministic, so replayed shards are the same
+//! bits) into whatever retention the strategy requests. Dense-math
+//! strategies — and the whole trainer under `--grad-stream 0`, the parity
+//! reference — stage full gradients via an `AccumSink` into lazily-
+//! allocated dense buffers; the sink accumulates at shard-consume time, so
+//! the former per-microbatch full `scratch` copy no longer exists on any
+//! path. Both routes are bit-for-bit identical end to end
+//! (tests/grad_check.rs pins loss bits + post-step params across the
+//! {1,4 threads} × {accum 1,4} grid).
 //!
 //! The trainer is backend-agnostic: everything model-execution-specific
 //! (literal marshaling, artifact resolution, activation storage) lives
@@ -10,15 +26,37 @@
 use anyhow::{Context, Result};
 
 use crate::backend::{self, Backend, Targets};
-use crate::baselines::{build, Strategy};
+use crate::baselines::{build, SparseOutcome, Strategy};
 use crate::config::{Task, TrainConfig};
 use crate::data::{ClsSource, LmStream};
+use crate::grads::{AccumSink, GradSink, MaskedSink};
 use crate::memory::MemTracker;
 use crate::metrics::{perplexity, RunLogger};
 use crate::model::ParamStore;
 use crate::optim::schedule::LrSchedule;
 use crate::util::json::Json;
 use crate::util::Stopwatch;
+
+/// Drive one optimizer step's microbatches through a sink — arm it
+/// (`begin_micro(k == 0)`), run the fwd/bwd, repeat — returning the SUMMED
+/// microbatch loss. Every gradient route (main streaming pass, selection
+/// replays, dense staging) goes through this one loop, so the
+/// per-microbatch protocol can never diverge between them. A free function
+/// (not a `Trainer` method) so callers can hold disjoint borrows of the
+/// trainer's fields.
+fn drive_micro(
+    backend: &mut dyn Backend,
+    store: &ParamStore,
+    micro: &[(&[i32], Targets<'_>)],
+    sink: &mut dyn GradSink,
+) -> Result<f64> {
+    let mut loss = 0.0f64;
+    for (k, (tokens, targets)) in micro.iter().enumerate() {
+        sink.begin_micro(k == 0);
+        loss += backend.forward_backward(store, tokens, *targets, sink)?;
+    }
+    Ok(loss)
+}
 
 /// One evaluation snapshot.
 #[derive(Debug, Clone)]
@@ -42,6 +80,10 @@ pub struct RunResult {
     pub evals: Vec<EvalPoint>,
     pub peak_mem_gb: f64,
     pub peak_mem_bytes: u64,
+    /// MEASURED peak gradient-buffer bytes (sink retention + the engine's
+    /// transient shard, counted at consume time by the `grads` layer) —
+    /// the ground-truth twin of the modeled `MemBreakdown::grads`
+    pub peak_grad_bytes: u64,
     pub wall_secs: f64,
     pub steps_per_sec: f64,
     pub exec_secs: f64,
@@ -86,10 +128,12 @@ pub struct Trainer {
     pub mem: MemTracker,
     pub logger: RunLogger,
     sched: LrSchedule,
+    /// dense gradient staging, allocated LAZILY on the first step that
+    /// actually takes the dense route — a streaming run (`--grad-stream 1`
+    /// + a sparse-capable strategy) never materializes these O(n) buffers,
+    /// which is what the measured-grad-bytes assertion in
+    /// tests/grad_check.rs verifies
     grads: Vec<Vec<f32>>,
-    /// per-microbatch gradient staging, allocated lazily on the first
-    /// accumulated step (the accum=1 hot path writes `grads` directly)
-    scratch: Vec<Vec<f32>>,
     phase_strategy: f64,
     step: usize,
 }
@@ -137,8 +181,7 @@ impl Trainer {
             mem: MemTracker::new(),
             logger: RunLogger::null(),
             sched,
-            grads: sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
-            scratch: Vec::new(),
+            grads: Vec::new(),
             phase_strategy: 0.0,
             step: 0,
             cfg,
@@ -149,79 +192,150 @@ impl Trainer {
         self.backend.batch_shape()
     }
 
-    /// One fwd/bwd microbatch through the backend, accumulating the scaled
-    /// gradients into `self.grads` (`first` resets the accumulator; `scale`
-    /// = 1/grad_accum). Returns the microbatch loss.
-    fn forward_backward(
-        &mut self,
-        tokens: &[i32],
-        targets: Targets<'_>,
-        first: bool,
-        scale: f32,
-    ) -> Result<f64> {
-        if first && scale == 1.0 {
-            // no accumulation: the backend writes the gradients in place
-            return self
-                .backend
-                .forward_backward(&self.store, tokens, targets, &mut self.grads);
+    /// Allocate the dense gradient staging table (only the dense route pays
+    /// for it; streaming steps never call this).
+    fn ensure_dense_grads(&mut self) {
+        if self.grads.len() != self.backend.param_specs().len() {
+            self.grads =
+                self.backend.param_specs().iter().map(|s| vec![0.0f32; s.numel()]).collect();
         }
-        if self.scratch.len() != self.grads.len() {
-            self.scratch = self.grads.iter().map(|g| vec![0.0f32; g.len()]).collect();
-        }
-        let loss = self
-            .backend
-            .forward_backward(&self.store, tokens, targets, &mut self.scratch)?;
-        for (g, s) in self.grads.iter_mut().zip(&self.scratch) {
-            if first {
-                g.iter_mut().zip(s).for_each(|(gi, &x)| *gi = scale * x);
-            } else {
-                g.iter_mut().zip(s).for_each(|(gi, &x)| *gi += scale * x);
-            }
-        }
-        Ok(loss)
     }
 
-    /// Apply one strategy step on the accumulated gradients.
-    fn apply_strategy(&mut self, loss: f64) -> Result<()> {
-        let t0 = std::time::Instant::now();
+    /// One full optimizer step over `micro` microbatches: fwd/bwd per
+    /// microbatch through the gradient route the strategy supports, one
+    /// strategy update, then the shared bookkeeping (memory, logging, LR
+    /// schedule advance). Returns the mean microbatch loss.
+    ///
+    /// Routes:
+    /// * **streaming** (`--grad-stream 1` + the strategy published a
+    ///   `SparsePlan`): shards go through a compact `MaskedSink`; on a
+    ///   selection event the strategy asks for a replay of the SAME
+    ///   microbatches (deterministic backend → identical shard bits) into
+    ///   either an on-arrival-masked sink or — under grad accumulation —
+    ///   the dense staging table.
+    /// * **dense** (everything else): an `AccumSink` accumulates scaled
+    ///   shards straight into `self.grads` at consume time.
+    fn optim_step(&mut self, micro: &[(&[i32], Targets<'_>)]) -> Result<f64> {
+        let accum = micro.len().max(1);
+        let scale = 1.0 / accum as f32;
         let lr = self.sched.at(self.step);
-        let info = self.strategy.step(&mut self.store, &self.grads, loss, lr, self.step);
-        self.phase_strategy += t0.elapsed().as_secs_f64();
+        let mut grad_peak: u64 = 0;
+        let mut strat_secs = 0.0f64;
+
+        let plan = if crate::util::grad_stream() {
+            self.strategy.sparse_plan(&self.store, accum, self.step)
+        } else {
+            None
+        };
+
+        let (mean_loss, info) = if let Some(plan) = plan {
+            let n_params = self.backend.param_specs().len();
+            let mut sink = MaskedSink::new(n_params, plan.retain, scale);
+            let loss =
+                drive_micro(self.backend.as_mut(), &self.store, micro, &mut sink)? / accum as f64;
+            grad_peak = grad_peak.max(sink.peak_grad_elems());
+            let t0 = std::time::Instant::now();
+            let outcome = self.strategy.step_sparse(&mut self.store, &sink, loss, lr, self.step);
+            strat_secs += t0.elapsed().as_secs_f64();
+            let info = match outcome {
+                SparseOutcome::Done(info) => info,
+                SparseOutcome::Replay(retain) => {
+                    // selection event: replay into on-arrival masks so even
+                    // this step stays within active + largest-layer bytes.
+                    // On-arrival TopK masks only describe a step gradient
+                    // when the shard IS the step gradient — the streaming
+                    // contract routes accumulated selections through
+                    // ReplayDense instead.
+                    assert_eq!(micro.len(), 1, "SparseOutcome::Replay requires accum == 1");
+                    // The first pass's retention is dead now — drop it
+                    // BEFORE the replay sink exists, so the measured peak
+                    // (max over sinks, never their sum) matches the true
+                    // simultaneous residency
+                    drop(sink);
+                    let mut rsink = MaskedSink::new(n_params, retain, scale);
+                    drive_micro(self.backend.as_mut(), &self.store, micro, &mut rsink)?;
+                    grad_peak = grad_peak.max(rsink.peak_grad_elems());
+                    let t1 = std::time::Instant::now();
+                    let info =
+                        self.strategy.step_selected(&mut self.store, rsink, loss, lr, self.step);
+                    strat_secs += t1.elapsed().as_secs_f64();
+                    info
+                }
+                SparseOutcome::ReplayDense => {
+                    // accumulated selection: norms/masks need the
+                    // accumulated dense gradients — one dense-path step
+                    drop(sink);
+                    self.ensure_dense_grads();
+                    {
+                        let mut dsink = AccumSink::new(&mut self.grads, scale);
+                        drive_micro(self.backend.as_mut(), &self.store, micro, &mut dsink)?;
+                        grad_peak = grad_peak.max(dsink.peak_grad_elems());
+                    }
+                    let t1 = std::time::Instant::now();
+                    let info = self.strategy.step_selected_dense(
+                        &mut self.store,
+                        &self.grads,
+                        loss,
+                        lr,
+                        self.step,
+                    );
+                    strat_secs += t1.elapsed().as_secs_f64();
+                    // a dense replay costs ONE step of dense-path memory:
+                    // release the staging table so the streaming run
+                    // returns to compact residency afterwards
+                    self.grads = Vec::new();
+                    info
+                }
+            };
+            (loss, info)
+        } else {
+            self.ensure_dense_grads();
+            let loss;
+            {
+                let mut dsink = AccumSink::new(&mut self.grads, scale);
+                loss = drive_micro(self.backend.as_mut(), &self.store, micro, &mut dsink)?
+                    / accum as f64;
+                grad_peak = grad_peak.max(dsink.peak_grad_elems());
+            }
+            let t0 = std::time::Instant::now();
+            let info = self.strategy.step(&mut self.store, &self.grads, loss, lr, self.step);
+            strat_secs += t0.elapsed().as_secs_f64();
+            (loss, info)
+        };
+
+        self.phase_strategy += strat_secs;
         self.backend.params_updated(&info.active_layers);
         let mut mem = info.mem;
         mem.activations = self.backend.activation_bytes();
         self.mem.record(mem);
+        let grad_bytes = grad_peak * crate::memory::F32;
+        self.mem.record_grad_bytes(grad_bytes);
         self.logger.log(&Json::obj(vec![
             ("step", Json::num(self.step as f64)),
-            ("loss", Json::num(loss)),
+            ("loss", Json::num(mean_loss)),
             ("lr", Json::num(lr)),
             ("updated", Json::num(info.updated_coords as f64)),
             ("reselected", Json::Bool(info.reselected)),
             ("mem_gb", Json::num(mem.total() as f64 / 1e9)),
+            ("grad_bytes", Json::num(grad_bytes as f64)),
         ]));
         self.step += 1;
-        Ok(())
+        Ok(mean_loss)
     }
 
     /// Single externally-driven LM step (bench harness entry point).
     pub fn bench_step(&mut self, batch: &crate::data::LmBatch) -> Result<f64> {
-        let loss = self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), true, 1.0)?;
-        self.apply_strategy(loss)?;
-        Ok(loss)
+        self.optim_step(&[(batch.tokens.as_slice(), Targets::Lm(&batch.targets))])
     }
 
     /// Externally-driven accumulated LM step over the given microbatches
     /// (tests + bench harness). Returns the mean loss.
     pub fn bench_accum_step(&mut self, micro: &[crate::data::LmBatch]) -> Result<f64> {
-        let scale = 1.0 / micro.len() as f32;
-        let mut mean_loss = 0.0;
-        for (k, batch) in micro.iter().enumerate() {
-            mean_loss +=
-                self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), k == 0, scale)?;
-        }
-        mean_loss /= micro.len() as f64;
-        self.apply_strategy(mean_loss)?;
-        Ok(mean_loss)
+        let step: Vec<(&[i32], Targets<'_>)> = micro
+            .iter()
+            .map(|b| (b.tokens.as_slice(), Targets::Lm(b.targets.as_slice())))
+            .collect();
+        self.optim_step(&step)
     }
 
     /// Train on an LM stream for `steps`, evaluating every `eval_every`.
@@ -239,15 +353,15 @@ impl Trainer {
         let exec0 = self.backend.exec_secs();
         let accum = self.cfg.grad_accum.max(1);
         for s in 0..self.cfg.steps {
-            let scale = 1.0 / accum as f32;
-            let mut mean_loss = 0.0;
-            for k in 0..accum {
-                let batch = train.next_batch(b, t);
-                mean_loss +=
-                    self.forward_backward(&batch.tokens, Targets::Lm(&batch.targets), k == 0, scale)?;
-            }
-            mean_loss /= accum as f64;
-            self.apply_strategy(mean_loss)?;
+            // draw the step's microbatches up front: selection events may
+            // replay them (the data is tiny next to one gradient buffer)
+            let batches: Vec<crate::data::LmBatch> =
+                (0..accum).map(|_| train.next_batch(b, t)).collect();
+            let micro: Vec<(&[i32], Targets<'_>)> = batches
+                .iter()
+                .map(|ba| (ba.tokens.as_slice(), Targets::Lm(ba.targets.as_slice())))
+                .collect();
+            let mean_loss = self.optim_step(&micro)?;
             train_losses.push(mean_loss);
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 evals.push(self.eval_lm(eval).context("eval")?);
@@ -282,7 +396,10 @@ impl Trainer {
         })
     }
 
-    /// Train on a classification/regression source.
+    /// Train on a classification/regression source. Honors
+    /// `cfg.grad_accum` exactly like `train_lm` (each optimizer step
+    /// consumes that many microbatches, mean loss / mean gradients — this
+    /// path used to silently hardcode accumulation off).
     pub fn train_cls(&mut self, src: &mut dyn ClsSource) -> Result<RunResult> {
         let (b, t) = self.batch_shape();
         let sw = Stopwatch::start();
@@ -290,14 +407,22 @@ impl Trainer {
         let mut evals = Vec::new();
         let exec0 = self.backend.exec_secs();
         let regression = src.regression();
+        let accum = self.cfg.grad_accum.max(1);
         for s in 0..self.cfg.steps {
-            let batch = src.batch(b, t, true);
-            let loss = if regression {
-                self.forward_backward(&batch.tokens, Targets::Reg(&batch.labels_f), true, 1.0)?
-            } else {
-                self.forward_backward(&batch.tokens, Targets::Cls(&batch.labels_i), true, 1.0)?
-            };
-            self.apply_strategy(loss)?;
+            let batches: Vec<crate::data::ClsBatch> =
+                (0..accum).map(|_| src.batch(b, t, true)).collect();
+            let micro: Vec<(&[i32], Targets<'_>)> = batches
+                .iter()
+                .map(|ba| {
+                    let tg = if regression {
+                        Targets::Reg(ba.labels_f.as_slice())
+                    } else {
+                        Targets::Cls(ba.labels_i.as_slice())
+                    };
+                    (ba.tokens.as_slice(), tg)
+                })
+                .collect();
+            let loss = self.optim_step(&micro)?;
             train_losses.push(loss);
             if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 evals.push(self.eval_cls(src)?);
@@ -357,6 +482,7 @@ impl Trainer {
             steps_per_sec: train_losses.len() as f64 / wall.max(1e-9),
             peak_mem_gb: self.mem.peak_gb(),
             peak_mem_bytes: self.mem.peak_total,
+            peak_grad_bytes: self.mem.peak_grad_measured,
             wall_secs: wall,
             exec_secs,
             phase_secs: [bp[0], bp[1], bp[2], self.phase_strategy],

@@ -146,6 +146,35 @@ pub fn reset_attn_batched() {
     ATTN_BATCHED.store(0, Ordering::Relaxed);
 }
 
+static GRAD_STREAM: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether the trainer routes gradients through the streaming `GradSink`
+/// retention path (`PALLAS_GRAD_STREAM` / `--grad-stream`; default on).
+/// On: sparse-capable strategies (BlockLLM, magnitude) retain only compact
+/// masked coordinates + streamed norms, so gradient residency is
+/// O(active + largest layer). Off: every strategy stages full dense
+/// gradients — the legacy behavior, kept as the bitwise parity reference
+/// (shard values are identical on both paths; only retention differs, so
+/// flipping this never changes results — pinned by grad_check's
+/// streaming-vs-dense grid).
+pub fn grad_stream() -> bool {
+    resolve_knob(&GRAD_STREAM, "PALLAS_GRAD_STREAM", 1) != 0
+}
+
+/// Override the gradient-retention path selection (tests pin the dense
+/// path against the streaming path with this).
+pub fn set_grad_stream(on: bool) {
+    GRAD_STREAM.store(usize::from(on) + 1, Ordering::Relaxed);
+}
+
+/// Restore the grad-stream knob to its unresolved state: the next read
+/// re-resolves `PALLAS_GRAD_STREAM` (else the streaming default) — the
+/// same env-re-arming contract as [`reset_pack_min`], so a CI leg forcing
+/// the dense path keeps its coverage after a knob-flipping test finishes.
+pub fn reset_grad_stream() {
+    GRAD_STREAM.store(0, Ordering::Relaxed);
+}
+
 /// Restore BOTH parallelism thresholds to their unresolved state: the next
 /// read re-resolves `PALLAS_PAR_MIN` per knob (each with its own distinct
 /// default when the env var is unset — `set_par_min` collapses them to one
@@ -262,6 +291,16 @@ mod tests {
         set_attn_batched(true);
         assert!(attn_batched());
         reset_attn_batched(); // re-arms any env override
+        set_grad_stream(false);
+        assert!(!grad_stream());
+        set_grad_stream(true);
+        assert!(grad_stream());
+        reset_grad_stream(); // re-arms any env override (CI's dense leg)
+        let env_on = |name: &str, default: usize| {
+            std::env::var(name).ok().and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(default)
+                != 0
+        };
+        assert_eq!(grad_stream(), env_on("PALLAS_GRAD_STREAM", 1));
         // the reset must re-resolve: the env override when present (CI's
         // {direct, packed} matrix legs), else the DISTINCT built-in defaults
         let env = |name: &str, default: usize| {

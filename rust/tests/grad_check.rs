@@ -2,16 +2,41 @@
 //!
 //! 1. Finite-difference checks: for randomly chosen coordinates of every
 //!    parameter tensor of the nano model (lm AND cls heads), the analytic
-//!    gradient from `NativeBackend::forward_backward` must match the
+//!    gradient from `NativeBackend::forward_backward` (streamed into dense
+//!    buffers via `forward_backward_dense`) must match the
 //!    central-difference quotient of the loss to 1e-3.
 //! 2. PJRT-vs-native parity: when AOT artifacts and a working PJRT client
 //!    are available, both backends must produce the same loss and
 //!    per-tensor gradient norms on an identical batch.
+//! 3. Streaming-vs-dense gradient retention: full trainer runs (blockllm,
+//!    selection events included) must be bitwise-identical between
+//!    `--grad-stream 1` and `--grad-stream 0` across the
+//!    {1,4 threads} × {accum 1,4} grid, `NormProbeSink` norms must pin
+//!    against `DenseSink`-computed norms, and blockllm at sparsity 0.95
+//!    must MEASURE ≤ dense/4 gradient bytes on the grain preset.
 
 use blockllm::backend::native::NativeBackend;
 use blockllm::backend::{Backend, Targets};
+use blockllm::config::{BackendKind, Method, TrainConfig};
+use blockllm::data::LmBatch;
+use blockllm::grads::NormProbeSink;
 use blockllm::model::ParamStore;
+use blockllm::trainer::Trainer;
 use blockllm::util::rng::Pcg64;
+
+/// Serializes the tests that flip the process-global grad-stream knob (the
+/// kernels are knob-invariant, but these tests ASSERT on which retention
+/// path ran, so concurrent flipping would cross-contaminate them).
+static STREAM_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Restore the grad-stream knob (re-arming any CI-leg env forcing) even if
+/// an assertion fires mid-test.
+struct ResetStream;
+impl Drop for ResetStream {
+    fn drop(&mut self) {
+        blockllm::util::reset_grad_stream();
+    }
+}
 
 /// tokens[i*t + j] = (7i + 13j + salt) % vocab — aot.filler_tokens.
 fn filler_tokens(b: usize, t: usize, vocab: i64, salt: i64) -> Vec<i32> {
@@ -48,9 +73,9 @@ fn finite_difference_check(
             let c = rng.below(numel);
             let w0 = store.bufs[pi][c];
             store.bufs[pi][c] = w0 + eps;
-            let lp = be.forward_backward(store, tokens, targets, &mut scratch).unwrap();
+            let lp = be.forward_backward_dense(store, tokens, targets, &mut scratch).unwrap();
             store.bufs[pi][c] = w0 - eps;
-            let lm = be.forward_backward(store, tokens, targets, &mut scratch).unwrap();
+            let lm = be.forward_backward_dense(store, tokens, targets, &mut scratch).unwrap();
             store.bufs[pi][c] = w0;
             let fd = (lp - lm) / (2.0 * eps as f64);
             let an = grads[pi][c] as f64;
@@ -74,7 +99,7 @@ fn native_lm_gradients_match_finite_differences() {
     targets[1] = -1;
     let mut grads = zeros_like(&store);
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
         .unwrap();
     assert!(loss.is_finite() && loss > 0.0);
     finite_difference_check(&mut be, &mut store, &tokens, Targets::Lm(&targets), &grads);
@@ -89,7 +114,7 @@ fn native_cls_gradients_match_finite_differences() {
     let labels = vec![2i32, 0];
     let mut grads = zeros_like(&store);
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Cls(&labels), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Cls(&labels), &mut grads)
         .unwrap();
     assert!(loss.is_finite() && loss > 0.0);
     finite_difference_check(&mut be, &mut store, &tokens, Targets::Cls(&labels), &grads);
@@ -104,7 +129,7 @@ fn native_reg_gradients_match_finite_differences() {
     let labels = vec![0.25f32, 0.75];
     let mut grads = zeros_like(&store);
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Reg(&labels), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Reg(&labels), &mut grads)
         .unwrap();
     assert!(loss.is_finite() && loss >= 0.0);
     finite_difference_check(&mut be, &mut store, &tokens, Targets::Reg(&labels), &grads);
@@ -165,7 +190,7 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
         let mut grads = zeros_like(&store);
         blockllm::util::set_attn_batched(true);
         let loss = be
-            .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+            .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
             .unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         // full finite-difference sweep at THIS thread count / kernel path
@@ -174,7 +199,7 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
         blockllm::util::set_attn_batched(false);
         let mut grads_loop = zeros_like(&store);
         let loss_loop = be
-            .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads_loop)
+            .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads_loop)
             .unwrap();
         blockllm::util::set_attn_batched(true);
         assert_eq!(
@@ -234,10 +259,10 @@ fn pjrt_and_native_agree_on_loss_and_grad_norms() {
     let mut gp = zeros_like(&store);
     let mut gn = zeros_like(&store);
     let lp = pjrt
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut gp)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut gp)
         .unwrap();
     let ln = native
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut gn)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut gn)
         .unwrap();
     assert!((lp - ln).abs() < 1e-3 * lp.abs().max(1.0), "loss: pjrt {lp} vs native {ln}");
     for (i, (a, c)) in gp.iter().zip(&gn).enumerate() {
@@ -248,4 +273,160 @@ fn pjrt_and_native_agree_on_loss_and_grad_norms() {
             "grad norm {i}: pjrt {na} vs native {nc}"
         );
     }
+}
+
+/// Build a grain-preset blockllm trainer over an explicit small-shape
+/// native backend (the streaming-retention tests drive it with filler
+/// batches; vocab 101).
+fn grain_trainer(sparsity: f64, patience: usize, accum: usize) -> Trainer {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "grain".into();
+    cfg.method = Method::BlockLlm;
+    cfg.backend = BackendKind::Native;
+    cfg.sparsity = sparsity;
+    cfg.patience = patience;
+    cfg.grad_accum = accum;
+    cfg.steps = 1_000; // schedule horizon; steps are driven manually
+    cfg.cosine_lr = false;
+    cfg.lr = 1e-2;
+    let be = NativeBackend::with_shape("grain", "lm", 0, 4, 8).unwrap();
+    Trainer::new(Box::new(be), cfg, None).unwrap()
+}
+
+fn grain_micro(step: usize, accum: usize) -> Vec<LmBatch> {
+    (0..accum)
+        .map(|k| {
+            let salt = (step * accum + k) as i64;
+            LmBatch {
+                tokens: filler_tokens(4, 8, 101, 2 * salt),
+                targets: filler_tokens(4, 8, 101, 2 * salt + 1),
+                batch: 4,
+                seq: 8,
+            }
+        })
+        .collect()
+}
+
+/// THE streaming acceptance pin, end to end: with identical configs and
+/// batches, the streaming retention path (`--grad-stream 1`: compact
+/// MaskedSink + selection replays) and the dense staging path
+/// (`--grad-stream 0`) must produce bit-for-bit identical losses AND
+/// post-training parameters, across the {1, 4 threads} × {accum 1, 4}
+/// grid. Step 0 is always a selection event, so every leg crosses the
+/// replay path (compact top-k at accum 1, dense replay at accum 4).
+#[test]
+fn streaming_and_dense_retention_bitwise_identical() {
+    let _g = STREAM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _reset = ResetStream;
+    for &threads in &[1usize, 4] {
+        for &accum in &[1usize, 4] {
+            let run = |stream: bool| -> (Vec<f64>, Vec<Vec<f32>>, f64) {
+                blockllm::util::set_num_threads(threads);
+                blockllm::util::set_grad_stream(stream);
+                // patience 2 gives later re-selections a chance on top of
+                // the guaranteed t=0 selection
+                let mut tr = grain_trainer(0.9, 2, accum);
+                let mut losses = Vec::new();
+                for s in 0..6 {
+                    let micro = grain_micro(s, accum);
+                    losses.push(tr.bench_accum_step(&micro).unwrap());
+                }
+                let sel = tr.strategy.telemetry().iter().find_map(|(k, v)| {
+                    (k == "n_selections").then_some(*v)
+                });
+                (losses, tr.store.bufs, sel.unwrap_or(-1.0))
+            };
+            let (ls, ps, sel_s) = run(true);
+            let (ld, pd, sel_d) = run(false);
+            for (i, (a, b)) in ls.iter().zip(&ld).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "loss bits diverged at step {i} ({threads} threads, accum {accum}): {a} vs {b}"
+                );
+            }
+            assert_eq!(sel_s, sel_d, "selection count diverged ({threads} threads, accum {accum})");
+            assert!(sel_s >= 1.0, "no selection event exercised");
+            for (li, (a, b)) in ps.iter().zip(&pd).enumerate() {
+                for (ci, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "param {li}[{ci}] diverged ({threads} threads, accum {accum})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `NormProbeSink` is the scorer's streaming reduction: its per-tensor Σg²
+/// must equal the sum computed over `DenseSink`-materialized gradients,
+/// bit for bit (same f64 fold, ascending coordinate order).
+#[test]
+fn norm_probe_sink_matches_dense_sink_norms_bitwise() {
+    let mut be = NativeBackend::with_shape("grain", "lm", 0, 2, 6).unwrap();
+    let specs = be.param_specs().to_vec();
+    let store = ParamStore::init(&specs, 51);
+    let tokens = filler_tokens(2, 6, 101, 4);
+    let targets = filler_tokens(2, 6, 101, 9);
+    let mut grads: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+    let ld = be
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .unwrap();
+    let mut probe = NormProbeSink::new(specs.len());
+    let lp = be.forward_backward(&store, &tokens, Targets::Lm(&targets), &mut probe).unwrap();
+    assert_eq!(ld.to_bits(), lp.to_bits(), "loss must not depend on the sink");
+    for (i, g) in grads.iter().enumerate() {
+        let want: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(
+            probe.sq[i].to_bits(),
+            want.to_bits(),
+            "tensor {i} ({}): streamed {} vs dense {}",
+            specs[i].name,
+            probe.sq[i],
+            want
+        );
+    }
+    // nothing retained: the probe's live footprint is one transient shard
+    let largest = specs.iter().map(|s| s.numel() as u64).max().unwrap();
+    assert_eq!(probe.peak_grad_elems(), largest);
+}
+
+/// The memory acceptance pin: blockllm at sparsity 0.95 on grain, streamed,
+/// must MEASURE ≤ dense/4 gradient bytes — and stay within the modeled
+/// `active coords + largest layer` residency (+ slack), selection events
+/// included. The dense reference run measures ≈ n + largest layer.
+#[test]
+fn blockllm_streaming_measures_compact_grad_memory() {
+    let _g = STREAM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _reset = ResetStream;
+    let run = |stream: bool| -> u64 {
+        blockllm::util::set_grad_stream(stream);
+        let mut tr = grain_trainer(0.95, 2, 1);
+        for s in 0..6 {
+            let micro = grain_micro(s, 1);
+            tr.bench_accum_step(&micro).unwrap();
+        }
+        tr.mem.peak_grad_measured
+    };
+    let streamed = run(true);
+    let dense = run(false);
+    // grain lm: n = 9450 params, largest tensor (tok_emb / lm_head) = 1818
+    let n: u64 = 9450;
+    let largest: u64 = 1818;
+    let n_s = (0.05f64 * n as f64).floor() as u64; // 472 active-coord budget
+    assert_eq!(dense, 4 * (n + largest), "dense path must measure n + largest layer");
+    assert!(
+        streamed * 4 <= dense,
+        "streaming grad bytes {streamed} not ≤ dense/4 ({dense} / 4 = {})",
+        dense / 4
+    );
+    assert!(
+        streamed <= 4 * (n_s + largest + 64),
+        "streaming grad bytes {streamed} exceed the active+largest-layer bound {}",
+        4 * (n_s + largest + 64)
+    );
+    // no full-size dense grad table was ever allocated on the streamed run
+    assert!(streamed < 4 * n, "streamed peak {streamed} ≥ a dense table ({})", 4 * n);
 }

@@ -45,7 +45,7 @@ fn native_lm_train_matches_jax_golden() {
     let mut grads: Vec<Vec<f32>> =
         store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
         .unwrap();
     assert!(
         (loss - GOLDEN_LOSS).abs() < 2e-3 * GOLDEN_LOSS,
@@ -159,7 +159,7 @@ fn check_grain_lm(what: &str) {
     let mut grads: Vec<Vec<f32>> =
         store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
         .unwrap();
     assert_pin(loss, GRAIN_LM_LOSS, &format!("grain lm loss [{what}]"));
     assert_eq!(grads.len(), GRAIN_LM_GRAD_NORMS.len());
@@ -180,7 +180,7 @@ fn check_grain_cls(what: &str) {
     let mut grads: Vec<Vec<f32>> =
         store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
     let loss = be
-        .forward_backward(&store, &tokens, Targets::Cls(&labels), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Cls(&labels), &mut grads)
         .unwrap();
     assert_pin(loss, GRAIN_CLS_LOSS, &format!("grain cls loss [{what}]"));
     assert_eq!(grads.len(), GRAIN_CLS_GRAD_NORMS.len());
@@ -246,7 +246,7 @@ fn native_train_and_eval_agree() {
     let mut grads: Vec<Vec<f32>> =
         store.bufs.iter().map(|b| vec![0.0f32; b.len()]).collect();
     let train_loss = be
-        .forward_backward(&store, &tokens, Targets::Lm(&targets), &mut grads)
+        .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads)
         .unwrap();
     let out = be.eval_batch(&store, &tokens, Targets::Lm(&targets)).unwrap();
     let eval_mean = out.loss_sum / out.aux;
