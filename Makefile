@@ -2,7 +2,7 @@
 # needs only a Rust toolchain — no Python, no artifacts: tests fall back to
 # the pure-Rust NativeBackend when artifacts/ is absent.
 
-.PHONY: check build test lint bench bench-attention bench-baseline artifacts clean
+.PHONY: check build test lint bench bench-attention bench-baseline profile artifacts clean
 
 check: build test
 
@@ -32,6 +32,14 @@ bench-attention:
 # recorded thread count equals the gated run's.
 bench-baseline:
 	cargo bench --bench train_step -- --preset tiny --warmup 1 --iters 4 --threads 4 --out BENCH_train_step.baseline.json
+
+# Profile a short training run: span table + counters on stderr, profile
+# block in the run output, and a Perfetto/chrome://tracing trace-event file
+# (open trace_grain.json at ui.perfetto.dev). See README.md "Profiling a
+# run"; swap --preset/--method/--steps freely.
+profile:
+	cargo run --release -- train --preset grain --method blockllm --task c4 \
+		--steps 5 --eval-every 0 --trace 1 --trace-out trace_grain.json
 
 # AOT-lower the JAX model to HLO artifacts (enables the PJRT backend).
 # Requires jax; run from a machine with the Python toolchain.

@@ -15,12 +15,18 @@
 //!   --threads N       pin the kernel worker count (default: PALLAS_NUM_THREADS
 //!                     or all cores; results are identical at any setting)
 //!   --out PATH        JSON output path (default BENCH_train_step.json)
-//!   --baseline PATH   diff ms/step against a checked-in baseline JSON and
-//!                     exit 1 on a >25% regression. Baseline numbers are
-//!                     rescaled by the ratio of the two hosts' `calib_ms`
-//!                     (a fixed arithmetic loop timed at startup), so a
-//!                     baseline recorded on one machine gates another.
+//!   --baseline PATH   diff against a checked-in baseline JSON and exit 1 on
+//!                     a >25% regression in EITHER ms/step or measured
+//!                     peak_grad_bytes. ms numbers are rescaled by the ratio
+//!                     of the two hosts' `calib_ms` (a fixed arithmetic loop
+//!                     timed at startup), so a baseline recorded on one
+//!                     machine gates another; memory is deterministic and
+//!                     compares unscaled (only when the baseline's
+//!                     `grad_stream` matches the run's retention route).
 //!                     Regenerate with `make bench-baseline`.
+//!   --trace-check 1   tracing-overhead smoke instead of the method sweep:
+//!                     bench one method untraced, then traced, and exit 1 if
+//!                     the traced median exceeds untraced * 1.10 + 0.5 ms.
 
 #[path = "harness.rs"]
 mod harness;
@@ -47,12 +53,22 @@ fn main() {
     }
     let out_path = arg("--out").unwrap_or_else(|| "BENCH_train_step.json".to_string());
     let baseline_path = arg("--baseline");
+    if arg_usize("--trace-check", 0) != 0 {
+        std::process::exit(trace_overhead_check(&preset, warmup, iters));
+    }
     let threads = blockllm::util::num_threads();
     let calib_ms = harness::calibrate_ms();
 
     let mut rows: Vec<Json> = Vec::new();
-    let mut measured: Vec<(String, String, f64)> = Vec::new(); // (method, backend, ms)
-    for method in [Method::BlockLlm, Method::FullAdam, Method::GaLore, Method::LoRa, Method::BAdam] {
+    // (method, backend, ms, peak_grad_bytes)
+    let mut measured: Vec<(String, String, f64, u64)> = Vec::new();
+    for method in [
+        Method::BlockLlm,
+        Method::FullAdam,
+        Method::GaLore,
+        Method::LoRa,
+        Method::BAdam,
+    ] {
         let mut cfg = TrainConfig::default();
         cfg.preset = preset.clone();
         cfg.task = Task::C4Pretrain;
@@ -73,6 +89,7 @@ fn main() {
         // pre-generate batches so data gen is outside the timed region
         let batches: Vec<_> = (0..12).map(|_| stream.next_batch(b, t)).collect();
         let mut i = 0;
+        let obs_base = blockllm::obs::snapshot();
         let r = bench(
             &format!("train_step {preset} {} [{backend}]", method.name()),
             warmup,
@@ -83,8 +100,14 @@ fn main() {
                 tr.bench_step(batch).expect("step");
             },
         );
-        measured.push((method.name().to_string(), backend.clone(), r.median_ns / 1e6));
-        rows.push(Json::obj(vec![
+        // with --trace/PALLAS_TRACE on, attach this method's span/counter
+        // delta to its row (the bench drives steps manually, so the
+        // trainer's own end-of-run export never fires)
+        let res_profile = blockllm::obs::on()
+            .then(|| blockllm::obs::export::profile_json(&blockllm::obs::delta(&obs_base)));
+        let peak = tr.mem.peak_grad_measured;
+        measured.push((method.name().to_string(), backend.clone(), r.median_ns / 1e6, peak));
+        let mut row = vec![
             ("method", Json::str(method.name())),
             ("backend", Json::str(backend)),
             ("ms_per_step", Json::num(r.median_ns / 1e6)),
@@ -93,16 +116,21 @@ fn main() {
             ("iters", Json::num(r.iters as f64)),
             // measured peak gradient-buffer bytes over the timed steps
             // (sink retention + transient shard; the streaming-vs-dense
-            // memory trajectory per method). Informational only — the
-            // bench gate still compares ms/step exclusively.
-            ("peak_grad_bytes", Json::num(tr.mem.peak_grad_measured as f64)),
-        ]));
+            // memory trajectory per method). Gated by --baseline alongside
+            // ms/step when the retention route matches the baseline's.
+            ("peak_grad_bytes", Json::num(peak as f64)),
+        ];
+        if let Some(p) = res_profile.as_ref() {
+            row.push(("profile", p.clone()));
+        }
+        rows.push(Json::obj(row));
     }
 
     let doc = Json::obj(vec![
         ("bench", Json::str("train_step")),
         ("preset", Json::str(preset.clone())),
         ("threads", Json::num(threads as f64)),
+        ("grad_stream", Json::num(u64::from(blockllm::util::grad_stream()) as f64)),
         ("calib_ms", Json::num(calib_ms)),
         ("rows", Json::Arr(rows)),
     ]);
@@ -120,20 +148,70 @@ fn main() {
     }
 }
 
+/// Tracing-overhead smoke (`--trace-check 1`): bench blockllm on `preset`
+/// untraced, then with the span profiler live, and compare medians. The
+/// margin is 10% plus a 0.5 ms absolute slack so sub-millisecond presets
+/// don't gate on scheduler noise. Returns the process exit code.
+fn trace_overhead_check(preset: &str, warmup: usize, iters: usize) -> i32 {
+    let run = |traced: bool| -> f64 {
+        blockllm::obs::set_trace(traced);
+        let mut cfg = TrainConfig::default();
+        cfg.preset = preset.to_string();
+        cfg.task = Task::C4Pretrain;
+        cfg.method = Method::BlockLlm;
+        cfg.steps = 1_000_000;
+        cfg.sparsity = 0.95;
+        cfg.cosine_lr = false;
+        let mut tr = Trainer::open(cfg, None).expect("trainer");
+        let (b, t) = tr.batch_shape();
+        let mut stream = C4Sim::new(9);
+        let batches: Vec<_> = (0..12).map(|_| stream.next_batch(b, t)).collect();
+        let mut i = 0;
+        let label = if traced { "traced" } else { "untraced" };
+        let r = bench(&format!("trace-check {preset} blockllm [{label}]"), warmup, iters, || {
+            let batch = &batches[i % batches.len()];
+            i += 1;
+            tr.bench_step(batch).expect("step");
+        });
+        r.median_ns / 1e6
+    };
+    let off_ms = run(false);
+    let on_ms = run(true);
+    blockllm::obs::reset_trace();
+    let limit = off_ms * 1.10 + 0.5;
+    let overhead = (on_ms / off_ms - 1.0) * 100.0;
+    if on_ms > limit {
+        eprintln!(
+            "TRACE OVERHEAD: {on_ms:.2} ms traced vs {off_ms:.2} ms untraced \
+             (+{overhead:.1}%, limit {limit:.2} ms)"
+        );
+        1
+    } else {
+        println!(
+            "trace-check ok: {on_ms:.2} ms traced vs {off_ms:.2} ms untraced \
+             (+{overhead:.1}%, limit {limit:.2} ms)"
+        );
+        0
+    }
+}
+
 /// Diff measured ms/step against a baseline JSON (same schema as --out).
 /// The baseline's numbers are rescaled by the single-core host-speed ratio
 /// `calib_now / calib_base` (clamped to [0.25, 4] as a fabrication guard)
 /// before the 25% margin is applied, so baselines travel across same-shape
 /// machines. The gate only arms when the baseline's `threads` matches the
 /// current worker count — calib measures one core, so a different thread
-/// count would make the rescale meaningless. Methods missing from the
-/// baseline, backend mismatches (pjrt vs native), preset and thread-count
-/// mismatches are reported but never gate. Returns the regression count.
+/// count would make the rescale meaningless. Measured `peak_grad_bytes`
+/// gates too (deterministic, so no rescale or clamp) when the baseline
+/// carries a `grad_stream` field matching this run's retention route and
+/// the row carries the byte count. Methods missing from the baseline,
+/// backend mismatches (pjrt vs native), preset and thread-count mismatches
+/// are reported but never gate. Returns the regression count.
 fn check_baseline(
     path: &str,
     preset: &str,
     threads: usize,
-    measured: &[(String, String, f64)],
+    measured: &[(String, String, f64, u64)],
     calib_now: f64,
 ) -> usize {
     let src = match std::fs::read_to_string(path) {
@@ -169,10 +247,23 @@ fn check_baseline(
     } else {
         1.0
     };
+    // memory gating is route-dependent (streaming vs dense retention), so
+    // it arms only when the baseline says which route it recorded and that
+    // route is the one running now
+    let mem_armed = match base.get("grad_stream").and_then(|j| j.as_usize().ok()) {
+        Some(gs) => (gs != 0) == blockllm::util::grad_stream(),
+        None => false,
+    };
+    if !mem_armed {
+        println!("bench-gate: baseline grad_stream absent or mismatched — memory gate skipped");
+    }
     let empty: Vec<Json> = Vec::new();
-    let base_rows = base.get("rows").and_then(|j| j.as_arr().ok().map(<[Json]>::to_vec)).unwrap_or(empty);
+    let base_rows = base
+        .get("rows")
+        .and_then(|j| j.as_arr().ok().map(<[Json]>::to_vec))
+        .unwrap_or(empty);
     let mut regressions = 0usize;
-    for (method, backend, ms) in measured {
+    for (method, backend, ms, peak) in measured {
         let found = base_rows.iter().find(|r| {
             r.get("method").and_then(|j| j.as_str().ok()) == Some(method.as_str())
         });
@@ -183,7 +274,10 @@ fn check_baseline(
         let base_backend = row.get("backend").and_then(|j| j.as_str().ok()).unwrap_or("");
         let base_ms = row.get("ms_per_step").and_then(|j| j.as_f64().ok()).unwrap_or(0.0);
         if base_backend != backend.as_str() || base_ms <= 0.0 {
-            println!("bench-gate {method:12} {ms:9.2} ms  (backend/ms mismatch vs baseline — skipped)");
+            println!(
+                "bench-gate {method:12} {ms:9.2} ms  (backend/ms mismatch vs \
+                 baseline — skipped)"
+            );
             continue;
         }
         let limit = base_ms * scale * 1.25;
@@ -197,6 +291,28 @@ fn check_baseline(
             println!(
                 "bench-gate {method:12} {ms:9.2} ms  ok (limit {limit:.2} ms, \
                  baseline {base_ms:.2} ms, host-scale {scale:.2})"
+            );
+        }
+        // memory: deterministic, unscaled, >25% over baseline fails
+        let base_peak = row.get("peak_grad_bytes").and_then(|j| j.as_usize().ok()).unwrap_or(0);
+        if mem_armed && base_peak > 0 {
+            let mem_limit = base_peak as u64 * 5 / 4;
+            if *peak > mem_limit {
+                println!(
+                    "bench-gate {method:12} {peak:>9} grad bytes  REGRESSION: limit {mem_limit} \
+                     (baseline {base_peak} x 1.25)"
+                );
+                regressions += 1;
+            } else {
+                println!(
+                    "bench-gate {method:12} {peak:>9} grad bytes  ok (limit {mem_limit}, \
+                     baseline {base_peak})"
+                );
+            }
+        } else if base_peak == 0 {
+            println!(
+                "bench-gate {method:12} {peak:>9} grad bytes  (no baseline \
+                 memory — skipped)"
             );
         }
     }

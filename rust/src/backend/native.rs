@@ -40,6 +40,7 @@ use crate::config::TrainConfig;
 use crate::grads::GradSink;
 use crate::linalg::{gemm, gemm_batched};
 use crate::model::ParamStore;
+use crate::obs::{self, Span};
 use crate::runtime::ParamSpec;
 use crate::tensor::{BatchView, Tensor, View};
 use crate::util;
@@ -185,7 +186,9 @@ impl NativeBackend {
         let h = self.preset.n_heads;
         let dh = self.preset.d_head();
         let scale = 1.0 / (dh as f32).sqrt();
+        let sp_embed = obs::span(Span::FwdEmbed);
         let mut x = self.paramv(store, 0).gather_rows(tok_idx); // [N, D]
+        drop(sp_embed);
         let mut caches = Vec::with_capacity(if want_grads { self.preset.n_layers } else { 0 });
         for layer in 0..self.preset.n_layers {
             let attn_norm = &store.bufs[self.idx_layer(layer, 0)];
@@ -199,6 +202,7 @@ impl NativeBackend {
             let w_down = self.paramv(store, self.idx_layer(layer, 8));
 
             // -- attention sublayer
+            let sp_attn = obs::span(Span::FwdAttn);
             let (ha, ra) = rmsnorm_fwd(&x, attn_norm);
             let mut q = ha.matmul(&wq);
             let mut k = ha.matmul(&wk);
@@ -262,8 +266,10 @@ impl NativeBackend {
                 out.axpy(1.0, &x); // residual
                 out
             };
+            drop(sp_attn);
 
             // -- mlp sublayer
+            let sp_mlp = obs::span(Span::FwdMlp);
             let (hm, rm) = rmsnorm_fwd(&x1, mlp_norm);
             let g = hm.matmul(&w_gate); // [N, ff]
             let u = hm.matmul(&w_up);
@@ -273,6 +279,7 @@ impl NativeBackend {
                 out.axpy(1.0, &x1); // residual
                 out
             };
+            drop(sp_mlp);
             if want_grads {
                 caches.push(LayerCache {
                     x0: x,
@@ -338,6 +345,7 @@ impl NativeBackend {
             let w_down = self.paramv(store, self.idx_layer(layer, 8));
 
             // -- mlp sublayer: x2 = x1 + prod @ w_down
+            let sp_mlp = obs::span(Span::BwdMlp);
             let dprod = dx.matmul_nt(&w_down); // [N, ff]
             gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 8))), &c.prod, &dx);
             em.emit(self.idx_layer(layer, 8));
@@ -352,8 +360,10 @@ impl NativeBackend {
             let (dx1_norm, dgm) = rmsnorm_bwd(&dhm, &c.x1, mlp_norm, &c.rm);
             em.emit_slice(self.idx_layer(layer, 5), &dgm);
             dx.axpy(1.0, &dx1_norm); // + residual path
+            drop(sp_mlp);
 
             // -- attention sublayer: x1 = x0 + ctx @ wo
+            let sp_attn = obs::span(Span::BwdAttn);
             let dctx = dx.matmul_nt(&wo); // [N, d]
             gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_layer(layer, 4))), &c.ctx, &dx);
             em.emit(self.idx_layer(layer, 4));
@@ -427,11 +437,13 @@ impl NativeBackend {
             let (dx0_norm, dga) = rmsnorm_bwd(&dha, &c.x0, attn_norm, &c.ra);
             em.emit_slice(self.idx_layer(layer, 0), &dga);
             dx.axpy(1.0, &dx0_norm);
+            drop(sp_attn);
         }
 
         // embedding scatter-add: wrap the emitter's zeroed scratch as a
         // [vocab, d] tensor (zero-copy via take/restore), scatter dx's rows
         // into it, and emit it as the final shard of the pass
+        let _sp_embed = obs::span(Span::BwdEmbed);
         let mut demb = Tensor {
             shape: vec![self.preset.vocab, d],
             data: em.take_zeroed(self.preset.vocab * d),
@@ -647,6 +659,7 @@ impl super::Backend for NativeBackend {
                 if tgts.len() != b * t {
                     bail!("lm targets len {} != b*t {}", tgts.len(), b * t);
                 }
+                let sp_head = obs::span(Span::FwdHeadLoss);
                 let lm_head = self.paramv(store, self.idx_head()); // [d, v]
                 let mut logits = xf.matmul(&lm_head); // [N, v]
                 let (loss_sum, count) = self.lm_loss_grad(&mut logits, tgts, true);
@@ -660,9 +673,12 @@ impl super::Backend for NativeBackend {
                     }
                 }
                 logits.scale(inv);
+                drop(sp_head);
+                let sp_bwd = obs::span(Span::BwdHead);
                 gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_head())), &xf, &logits);
                 em.emit(self.idx_head());
                 let dxf = logits.matmul_nt(&lm_head); // [N, d]
+                drop(sp_bwd);
                 self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, &mut em);
                 loss_sum / count
             }
@@ -677,6 +693,7 @@ impl super::Backend for NativeBackend {
                 if n_lab != b {
                     bail!("labels len {n_lab} != batch {b}");
                 }
+                let sp_head = obs::span(Span::FwdHeadLoss);
                 // pooled = mean over T of xf
                 let mut pooled = Tensor::zeros(&[b, d]);
                 for bi in 0..b {
@@ -730,6 +747,8 @@ impl super::Backend for NativeBackend {
                     dl2.scale(1.0 / b as f32);
                     (loss / b as f64, dl2)
                 };
+                drop(sp_head);
+                let sp_bwd = obs::span(Span::BwdHead);
                 gemm::matmul_tn_acc(em.zeroed(self.numel(self.idx_head())), &pooled, &dlogits);
                 em.emit(self.idx_head());
                 let mut dbias = vec![0.0f32; self.specs[self.idx_bias()].numel()];
@@ -752,6 +771,7 @@ impl super::Backend for NativeBackend {
                         }
                     }
                 }
+                drop(sp_bwd);
                 self.trunk_backward(store, &tok_idx, &dxf, &rf, &final_x, &caches, &mut em);
                 loss
             }
@@ -768,6 +788,7 @@ impl super::Backend for NativeBackend {
         targets: Targets<'_>,
     ) -> Result<EvalOut> {
         let t0 = std::time::Instant::now();
+        let _sp = obs::span(Span::Eval);
         self.check_targets(&targets)?;
         let tok_idx = self.tok_indices(tokens)?;
         let (b, t) = (self.batch, self.seq);

@@ -22,7 +22,9 @@ use super::{EvalOut, Targets};
 use crate::config::TrainConfig;
 use crate::grads::GradSink;
 use crate::model::ParamStore;
-use crate::runtime::{self, copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime};
+use crate::runtime::{
+    self, copy_f32_into, lit_f32, lit_i32, scalar_f32, ArtifactInfo, ParamSpec, Runtime,
+};
 
 pub struct PjrtBackend {
     rt: Arc<Mutex<Runtime>>,

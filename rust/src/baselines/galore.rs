@@ -55,7 +55,13 @@ impl GaLore {
         let layers = sizes
             .iter()
             .zip(names)
-            .map(|(&n, _)| LayerGalore { proj: None, left: true, m: Vec::new(), v: Vec::new(), shape: vec![n] })
+            .map(|(&n, _)| LayerGalore {
+                proj: None,
+                left: true,
+                m: Vec::new(),
+                v: Vec::new(),
+                shape: vec![n],
+            })
             .collect();
         GaLore {
             layers,
@@ -132,7 +138,15 @@ impl Strategy for GaLore {
             if spec.shape.len() < 2 {
                 // dense Adam fallback for vectors
                 let (m, v) = (&mut self.dense_m[li], &mut self.dense_v[li]);
-                dense_adam_update(&mut store.bufs[li], &grads[li], m, v, self.step, lr, &self.hypers);
+                dense_adam_update(
+                    &mut store.bufs[li],
+                    &grads[li],
+                    m,
+                    v,
+                    self.step,
+                    lr,
+                    &self.hypers,
+                );
                 updated += grads[li].len() as u64;
                 continue;
             }
@@ -286,6 +300,10 @@ mod tests {
         let gram = w.matmul_nt(&w); // [6,6]
         let tr: f32 = (0..6).map(|i| gram.at(i, i)).sum();
         // for rank-1, trace == spectral norm of gram == s1^2
-        assert!((tr as f64 - s1 * s1).abs() < 1e-3 * (tr as f64).max(1e-12), "tr={tr} s1^2={}", s1 * s1);
+        assert!(
+            (tr as f64 - s1 * s1).abs() < 1e-3 * (tr as f64).max(1e-12),
+            "tr={tr} s1^2={}",
+            s1 * s1
+        );
     }
 }

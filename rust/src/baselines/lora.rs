@@ -137,8 +137,11 @@ impl Strategy for LoRa {
             let gb = g.matmul_nt(&ad.a); // [m, r] = G Aᵀ
             let ga = ad.b.matmul_tn(&g); // [r, n] = Bᵀ G
             let lr_f = lr as f32;
-            adam_inplace(&mut ad.b.data, &gb.data.iter().map(|x| x * scale).collect::<Vec<_>>(), &mut ad.m_b, &mut ad.v_b, self.step, lr_f, &self.hypers);
-            adam_inplace(&mut ad.a.data, &ga.data.iter().map(|x| x * scale).collect::<Vec<_>>(), &mut ad.m_a, &mut ad.v_a, self.step, lr_f, &self.hypers);
+            let gb_s: Vec<f32> = gb.data.iter().map(|x| x * scale).collect();
+            let ga_s: Vec<f32> = ga.data.iter().map(|x| x * scale).collect();
+            let t = self.step;
+            adam_inplace(&mut ad.b.data, &gb_s, &mut ad.m_b, &mut ad.v_b, t, lr_f, &self.hypers);
+            adam_inplace(&mut ad.a.data, &ga_s, &mut ad.m_a, &mut ad.v_a, t, lr_f, &self.hypers);
             updated += (ad.a.numel() + ad.b.numel()) as u64;
 
             // materialize W_eff for the next artifact execution

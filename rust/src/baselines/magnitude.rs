@@ -33,7 +33,12 @@ pub struct Magnitude {
 }
 
 impl Magnitude {
-    pub fn new(sizes: &[usize], sparsity: f64, update_every: usize, hypers: AdamHypers) -> Magnitude {
+    pub fn new(
+        sizes: &[usize],
+        sparsity: f64,
+        update_every: usize,
+        hypers: AdamHypers,
+    ) -> Magnitude {
         Magnitude {
             sizes: sizes.to_vec(),
             always_active: Vec::new(),
@@ -41,7 +46,10 @@ impl Magnitude {
             update_every,
             hypers,
             states: Vec::new(),
-            ever_updated: sizes.iter().map(|&n| BitMask::from_threshold(&vec![0.0; n], 1.0)).collect(),
+            ever_updated: sizes
+                .iter()
+                .map(|&n| BitMask::from_threshold(&vec![0.0; n], 1.0))
+                .collect(),
             adam_step: 0,
             n_params: sizes.iter().map(|&s| s as u64).sum(),
             selected_once: false,

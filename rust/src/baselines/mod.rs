@@ -172,7 +172,9 @@ pub fn build(
             h,
             cfg.seed,
         )),
-        Method::LoRa => Box::new(lora::LoRa::new(sizes, names, cfg.rank, cfg.lora_alpha, h, cfg.seed)),
+        Method::LoRa => {
+            Box::new(lora::LoRa::new(sizes, names, cfg.rank, cfg.lora_alpha, h, cfg.seed))
+        }
         Method::BAdam => Box::new(badam::BAdam::new(sizes, cfg.badam_k, h)),
         Method::Magnitude => {
             let heads: Vec<usize> = names
@@ -242,13 +244,18 @@ pub(crate) mod testutil {
                 *x = (*x) * 10.0 + 0.5;
             }
         }
-        let before: f64 = store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum();
+        fn sq_norm(bufs: &[Vec<f32>]) -> f64 {
+            bufs.iter()
+                .map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>())
+                .sum()
+        }
+        let before: f64 = sq_norm(&store.bufs);
         for t in 0..steps {
             let grads: Vec<Vec<f32>> = store.bufs.clone();
-            let loss: f64 = 0.5 * store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum::<f64>();
+            let loss: f64 = 0.5 * sq_norm(&store.bufs);
             strategy.step(&mut store, &grads, loss, 0.05, t);
         }
-        let after: f64 = store.bufs.iter().map(|b| b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sum();
+        let after: f64 = sq_norm(&store.bufs);
         (before, after)
     }
 }

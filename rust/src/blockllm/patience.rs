@@ -18,7 +18,12 @@ pub struct PatienceController {
 
 impl PatienceController {
     pub fn new(m: usize) -> Self {
-        PatienceController { window: MovingWindow::new(m.max(1)), m: m.max(1), triggers: 0, started: false }
+        PatienceController {
+            window: MovingWindow::new(m.max(1)),
+            m: m.max(1),
+            triggers: 0,
+            started: false,
+        }
     }
 
     /// Feed the step loss; returns true if the block should be re-selected.

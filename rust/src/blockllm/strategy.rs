@@ -243,8 +243,8 @@ impl BlockLlmStrategy {
         let t = self.state.step;
         let mut updated = 0u64;
         for (li, lst) in self.state.layers.iter_mut() {
-            updated +=
-                masked_adam_step(&mut store.bufs[*li], &grads[*li], lst, t, lr, &self.hypers) as u64;
+            let n = masked_adam_step(&mut store.bufs[*li], &grads[*li], lst, t, lr, &self.hypers);
+            updated += n as u64;
         }
 
         self.refresh_processed_norms(step);
@@ -430,7 +430,8 @@ impl Strategy for BlockLlmStrategy {
     }
 
     fn telemetry(&self) -> Vec<(String, f64)> {
-        let offload_bytes: usize = self.offloaded.values().map(|(m, v)| 4 * (m.len() + v.len())).sum();
+        let offload_bytes: usize =
+            self.offloaded.values().map(|(m, v)| 4 * (m.len() + v.len())).sum();
         vec![
             ("n_selections".into(), self.n_selections as f64),
             ("active_coords".into(), self.state.active_coords() as f64),
@@ -472,7 +473,12 @@ mod tests {
         assert!(!info.active_layers.is_empty());
         let n: u64 = sizes.iter().map(|&x| x as u64).sum();
         let budget = (0.2 * n as f64) as u64;
-        assert!(info.updated_coords <= budget + 64, "updated {} > budget {}", info.updated_coords, budget);
+        assert!(
+            info.updated_coords <= budget + 64,
+            "updated {} > budget {}",
+            info.updated_coords,
+            budget
+        );
         assert!(info.updated_coords > budget / 2);
     }
 

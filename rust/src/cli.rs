@@ -99,6 +99,14 @@ All five are pure reproducibility-safe knobs: the packed and direct paths
 agree bit for bit, batched and per-head attention agree bit for bit,
 streaming and dense gradient retention agree bit for bit, and every kernel
 is deterministic at any thread count.
+--trace {0|1} (or PALLAS_TRACE; default 0) turns on the span profiler +
+metrics registry: per-phase timings (fwd/bwd per sublayer, GEMM kernels,
+pack time, sink consume, optimizer steps), kernel/FLOP/pack-byte counters,
+and sink retention gauges. A profile table is printed on stderr at run end
+and a `profile` block is appended to the run's JSONL. Tracing observes but
+never steers: losses and parameter bits are identical with it on or off.
+--trace-out PATH (implies --trace 1) additionally records every span as a
+trace event and writes a chrome://tracing / Perfetto JSON file at exit.
 Results are written to results/ as JSONL + printed tables.";
 
 #[cfg(test)]

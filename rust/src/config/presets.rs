@@ -81,6 +81,7 @@ impl Preset {
 /// `grain`: a deliberately odd-dimensioned preset (nothing is a multiple of
 /// the GEMM block/unroll sizes) that pins the blocked kernels' remainder
 /// paths in tests/native_golden.rs and tests/grad_check.rs.
+#[rustfmt::skip]
 pub const PRESETS: [Preset; 6] = [
     Preset { name: "nano", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 176, max_seq: 64 },
     Preset { name: "grain", vocab: 101, d_model: 18, n_layers: 2, n_heads: 1, d_ff: 29, max_seq: 32 },

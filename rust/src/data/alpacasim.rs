@@ -141,7 +141,8 @@ mod tests {
         let payload = &tokens[2..sep];
         let period = tokens[sep + 1..].iter().position(|&t| t == PERIOD).unwrap() + sep + 1;
         let response = &tokens[sep + 1..period];
-        let back: Vec<i32> = response.iter().map(|&t| PAYLOAD_LO + ((t - PAYLOAD_LO) ^ 1)).collect();
+        let back: Vec<i32> =
+            response.iter().map(|&t| PAYLOAD_LO + ((t - PAYLOAD_LO) ^ 1)).collect();
         assert_eq!(&back[..], payload);
     }
 }

@@ -40,7 +40,16 @@
 //! only residency differs. `tests/grad_check.rs` pins this across the
 //! {1,4 threads} × {accum 1,4} grid.
 
+use crate::obs::{self, Counter, Gauge, Span};
 use crate::optim::masked_adam::BitMask;
+
+/// Open the per-shard [`Span::SinkConsume`] span and count the call +
+/// streamed elements. Purely observational — inert unless `--trace`.
+fn sink_probe(grad: &[f32]) -> obs::SpanGuard {
+    obs::add(Counter::SinkConsumeCalls, 1);
+    obs::add(Counter::SinkConsumedElems, grad.len() as u64);
+    obs::span(Span::SinkConsume)
+}
 
 /// Consumer side of the streaming gradient contract.
 ///
@@ -86,6 +95,7 @@ impl<'a> DenseSink<'a> {
 
 impl GradSink for DenseSink<'_> {
     fn consume(&mut self, idx: usize, grad: &[f32]) {
+        let _sp = sink_probe(grad);
         self.bufs[idx].copy_from_slice(grad);
         self.peak = self.peak.max(self.retained + grad.len() as u64);
     }
@@ -122,6 +132,7 @@ impl GradSink for AccumSink<'_> {
     }
 
     fn consume(&mut self, idx: usize, grad: &[f32]) {
+        let _sp = sink_probe(grad);
         let b = &mut self.bufs[idx];
         debug_assert_eq!(b.len(), grad.len(), "accum buffer {idx} size mismatch");
         if self.first && self.scale == 1.0 {
@@ -167,14 +178,24 @@ impl NormProbeSink {
     }
 }
 
-impl GradSink for NormProbeSink {
-    fn consume(&mut self, idx: usize, grad: &[f32]) {
+impl NormProbeSink {
+    /// The reduction itself, uninstrumented: [`MaskedSink`] embeds it
+    /// inside an already-probed consume (counting it again would double
+    /// the per-shard call/element totals).
+    fn record(&mut self, idx: usize, grad: &[f32]) {
         let mut s = 0.0f64;
         for &x in grad {
             s += (x as f64) * (x as f64);
         }
         self.sq[idx] = s;
         self.max_shard = self.max_shard.max(grad.len() as u64);
+    }
+}
+
+impl GradSink for NormProbeSink {
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        let _sp = sink_probe(grad);
+        self.record(idx, grad);
     }
 }
 
@@ -338,7 +359,8 @@ impl GradSink for MaskedSink {
     }
 
     fn consume(&mut self, idx: usize, grad: &[f32]) {
-        self.norms.consume(idx, grad);
+        let _sp = sink_probe(grad);
+        self.norms.record(idx, grad);
         let s = self.slot[idx];
         if s != usize::MAX {
             let e = &mut self.entries[s];
@@ -380,6 +402,8 @@ impl GradSink for MaskedSink {
                 }
             }
             self.retained += e.values.len() as u64 - before;
+            obs::gauge_max(Gauge::SinkRetainedPeakBytes, 4 * self.retained);
+            obs::sample("sink.retained_bytes", 4 * self.retained);
         }
         self.peak = self.peak.max(self.retained + grad.len() as u64);
     }

@@ -48,6 +48,7 @@
 //! reuses them verbatim over matrices carved out of larger buffers — same
 //! per-element contract, therefore the same bits.
 
+use crate::obs::{self, Counter, Span};
 use crate::tensor::Tensor;
 use crate::util;
 
@@ -95,6 +96,7 @@ where
 {
     debug_assert_eq!(c.len(), m * n);
     let chunks = split_rows(m, threads);
+    obs::add(Counter::ParChunks, chunks.len() as u64);
     if chunks.len() == 1 {
         body(0, m, c);
         return;
@@ -137,6 +139,7 @@ pub(crate) fn par_rows2<F>(
     debug_assert_eq!(a.len(), m * na);
     debug_assert_eq!(b.len(), m * nb);
     let chunks = split_rows(m, threads);
+    obs::add(Counter::ParChunks, chunks.len() as u64);
     if chunks.len() == 1 {
         body(0, m, a, b);
         return;
@@ -174,6 +177,13 @@ pub(crate) fn par_rows2<F>(
 pub(crate) struct PackedB {
     k: usize,
     data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Bytes staged into the panel buffer (obs accounting only).
+    pub(crate) fn bytes(&self) -> u64 {
+        4 * self.data.len() as u64
+    }
 }
 
 /// Pack B [k, n] with row stride `ldb` (the `nn`/`tn` operand; contiguous
@@ -485,6 +495,25 @@ pub(crate) fn use_packed(m: usize, k: usize, n: usize) -> bool {
     k > 0 && n > 0 && m.saturating_mul(n).saturating_mul(k) >= util::pack_min_mnk()
 }
 
+/// Open the per-call GEMM span and bump the path/FLOP counters. Purely
+/// observational (inert unless `--trace`): reads clocks and bumps atomics,
+/// never branches the math.
+fn gemm_probe(m: usize, k: usize, n: usize, packed: bool) -> obs::SpanGuard {
+    obs::add(if packed { Counter::GemmPackedCalls } else { Counter::GemmDirectCalls }, 1);
+    obs::add(Counter::GemmFlops, 2 * (m as u64) * (k as u64) * (n as u64));
+    obs::span(if packed { Span::GemmPacked } else { Span::GemmDirect })
+}
+
+/// Time a B-pack under the [`Span::GemmPack`] span and count staged bytes.
+fn pack_probe(pack: impl FnOnce() -> PackedB) -> PackedB {
+    let pb = {
+        let _pk = obs::span(Span::GemmPack);
+        pack()
+    };
+    obs::add(Counter::PackBytes, pb.bytes());
+    pb
+}
+
 #[allow(clippy::too_many_arguments)]
 fn gemm_nn_impl(
     m: usize,
@@ -498,8 +527,9 @@ fn gemm_nn_impl(
     packed: bool,
 ) {
     let threads = gemm_threads(m, k, n, threads);
+    let _sp = gemm_probe(m, k, n, packed);
     if packed {
-        let pb = pack_b_nn(b, k, n, n);
+        let pb = pack_probe(|| pack_b_nn(b, k, n, n));
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
         });
@@ -526,8 +556,9 @@ fn gemm_tn_impl(
     packed: bool,
 ) {
     let threads = gemm_threads(m, k, n, threads);
+    let _sp = gemm_probe(m, k, n, packed);
     if packed {
-        let pb = pack_b_nn(b, k, n, n);
+        let pb = pack_probe(|| pack_b_nn(b, k, n, n));
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, 1, m, &pb, acc, None);
         });
@@ -554,8 +585,9 @@ fn gemm_nt_impl(
     packed: bool,
 ) {
     let threads = gemm_threads(m, k, n, threads);
+    let _sp = gemm_probe(m, k, n, packed);
     if packed {
-        let pb = pack_b_nt(b, n, k, k);
+        let pb = pack_probe(|| pack_b_nt(b, n, k, k));
         par_rows(c, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, a, k, 1, &pb, acc, None);
         });
@@ -698,9 +730,10 @@ fn matmul_bias_impl(a: &dyn Mat, b: &dyn Mat, bias: &[f32], packed: bool) -> Ten
     assert_eq!(bias.len(), n, "matmul_bias: bias len");
     let mut c = Tensor::zeros(&[m, n]);
     let threads = gemm_threads(m, k, n, util::num_threads());
+    let _sp = gemm_probe(m, k, n, packed);
     let (ad, bd) = (a.data(), b.data());
     if packed {
-        let pb = pack_b_nn(bd, k, n, n);
+        let pb = pack_probe(|| pack_b_nn(bd, k, n, n));
         par_rows(&mut c.data, m, n, threads, |i0, _i1, rows| {
             packed_chunk(rows, i0, n, ad, k, 1, &pb, false, Some(bias));
         });

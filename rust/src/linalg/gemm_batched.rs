@@ -37,6 +37,7 @@ use crate::linalg::gemm::{
     self, nn_chunk, nt_chunk, pack_b_nn, pack_b_nt, packed_chunk, par_rows, tn_chunk, use_packed,
     PackedB,
 };
+use crate::obs::{self, Counter, Span};
 use crate::tensor::{BatchView, Tensor};
 use crate::util;
 
@@ -53,15 +54,32 @@ fn batched_threads(batch: usize, m: usize, k: usize, n: usize, threads: usize) -
 
 /// Pack one B panel set per batch element (parallel across elements when
 /// the call is threaded — packing is pure copies, so order never matters).
+/// Timed under [`Span::GemmBatchedPack`] with staged bytes counted —
+/// observational only, never branches the math.
 fn pack_all<F>(batch: usize, threads: usize, pack: F) -> Vec<PackedB>
 where
     F: Fn(usize) -> PackedB + Sync,
 {
-    if threads > 1 && batch > 1 {
-        gemm::parallel_map(batch, pack)
-    } else {
-        (0..batch).map(pack).collect()
-    }
+    let packs = {
+        let _pk = obs::span(Span::GemmBatchedPack);
+        if threads > 1 && batch > 1 {
+            gemm::parallel_map(batch, pack)
+        } else {
+            (0..batch).map(pack).collect()
+        }
+    };
+    obs::add(Counter::PackBytes, packs.iter().map(|p| p.bytes()).sum());
+    packs
+}
+
+/// Open the per-call batched-GEMM span and bump the path/FLOP counters.
+fn batched_probe(batch: usize, m: usize, k: usize, n: usize, packed: bool) -> obs::SpanGuard {
+    obs::add(
+        if packed { Counter::GemmBatchedPackedCalls } else { Counter::GemmBatchedDirectCalls },
+        1,
+    );
+    obs::add(Counter::GemmFlops, 2 * (batch * m) as u64 * k as u64 * n as u64);
+    obs::span(if packed { Span::GemmBatchedPacked } else { Span::GemmBatchedDirect })
 }
 
 /// Drive `body(batch_idx, row0, row1, c_rows)` over the whole
@@ -102,6 +120,7 @@ fn batched_nn_impl(
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let batch = a.batch();
     let threads = batched_threads(batch, m, k, n, threads);
+    let _sp = batched_probe(batch, m, k, n, packed);
     if packed {
         let packs = pack_all(batch, threads, |i| pack_b_nn(b.slice(i), k, n, b.row_stride));
         for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
@@ -130,6 +149,7 @@ fn batched_tn_impl(
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let batch = a.batch();
     let threads = batched_threads(batch, m, k, n, threads);
+    let _sp = batched_probe(batch, m, k, n, packed);
     if packed {
         let packs = pack_all(batch, threads, |i| pack_b_nn(b.slice(i), k, n, b.row_stride));
         for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {
@@ -156,6 +176,7 @@ fn batched_nt_impl(
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let batch = a.batch();
     let threads = batched_threads(batch, m, k, n, threads);
+    let _sp = batched_probe(batch, m, k, n, packed);
     if packed {
         let packs = pack_all(batch, threads, |i| pack_b_nt(b.slice(i), n, k, b.row_stride));
         for_each_span(c, batch, m, n, threads, |bi, l0, _l1, rows| {

@@ -48,7 +48,18 @@ fn run() -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--grad-stream wants 0 or 1, got {v:?}"))?;
         blockllm::util::set_grad_stream(n != 0);
     }
-    match args.command.as_str() {
+    if let Some(v) = args.get("trace") {
+        let n: usize =
+            v.parse().map_err(|_| anyhow::anyhow!("--trace wants 0 or 1, got {v:?}"))?;
+        blockllm::obs::set_trace(n != 0);
+    }
+    let trace_out = args.get("trace-out").map(String::from);
+    if trace_out.is_some() {
+        // --trace-out implies tracing on and arms the trace-event buffer.
+        blockllm::obs::set_trace(true);
+        blockllm::obs::arm_events(true);
+    }
+    let out = match args.command.as_str() {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
         "eval" => cmd_eval(&args),
@@ -58,7 +69,12 @@ fn run() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
+    };
+    if let Some(path) = &trace_out {
+        let n = blockllm::obs::export::write_trace(std::path::Path::new(path))?;
+        eprintln!("trace: {n} events -> {path} (load in chrome://tracing or ui.perfetto.dev)");
     }
+    out
 }
 
 fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
@@ -73,6 +89,8 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             || k == "par-min"
             || k == "attn-batched"
             || k == "grad-stream"
+            || k == "trace"
+            || k == "trace-out"
         {
             continue;
         }

@@ -18,6 +18,9 @@ use crate::util::json::Json;
 pub struct RunLogger {
     path: PathBuf,
     file: Option<fs::File>,
+    /// Records that failed to write (disk full, closed fd, ...). Counted so a
+    /// run can't silently lose its log; warned about once on drop.
+    dropped: u64,
 }
 
 impl RunLogger {
@@ -25,22 +28,48 @@ impl RunLogger {
         fs::create_dir_all(dir)?;
         let path = dir.join(format!("{run_name}.jsonl"));
         let file = fs::File::create(&path)?;
-        Ok(RunLogger { path, file: Some(file) })
+        Ok(RunLogger { path, file: Some(file), dropped: 0 })
     }
 
     /// A sink that discards everything (unit tests, quick runs).
     pub fn null() -> RunLogger {
-        RunLogger { path: PathBuf::new(), file: None }
+        RunLogger { path: PathBuf::new(), file: None, dropped: 0 }
+    }
+
+    /// Wrap an already-open file (tests inject read-only handles here).
+    #[cfg(test)]
+    fn from_file(path: PathBuf, file: fs::File) -> RunLogger {
+        RunLogger { path, file: Some(file), dropped: 0 }
     }
 
     pub fn log(&mut self, record: &Json) {
         if let Some(f) = &mut self.file {
-            let _ = writeln!(f, "{}", record.to_string());
+            if writeln!(f, "{}", record.to_string()).is_err() {
+                self.dropped += 1;
+                crate::obs::add_always(crate::obs::Counter::LogWritesDropped, 1);
+            }
         }
+    }
+
+    /// Write failures so far (a null logger never drops: it has no file).
+    pub fn dropped_writes(&self) -> u64 {
+        self.dropped
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+}
+
+impl Drop for RunLogger {
+    fn drop(&mut self) {
+        if self.dropped > 0 {
+            eprintln!(
+                "warning: run log {} dropped {} record(s) on write errors",
+                self.path.display(),
+                self.dropped
+            );
+        }
     }
 }
 
@@ -286,6 +315,24 @@ mod tests {
         assert_eq!(h.counts, vec![2, 1, 1, 2]);
         assert_eq!(h.total(), 6);
         assert!(h.render(10).lines().count() == 4);
+    }
+
+    #[test]
+    fn logger_counts_dropped_writes() {
+        // A read-only handle makes every writeln! fail with EBADF; the logger
+        // must count each miss instead of swallowing it.
+        let dir = std::env::temp_dir().join("blockllm_test_logs_ro");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ro.jsonl");
+        std::fs::write(&path, "").unwrap();
+        let ro = std::fs::OpenOptions::new().read(true).open(&path).unwrap();
+        let mut lg = RunLogger::from_file(path.clone(), ro);
+        lg.log(&Json::obj(vec![("step", Json::num(1.0))]));
+        lg.log(&Json::obj(vec![("step", Json::num(2.0))]));
+        assert_eq!(lg.dropped_writes(), 2);
+        drop(lg); // exercises the warn-once path
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Export layers for the obs registry: stderr profile table, a JSON
+//! `profile` block (RunLogger JSONL / bench rows), and a chrome://tracing
+//! (Perfetto) trace-event file.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::{
+    take_events, Snapshot, COUNTER_NAMES, GAUGE_NAMES, NCOUNTERS, NGAUGES, NSPANS, SPAN_NAMES,
+};
+
+/// Build the per-run `profile` block from a registry delta. Zero rows are
+/// omitted so JSONL records stay compact; times are exported in
+/// milliseconds (JSON doubles carry ns-resolution exactly up to ~104 days).
+pub fn profile_json(d: &Snapshot) -> Json {
+    let mut spans: Vec<(&str, Json)> = Vec::new();
+    for i in 0..NSPANS {
+        if d.span_count[i] == 0 {
+            continue;
+        }
+        spans.push((
+            SPAN_NAMES[i],
+            Json::obj(vec![
+                ("count", Json::num(d.span_count[i] as f64)),
+                ("total_ms", Json::num(d.span_total_ns[i] as f64 / 1e6)),
+                ("self_ms", Json::num(d.span_self_ns[i] as f64 / 1e6)),
+            ]),
+        ));
+    }
+    let mut counters: Vec<(&str, Json)> = Vec::new();
+    for i in 0..NCOUNTERS {
+        if d.counters[i] != 0 {
+            counters.push((COUNTER_NAMES[i], Json::num(d.counters[i] as f64)));
+        }
+    }
+    let mut gauges: Vec<(&str, Json)> = Vec::new();
+    for i in 0..NGAUGES {
+        if d.gauges[i] != 0 {
+            gauges.push((GAUGE_NAMES[i], Json::num(d.gauges[i] as f64)));
+        }
+    }
+    Json::obj(vec![
+        ("spans", Json::obj(spans)),
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+    ])
+}
+
+/// Fraction of `wall_secs` accounted for by top-level span self-time: the
+/// sum over spans of self ns (each span's total minus same-thread children)
+/// for the coordinator-thread phase spans. Used by the ≥90%-coverage
+/// acceptance check and printed under the table.
+pub fn coverage(d: &Snapshot, wall_secs: f64) -> f64 {
+    if wall_secs <= 0.0 {
+        return 0.0;
+    }
+    // Roots of the span forest on the coordinator thread: train_step and
+    // eval cover a run's wall-clock between them (everything else nests).
+    let accounted_ns = d.span_total_ns[super::Span::TrainStep as usize]
+        + d.span_total_ns[super::Span::Eval as usize];
+    (accounted_ns as f64 / 1e9) / wall_secs
+}
+
+/// Print the end-of-run profile table on stderr, spans sorted by self time.
+pub fn print_table(d: &Snapshot, wall_secs: f64) {
+    let mut order: Vec<usize> = (0..NSPANS).filter(|&i| d.span_count[i] != 0).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(d.span_self_ns[i]));
+    if order.is_empty() {
+        eprintln!("[obs] no spans recorded (is --trace on?)");
+        return;
+    }
+    let wall_ns = (wall_secs * 1e9).max(1.0);
+    eprintln!("\n[obs] profile ({:.3}s wall)", wall_secs);
+    eprintln!("{:<22} {:>10} {:>12} {:>12} {:>7}", "span", "count", "total_ms", "self_ms", "self%");
+    for i in order {
+        eprintln!(
+            "{:<22} {:>10} {:>12.3} {:>12.3} {:>6.1}%",
+            SPAN_NAMES[i],
+            d.span_count[i],
+            d.span_total_ns[i] as f64 / 1e6,
+            d.span_self_ns[i] as f64 / 1e6,
+            d.span_self_ns[i] as f64 / wall_ns * 100.0,
+        );
+    }
+    for i in 0..NCOUNTERS {
+        if d.counters[i] != 0 {
+            eprintln!("{:<22} {:>10}", COUNTER_NAMES[i], d.counters[i]);
+        }
+    }
+    for i in 0..NGAUGES {
+        if d.gauges[i] != 0 {
+            eprintln!("{:<22} {:>10}", GAUGE_NAMES[i], d.gauges[i]);
+        }
+    }
+    eprintln!("{:<22} {:>9.1}%", "span coverage", coverage(d, wall_secs) * 100.0);
+}
+
+/// Drain the buffered trace events into a chrome://tracing JSON file
+/// (load via Perfetto's "Open trace file" or chrome://tracing). Duration
+/// events use `"ph":"X"`, counter samples `"ph":"C"`; timestamps are
+/// microseconds since the epoch pinned by [`super::arm_events`].
+///
+/// Written with a streaming writer, not the [`Json`] tree: the buffer can
+/// hold ~1M events and building a tree would double peak memory.
+pub fn write_trace(path: &Path) -> std::io::Result<usize> {
+    let events = take_events();
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            write!(w, ",")?;
+        }
+        let ts_us = e.ts_ns as f64 / 1e3;
+        if e.dur_ns == u64::MAX {
+            // counter sample
+            write!(
+                w,
+                "\n{{\"name\":\"{}\",\"cat\":\"blockllm\",\"ph\":\"C\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{ts_us:.3},\"args\":{{\"value\":{}}}}}",
+                e.name, e.tid, e.value
+            )?;
+        } else {
+            write!(
+                w,
+                "\n{{\"name\":\"{}\",\"cat\":\"blockllm\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{ts_us:.3},\"dur\":{:.3}}}",
+                e.name,
+                e.tid,
+                e.dur_ns as f64 / 1e3
+            )?;
+        }
+    }
+    writeln!(w, "\n]}}")?;
+    w.flush()?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{self, Counter, Span};
+
+    #[test]
+    fn profile_json_shape_and_omission() {
+        // synthesize a delta without touching the live registry
+        let mut d = obs::Snapshot {
+            span_count: [0; obs::NSPANS],
+            span_total_ns: [0; obs::NSPANS],
+            span_self_ns: [0; obs::NSPANS],
+            counters: [0; obs::NCOUNTERS],
+            gauges: [0; obs::NGAUGES],
+        };
+        d.span_count[Span::FwdAttn as usize] = 4;
+        d.span_total_ns[Span::FwdAttn as usize] = 2_500_000;
+        d.span_self_ns[Span::FwdAttn as usize] = 1_500_000;
+        d.counters[Counter::GemmFlops as usize] = 1 << 40;
+        let j = profile_json(&d);
+        let spans = j.req("spans").unwrap().as_obj().unwrap();
+        assert_eq!(spans.len(), 1, "zero rows must be omitted");
+        let attn = j.req("spans").unwrap().req("fwd.attn").unwrap();
+        assert_eq!(attn.req("count").unwrap().as_usize().unwrap(), 4);
+        assert!((attn.req("total_ms").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        let flops = j.req("counters").unwrap().req("gemm.flops").unwrap();
+        assert_eq!(flops.as_f64().unwrap(), (1u64 << 40) as f64);
+        // the block must survive a JSONL round-trip bit-exactly
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn trace_file_is_valid_json() {
+        let _g = crate::util::test_knob_lock();
+        obs::set_trace(true);
+        obs::arm_events(true);
+        let _ = obs::take_events();
+        {
+            let _sp = obs::span(Span::GemmPacked);
+        }
+        obs::sample("sink.retained_bytes", 12345);
+        obs::arm_events(false);
+        let dir = std::env::temp_dir().join("blockllm_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        let evs = v.req("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= 2);
+        let span_ev = evs
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str().unwrap() == "gemm.packed")
+            .expect("span event present");
+        assert_eq!(span_ev.req("ph").unwrap().as_str().unwrap(), "X");
+        assert!(span_ev.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let ctr_ev = evs
+            .iter()
+            .find(|e| e.req("name").unwrap().as_str().unwrap() == "sink.retained_bytes")
+            .expect("counter event present");
+        assert_eq!(ctr_ev.req("ph").unwrap().as_str().unwrap(), "C");
+        assert_eq!(
+            ctr_ev.req("args").unwrap().req("value").unwrap().as_usize().unwrap(),
+            12345
+        );
+        obs::reset_trace();
+    }
+}

@@ -1,0 +1,547 @@
+//! Observability: hierarchical span tracer + process-global metrics
+//! registry + trace-event export (DESIGN: measurement never feeds back).
+//!
+//! Three layers, all off by default (`PALLAS_TRACE` / `--trace`):
+//!
+//! 1. **Spans** — scoped wall-clock timers ([`span`] returns a
+//!    [`SpanGuard`]; drop closes the span). Each thread keeps its own open
+//!    stack, so a span's *self* time is its total minus the time spent in
+//!    child spans opened on the SAME thread. Spans are always opened on the
+//!    calling thread (never inside `std::thread::scope` workers), so span
+//!    COUNTS are thread-count-invariant even though wall-clock attribution
+//!    is not.
+//! 2. **Counters/gauges** — relaxed `AtomicU64` cells ([`add`],
+//!    [`gauge_max`]). A designated subset is deterministic across the CI
+//!    matrix legs (see [`Counter::leg_invariant`]); throughput-shaped ones
+//!    (per-path call splits, `par_rows` chunk counts, pack bytes) are not
+//!    and are documented as such.
+//! 3. **Trace events** — a bounded in-memory buffer of Chrome
+//!    trace-event records, armed separately by `--trace-out`
+//!    ([`arm_events`]) and flushed by [`export::write_trace`]. Overflow
+//!    drops events and counts them ([`Counter::TraceEventsDropped`]) —
+//!    never blocks.
+//!
+//! The contract with the kernel layer: instrumentation reads clocks and
+//! bumps atomics but NEVER branches the math. Tracing on/off cannot change
+//! a single bit of any result (pinned by `tests/obs_trace.rs`).
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// The master switch (follows util's knob pattern: 0 = unresolved sentinel,
+// resolved value stored +1 so an explicit 0 is representable).
+// ---------------------------------------------------------------------------
+
+static TRACE: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether span/counter collection is live (`PALLAS_TRACE` / `--trace`;
+/// default off). When off, every probe is a single relaxed load + branch.
+pub fn on() -> bool {
+    let cur = TRACE.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur - 1 != 0;
+    }
+    let n = std::env::var("PALLAS_TRACE")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    let stored = n.saturating_add(1);
+    match TRACE.compare_exchange(0, stored, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => n != 0,
+        Err(winner) => winner - 1 != 0,
+    }
+}
+
+/// Override the tracing switch (CLI `--trace`, tests).
+pub fn set_trace(on: bool) {
+    TRACE.store(usize::from(on) + 1, Ordering::Relaxed);
+}
+
+/// Restore the tracing knob to its unresolved state: the next read
+/// re-resolves `PALLAS_TRACE` (same env-re-arming contract as the util
+/// knobs, so a CI leg running with tracing keeps its setting after a
+/// knob-flipping test finishes).
+pub fn reset_trace() {
+    TRACE.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Span + counter site tables. The enums index fixed atomic arrays; the
+// parallel *_NAMES tables are the export vocabulary.
+// ---------------------------------------------------------------------------
+
+/// Instrumented sites, one per scoped-timer location. Keep in sync with
+/// [`SPAN_NAMES`] (pinned by a unit test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Span {
+    TrainStep,
+    FwdBwd,
+    FwdEmbed,
+    FwdAttn,
+    FwdMlp,
+    FwdHeadLoss,
+    BwdHead,
+    BwdMlp,
+    BwdAttn,
+    BwdEmbed,
+    Eval,
+    Strategy,
+    Replay,
+    SinkConsume,
+    AdamStep,
+    GemmDirect,
+    GemmPacked,
+    GemmPack,
+    GemmBatchedDirect,
+    GemmBatchedPacked,
+    GemmBatchedPack,
+}
+
+pub const NSPANS: usize = 21;
+
+/// Export names, indexed by `Span as usize`. Dotted segments group related
+/// phases in the profile table and Perfetto categories.
+pub const SPAN_NAMES: [&str; NSPANS] = [
+    "train_step",
+    "fwd_bwd",
+    "fwd.embed",
+    "fwd.attn",
+    "fwd.mlp",
+    "fwd.head_loss",
+    "bwd.head",
+    "bwd.mlp",
+    "bwd.attn",
+    "bwd.embed",
+    "eval",
+    "strategy",
+    "replay",
+    "sink.consume",
+    "adam.step",
+    "gemm.direct",
+    "gemm.packed",
+    "gemm.pack",
+    "gemm_batched.direct",
+    "gemm_batched.packed",
+    "gemm_batched.pack",
+];
+
+/// Monotonic counters. Keep in sync with [`COUNTER_NAMES`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// GEMM calls taking the direct (unpacked) kernels. Leg-variant: the
+    /// {direct, packed} CI legs split calls differently — only the SUM
+    /// with [`Counter::GemmPackedCalls`] is invariant.
+    GemmDirectCalls,
+    /// GEMM calls taking the packed-panel microkernel path (leg-variant).
+    GemmPackedCalls,
+    /// Batched-GEMM calls on the direct path (leg-variant).
+    GemmBatchedDirectCalls,
+    /// Batched-GEMM calls on the packed path (leg-variant).
+    GemmBatchedPackedCalls,
+    /// Total multiply-add FLOPs (2·m·n·k per call, summed over batch).
+    /// Identical on every leg: both paths compute the same contraction.
+    GemmFlops,
+    /// Bytes staged into packed B panels (leg-variant: zero on direct legs).
+    PackBytes,
+    /// Row chunks fanned out by `par_rows`/`par_rows2` (leg-variant: scales
+    /// with the thread count).
+    ParChunks,
+    /// `GradSink::consume` invocations (one per emitted layer shard).
+    SinkConsumeCalls,
+    /// Gradient elements streamed through `GradSink::consume`.
+    SinkConsumedElems,
+    /// BlockLLM block (re)selection events.
+    SelectionEvents,
+    /// Streaming-route sparse replays (second pass with a retention sink).
+    ReplayEvents,
+    /// Streaming-route dense fallbacks (replay into a dense accumulator).
+    ReplayDenseEvents,
+    /// `RunLogger` records lost to I/O errors (counted even with tracing
+    /// off — losing data silently is a bug, not a metric).
+    LogWritesDropped,
+    /// Trace events dropped because the event buffer hit its cap.
+    TraceEventsDropped,
+}
+
+pub const NCOUNTERS: usize = 14;
+
+/// Export names, indexed by `Counter as usize`.
+pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
+    "gemm.direct_calls",
+    "gemm.packed_calls",
+    "gemm_batched.direct_calls",
+    "gemm_batched.packed_calls",
+    "gemm.flops",
+    "gemm.pack_bytes",
+    "par_rows.chunks",
+    "sink.consume_calls",
+    "sink.consumed_elems",
+    "select.events",
+    "replay.events",
+    "replay.dense_events",
+    "log.writes_dropped",
+    "trace.events_dropped",
+];
+
+impl Counter {
+    /// Whether this counter's total is deterministic across the CI matrix
+    /// ({1,4} threads × {direct,packed} × {gs0,gs1}). The invariance test
+    /// asserts equality over exactly this subset.
+    pub fn leg_invariant(self) -> bool {
+        matches!(
+            self,
+            Counter::GemmFlops
+                | Counter::SinkConsumeCalls
+                | Counter::SinkConsumedElems
+                | Counter::SelectionEvents
+        )
+    }
+}
+
+/// Max-tracked gauges. Keep in sync with [`GAUGE_NAMES`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    /// High-water mark of bytes retained inside a masked streaming sink.
+    SinkRetainedPeakBytes,
+}
+
+pub const NGAUGES: usize = 1;
+
+/// Export names, indexed by `Gauge as usize`.
+pub const GAUGE_NAMES: [&str; NGAUGES] = ["sink.retained_peak_bytes"];
+
+// ---------------------------------------------------------------------------
+// The registry: fixed arrays of relaxed atomics. Const-init keeps this in
+// .bss — no lazy allocation on the hot path.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static SPAN_COUNT: [AtomicU64; NSPANS] = [ZERO; NSPANS];
+static SPAN_TOTAL_NS: [AtomicU64; NSPANS] = [ZERO; NSPANS];
+static SPAN_SELF_NS: [AtomicU64; NSPANS] = [ZERO; NSPANS];
+static COUNTERS: [AtomicU64; NCOUNTERS] = [ZERO; NCOUNTERS];
+static GAUGES: [AtomicU64; NGAUGES] = [ZERO; NGAUGES];
+
+/// Bump a counter by `v` (no-op with tracing off).
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    if on() {
+        COUNTERS[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Bump a counter unconditionally — for error accounting that must not be
+/// lost just because profiling is off ([`Counter::LogWritesDropped`]).
+#[inline]
+pub fn add_always(c: Counter, v: u64) {
+    COUNTERS[c as usize].fetch_add(v, Ordering::Relaxed);
+}
+
+/// Read a counter's current raw total (test + warn-at-exit hook).
+pub fn counter(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Raise a high-water-mark gauge to at least `v` (no-op with tracing off).
+#[inline]
+pub fn gauge_max(g: Gauge, v: u64) {
+    if on() {
+        GAUGES[g as usize].fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span guard + per-thread open-span stack.
+// ---------------------------------------------------------------------------
+
+struct Frame {
+    child_ns: u64,
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Open a scoped span; the returned guard closes it on drop. With tracing
+/// off the guard is inert (one relaxed load, no clock read).
+#[inline]
+pub fn span(s: Span) -> SpanGuard {
+    if !on() {
+        return SpanGuard { start: None, span: s as u16 };
+    }
+    STACK.with(|st| st.borrow_mut().push(Frame { child_ns: 0 }));
+    SpanGuard { start: Some(Instant::now()), span: s as u16 }
+}
+
+/// RAII handle for one open span (see [`span`]). Not `Send`: a span must
+/// close on the thread that opened it.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    span: u16,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        let child_ns = STACK.with(|st| {
+            let mut st = st.borrow_mut();
+            let child = st.pop().map_or(0, |f| f.child_ns);
+            if let Some(parent) = st.last_mut() {
+                parent.child_ns = parent.child_ns.saturating_add(dur_ns);
+            }
+            child
+        });
+        let i = self.span as usize;
+        SPAN_COUNT[i].fetch_add(1, Ordering::Relaxed);
+        SPAN_TOTAL_NS[i].fetch_add(dur_ns, Ordering::Relaxed);
+        SPAN_SELF_NS[i].fetch_add(dur_ns.saturating_sub(child_ns), Ordering::Relaxed);
+        if events_armed() {
+            push_span_event(i, start, dur_ns);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots: the registry is process-global and cumulative; per-run scoping
+// is snapshot-at-start, delta-at-end.
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of the whole registry.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub span_count: [u64; NSPANS],
+    pub span_total_ns: [u64; NSPANS],
+    pub span_self_ns: [u64; NSPANS],
+    pub counters: [u64; NCOUNTERS],
+    pub gauges: [u64; NGAUGES],
+}
+
+/// Copy the registry's current totals.
+pub fn snapshot() -> Snapshot {
+    let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let mut s = Snapshot {
+        span_count: [0; NSPANS],
+        span_total_ns: [0; NSPANS],
+        span_self_ns: [0; NSPANS],
+        counters: [0; NCOUNTERS],
+        gauges: [0; NGAUGES],
+    };
+    for i in 0..NSPANS {
+        s.span_count[i] = load(&SPAN_COUNT[i]);
+        s.span_total_ns[i] = load(&SPAN_TOTAL_NS[i]);
+        s.span_self_ns[i] = load(&SPAN_SELF_NS[i]);
+    }
+    for i in 0..NCOUNTERS {
+        s.counters[i] = load(&COUNTERS[i]);
+    }
+    for i in 0..NGAUGES {
+        s.gauges[i] = load(&GAUGES[i]);
+    }
+    s
+}
+
+/// Registry activity since `since`: monotonic cells subtract; gauges are
+/// high-water marks, so the delta keeps the current (larger) value.
+pub fn delta(since: &Snapshot) -> Snapshot {
+    let mut now = snapshot();
+    for i in 0..NSPANS {
+        now.span_count[i] = now.span_count[i].saturating_sub(since.span_count[i]);
+        now.span_total_ns[i] = now.span_total_ns[i].saturating_sub(since.span_total_ns[i]);
+        now.span_self_ns[i] = now.span_self_ns[i].saturating_sub(since.span_self_ns[i]);
+    }
+    for i in 0..NCOUNTERS {
+        now.counters[i] = now.counters[i].saturating_sub(since.counters[i]);
+    }
+    now
+}
+
+// ---------------------------------------------------------------------------
+// Trace-event buffer (chrome://tracing / Perfetto). Armed separately from
+// the counters: span math is cheap, a million heap events is not.
+// ---------------------------------------------------------------------------
+
+/// One buffered trace record. `dur_ns == u64::MAX` marks a counter sample
+/// (Perfetto `"ph":"C"`), with the value in `value`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Event {
+    pub name: &'static str,
+    pub tid: u64,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub value: u64,
+}
+
+/// Buffer cap: ~1M events ≈ 40 MiB. Overflow counts, never blocks.
+const EVENT_CAP: usize = 1 << 20;
+
+static EVENTS_ARMED: AtomicBool = AtomicBool::new(false);
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Arm (or disarm) trace-event buffering (`--trace-out`). Arming implies
+/// nothing about the counter switch — callers also [`set_trace`] — but
+/// pins the timestamp epoch so the first event lands near ts=0.
+pub fn arm_events(on: bool) {
+    if on {
+        let _ = EPOCH.set(Instant::now());
+    }
+    EVENTS_ARMED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+fn events_armed() -> bool {
+    EVENTS_ARMED.load(Ordering::Relaxed)
+}
+
+fn push_event(ev: Event) {
+    let mut buf = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    if buf.len() >= EVENT_CAP {
+        drop(buf);
+        add_always(Counter::TraceEventsDropped, 1);
+        return;
+    }
+    buf.push(ev);
+}
+
+fn push_span_event(span_idx: usize, start: Instant, dur_ns: u64) {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    // saturating: an event can only race the epoch init by nanoseconds
+    let ts_ns = start.duration_since(epoch).as_nanos() as u64;
+    push_event(Event {
+        name: SPAN_NAMES[span_idx],
+        tid: TID.with(|t| *t),
+        ts_ns,
+        dur_ns,
+        value: 0,
+    });
+}
+
+/// Record a named counter sample for the trace timeline (e.g. sink
+/// retention bytes over time). No-op unless events are armed.
+pub fn sample(name: &'static str, value: u64) {
+    if !events_armed() {
+        return;
+    }
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    let ts_ns = epoch.elapsed().as_nanos() as u64;
+    push_event(Event { name, tid: TID.with(|t| *t), ts_ns, dur_ns: u64::MAX, value });
+}
+
+/// Drain the buffered trace events (export + tests).
+pub(crate) fn take_events() -> Vec<Event> {
+    std::mem::take(&mut *EVENTS.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_tables_cover_every_variant() {
+        assert_eq!(Span::GemmBatchedPack as usize, NSPANS - 1);
+        assert_eq!(Counter::TraceEventsDropped as usize, NCOUNTERS - 1);
+        assert_eq!(Gauge::SinkRetainedPeakBytes as usize, NGAUGES - 1);
+        assert_eq!(SPAN_NAMES.len(), NSPANS);
+        assert_eq!(COUNTER_NAMES.len(), NCOUNTERS);
+        assert_eq!(GAUGE_NAMES.len(), NGAUGES);
+        let mut seen: Vec<&str> = Vec::new();
+        for n in SPAN_NAMES.iter().chain(COUNTER_NAMES.iter()).chain(GAUGE_NAMES.iter()) {
+            assert!(!seen.contains(n), "duplicate export name {n}");
+            seen.push(n);
+        }
+    }
+
+    #[test]
+    fn spans_and_counters_aggregate() {
+        let _g = crate::util::test_knob_lock();
+        set_trace(true);
+        let base = snapshot();
+        {
+            let _outer = span(Span::TrainStep);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span(Span::FwdBwd);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            add(Counter::GemmFlops, 123);
+        }
+        let d = delta(&base);
+        assert_eq!(d.span_count[Span::TrainStep as usize], 1);
+        assert_eq!(d.span_count[Span::FwdBwd as usize], 1);
+        let outer_total = d.span_total_ns[Span::TrainStep as usize];
+        let outer_self = d.span_self_ns[Span::TrainStep as usize];
+        let inner_total = d.span_total_ns[Span::FwdBwd as usize];
+        // child self-time sums <= parent total; parent self excludes child
+        assert!(inner_total <= outer_total);
+        assert!(outer_self <= outer_total - inner_total + 1);
+        assert!(d.counters[Counter::GemmFlops as usize] >= 123);
+        set_trace(false);
+        let quiet = snapshot();
+        {
+            let _s = span(Span::Eval);
+            add(Counter::GemmFlops, 1);
+        }
+        let dq = delta(&quiet);
+        assert_eq!(dq.span_count[Span::Eval as usize], 0, "disabled spans must be inert");
+        assert_eq!(dq.counters[Counter::GemmFlops as usize], 0);
+        reset_trace();
+    }
+
+    #[test]
+    fn cross_thread_counts_aggregate() {
+        let _g = crate::util::test_knob_lock();
+        set_trace(true);
+        let base = snapshot();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let _sp = span(Span::SinkConsume);
+                    add(Counter::SinkConsumeCalls, 1);
+                });
+            }
+        });
+        let d = delta(&base);
+        assert_eq!(d.span_count[Span::SinkConsume as usize], 4);
+        assert_eq!(d.counters[Counter::SinkConsumeCalls as usize], 4);
+        reset_trace();
+    }
+
+    #[test]
+    fn event_buffer_records_and_drains() {
+        let _g = crate::util::test_knob_lock();
+        set_trace(true);
+        arm_events(true);
+        let _ = take_events(); // drop anything a prior test buffered
+        {
+            let _sp = span(Span::Strategy);
+        }
+        sample("sink.retained_bytes", 4096);
+        arm_events(false);
+        let evs = take_events();
+        assert!(evs.iter().any(|e| e.name == "strategy" && e.dur_ns != u64::MAX));
+        assert!(evs
+            .iter()
+            .any(|e| e.name == "sink.retained_bytes" && e.dur_ns == u64::MAX && e.value == 4096));
+        {
+            let _sp = span(Span::Strategy);
+        }
+        assert!(take_events().is_empty(), "disarmed buffer must stay empty");
+        reset_trace();
+    }
+}

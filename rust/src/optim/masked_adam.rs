@@ -199,6 +199,7 @@ pub fn masked_adam_step(
     lr: f64,
     h: &AdamHypers,
 ) -> usize {
+    let _sp = crate::obs::span(crate::obs::Span::AdamStep);
     debug_assert_eq!(w.len(), g.len());
     debug_assert_eq!(w.len(), st.mask.len);
     let b1 = h.beta1 as f32;
@@ -258,6 +259,7 @@ pub fn masked_adam_step_compact(
     lr: f64,
     h: &AdamHypers,
 ) -> usize {
+    let _sp = crate::obs::span(crate::obs::Span::AdamStep);
     debug_assert_eq!(w.len(), st.mask.len);
     debug_assert_eq!(gc.len(), st.mask.popcount, "compact grads must match the mask popcount");
     let b1 = h.beta1 as f32;

@@ -28,6 +28,7 @@ impl DenseAdam {
 
     /// One Adam step over all tensors. `lr` already includes the schedule.
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[&[f32]], lr: f64) {
+        let _sp = crate::obs::span(crate::obs::Span::AdamStep);
         self.step += 1;
         let h = self.hypers;
         // f64 bias corrections shared with the masked step: exact at large

@@ -143,11 +143,20 @@ impl Manifest {
     }
 
     /// Find the train/eval artifact pair for a preset+head (+pallas flag).
-    pub fn find(&self, preset: &str, head: &str, phase: &str, pallas: bool) -> Result<&ArtifactInfo> {
+    pub fn find(
+        &self,
+        preset: &str,
+        head: &str,
+        phase: &str,
+        pallas: bool,
+    ) -> Result<&ArtifactInfo> {
         self.artifacts
             .values()
             .find(|a| {
-                a.preset == preset && a.head == head && a.kind.ends_with(phase) && a.pallas == pallas
+                a.preset == preset
+                    && a.head == head
+                    && a.kind.ends_with(phase)
+                    && a.pallas == pallas
             })
             .ok_or_else(|| {
                 anyhow::anyhow!("no artifact for preset={preset} head={head} phase={phase} pallas={pallas}; rebuild with `make artifacts` (--full for base preset)")

@@ -33,6 +33,7 @@ use crate::grads::{AccumSink, GradSink, MaskedSink};
 use crate::memory::MemTracker;
 use crate::metrics::{perplexity, RunLogger};
 use crate::model::ParamStore;
+use crate::obs::{self, Counter, Span};
 use crate::optim::schedule::LrSchedule;
 use crate::util::json::Json;
 use crate::util::Stopwatch;
@@ -52,6 +53,7 @@ fn drive_micro(
 ) -> Result<f64> {
     let mut loss = 0.0f64;
     for (k, (tokens, targets)) in micro.iter().enumerate() {
+        let _sp = obs::span(Span::FwdBwd);
         sink.begin_micro(k == 0);
         loss += backend.forward_backward(store, tokens, *targets, sink)?;
     }
@@ -84,6 +86,9 @@ pub struct RunResult {
     /// transient shard, counted at consume time by the `grads` layer) —
     /// the ground-truth twin of the modeled `MemBreakdown::grads`
     pub peak_grad_bytes: u64,
+    /// per-run obs profile block (spans/counters/gauges since the trainer
+    /// was built) — present only when `--trace`/`PALLAS_TRACE` is on
+    pub profile: Option<Json>,
     pub wall_secs: f64,
     pub steps_per_sec: f64,
     pub exec_secs: f64,
@@ -136,6 +141,9 @@ pub struct Trainer {
     grads: Vec<Vec<f32>>,
     phase_strategy: f64,
     step: usize,
+    /// obs registry totals when this trainer was built — `finish` exports
+    /// the delta so per-run profiles never bleed across runs in one process
+    obs_base: obs::Snapshot,
 }
 
 impl Trainer {
@@ -184,6 +192,7 @@ impl Trainer {
             grads: Vec::new(),
             phase_strategy: 0.0,
             step: 0,
+            obs_base: obs::snapshot(),
             cfg,
         })
     }
@@ -216,6 +225,7 @@ impl Trainer {
     /// * **dense** (everything else): an `AccumSink` accumulates scaled
     ///   shards straight into `self.grads` at consume time.
     fn optim_step(&mut self, micro: &[(&[i32], Targets<'_>)]) -> Result<f64> {
+        let _sp_step = obs::span(Span::TrainStep);
         let accum = micro.len().max(1);
         let scale = 1.0 / accum as f32;
         let lr = self.sched.at(self.step);
@@ -235,7 +245,9 @@ impl Trainer {
                 drive_micro(self.backend.as_mut(), &self.store, micro, &mut sink)? / accum as f64;
             grad_peak = grad_peak.max(sink.peak_grad_elems());
             let t0 = std::time::Instant::now();
+            let sp_strat = obs::span(Span::Strategy);
             let outcome = self.strategy.step_sparse(&mut self.store, &sink, loss, lr, self.step);
+            drop(sp_strat);
             strat_secs += t0.elapsed().as_secs_f64();
             let info = match outcome {
                 SparseOutcome::Done(info) => info,
@@ -252,12 +264,17 @@ impl Trainer {
                     // (max over sinks, never their sum) matches the true
                     // simultaneous residency
                     drop(sink);
+                    obs::add(Counter::ReplayEvents, 1);
+                    let sp_replay = obs::span(Span::Replay);
                     let mut rsink = MaskedSink::new(n_params, retain, scale);
                     drive_micro(self.backend.as_mut(), &self.store, micro, &mut rsink)?;
+                    drop(sp_replay);
                     grad_peak = grad_peak.max(rsink.peak_grad_elems());
                     let t1 = std::time::Instant::now();
+                    let sp_strat = obs::span(Span::Strategy);
                     let info =
                         self.strategy.step_selected(&mut self.store, rsink, loss, lr, self.step);
+                    drop(sp_strat);
                     strat_secs += t1.elapsed().as_secs_f64();
                     info
                 }
@@ -265,13 +282,16 @@ impl Trainer {
                     // accumulated selection: norms/masks need the
                     // accumulated dense gradients — one dense-path step
                     drop(sink);
+                    obs::add(Counter::ReplayDenseEvents, 1);
                     self.ensure_dense_grads();
                     {
+                        let _sp_replay = obs::span(Span::Replay);
                         let mut dsink = AccumSink::new(&mut self.grads, scale);
                         drive_micro(self.backend.as_mut(), &self.store, micro, &mut dsink)?;
                         grad_peak = grad_peak.max(dsink.peak_grad_elems());
                     }
                     let t1 = std::time::Instant::now();
+                    let _sp_strat = obs::span(Span::Strategy);
                     let info = self.strategy.step_selected_dense(
                         &mut self.store,
                         &self.grads,
@@ -298,12 +318,17 @@ impl Trainer {
                 grad_peak = grad_peak.max(dsink.peak_grad_elems());
             }
             let t0 = std::time::Instant::now();
+            let sp_strat = obs::span(Span::Strategy);
             let info = self.strategy.step(&mut self.store, &self.grads, loss, lr, self.step);
+            drop(sp_strat);
             strat_secs += t0.elapsed().as_secs_f64();
             (loss, info)
         };
 
         self.phase_strategy += strat_secs;
+        if info.reselected {
+            obs::add(Counter::SelectionEvents, 1);
+        }
         self.backend.params_updated(&info.active_layers);
         let mut mem = info.mem;
         mem.activations = self.backend.activation_bytes();
@@ -475,7 +500,19 @@ impl Trainer {
         exec_secs: f64,
     ) -> RunResult {
         let bp = self.backend.phase_secs();
+        // per-run profile: registry delta since construction, exported as
+        // the stderr table + a `profile` JSONL record + a RunResult block
+        let profile = if obs::on() {
+            let d = obs::delta(&self.obs_base);
+            obs::export::print_table(&d, wall);
+            let p = obs::export::profile_json(&d);
+            self.logger.log(&Json::obj(vec![("profile", p.clone())]));
+            Some(p)
+        } else {
+            None
+        };
         RunResult {
+            profile,
             method: self.strategy.name().to_string(),
             backend: self.backend.name().to_string(),
             final_train_loss: *train_losses.last().unwrap_or(&f64::NAN),

@@ -425,4 +425,80 @@ mod tests {
         assert!(v.req("f").unwrap().as_usize().is_err());
         assert!(v.req("missing").is_err());
     }
+
+    #[test]
+    fn roundtrip_profile_record_shape() {
+        // The obs `profile` block is the deepest record the logger emits:
+        // obj -> obj -> obj with mixed integer counts and fractional ms.
+        let rec = Json::obj(vec![
+            (
+                "profile",
+                Json::obj(vec![
+                    (
+                        "spans",
+                        Json::obj(vec![
+                            (
+                                "fwd.attn",
+                                Json::obj(vec![
+                                    ("count", Json::num(128.0)),
+                                    ("total_ms", Json::num(3.141592653589793)),
+                                    ("self_ms", Json::num(0.000001)),
+                                ]),
+                            ),
+                            (
+                                "gemm.packed",
+                                Json::obj(vec![
+                                    ("count", Json::num(1.0e12)),
+                                    ("total_ms", Json::num(0.125)),
+                                    ("self_ms", Json::num(0.125)),
+                                ]),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "counters",
+                        Json::obj(vec![
+                            ("gemm.flops", Json::num((1u64 << 53) as f64)),
+                            ("log.writes_dropped", Json::num(0.0)),
+                        ]),
+                    ),
+                    ("gauges", Json::obj(vec![])),
+                ]),
+            ),
+            ("run", Json::str("blockllm grain \"quoted\" \\ path\n")),
+        ]);
+        let text = rec.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, rec, "profile record must round-trip exactly");
+        // integers emit without a fractional part; 2^53 is exact in f64
+        assert!(text.contains("\"count\":128"));
+        assert!(text.contains("\"gemm.flops\":9007199254740992"));
+        // fractional ms survive with full precision
+        let spans = back.req("profile").unwrap().req("spans").unwrap();
+        let attn = spans.req("fwd.attn").unwrap();
+        assert_eq!(attn.req("total_ms").unwrap().as_f64().unwrap(), 3.141592653589793);
+        assert_eq!(attn.req("self_ms").unwrap().as_f64().unwrap(), 0.000001);
+        // strings with quotes, backslashes and newlines escape correctly
+        assert_eq!(
+            back.req("run").unwrap().as_str().unwrap(),
+            "blockllm grain \"quoted\" \\ path\n"
+        );
+    }
+
+    #[test]
+    fn roundtrip_deep_nesting() {
+        // 24 levels of {"p": {"p": ... 7 ...}} — deeper than any profile
+        // block we emit, still well inside the parser's recursion budget.
+        let mut v = Json::num(7.0);
+        for _ in 0..24 {
+            v = Json::obj(vec![("p", v)]);
+        }
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back, v);
+        let mut cur = &back;
+        for _ in 0..24 {
+            cur = cur.req("p").unwrap();
+        }
+        assert_eq!(cur.as_f64().unwrap(), 7.0);
+    }
 }

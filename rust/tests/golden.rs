@@ -176,7 +176,12 @@ fn masked_adam_kernel_parity_rust_vs_pallas_artifact() {
     // (c) both must match the jnp-reference checksums AND each other
     let sum = |xs: &[f32]| xs.iter().map(|&x| x as f64).sum::<f64>();
     let want_sum = g.req("checksums").unwrap().req("w_out_sum").unwrap().as_f64().unwrap();
-    assert!((sum(&w_pallas) - want_sum).abs() < 1e-2, "pallas sum {} vs {}", sum(&w_pallas), want_sum);
+    assert!(
+        (sum(&w_pallas) - want_sum).abs() < 1e-2,
+        "pallas sum {} vs {}",
+        sum(&w_pallas),
+        want_sum
+    );
     assert!((sum(&w_rust) - want_sum).abs() < 1e-2, "rust sum {} vs {}", sum(&w_rust), want_sum);
     for i in 0..n {
         assert!(

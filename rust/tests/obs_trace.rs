@@ -1,0 +1,211 @@
+//! Observability acceptance tests: tracing must observe, never steer.
+//!
+//! 1. Bit-neutrality: a traced run produces the exact same losses and
+//!    parameter bits as an untraced run, on both gradient-retention routes.
+//! 2. Leg-invariance: span counts for the phase spans and every
+//!    `Counter::leg_invariant()` counter are identical across the CI matrix
+//!    {1,4} threads x {direct,packed} kernels x {gs0,gs1} retention (adam,
+//!    which never replays) and across {1,4} x {direct,packed} for blockllm
+//!    at fixed retention.
+//! 3. The exported `profile` block reflects the run's actual structure
+//!    (train_step count == steps, fwd_bwd count == steps * grad_accum).
+//!
+//! Every test mutates process-global knobs, so they serialize on a
+//! file-local mutex (same pattern as grad_check.rs).
+
+use std::sync::Mutex;
+
+use blockllm::config::{BackendKind, Method, Task, TrainConfig};
+use blockllm::experiments::common::run_config_with_params;
+use blockllm::obs::{self, Counter, Span};
+
+static KNOB_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore every knob this file touches, even if an assert fires.
+struct ResetKnobs;
+impl Drop for ResetKnobs {
+    fn drop(&mut self) {
+        blockllm::util::reset_pack_min();
+        blockllm::util::reset_par_min();
+        blockllm::util::reset_grad_stream();
+        obs::reset_trace();
+    }
+}
+
+fn nano_cfg(method: Method) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "nano".into();
+    cfg.task = Task::C4Pretrain;
+    cfg.method = method;
+    cfg.backend = BackendKind::Native; // the instrumented engine
+    cfg.steps = 6;
+    cfg.grad_accum = 2;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 2;
+    cfg.lr = 3e-3;
+    cfg.sparsity = 0.8;
+    cfg.patience = 3;
+    cfg
+}
+
+/// Phase spans whose COUNTS are deterministic across the whole CI matrix:
+/// everything except the per-kernel-path GEMM spans (which split between
+/// direct/packed depending on PALLAS_PACK_MIN) and replay (route-dependent).
+const INVARIANT_SPANS: [Span; 13] = [
+    Span::TrainStep,
+    Span::FwdBwd,
+    Span::FwdEmbed,
+    Span::FwdAttn,
+    Span::FwdMlp,
+    Span::FwdHeadLoss,
+    Span::BwdHead,
+    Span::BwdMlp,
+    Span::BwdAttn,
+    Span::BwdEmbed,
+    Span::Eval,
+    Span::SinkConsume,
+    Span::AdamStep,
+];
+
+const INVARIANT_COUNTERS: [Counter; 4] = [
+    Counter::GemmFlops,
+    Counter::SinkConsumeCalls,
+    Counter::SinkConsumedElems,
+    Counter::SelectionEvents,
+];
+
+fn leg_fingerprint(d: &obs::Snapshot, losses: &[f64]) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let spans = INVARIANT_SPANS.iter().map(|&s| d.span_count[s as usize]).collect();
+    let counters = INVARIANT_COUNTERS.iter().map(|&c| d.counters[c as usize]).collect();
+    let bits = losses.iter().map(|l| l.to_bits()).collect();
+    (spans, counters, bits)
+}
+
+#[test]
+fn tracing_never_changes_bits() {
+    let _g = lock();
+    let _reset = ResetKnobs;
+    for stream in [false, true] {
+        blockllm::util::set_grad_stream(stream);
+        let cfg = nano_cfg(Method::BlockLlm);
+        obs::set_trace(false);
+        let (res_off, store_off) = run_config_with_params(&cfg, None).unwrap();
+        assert!(res_off.profile.is_none(), "untraced runs must not export a profile");
+        obs::set_trace(true);
+        let (res_on, store_on) = run_config_with_params(&cfg, None).unwrap();
+        assert!(res_on.profile.is_some(), "traced runs must export a profile");
+        obs::set_trace(false);
+        let off_bits: Vec<u64> = res_off.train_losses.iter().map(|l| l.to_bits()).collect();
+        let on_bits: Vec<u64> = res_on.train_losses.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(off_bits, on_bits, "gs={stream}: tracing changed the loss trajectory");
+        assert_eq!(
+            store_off.bufs, store_on.bufs,
+            "gs={stream}: tracing changed trained parameter bits"
+        );
+    }
+}
+
+#[test]
+fn adam_counters_and_span_counts_invariant_across_full_matrix() {
+    let _g = lock();
+    let _reset = ResetKnobs;
+    obs::set_trace(true);
+    let mut legs: Vec<((usize, bool, bool), (Vec<u64>, Vec<u64>, Vec<u64>))> = Vec::new();
+    for threads in [1usize, 4] {
+        for packed in [false, true] {
+            for stream in [false, true] {
+                blockllm::util::set_num_threads(threads);
+                blockllm::util::set_pack_min(if packed { 0 } else { usize::MAX });
+                blockllm::util::set_grad_stream(stream);
+                let cfg = nano_cfg(Method::FullAdam);
+                let base = obs::snapshot();
+                let (res, _) = run_config_with_params(&cfg, None).unwrap();
+                let d = obs::delta(&base);
+                // the per-path split must cover every GEMM call on each leg
+                let calls = d.counters[Counter::GemmDirectCalls as usize]
+                    + d.counters[Counter::GemmPackedCalls as usize];
+                assert!(calls > 0, "no GEMM calls counted");
+                legs.push(((threads, packed, stream), leg_fingerprint(&d, &res.train_losses)));
+            }
+        }
+    }
+    let (_, first) = &legs[0];
+    for (leg, fp) in &legs[1..] {
+        assert_eq!(
+            fp, first,
+            "adam leg {leg:?} diverged from (1, direct, gs0) in spans/counters/loss bits"
+        );
+    }
+}
+
+#[test]
+fn blockllm_counters_invariant_across_threads_and_kernels() {
+    let _g = lock();
+    let _reset = ResetKnobs;
+    obs::set_trace(true);
+    blockllm::util::set_grad_stream(true); // fixed: replays are route-dependent
+    let mut legs: Vec<((usize, bool), (Vec<u64>, Vec<u64>, Vec<u64>))> = Vec::new();
+    for threads in [1usize, 4] {
+        for packed in [false, true] {
+            blockllm::util::set_num_threads(threads);
+            blockllm::util::set_pack_min(if packed { 0 } else { usize::MAX });
+            let cfg = nano_cfg(Method::BlockLlm);
+            let base = obs::snapshot();
+            let (res, _) = run_config_with_params(&cfg, None).unwrap();
+            let d = obs::delta(&base);
+            assert!(
+                d.counters[Counter::SelectionEvents as usize] >= 1,
+                "blockllm run recorded no selection events"
+            );
+            legs.push(((threads, packed), leg_fingerprint(&d, &res.train_losses)));
+        }
+    }
+    let (_, first) = &legs[0];
+    for (leg, fp) in &legs[1..] {
+        assert_eq!(fp, first, "blockllm leg {leg:?} diverged from (1, direct)");
+    }
+}
+
+#[test]
+fn profile_block_reflects_run_structure() {
+    let _g = lock();
+    let _reset = ResetKnobs;
+    obs::set_trace(true);
+    let cfg = nano_cfg(Method::FullAdam);
+    let (res, _) = run_config_with_params(&cfg, None).unwrap();
+    obs::set_trace(false);
+    let p = res.profile.as_ref().expect("traced run exports a profile");
+    let spans = p.req("spans").unwrap();
+    let step = spans.req("train_step").unwrap();
+    assert_eq!(step.req("count").unwrap().as_usize().unwrap(), cfg.steps);
+    let fwd = spans.req("fwd_bwd").unwrap();
+    assert_eq!(
+        fwd.req("count").unwrap().as_usize().unwrap(),
+        cfg.steps * cfg.grad_accum,
+        "fwd_bwd must run once per microbatch (adam never replays)"
+    );
+    // eval_every=0 still evals once at the end, one span per eval batch
+    let eval = spans.req("eval").unwrap();
+    assert_eq!(eval.req("count").unwrap().as_usize().unwrap(), cfg.eval_batches);
+    // nesting invariant: a child's total is bounded by its parent's total
+    let step_total = step.req("total_ms").unwrap().as_f64().unwrap();
+    let fwd_total = fwd.req("total_ms").unwrap().as_f64().unwrap();
+    let step_self = step.req("self_ms").unwrap().as_f64().unwrap();
+    assert!(fwd_total <= step_total, "fwd_bwd total exceeds train_step total");
+    assert!(step_self <= step_total, "self time exceeds total");
+    // the phase spans under train_step account for most of its wall-clock
+    assert!(
+        fwd_total + step_self > 0.0,
+        "train_step recorded no time at all: {step_total} ms"
+    );
+    let counters = p.req("counters").unwrap();
+    assert!(counters.req("gemm.flops").unwrap().as_f64().unwrap() > 0.0);
+    assert!(counters.req("sink.consume_calls").unwrap().as_f64().unwrap() > 0.0);
+    // the block must survive a JSONL round-trip exactly
+    let reparsed = blockllm::util::json::Json::parse(&p.to_string()).unwrap();
+    assert_eq!(&reparsed, p);
+}
