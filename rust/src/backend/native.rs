@@ -43,7 +43,7 @@ use crate::model::ParamStore;
 use crate::obs::{self, Span};
 use crate::runtime::ParamSpec;
 use crate::tensor::{BatchView, Tensor, View};
-use crate::util;
+use crate::util::{self, pool};
 
 const RMS_EPS: f32 = 1e-6;
 
@@ -476,30 +476,25 @@ impl NativeBackend {
         if threads <= 1 {
             lm_loss_blocks(&mut logits.data, targets, v, want_grad, &mut parts);
         } else {
-            // contiguous BLOCK ranges per thread (blocks, not raw rows, so
-            // every fixed block is computed whole by exactly one thread)
+            // contiguous BLOCK ranges per chunk (blocks, not raw rows, so
+            // every fixed block is computed whole by exactly one thread),
+            // dispatched onto the persistent pool like every other sweep
             let chunks = gemm::split_rows(nblocks, threads);
-            std::thread::scope(|s| {
-                let mut rest_rows: &mut [f32] = &mut logits.data;
-                let mut rest_parts: &mut [(f64, f64)] = &mut parts;
-                let mut first: Option<(usize, usize, &mut [f32], &mut [(f64, f64)])> = None;
-                for (ci, &(c0, c1)) in chunks.iter().enumerate() {
-                    let r0 = c0 * REDUCE_ROWS;
-                    let r1 = (c1 * REDUCE_ROWS).min(rows);
-                    let (rh, rt) = std::mem::take(&mut rest_rows).split_at_mut((r1 - r0) * v);
-                    rest_rows = rt;
-                    let (ph, pt) = std::mem::take(&mut rest_parts).split_at_mut(c1 - c0);
-                    rest_parts = pt;
-                    if ci == 0 {
-                        first = Some((r0, r1, rh, ph));
-                    } else {
-                        let tg = &targets[r0..r1];
-                        s.spawn(move || lm_loss_blocks(rh, tg, v, want_grad, ph));
-                    }
-                }
-                if let Some((r0, r1, rh, ph)) = first {
-                    lm_loss_blocks(rh, &targets[r0..r1], v, want_grad, ph);
-                }
+            let logits_base = pool::SendPtr(logits.data.as_mut_ptr());
+            let parts_base = pool::SendPtr(parts.as_mut_ptr());
+            pool::run(chunks.len(), &|ci| {
+                let (c0, c1) = chunks[ci];
+                let r0 = c0 * REDUCE_ROWS;
+                let r1 = (c1 * REDUCE_ROWS).min(rows);
+                // SAFETY: chunks are disjoint block ranges, so the logits
+                // row slices and `parts` slices never alias; `pool::run`
+                // joins before returning.
+                let rh = unsafe {
+                    std::slice::from_raw_parts_mut(logits_base.0.add(r0 * v), (r1 - r0) * v)
+                };
+                let ph =
+                    unsafe { std::slice::from_raw_parts_mut(parts_base.0.add(c0), c1 - c0) };
+                lm_loss_blocks(rh, &targets[r0..r1], v, want_grad, ph);
             });
         }
         let mut loss_sum = 0.0f64;

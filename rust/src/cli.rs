@@ -95,10 +95,16 @@ BlockLLM/magnitude runs keep only the active block's coordinates (+ one
 transient layer) instead of a full dense gradient table; 0 stages dense
 gradients for every method — the legacy parity reference. Measured peak
 gradient bytes are reported either way (MemTracker / results JSONL).
-All five are pure reproducibility-safe knobs: the packed and direct paths
+--pool {0|1} (or PALLAS_POOL; default 1) selects the kernel dispatch path:
+1 runs parallel chunks on the process-wide persistent worker pool (workers
+park between dispatches — no per-call thread spawn/join); 0 falls back to
+the legacy scoped-thread spawn per dispatch. The row partition is fixed by
+the thread-count knob either way, so both paths produce identical bits.
+All six are pure reproducibility-safe knobs: the packed and direct paths
 agree bit for bit, batched and per-head attention agree bit for bit,
-streaming and dense gradient retention agree bit for bit, and every kernel
-is deterministic at any thread count.
+streaming and dense gradient retention agree bit for bit, pooled and
+scoped dispatch agree bit for bit, and every kernel is deterministic at
+any thread count.
 --trace {0|1} (or PALLAS_TRACE; default 0) turns on the span profiler +
 metrics registry: per-phase timings (fwd/bwd per sublayer, GEMM kernels,
 pack time, sink consume, optimizer steps), kernel/FLOP/pack-byte counters,

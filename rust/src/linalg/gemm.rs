@@ -34,14 +34,18 @@
 //! test below), and the path choice — a pure throughput knob — can never
 //! change a result.
 //!
-//! Parallelism: output rows are split into contiguous per-thread chunks run
-//! under `std::thread::scope`. Each output element is owned by exactly one
-//! thread and its summation order is fixed by the contract above, so results
-//! are bit-for-bit identical at ANY thread count — the property the golden
-//! pins, grad checks and thread-invariance tests rely on. The worker count
-//! comes from `util::num_threads()` (`PALLAS_NUM_THREADS`, parsed once)
-//! unless a caller pins it explicitly (per-head attention work runs its
-//! inner GEMMs at a reduced count to avoid oversubscription).
+//! Parallelism: output rows are split into contiguous per-thread chunks
+//! dispatched onto the process-wide persistent worker pool (`util::pool`;
+//! `PALLAS_POOL=0` / `--pool 0` falls back to per-call scoped threads —
+//! the legacy parity path). Each output element is owned by exactly one
+//! chunk and its summation order is fixed by the contract above, so results
+//! are bit-for-bit identical at ANY thread count and on EITHER dispatch
+//! path — the property the golden pins, grad checks and thread-invariance
+//! tests rely on. The worker count comes from `util::num_threads()`
+//! (`PALLAS_NUM_THREADS`, parsed once) unless a caller pins it explicitly
+//! (per-head attention work runs its inner GEMMs at a reduced count to
+//! avoid oversubscription; on the pool, such nested dispatches run inline
+//! on the issuing worker).
 //!
 //! The pack and chunk kernels below take explicit leading dimensions
 //! (`lda`/`ldb`), so the batched strided sibling (`linalg::gemm_batched`)
@@ -50,7 +54,7 @@
 
 use crate::obs::{self, Counter, Span};
 use crate::tensor::Tensor;
-use crate::util;
+use crate::util::{self, pool};
 
 /// Microkernel tile height: rows of C computed per register tile.
 const MR: usize = 4;
@@ -101,23 +105,14 @@ where
         body(0, m, c);
         return;
     }
-    std::thread::scope(|s| {
-        let mut rest = c;
-        let mut first: Option<(usize, usize, &mut [f32])> = None;
-        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut((i1 - i0) * n);
-            rest = tail;
-            if ci == 0 {
-                first = Some((i0, i1, head));
-            } else {
-                let b = &body;
-                s.spawn(move || b(i0, i1, head));
-            }
-        }
-        // the caller's thread works the first chunk while workers run
-        if let Some((i0, i1, head)) = first {
-            body(i0, i1, head);
-        }
+    let base = pool::SendPtr(c.as_mut_ptr());
+    pool::run(chunks.len(), &|ci| {
+        let (i0, i1) = chunks[ci];
+        // SAFETY: chunks are disjoint row ranges of `c`, so the slices
+        // never alias, and `pool::run` returns only after every job
+        // finished, so none outlives the borrow.
+        let rows = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+        body(i0, i1, rows);
     });
 }
 
@@ -144,25 +139,17 @@ pub(crate) fn par_rows2<F>(
         body(0, m, a, b);
         return;
     }
-    std::thread::scope(|s| {
-        let mut ra = a;
-        let mut rb = b;
-        let mut first: Option<(usize, usize, &mut [f32], &mut [f32])> = None;
-        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
-            let (ha, ta) = std::mem::take(&mut ra).split_at_mut((i1 - i0) * na);
-            let (hb, tb) = std::mem::take(&mut rb).split_at_mut((i1 - i0) * nb);
-            ra = ta;
-            rb = tb;
-            if ci == 0 {
-                first = Some((i0, i1, ha, hb));
-            } else {
-                let f = &body;
-                s.spawn(move || f(i0, i1, ha, hb));
-            }
-        }
-        if let Some((i0, i1, ha, hb)) = first {
-            body(i0, i1, ha, hb);
-        }
+    let base_a = pool::SendPtr(a.as_mut_ptr());
+    let base_b = pool::SendPtr(b.as_mut_ptr());
+    pool::run(chunks.len(), &|ci| {
+        let (i0, i1) = chunks[ci];
+        // SAFETY: disjoint row ranges of `a` and `b`; `pool::run` joins
+        // before returning (see par_rows).
+        let ca =
+            unsafe { std::slice::from_raw_parts_mut(base_a.0.add(i0 * na), (i1 - i0) * na) };
+        let cb =
+            unsafe { std::slice::from_raw_parts_mut(base_b.0.add(i0 * nb), (i1 - i0) * nb) };
+        body(i0, i1, ca, cb);
     });
 }
 
@@ -810,7 +797,8 @@ pub fn silu_mul_vjp(dprod: &Tensor, g: &Tensor, u: &Tensor) -> (Tensor, Tensor) 
 /// Deterministic parallel map over `0..n`: results in index order. Work item
 /// `i` always computes the same bits regardless of which thread runs it, so
 /// the output is thread-count-invariant. Items should pin their own inner
-/// kernels to a reduced thread count to avoid oversubscription.
+/// kernels to a reduced thread count to avoid oversubscription (on the
+/// pool, an item's nested dispatches run inline on its worker anyway).
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -822,27 +810,15 @@ where
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let chunks = split_rows(n, threads);
-    std::thread::scope(|s| {
-        let mut rest: &mut [Option<T>] = &mut out;
-        let mut first: Option<(usize, &mut [Option<T>])> = None;
-        for (ci, &(i0, i1)) in chunks.iter().enumerate() {
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(i1 - i0);
-            rest = tail;
-            if ci == 0 {
-                first = Some((i0, head));
-            } else {
-                let g = &f;
-                s.spawn(move || {
-                    for (li, slot) in head.iter_mut().enumerate() {
-                        *slot = Some(g(i0 + li));
-                    }
-                });
-            }
-        }
-        if let Some((i0, head)) = first {
-            for (li, slot) in head.iter_mut().enumerate() {
-                *slot = Some(f(i0 + li));
-            }
+    let base = pool::SendPtr(out.as_mut_ptr());
+    pool::run(chunks.len(), &|ci| {
+        let (i0, i1) = chunks[ci];
+        // SAFETY: disjoint slot ranges of `out` (T: Send moves each
+        // result across the thread boundary); `pool::run` joins before
+        // returning (see par_rows).
+        let slots = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0), i1 - i0) };
+        for (li, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(f(i0 + li));
         }
     });
     out.into_iter().map(|x| x.expect("parallel_map slot filled")).collect()

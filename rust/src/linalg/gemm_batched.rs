@@ -17,7 +17,10 @@
 //! the table. Here the scheduling grid is the WHOLE (batch × row) space:
 //! `par_rows` splits `batch·m` output rows into contiguous per-thread
 //! chunks (a chunk may span several batch elements), so every thread
-//! stays busy regardless of how b·h compares to the worker count.
+//! stays busy regardless of how b·h compares to the worker count. The
+//! chunks run on the persistent worker pool (`util::pool`) through
+//! `par_rows`/`parallel_map`, so batched calls inherit the pooled (or
+//! `PALLAS_POOL=0` scoped) dispatch path automatically.
 //!
 //! ## Same contract, same bits
 //!

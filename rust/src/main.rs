@@ -48,6 +48,11 @@ fn run() -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--grad-stream wants 0 or 1, got {v:?}"))?;
         blockllm::util::set_grad_stream(n != 0);
     }
+    if let Some(v) = args.get("pool") {
+        let n: usize =
+            v.parse().map_err(|_| anyhow::anyhow!("--pool wants 0 or 1, got {v:?}"))?;
+        blockllm::util::set_pool(n != 0);
+    }
     if let Some(v) = args.get("trace") {
         let n: usize =
             v.parse().map_err(|_| anyhow::anyhow!("--trace wants 0 or 1, got {v:?}"))?;
@@ -89,6 +94,7 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             || k == "par-min"
             || k == "attn-batched"
             || k == "grad-stream"
+            || k == "pool"
             || k == "trace"
             || k == "trace-out"
         {

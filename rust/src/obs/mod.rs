@@ -6,10 +6,15 @@
 //! 1. **Spans** — scoped wall-clock timers ([`span`] returns a
 //!    [`SpanGuard`]; drop closes the span). Each thread keeps its own open
 //!    stack, so a span's *self* time is its total minus the time spent in
-//!    child spans opened on the SAME thread. Spans are always opened on the
-//!    calling thread (never inside `std::thread::scope` workers), so span
-//!    COUNTS are thread-count-invariant even though wall-clock attribution
-//!    is not.
+//!    child spans opened on the SAME thread. The kernel layer opens its
+//!    spans at the dispatch site (never inside `util::pool` workers or
+//!    scoped threads), so span COUNTS are thread-count-invariant even
+//!    though wall-clock attribution is not. Pool workers are LONG-LIVED:
+//!    they keep stable trace TIDs across dispatches, and the pool clears
+//!    each worker's open-span stack after every dispatch
+//!    ([`reset_thread_spans`]) so one dispatch's bookkeeping can never
+//!    skew a later dispatch's self-time — scoped threads got that hygiene
+//!    for free by dying.
 //! 2. **Counters/gauges** — relaxed `AtomicU64` cells ([`add`],
 //!    [`gauge_max`]). A designated subset is deterministic across the CI
 //!    matrix legs (see [`Counter::leg_invariant`]); throughput-shaped ones
@@ -46,10 +51,7 @@ pub fn on() -> bool {
     if cur != 0 {
         return cur - 1 != 0;
     }
-    let n = std::env::var("PALLAS_TRACE")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .unwrap_or(0);
+    let n = crate::util::env_knob("PALLAS_TRACE").unwrap_or(0);
     let stored = n.saturating_add(1);
     match TRACE.compare_exchange(0, stored, Ordering::Relaxed, Ordering::Relaxed) {
         Ok(_) => n != 0,
@@ -168,9 +170,16 @@ pub enum Counter {
     LogWritesDropped,
     /// Trace events dropped because the event buffer hit its cap.
     TraceEventsDropped,
+    /// Multi-chunk dispatches handed to the persistent worker pool
+    /// (`util::pool`). Leg-variant: scales with the thread count (more
+    /// threads = more multi-chunk calls) and is zero on `PALLAS_POOL=0`
+    /// legs. Chunk counting itself ([`Counter::ParChunks`]) stays at the
+    /// dispatch site, so its totals are identical whether chunks run
+    /// pooled or scoped.
+    PoolDispatches,
 }
 
-pub const NCOUNTERS: usize = 14;
+pub const NCOUNTERS: usize = 15;
 
 /// Export names, indexed by `Counter as usize`.
 pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
@@ -188,6 +197,7 @@ pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
     "replay.dense_events",
     "log.writes_dropped",
     "trace.events_dropped",
+    "pool.dispatches",
 ];
 
 impl Counter {
@@ -281,6 +291,17 @@ pub fn span(s: Span) -> SpanGuard {
     }
     STACK.with(|st| st.borrow_mut().push(Frame { child_ns: 0 }));
     SpanGuard { start: Some(Instant::now()), span: s as u16 }
+}
+
+/// Clear the calling thread's open-span stack. Called by `util::pool`
+/// workers after each dispatch: workers are long-lived, so — unlike
+/// scoped threads, whose stacks died with them — a span guard leaked
+/// inside one job body (e.g. via `mem::forget`) would otherwise skew
+/// parent/child self-time attribution for every later dispatch run on
+/// that worker. Balanced guards leave the stack empty already; this is
+/// the per-dispatch reset that makes that a guarantee instead of a hope.
+pub(crate) fn reset_thread_spans() {
+    STACK.with(|st| st.borrow_mut().clear());
 }
 
 /// RAII handle for one open span (see [`span`]). Not `Send`: a span must
@@ -391,6 +412,10 @@ static EPOCH: OnceLock<Instant> = OnceLock::new();
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
 thread_local! {
+    // One trace TID per OS thread, assigned on first use. Persistent pool
+    // workers therefore keep STABLE TIDs across dispatches — a Perfetto
+    // timeline shows one lane per worker instead of the old
+    // one-lane-per-spawn confetti from scoped threads.
     static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
 }
 
@@ -455,7 +480,7 @@ mod tests {
     #[test]
     fn name_tables_cover_every_variant() {
         assert_eq!(Span::GemmBatchedPack as usize, NSPANS - 1);
-        assert_eq!(Counter::TraceEventsDropped as usize, NCOUNTERS - 1);
+        assert_eq!(Counter::PoolDispatches as usize, NCOUNTERS - 1);
         assert_eq!(Gauge::SinkRetainedPeakBytes as usize, NGAUGES - 1);
         assert_eq!(SPAN_NAMES.len(), NSPANS);
         assert_eq!(COUNTER_NAMES.len(), NCOUNTERS);
@@ -508,13 +533,12 @@ mod tests {
         let _g = crate::util::test_knob_lock();
         set_trace(true);
         let base = snapshot();
-        std::thread::scope(|s| {
-            for _ in 0..4 {
-                s.spawn(|| {
-                    let _sp = span(Span::SinkConsume);
-                    add(Counter::SinkConsumeCalls, 1);
-                });
-            }
+        // spans opened INSIDE pool jobs (long-lived workers and/or the
+        // dispatching thread) must aggregate into the same registry and
+        // leave every worker's span stack balanced for the next dispatch
+        crate::util::pool::run(4, &|_i| {
+            let _sp = span(Span::SinkConsume);
+            add(Counter::SinkConsumeCalls, 1);
         });
         let d = delta(&base);
         assert_eq!(d.span_count[Span::SinkConsume as usize], 4);

@@ -2,10 +2,42 @@
 //! serde/rand/clap — DESIGN.md §8): JSON, PRNG, timing helpers.
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Parse an env knob's raw value, warning ONCE per variable on garbage
+/// instead of silently falling back: `PALLAS_NUM_THREADS=abc` or
+/// `PALLAS_PACK_MIN=-1` used to run with the built-in default and leave
+/// no trace of the misconfiguration. The fallback behavior is unchanged —
+/// only the silence is fixed.
+fn parse_env_knob(env: &str, raw: &str) -> Option<usize> {
+    match raw.trim().parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            static WARNED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+            if !warned.iter().any(|w| w == env) {
+                warned.push(env.to_string());
+                eprintln!(
+                    "blockllm: warning: ignoring {env}={raw:?} (not an unsigned integer); \
+                     using the built-in default"
+                );
+            }
+            None
+        }
+    }
+}
+
+/// Read an env tuning knob: `None` when unset, or unparseable (warned
+/// once to stderr). Shared by every `PALLAS_*` resolution path, including
+/// `obs`'s `PALLAS_TRACE`.
+pub(crate) fn env_knob(env: &str) -> Option<usize> {
+    parse_env_knob(env, &std::env::var(env).ok()?)
+}
 
 /// Resolved kernel worker count; 0 = not yet resolved. One shared knob so
 /// every blocked kernel agrees (DESIGN: the env var is parsed exactly once).
@@ -23,9 +55,7 @@ pub fn num_threads() -> usize {
     if cur != 0 {
         return cur;
     }
-    let n = std::env::var("PALLAS_NUM_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
+    let n = env_knob("PALLAS_NUM_THREADS")
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
         .max(1);
     // first-time resolution must never clobber a concurrent explicit
@@ -67,10 +97,7 @@ fn resolve_knob(cell: &AtomicUsize, env: &str, default: usize) -> usize {
     if cur != 0 {
         return cur - 1;
     }
-    let n = std::env::var(env)
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .unwrap_or(default);
+    let n = env_knob(env).unwrap_or(default);
     let stored = n.saturating_add(1);
     match cell.compare_exchange(0, stored, Ordering::Relaxed, Ordering::Relaxed) {
         Ok(_) => n,
@@ -175,6 +202,42 @@ pub fn reset_grad_stream() {
     GRAD_STREAM.store(0, Ordering::Relaxed);
 }
 
+static POOL_ON: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether multi-chunk kernel dispatches run on the persistent worker
+/// pool ([`pool`]) or on per-call `std::thread::scope` spawns
+/// (`PALLAS_POOL` / `--pool`; default on). The pool only changes WHICH
+/// thread runs a chunk, never the chunk partition or any summation
+/// order, so the two paths are BITWISE identical at any thread count —
+/// pinned by pool unit tests and grad_check's pooled-vs-scoped grid.
+/// A pure throughput knob, kept as the parity/rollback reference.
+pub fn pool_on() -> bool {
+    resolve_knob(&POOL_ON, "PALLAS_POOL", 1) != 0
+}
+
+/// Override the dispatch-path selection (tests pin scoped vs pooled).
+pub fn set_pool(on: bool) {
+    POOL_ON.store(usize::from(on) + 1, Ordering::Relaxed);
+}
+
+/// Restore the dispatch-path knob to its unresolved state: the next read
+/// re-resolves `PALLAS_POOL` (else the pooled default) — the same
+/// env-re-arming contract as [`reset_pack_min`], so a CI leg forcing the
+/// scoped path keeps its coverage after a knob-flipping test finishes.
+pub fn reset_pool() {
+    POOL_ON.store(0, Ordering::Relaxed);
+}
+
+/// Restore the worker-count knob to its unresolved state: the next read
+/// re-resolves `PALLAS_NUM_THREADS` (else available parallelism) — the
+/// same env-re-arming contract as [`reset_pack_min`]. Used by the
+/// first-resolution regression test: the CAS in [`num_threads`] must
+/// hand every concurrent reader (the chunk partitioner AND the pool's
+/// size read) ONE value.
+pub fn reset_num_threads() {
+    NUM_THREADS.store(0, Ordering::Relaxed);
+}
+
 /// Restore BOTH parallelism thresholds to their unresolved state: the next
 /// read re-resolves `PALLAS_PAR_MIN` per knob (each with its own distinct
 /// default when the env var is unset — `set_par_min` collapses them to one
@@ -265,13 +328,49 @@ mod tests {
 
     #[test]
     fn thread_knob_is_clamped_and_overridable() {
-        assert!(num_threads() >= 1);
+        let _g = test_knob_lock(); // value assertions on a global knob
+        let prev = num_threads();
+        assert!(prev >= 1);
         set_num_threads(3);
         assert_eq!(num_threads(), 3);
         set_num_threads(0); // clamped to >= 1
         assert_eq!(num_threads(), 1);
         set_num_threads(2);
         assert_eq!(num_threads(), 2);
+        set_num_threads(prev);
+    }
+
+    #[test]
+    fn thread_knob_first_resolution_is_single_valued() {
+        // Knob-race regression (pool PR): the chunk partitioner and the
+        // pool's size read both call num_threads(); if two concurrent
+        // FIRST resolutions could return different values, one dispatch
+        // could partition for one count and size the pool for another.
+        // The CAS hands every racer the winner's value.
+        let _g = test_knob_lock();
+        let prev = num_threads();
+        reset_num_threads();
+        let seen: Vec<usize> = std::thread::scope(|s| {
+            let hs: Vec<_> = (0..8).map(|_| s.spawn(num_threads)).collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(
+            seen.iter().all(|&v| v == seen[0]),
+            "concurrent first resolutions diverged: {seen:?}"
+        );
+        set_num_threads(prev);
+    }
+
+    #[test]
+    fn env_knob_parse_warns_and_falls_back() {
+        // garbage values fall back (warned once to stderr, not asserted
+        // here); valid values parse with whitespace trimmed
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB", "abc"), None);
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB", "abc"), None); // warn-once path
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB_B", "-1"), None);
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB_C", ""), None);
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB", " 8 "), Some(8));
+        assert_eq!(parse_env_knob("PALLAS_TEST_KNOB", "0"), Some(0));
     }
 
     #[test]
@@ -301,6 +400,12 @@ mod tests {
                 != 0
         };
         assert_eq!(grad_stream(), env_on("PALLAS_GRAD_STREAM", 1));
+        set_pool(false);
+        assert!(!pool_on());
+        set_pool(true);
+        assert!(pool_on());
+        reset_pool(); // re-arms any env override (CI's scoped-dispatch leg)
+        assert_eq!(pool_on(), env_on("PALLAS_POOL", 1));
         // the reset must re-resolve: the env override when present (CI's
         // {direct, packed} matrix legs), else the DISTINCT built-in defaults
         let env = |name: &str, default: usize| {

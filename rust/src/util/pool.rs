@@ -1,0 +1,455 @@
+//! Process-wide persistent worker pool for the blocked kernel layer.
+//!
+//! Every parallel site in the crate (`linalg::gemm::{par_rows, par_rows2,
+//! parallel_map}`, `gemm_batched` through them, `NativeBackend`'s rowwise
+//! sweeps and LM-head loss) used to pay a fresh `std::thread::scope`
+//! spawn/join per call. At serving-scale small shapes (the `grain` preset,
+//! the CI matrix legs) that per-call overhead rivals the kernels
+//! themselves. This module replaces it with ONE pool of parked workers
+//! woken by a per-dispatch work descriptor.
+//!
+//! ## Determinism contract
+//!
+//! The pool decides WHICH thread runs a chunk, never WHAT a chunk
+//! computes: callers partition their output exactly as before
+//! (`gemm::split_rows` on the caller-resolved thread count) and pass only
+//! the chunk count here. Each chunk's bits are fixed by the kernel
+//! summation contract and disjoint chunks share nothing, so pooled,
+//! scoped and inline execution are bitwise identical — pinned by the unit
+//! tests below and the pooled-vs-scoped grid in tests/grad_check.rs.
+//! The pool's size read (`util::num_threads()`) happens once per dispatch
+//! and CANNOT skew a partition: the partition was already fixed by the
+//! caller's own read, and first resolution of the knob is CAS-protected
+//! so concurrent readers can never observe two different counts
+//! (regression-pinned in util's knob tests).
+//!
+//! ## Lifecycle
+//!
+//! * Lazy: workers spawn on the first multi-chunk dispatch.
+//! * Sized to `util::num_threads() - 1` parked workers
+//!   (`PALLAS_NUM_THREADS` / `--threads`) — the dispatching thread always
+//!   works the queue too.
+//! * `set_num_threads` takes effect on the NEXT dispatch: the dispatch
+//!   prologue grows (spawns) or shrinks (parks doomed workers out, then
+//!   joins them) the pool while no job is in flight, so resizes are
+//!   deterministic and leak-free (pinned by the resize test).
+//! * Dispatches serialize: one job is in flight at a time and concurrent
+//!   dispatchers queue on the pool's condvar. A dispatch issued from
+//!   INSIDE a dispatch (a GEMM inside a `parallel_map` item, on a worker
+//!   or on the dispatching thread) runs inline — same bits, no deadlock
+//!   (pinned by the reentrancy test).
+//! * `PALLAS_POOL=0` / `--pool 0` / `util::set_pool(false)` routes every
+//!   dispatch through the legacy per-call `std::thread::scope` path,
+//!   kept as the structural parity reference.
+//!
+//! A job body panic is caught per chunk (the default panic hook still
+//! reports it at the throw site), the dispatch drains so nothing touches
+//! the job closure after `run` returns, and the dispatcher then re-raises
+//! — mirroring `std::thread::scope`'s propagate-on-join semantics.
+//! Workers are long-lived, so after each dispatch they clear their
+//! thread-local open-span stack (`obs::reset_thread_spans`) — scoped
+//! threads got that hygiene for free by dying.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::obs::{self, Counter};
+use crate::util;
+
+/// Raw-pointer wrapper asserting cross-thread shareability for the
+/// DISJOINT chunk slices the kernel layer reconstructs inside pool jobs
+/// (`gemm::par_rows` and friends). Sound because every job touches a
+/// distinct index range and [`run`] does not return until every job
+/// finished: no two threads alias and no pointer outlives its buffer.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// The in-flight job closure, lifetime-erased. Only dereferenced between
+/// a worker's adoption and its `active` release; the dispatcher blocks
+/// until `active == 0`, so the borrow outlives every use.
+type Job = *const (dyn Fn(usize) + Sync + 'static);
+
+#[derive(Clone, Copy)]
+struct SendJob(Job);
+
+unsafe impl Send for SendJob {}
+
+struct State {
+    /// In-flight dispatch: erased job closure + its job count. `None`
+    /// between dispatches — the prologue waits on it, so jobs serialize.
+    job: Option<(SendJob, usize)>,
+    /// Bumped once per dispatch; a worker adopts a job only when the
+    /// epoch moved past the last one it ran, so stale wakeups are inert.
+    epoch: u64,
+    /// Workers with id `>= target` park out and exit (shrink).
+    target: usize,
+    /// Workers currently alive (spawned minus exited); ids stay the
+    /// contiguous range `0..live` because resizes complete in-prologue.
+    live: usize,
+    /// Workers currently inside a dispatch's run loop. The dispatcher
+    /// drains to 0 so no worker can touch the job closure or the shared
+    /// counters after `run` returns.
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes workers: a new epoch, or a lowered `target`.
+    work: Condvar,
+    /// Wakes dispatchers: job complete, worker exited, or job slot freed.
+    done: Condvar,
+    /// Next unclaimed job index of the in-flight dispatch.
+    next: AtomicUsize,
+    /// Jobs finished so far in the in-flight dispatch.
+    completed: AtomicUsize,
+    /// A job body panicked (re-raised by the dispatcher after the drain).
+    panicked: AtomicBool,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Join handles, index == worker id (contiguous `0..live`).
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+thread_local! {
+    /// True while this thread executes inside a dispatch (pool workers
+    /// for their whole life, the dispatcher while its dispatch is live).
+    /// Nested [`run`] calls from such a thread execute inline.
+    static BUSY: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Marks the dispatching thread busy for the dispatch's extent; Drop
+/// clears it even when the dispatch re-raises a job panic.
+struct BusyGuard;
+
+impl BusyGuard {
+    fn set() -> BusyGuard {
+        BUSY.with(|b| b.set(true));
+        BusyGuard
+    }
+}
+
+impl Drop for BusyGuard {
+    fn drop(&mut self) {
+        BUSY.with(|b| b.set(false));
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, target: 0, live: 0, active: 0 }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        }),
+        handles: Mutex::new(Vec::new()),
+    })
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Execute `f(0), f(1), ..., f(jobs - 1)` exactly once each, possibly
+/// concurrently, returning only after ALL of them finished. The sole
+/// entry point for the kernel layer's chunk fan-out: pooled by default,
+/// per-call scoped threads under `PALLAS_POOL=0`, inline when nested
+/// inside another dispatch or when `jobs <= 1`.
+pub(crate) fn run(jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+    match jobs {
+        0 => return,
+        1 => return f(0),
+        _ => {}
+    }
+    if !util::pool_on() {
+        return run_scoped(jobs, f);
+    }
+    if BUSY.with(|b| b.get()) {
+        // nested dispatch: chunking never changes bits, and waiting on
+        // the pool from inside the pool would deadlock — run inline
+        for i in 0..jobs {
+            f(i);
+        }
+        return;
+    }
+    obs::add(Counter::PoolDispatches, 1);
+    pool().dispatch(jobs, f);
+}
+
+/// The legacy per-call spawn/join path (`PALLAS_POOL=0`): the exact
+/// scoped-thread shape every call site used before the pool existed —
+/// the caller runs job 0 while one scoped worker per remaining job runs
+/// the rest. Kept as the structural parity reference for the
+/// pooled-vs-scoped bitwise pins.
+fn run_scoped(jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+    std::thread::scope(|s| {
+        for i in 1..jobs {
+            s.spawn(move || f(i));
+        }
+        f(0);
+    });
+}
+
+/// Live worker count (tests; 0 before the first pooled dispatch).
+#[cfg(test)]
+pub(crate) fn worker_count() -> usize {
+    lock(&pool().shared.state).live
+}
+
+impl Pool {
+    fn dispatch(&self, jobs: usize, f: &(dyn Fn(usize) + Sync)) {
+        let _busy = BusyGuard::set();
+        let sh = &*self.shared;
+        let mut st = lock(&sh.state);
+        while st.job.is_some() {
+            st = wait(&sh.done, st); // queue behind the in-flight dispatch
+        }
+        // Resize between dispatches. One knob read sizes the pool; the
+        // partition (and therefore every result bit) was already fixed by
+        // the CALLER's own thread-count read, so pool size is pure
+        // throughput — the knob-race audit lives in util's tests.
+        let target = util::num_threads().saturating_sub(1);
+        if target > st.live {
+            let mut handles = lock(&self.handles);
+            for wid in st.live..target {
+                let shared = Arc::clone(&self.shared);
+                let h = std::thread::Builder::new()
+                    .name(format!("pallas-pool-{wid}"))
+                    .spawn(move || worker_loop(&shared, wid))
+                    .expect("pool: worker thread spawn failed");
+                handles.push(h);
+            }
+            st.live = target;
+            st.target = target;
+        } else if target < st.live {
+            st.target = target;
+            sh.work.notify_all();
+            while st.live > target {
+                st = wait(&sh.done, st); // doomed workers park out
+            }
+            let doomed: Vec<_> = lock(&self.handles).drain(target..).collect();
+            for h in doomed {
+                let _ = h.join(); // leak-free: threads are fully reaped
+            }
+        }
+        // arm the dispatch and wake the workers
+        sh.next.store(0, Ordering::Relaxed);
+        sh.completed.store(0, Ordering::Relaxed);
+        sh.panicked.store(false, Ordering::Relaxed);
+        // SAFETY(lifetime erasure): reference-to-raw of the same fat
+        // pointee — see `Job`; the drain below keeps the borrow alive
+        // past every dereference.
+        let raw: Job = unsafe { std::mem::transmute(f) };
+        st.job = Some((SendJob(raw), jobs));
+        st.epoch = st.epoch.wrapping_add(1);
+        drop(st);
+        sh.work.notify_all();
+        // the dispatching thread works the queue alongside the workers
+        let mut own_panic = None;
+        loop {
+            let i = sh.next.fetch_add(1, Ordering::Relaxed);
+            if i >= jobs {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                sh.panicked.store(true, Ordering::Relaxed);
+                own_panic.get_or_insert(p);
+            }
+            sh.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        // drain: every job done AND every worker out of its run loop, so
+        // nothing touches `f` or the counters past this point (the mutex
+        // hand-off also publishes every worker's output writes)
+        let mut st = lock(&sh.state);
+        while sh.completed.load(Ordering::Relaxed) < jobs || st.active > 0 {
+            st = wait(&sh.done, st);
+        }
+        st.job = None;
+        drop(st);
+        sh.done.notify_all(); // free the job slot for queued dispatchers
+        if let Some(p) = own_panic {
+            std::panic::resume_unwind(p);
+        }
+        if sh.panicked.load(Ordering::Relaxed) {
+            panic!("pool: a worker panicked inside a parallel dispatch (reported above)");
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, wid: usize) {
+    BUSY.with(|b| b.set(true)); // job bodies that fan out again run inline
+    let mut last_epoch = 0u64;
+    loop {
+        let job;
+        let jobs;
+        {
+            let mut st = lock(&sh.state);
+            loop {
+                if wid >= st.target {
+                    st.live -= 1;
+                    sh.done.notify_all();
+                    return; // shrink: park out (the dispatcher joins us)
+                }
+                if st.epoch != last_epoch {
+                    if let Some((j, n)) = st.job {
+                        last_epoch = st.epoch;
+                        st.active += 1;
+                        job = j;
+                        jobs = n;
+                        break;
+                    }
+                }
+                st = wait(&sh.work, st);
+            }
+        }
+        loop {
+            let i = sh.next.fetch_add(1, Ordering::Relaxed);
+            if i >= jobs {
+                break;
+            }
+            // SAFETY: the dispatcher keeps the closure alive until this
+            // worker's `active` release below.
+            let f = unsafe { &*job.0 };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                sh.panicked.store(true, Ordering::Relaxed);
+            }
+            sh.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        // long-lived workers must not carry one dispatch's open-span
+        // bookkeeping into the next (scoped threads died instead)
+        obs::reset_thread_spans();
+        let mut st = lock(&sh.state);
+        st.active -= 1;
+        sh.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    // Every test here mutates the process-global thread knob, so they
+    // serialize on util's knob lock and restore the previous value.
+
+    #[test]
+    fn pooled_scoped_and_inline_agree() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_pool(true); // the pooled path is under test on EVERY CI leg
+        util::set_num_threads(4);
+        let want: Vec<u64> = (0..23u64).map(|i| (i + 1) * 7).collect();
+        let mut pooled = vec![0u64; 23];
+        let base = SendPtr(pooled.as_mut_ptr());
+        run(23, &|i| unsafe { *base.0.add(i) = (i as u64 + 1) * 7 });
+        assert_eq!(pooled, want);
+        let mut scoped = vec![0u64; 23];
+        let base = SendPtr(scoped.as_mut_ptr());
+        run_scoped(23, &|i| unsafe { *base.0.add(i) = (i as u64 + 1) * 7 });
+        assert_eq!(scoped, want);
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_pool(true); // the pooled path is under test on EVERY CI leg
+        util::set_num_threads(4);
+        let hits = AtomicUsize::new(0);
+        run(4, &|_i| {
+            // a dispatch from inside a dispatch (worker OR the
+            // dispatching caller) must run inline, not deadlock
+            run(3, &|_j| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 12);
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+
+    #[test]
+    fn resize_across_thread_flips_is_leak_free() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_pool(true); // the pooled path is under test on EVERY CI leg
+        for &t in &[8usize, 2, 4, 1, 8] {
+            util::set_num_threads(t);
+            let n = AtomicUsize::new(0);
+            run(8, &|_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 8);
+            // the prologue resized to exactly threads - 1 live workers,
+            // joining every parked-out thread (no leaked handles)
+            assert_eq!(worker_count(), t - 1, "pool must track set_num_threads({t})");
+        }
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+
+    #[test]
+    fn pool_stress_many_tiny_dispatches() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_pool(true); // the pooled path is under test on EVERY CI leg
+        util::set_num_threads(4);
+        let total = AtomicU64::new(0);
+        for round in 0..2000u64 {
+            let jobs = 2 + (round % 7) as usize;
+            run(jobs, &|i| {
+                total.fetch_add(round * 31 + i as u64, Ordering::Relaxed);
+            });
+        }
+        let mut want = 0u64;
+        for round in 0..2000u64 {
+            let jobs = 2 + round % 7;
+            want += round * 31 * jobs + jobs * (jobs - 1) / 2;
+        }
+        assert_eq!(total.load(Ordering::Relaxed), want);
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+
+    #[test]
+    fn job_panic_propagates_after_drain_and_pool_survives() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_pool(true); // the pooled path is under test on EVERY CI leg
+        util::set_num_threads(4);
+        let done = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            run(8, &|i| {
+                if i == 3 {
+                    panic!("pool test: deliberate job panic");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(r.is_err(), "a panicking job must fail the dispatch");
+        assert_eq!(done.load(Ordering::Relaxed), 7, "every non-panicking job still ran");
+        // the pool must stay serviceable after a panicked dispatch
+        let n = AtomicUsize::new(0);
+        run(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+}

@@ -155,6 +155,7 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
             blockllm::util::reset_pack_min();
             blockllm::util::reset_par_min();
             blockllm::util::reset_attn_batched();
+            blockllm::util::reset_pool();
         }
     }
     let _reset = ResetKnobs; // restore defaults even if an assert fires
@@ -211,6 +212,27 @@ fn blocked_kernels_identical_and_fd_correct_across_thread_counts() {
             grads, grads_loop,
             "per-head attention grads differ at {threads} threads (packed={forced_packed})"
         );
+        // pooled vs scoped dispatch: the persistent pool only picks WHICH
+        // thread runs a chunk, so both paths must reproduce the leg's
+        // exact loss and gradient bits (both forced explicitly — the CI
+        // legs pin PALLAS_POOL either way)
+        for pooled in [true, false] {
+            blockllm::util::set_pool(pooled);
+            let mut grads_d = zeros_like(&store);
+            let loss_d = be
+                .forward_backward_dense(&store, &tokens, Targets::Lm(&targets), &mut grads_d)
+                .unwrap();
+            assert_eq!(
+                loss.to_bits(),
+                loss_d.to_bits(),
+                "pool={pooled} loss differs at {threads} threads (packed={forced_packed})"
+            );
+            assert_eq!(
+                grads, grads_d,
+                "pool={pooled} grads differ at {threads} threads (packed={forced_packed})"
+            );
+        }
+        blockllm::util::reset_pool();
         results.push((loss, grads));
     }
     let (l0, g0) = &results[0];
