@@ -3,11 +3,14 @@
 //! round-robin regardless of importance, K steps per block, optimizer state
 //! only for the active block (reset on switch).
 
+use anyhow::{bail, Result};
+
 use super::{StepInfo, Strategy};
 use crate::memory::profiles;
 use crate::model::ParamStore;
 use crate::optim::masked_adam::{masked_adam_step, BitMask, LayerState};
 use crate::optim::AdamHypers;
+use crate::session::state::StateBag;
 
 pub struct BAdam {
     sizes: Vec<usize>,
@@ -89,6 +92,44 @@ impl Strategy for BAdam {
     /// BAdam only needs the active block's gradient on-device.
     fn modeled_grad_elems(&self, _n: u64) -> u64 {
         self.max_block()
+    }
+
+    fn modeled_state_elems(&self, _n: u64) -> u64 {
+        2 * self.max_block()
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        bag.put_usize("badam.current", self.current);
+        bag.put_usize("badam.steps_in_block", self.steps_in_block);
+        bag.put_u64("badam.adam_step", self.adam_step);
+        if let Some(st) = &self.state {
+            bag.put_f32s("badam.m", st.m.clone());
+            bag.put_f32s("badam.v", st.v.clone());
+            // the mask is always all_set(sizes[current]) — rebuilt on load
+        }
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let current = bag.get_usize("badam.current")?;
+        if current >= self.sizes.len() {
+            bail!("badam checkpoint block index {current} out of range ({})", self.sizes.len());
+        }
+        let state = if bag.has_blob("badam.m") {
+            let m = bag.f32s("badam.m")?.to_vec();
+            let v = bag.f32s("badam.v")?.to_vec();
+            let n = self.sizes[current];
+            if m.len() != n || v.len() != n {
+                bail!("badam checkpoint moments have {} elems, block wants {n}", m.len());
+            }
+            Some(LayerState { m, v, mask: BitMask::all_set(n) })
+        } else {
+            None
+        };
+        self.current = current;
+        self.steps_in_block = bag.get_usize("badam.steps_in_block")?;
+        self.adam_step = bag.get_u64("badam.adam_step")?;
+        self.state = state;
+        Ok(())
     }
 }
 

@@ -1,10 +1,13 @@
 //! Full-parameter Adam — the paper's "FFT" baseline (Tables 7/8) and the
 //! memory ceiling every other method is compared against.
 
+use anyhow::{bail, Result};
+
 use super::{StepInfo, Strategy};
 use crate::memory::profiles;
 use crate::model::ParamStore;
 use crate::optim::{AdamHypers, DenseAdam};
+use crate::session::state::StateBag;
 
 pub struct FftAdam {
     opt: DenseAdam,
@@ -41,6 +44,42 @@ impl Strategy for FftAdam {
 
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        bag.put_u64("fft.step", self.opt.step);
+        bag.put_usize("fft.n_layers", self.opt.m.len());
+        for (i, (m, v)) in self.opt.m.iter().zip(&self.opt.v).enumerate() {
+            bag.put_f32s(&format!("fft.m/{i}"), m.clone());
+            bag.put_f32s(&format!("fft.v/{i}"), v.clone());
+        }
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let n_layers = bag.get_usize("fft.n_layers")?;
+        if n_layers != self.opt.m.len() {
+            bail!("fft checkpoint has {n_layers} layers, model has {}", self.opt.m.len());
+        }
+        // stage into locals first: a bad blob must not leave moments half-set
+        let mut ms = Vec::with_capacity(n_layers);
+        let mut vs = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let m = bag.f32s(&format!("fft.m/{i}"))?;
+            let v = bag.f32s(&format!("fft.v/{i}"))?;
+            if m.len() != self.opt.m[i].len() || v.len() != self.opt.v[i].len() {
+                bail!(
+                    "fft checkpoint layer {i} has {} elems, model wants {}",
+                    m.len(),
+                    self.opt.m[i].len()
+                );
+            }
+            ms.push(m.to_vec());
+            vs.push(v.to_vec());
+        }
+        self.opt.step = bag.get_u64("fft.step")?;
+        self.opt.m = ms;
+        self.opt.v = vs;
+        Ok(())
     }
 }
 

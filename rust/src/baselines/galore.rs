@@ -8,11 +8,14 @@
 //! iterations (DESIGN.md §6.6). 1-D parameters (norms, biases) fall back to
 //! dense Adam, as in the reference implementation.
 
+use anyhow::{bail, Result};
+
 use super::{StepInfo, Strategy};
 use crate::linalg::range_finder;
 use crate::memory::{profiles, MemBreakdown};
 use crate::model::ParamStore;
 use crate::optim::AdamHypers;
+use crate::session::state::StateBag;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -213,6 +216,92 @@ impl Strategy for GaLore {
 
     fn name(&self) -> &'static str {
         "galore"
+    }
+
+    fn modeled_state_elems(&self, n_params: u64) -> u64 {
+        // low-rank moments + projections + dense fallback for 1-D params;
+        // before the first step the projections don't exist yet, so model
+        // the post-warmup steady state from allocated buffers when present
+        let lowrank = self.lowrank_state_elems() + self.proj_elems();
+        if lowrank > 0 {
+            lowrank + 2 * self.dense_m.iter().map(|b| b.len() as u64).sum::<u64>()
+        } else {
+            2 * n_params // pre-step upper bound: dense moments everywhere
+        }
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        bag.put_u64("galore.step", self.step);
+        bag.put_u64s("galore.rng", self.rng.to_parts().to_vec());
+        bag.put_usize("galore.n_layers", self.layers.len());
+        for (i, lg) in self.layers.iter().enumerate() {
+            bag.put_bool(&format!("galore.left/{i}"), lg.left);
+            bag.put_f32s(&format!("galore.m/{i}"), lg.m.clone());
+            bag.put_f32s(&format!("galore.v/{i}"), lg.v.clone());
+            bag.put_u64s(
+                &format!("galore.shape/{i}"),
+                lg.shape.iter().map(|&d| d as u64).collect(),
+            );
+            if let Some(p) = &lg.proj {
+                bag.put_f32s(&format!("galore.proj/{i}"), p.data.clone());
+                bag.put_u64s(
+                    &format!("galore.proj_shape/{i}"),
+                    p.shape.iter().map(|&d| d as u64).collect(),
+                );
+            }
+        }
+        for (i, (m, v)) in self.dense_m.iter().zip(&self.dense_v).enumerate() {
+            bag.put_f32s(&format!("galore.dense_m/{i}"), m.clone());
+            bag.put_f32s(&format!("galore.dense_v/{i}"), v.clone());
+        }
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let n_layers = bag.get_usize("galore.n_layers")?;
+        if n_layers != self.layers.len() {
+            bail!("galore checkpoint has {n_layers} layers, model has {}", self.layers.len());
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut dense_m = Vec::with_capacity(n_layers);
+        let mut dense_v = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let shape: Vec<usize> =
+                bag.u64s(&format!("galore.shape/{i}"))?.iter().map(|&d| d as usize).collect();
+            let proj = if bag.has_blob(&format!("galore.proj/{i}")) {
+                let pshape: Vec<usize> = bag
+                    .u64s(&format!("galore.proj_shape/{i}"))?
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect();
+                Some(Tensor::from_vec(&pshape, bag.f32s(&format!("galore.proj/{i}"))?.to_vec())?)
+            } else {
+                None
+            };
+            layers.push(LayerGalore {
+                proj,
+                left: bag.get_bool(&format!("galore.left/{i}"))?,
+                m: bag.f32s(&format!("galore.m/{i}"))?.to_vec(),
+                v: bag.f32s(&format!("galore.v/{i}"))?.to_vec(),
+                shape,
+            });
+            let dm = bag.f32s(&format!("galore.dense_m/{i}"))?;
+            let dv = bag.f32s(&format!("galore.dense_v/{i}"))?;
+            if dm.len() != self.dense_m[i].len() || dv.len() != self.dense_v[i].len() {
+                bail!("galore checkpoint dense moments for layer {i} have wrong length");
+            }
+            dense_m.push(dm.to_vec());
+            dense_v.push(dv.to_vec());
+        }
+        self.step = bag.get_u64("galore.step")?;
+        let rng = bag.u64s("galore.rng")?;
+        if rng.len() != 4 {
+            bail!("galore checkpoint rng wants 4 words, got {}", rng.len());
+        }
+        self.rng = Pcg64::from_parts([rng[0], rng[1], rng[2], rng[3]]);
+        self.layers = layers;
+        self.dense_m = dense_m;
+        self.dense_v = dense_v;
+        Ok(())
     }
 }
 

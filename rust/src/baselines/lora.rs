@@ -10,10 +10,13 @@
 //! gradient G the artifact returns: ∂L/∂B = (α/r)·G Aᵀ, ∂L/∂A = (α/r)·Bᵀ G.
 //! 1-D parameters (norms, biases) are frozen, as in standard LoRA practice.
 
+use anyhow::{bail, Result};
+
 use super::{StepInfo, Strategy};
 use crate::memory::profiles;
 use crate::model::ParamStore;
 use crate::optim::AdamHypers;
+use crate::session::state::StateBag;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -168,6 +171,65 @@ impl Strategy for LoRa {
     /// consumed layer-by-layer during backward in a GPU implementation).
     fn modeled_grad_elems(&self, _n: u64) -> u64 {
         self.adapter_elems()
+    }
+
+    fn modeled_state_elems(&self, _n: u64) -> u64 {
+        2 * self.adapter_elems()
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        bag.put_u64("lora.step", self.step);
+        bag.put_bool("lora.initialized", self.initialized);
+        bag.put_usize("lora.n_layers", self.adapters.len());
+        for (i, ad) in self.adapters.iter().enumerate() {
+            let Some(ad) = ad else { continue };
+            bag.put_u64s(
+                &format!("lora.a_shape/{i}"),
+                ad.a.shape.iter().map(|&d| d as u64).collect(),
+            );
+            bag.put_u64s(
+                &format!("lora.b_shape/{i}"),
+                ad.b.shape.iter().map(|&d| d as u64).collect(),
+            );
+            bag.put_f32s(&format!("lora.a/{i}"), ad.a.data.clone());
+            bag.put_f32s(&format!("lora.b/{i}"), ad.b.data.clone());
+            bag.put_f32s(&format!("lora.m_a/{i}"), ad.m_a.clone());
+            bag.put_f32s(&format!("lora.v_a/{i}"), ad.v_a.clone());
+            bag.put_f32s(&format!("lora.m_b/{i}"), ad.m_b.clone());
+            bag.put_f32s(&format!("lora.v_b/{i}"), ad.v_b.clone());
+            bag.put_f32s(&format!("lora.w0/{i}"), ad.w0.clone());
+        }
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let n_layers = bag.get_usize("lora.n_layers")?;
+        if n_layers != self.adapters.len() {
+            bail!("lora checkpoint has {n_layers} layers, model has {}", self.adapters.len());
+        }
+        let mut adapters: Vec<Option<Adapter>> = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            if !bag.has_blob(&format!("lora.a/{i}")) {
+                adapters.push(None);
+                continue;
+            }
+            let a_shape: Vec<usize> =
+                bag.u64s(&format!("lora.a_shape/{i}"))?.iter().map(|&d| d as usize).collect();
+            let b_shape: Vec<usize> =
+                bag.u64s(&format!("lora.b_shape/{i}"))?.iter().map(|&d| d as usize).collect();
+            adapters.push(Some(Adapter {
+                a: Tensor::from_vec(&a_shape, bag.f32s(&format!("lora.a/{i}"))?.to_vec())?,
+                b: Tensor::from_vec(&b_shape, bag.f32s(&format!("lora.b/{i}"))?.to_vec())?,
+                m_a: bag.f32s(&format!("lora.m_a/{i}"))?.to_vec(),
+                v_a: bag.f32s(&format!("lora.v_a/{i}"))?.to_vec(),
+                m_b: bag.f32s(&format!("lora.m_b/{i}"))?.to_vec(),
+                v_b: bag.f32s(&format!("lora.v_b/{i}"))?.to_vec(),
+                w0: bag.f32s(&format!("lora.w0/{i}"))?.to_vec(),
+            }));
+        }
+        self.step = bag.get_u64("lora.step")?;
+        self.initialized = bag.get_bool("lora.initialized")?;
+        self.adapters = adapters;
+        Ok(())
     }
 }
 

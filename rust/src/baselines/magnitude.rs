@@ -5,12 +5,15 @@
 //! steps (§2.1, Tables 3-5). Tracks q — the fraction of UNIQUE coordinates
 //! ever updated — which is the quantity the paper analyses.
 
+use anyhow::{bail, Result};
+
 use super::{SparseOutcome, SparsePlan, StepInfo, Strategy};
 use crate::grads::{MaskedSink, Retain};
 use crate::memory::MemBreakdown;
 use crate::model::ParamStore;
 use crate::optim::masked_adam::{masked_adam_step, masked_adam_step_compact, BitMask, LayerState};
 use crate::optim::AdamHypers;
+use crate::session::state::StateBag;
 use crate::tensor::kth_largest_abs;
 
 pub struct Magnitude {
@@ -225,6 +228,71 @@ impl Strategy for Magnitude {
 
     fn modeled_grad_elems(&self, _n: u64) -> u64 {
         self.active_coords()
+    }
+
+    /// M+V only over the retained coordinates: the global top-k plus any
+    /// always-active head layers (upper bound — the sets may overlap).
+    fn modeled_state_elems(&self, n: u64) -> u64 {
+        let k = (((1.0 - self.sparsity) * n as f64).round() as u64).max(1);
+        let heads: u64 = self
+            .always_active
+            .iter()
+            .map(|&li| self.sizes.get(li).copied().unwrap_or(0) as u64)
+            .sum();
+        2 * (k + heads).min(n)
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        bag.put_u64("mag.adam_step", self.adam_step);
+        bag.put_bool("mag.selected_once", self.selected_once);
+        bag.put_usize("mag.n_layers", self.sizes.len());
+        bag.put_bool("mag.has_states", !self.states.is_empty());
+        for (i, st) in self.states.iter().enumerate() {
+            bag.put_f32s(&format!("mag.m/{i}"), st.m.clone());
+            bag.put_f32s(&format!("mag.v/{i}"), st.v.clone());
+            bag.put_u64s(&format!("mag.mask/{i}"), st.mask.words.clone());
+        }
+        for (i, ever) in self.ever_updated.iter().enumerate() {
+            bag.put_u64s(&format!("mag.ever/{i}"), ever.words.clone());
+        }
+        // pending_reselect is intra-step scratch (set by sparse_plan, read by
+        // the same step's step_sparse) — never live at a suspend boundary
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let n_layers = bag.get_usize("mag.n_layers")?;
+        if n_layers != self.sizes.len() {
+            bail!("magnitude checkpoint has {n_layers} layers, model has {}", self.sizes.len());
+        }
+        let load_mask = |key: &str, n: usize| -> Result<BitMask> {
+            let words = bag.u64s(key)?;
+            if words.len() != n.div_ceil(64) {
+                bail!("{key}: {} mask words, layer of {n} wants {}", words.len(), n.div_ceil(64));
+            }
+            let popcount = words.iter().map(|w| w.count_ones() as usize).sum();
+            Ok(BitMask { words: words.to_vec(), len: n, popcount })
+        };
+        let mut states = Vec::new();
+        if bag.get_bool("mag.has_states")? {
+            for (i, &n) in self.sizes.iter().enumerate() {
+                let m = bag.f32s(&format!("mag.m/{i}"))?.to_vec();
+                let v = bag.f32s(&format!("mag.v/{i}"))?.to_vec();
+                if m.len() != n || v.len() != n {
+                    bail!("magnitude checkpoint layer {i} has {} elems, model wants {n}", m.len());
+                }
+                states.push(LayerState { m, v, mask: load_mask(&format!("mag.mask/{i}"), n)? });
+            }
+        }
+        let mut ever = Vec::new();
+        for (i, &n) in self.sizes.iter().enumerate() {
+            ever.push(load_mask(&format!("mag.ever/{i}"), n)?);
+        }
+        self.adam_step = bag.get_u64("mag.adam_step")?;
+        self.selected_once = bag.get_bool("mag.selected_once")?;
+        self.states = states;
+        self.ever_updated = ever;
+        self.pending_reselect = false;
+        Ok(())
     }
 
     fn telemetry(&self) -> Vec<(String, f64)> {

@@ -17,9 +17,12 @@ pub mod galore;
 pub mod lora;
 pub mod magnitude;
 
+use anyhow::Result;
+
 use crate::grads::{MaskedSink, Retain};
 use crate::memory::MemBreakdown;
 use crate::model::ParamStore;
+use crate::session::state::StateBag;
 
 /// Telemetry returned by each optimizer step.
 #[derive(Debug, Clone, Default)]
@@ -137,6 +140,28 @@ pub trait Strategy {
     fn modeled_grad_elems(&self, n_params: u64) -> u64 {
         n_params
     }
+
+    /// Modeled optimizer-state elements (M + V together) the method holds
+    /// between steps — the admission-control basis for `pallas serve`
+    /// memory budgets. Default is full dense Adam (2n); sparse/low-rank
+    /// methods override with their actual state footprint.
+    fn modeled_state_elems(&self, n_params: u64) -> u64 {
+        2 * n_params
+    }
+
+    /// Serialize EVERY piece of method-owned mutable state — optimizer
+    /// moments, masks, selection bookkeeping, rng positions, step counters
+    /// — into `bag` under a method-unique key prefix. Together with
+    /// `state_load` this is the suspend/resume contract: a strategy
+    /// restored from its own `state_save` output must continue producing
+    /// bitwise-identical updates to one that never suspended.
+    fn state_save(&self, bag: &mut StateBag);
+
+    /// Restore state previously written by `state_save`. Errors (missing
+    /// keys, shape mismatches) must leave no partial mutation the caller
+    /// could mistake for a successful load — Session treats any `Err` as
+    /// fatal and discards the strategy.
+    fn state_load(&mut self, bag: &StateBag) -> Result<()>;
 
     /// Method-specific end-of-run telemetry (e.g. Magnitude's unique-update
     /// fraction q, BlockLLM's selection count).

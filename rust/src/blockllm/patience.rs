@@ -47,6 +47,43 @@ impl PatienceController {
     pub fn history_len(&self) -> usize {
         self.window.len()
     }
+
+    /// A fresh controller with the same window size — the staging target
+    /// for an all-or-nothing `state_load`.
+    pub fn new_like(other: &PatienceController) -> PatienceController {
+        PatienceController::new(other.m)
+    }
+
+    /// Serialize the controller's mutable state (loss history, trigger
+    /// count, started flag) under `prefix`. `m` comes from config.
+    pub fn state_save(&self, bag: &mut crate::session::state::StateBag, prefix: &str) {
+        bag.put_f64s(&format!("{prefix}.hist"), self.window.values().to_vec());
+        bag.put_u64(&format!("{prefix}.triggers"), self.triggers);
+        bag.put_bool(&format!("{prefix}.started"), self.started);
+    }
+
+    /// Restore state written by [`Self::state_save`]. The history is
+    /// replayed in insertion order so the window's mean (an ordered f64
+    /// sum) reproduces the pre-suspend bits exactly.
+    pub fn state_load(
+        &mut self,
+        bag: &crate::session::state::StateBag,
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let hist = bag.f64s(&format!("{prefix}.hist"))?;
+        if hist.len() > self.m {
+            anyhow::bail!("patience checkpoint has {} losses, window holds {}", hist.len(), self.m);
+        }
+        let triggers = bag.get_u64(&format!("{prefix}.triggers"))?;
+        let started = bag.get_bool(&format!("{prefix}.started"))?;
+        self.window.clear();
+        for &l in hist {
+            self.window.push(l);
+        }
+        self.triggers = triggers;
+        self.started = started;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +127,23 @@ mod tests {
         assert!(!p.observe(5.0));
         assert!(!p.observe(5.0));
         assert!(p.observe(5.0));
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identical_decisions() {
+        let mut a = PatienceController::new(3);
+        for l in [5.0, 4.9, 4.9, 4.9] {
+            a.observe(l);
+        }
+        let mut bag = crate::session::state::StateBag::new();
+        a.state_save(&mut bag, "pat");
+        let mut b = PatienceController::new(3);
+        b.state_load(&bag, "pat").unwrap();
+        assert_eq!(a.triggers, b.triggers);
+        assert_eq!(a.history_len(), b.history_len());
+        for l in [4.9, 4.9, 4.9, 4.8, 5.1] {
+            assert_eq!(a.observe(l), b.observe(l), "decision diverged at loss {l}");
+        }
     }
 
     #[test]

@@ -150,6 +150,48 @@ impl NormDictionary {
     pub fn visit_count(&self, l: usize) -> u64 {
         self.visit_counts[l]
     }
+
+    /// Serialize every mutable field (norms, staleness, visit counts,
+    /// selection total, rng position) under `prefix`. `norm_kind` and the
+    /// layer count come from config at reconstruction time.
+    pub fn state_save(&self, bag: &mut crate::session::state::StateBag, prefix: &str) {
+        bag.put_f64s(&format!("{prefix}.norms"), self.norms.clone());
+        // usize::MAX ("never scored") survives the u64 round-trip exactly
+        bag.put_u64s(
+            &format!("{prefix}.last"),
+            self.last_update.iter().map(|&s| s as u64).collect(),
+        );
+        bag.put_u64s(&format!("{prefix}.visits"), self.visit_counts.clone());
+        bag.put_u64(&format!("{prefix}.total"), self.total_selections);
+        bag.put_u64s(&format!("{prefix}.rng"), self.rng.to_parts().to_vec());
+    }
+
+    /// Restore state written by [`Self::state_save`]. Errors leave the
+    /// dictionary untouched.
+    pub fn state_load(
+        &mut self,
+        bag: &crate::session::state::StateBag,
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let n = self.norms.len();
+        let norms = bag.f64s(&format!("{prefix}.norms"))?;
+        let last = bag.u64s(&format!("{prefix}.last"))?;
+        let visits = bag.u64s(&format!("{prefix}.visits"))?;
+        if norms.len() != n || last.len() != n || visits.len() != n {
+            anyhow::bail!("scorer checkpoint covers {} layers, model has {n}", norms.len());
+        }
+        let total = bag.get_u64(&format!("{prefix}.total"))?;
+        let rng = bag.u64s(&format!("{prefix}.rng"))?;
+        if rng.len() != 4 {
+            anyhow::bail!("scorer rng state wants 4 words, checkpoint has {}", rng.len());
+        }
+        self.norms = norms.to_vec();
+        self.last_update = last.iter().map(|&s| s as usize).collect();
+        self.visit_counts = visits.to_vec();
+        self.total_selections = total;
+        self.rng = Pcg64::from_parts([rng[0], rng[1], rng[2], rng[3]]);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +261,31 @@ mod tests {
         assert_eq!(peek1, peek2, "peek must not advance the rng");
         let real = d.layers_to_probe(&[0], 3, 2);
         assert_eq!(peek1, real, "peek must predict the committed probe set");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identical_probe_sequence() {
+        let mut a = dict(12);
+        for l in 0..5 {
+            a.record(l, &[0.5; 8], l);
+        }
+        a.mark_selected(&[1, 3]);
+        a.layers_to_probe(&[1], 3, 6); // advance the rng
+        let mut bag = crate::session::state::StateBag::new();
+        a.state_save(&mut bag, "dict");
+        let mut b = dict(12);
+        b.state_load(&bag, "dict").unwrap();
+        assert_eq!(a.norms, b.norms);
+        assert_eq!(a.last_update, b.last_update);
+        for step in 7..12 {
+            assert_eq!(
+                a.layers_to_probe(&[2], 3, step),
+                b.layers_to_probe(&[2], 3, step),
+                "probe set diverged at step {step}"
+            );
+        }
+        assert_eq!(a.visit_count(3), b.visit_count(3));
+        assert_eq!(a.score(1, true).to_bits(), b.score(1, true).to_bits());
     }
 
     #[test]

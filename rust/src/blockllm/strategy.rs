@@ -26,6 +26,8 @@
 //!   consumption, and parameter updates — pinned by the unit tests below
 //!   and end-to-end by tests/grad_check.rs.
 
+use anyhow::{bail, Result};
+
 use crate::baselines::{SparseOutcome, SparsePlan, StepInfo, Strategy};
 use crate::config::{MaskMode, Method, NormKind, StatePolicy, TrainConfig};
 use crate::grads::{MaskedSink, Retain};
@@ -33,6 +35,7 @@ use crate::memory::{profiles, MemBreakdown};
 use crate::model::ParamStore;
 use crate::optim::masked_adam::{masked_adam_step, masked_adam_step_compact, BitMask, LayerState};
 use crate::optim::{AdamHypers, SparseAdamState};
+use crate::session::state::StateBag;
 
 use super::mask::{build_masks, mask_plan, MaskRule};
 use super::scorer::NormDictionary;
@@ -429,6 +432,94 @@ impl Strategy for BlockLlmStrategy {
         self.state.active_coords() + self.sizes.iter().map(|&s| s as u64).max().unwrap_or(0)
     }
 
+    /// M+V over the sparsity budget (1-s)·n — the steady-state active set.
+    /// The pre-selection state is empty, so this is the admission-control
+    /// upper bound for the whole run.
+    fn modeled_state_elems(&self, n: u64) -> u64 {
+        2 * (((1.0 - self.sparsity) * n as f64).round() as u64).max(1)
+    }
+
+    fn state_save(&self, bag: &mut StateBag) {
+        self.dict.state_save(bag, "bllm.dict");
+        self.patience.state_save(bag, "bllm.pat");
+        bag.put_u64("bllm.adam_step", self.state.step);
+        bag.put_u64("bllm.n_selections", self.n_selections);
+        bag.put_usize("bllm.n_active", self.state.layers.len());
+        for (j, (li, lst)) in self.state.layers.iter().enumerate() {
+            bag.put_usize(&format!("bllm.layer/{j}"), *li);
+            bag.put_f32s(&format!("bllm.m/{j}"), lst.m.clone());
+            bag.put_f32s(&format!("bllm.v/{j}"), lst.v.clone());
+            bag.put_u64s(&format!("bllm.mask/{j}"), lst.mask.words.clone());
+        }
+        // Offload stash (empty under the paper's Reset policy)
+        let mut off: Vec<usize> = self.offloaded.keys().copied().collect();
+        off.sort_unstable();
+        bag.put_u64s("bllm.off_layers", off.iter().map(|&l| l as u64).collect());
+        for &li in &off {
+            let (m, v) = &self.offloaded[&li];
+            bag.put_f32s(&format!("bllm.off_m/{li}"), m.clone());
+            bag.put_f32s(&format!("bllm.off_v/{li}"), v.clone());
+        }
+        // plan_accum and pending are intra-step scratch (written by
+        // sparse_plan/step_sparse, consumed before the step returns) —
+        // never live at a suspend boundary
+    }
+
+    fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        let n_active = bag.get_usize("bllm.n_active")?;
+        let mut layers = Vec::with_capacity(n_active);
+        for j in 0..n_active {
+            let li = bag.get_usize(&format!("bllm.layer/{j}"))?;
+            let Some(&n) = self.sizes.get(li) else {
+                bail!("blockllm checkpoint selects layer {li}, model has {}", self.sizes.len());
+            };
+            let m = bag.f32s(&format!("bllm.m/{j}"))?.to_vec();
+            let v = bag.f32s(&format!("bllm.v/{j}"))?.to_vec();
+            if m.len() != n || v.len() != n {
+                bail!("blockllm checkpoint layer {li} has {} elems, model wants {n}", m.len());
+            }
+            let words = bag.u64s(&format!("bllm.mask/{j}"))?;
+            if words.len() != n.div_ceil(64) {
+                bail!(
+                    "blockllm mask for layer {li}: {} words, want {}",
+                    words.len(),
+                    n.div_ceil(64)
+                );
+            }
+            let popcount = words.iter().map(|w| w.count_ones() as usize).sum();
+            let mask = BitMask { words: words.to_vec(), len: n, popcount };
+            layers.push((li, LayerState { m, v, mask }));
+        }
+        let mut offloaded = std::collections::HashMap::new();
+        for &li64 in bag.u64s("bllm.off_layers")? {
+            let li = li64 as usize;
+            let Some(&n) = self.sizes.get(li) else {
+                bail!("blockllm offload stash names layer {li}, model has {}", self.sizes.len());
+            };
+            let m = bag.f32s(&format!("bllm.off_m/{li}"))?.to_vec();
+            let v = bag.f32s(&format!("bllm.off_v/{li}"))?.to_vec();
+            if m.len() != n || v.len() != n {
+                bail!("blockllm offload stash layer {li} has {} elems, model wants {n}", m.len());
+            }
+            offloaded.insert(li, (m, v));
+        }
+        // stage dict/patience into fresh copies so an error mutates nothing
+        let mut dict = self.dict.clone();
+        dict.state_load(bag, "bllm.dict")?;
+        let mut patience = PatienceController::new_like(&self.patience);
+        patience.state_load(bag, "bllm.pat")?;
+        let adam_step = bag.get_u64("bllm.adam_step")?;
+        let n_selections = bag.get_u64("bllm.n_selections")?;
+        self.dict = dict;
+        self.patience = patience;
+        self.state = SparseAdamState { layers, step: adam_step };
+        self.n_selections = n_selections;
+        self.offloaded = offloaded;
+        self.plan_accum = 1;
+        self.pending = None;
+        Ok(())
+    }
+
     fn telemetry(&self) -> Vec<(String, f64)> {
         let offload_bytes: usize =
             self.offloaded.values().map(|(m, v)| 4 * (m.len() + v.len())).sum();
@@ -676,6 +767,51 @@ mod tests {
             }
             assert_eq!(dense.n_selections, sparse.n_selections, "accum {accum}");
             assert!(dense.n_selections >= 2, "schedule produced too few selections to test");
+        }
+    }
+
+    /// Suspend/resume pin at the strategy level: save at step N (the loss
+    /// schedule forces selection events both before AND after the boundary),
+    /// restore into a FRESH strategy, and the resumed run must match the
+    /// uninterrupted one bit for bit — params, dict norms, rng consumption,
+    /// selection counts.
+    #[test]
+    fn state_roundtrip_is_bitwise_across_selection_events() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        for policy in [StatePolicy::Reset, StatePolicy::Offload] {
+            let mut full = make(0.7, 2);
+            full.state_policy = policy;
+            let mut store_full = ParamStore::init(&specs, 2);
+            let loss = |t: usize| if t % 4 == 0 { 5.0 } else { 5.0 - 0.01 * t as f64 };
+            for t in 0..6 {
+                let grads = testutil::rand_grads(&sizes, 100 + t as u64);
+                full.step(&mut store_full, &grads, loss(t), 1e-2, t);
+            }
+            // suspend at t=6
+            let mut bag = StateBag::new();
+            full.state_save(&mut bag);
+            let mut resumed = make(0.7, 2);
+            resumed.state_policy = policy;
+            resumed.state_load(&bag).unwrap();
+            let mut store_res = store_full.clone_store();
+            for t in 6..14 {
+                let grads = testutil::rand_grads(&sizes, 100 + t as u64);
+                let a = full.step(&mut store_full, &grads, loss(t), 1e-2, t);
+                let b = resumed.step(&mut store_res, &grads, loss(t), 1e-2, t);
+                assert_eq!(a.reselected, b.reselected, "step {t} ({policy:?})");
+                assert_eq!(a.active_layers, b.active_layers, "step {t} ({policy:?})");
+            }
+            assert_eq!(full.n_selections, resumed.n_selections, "{policy:?}");
+            assert!(full.n_selections >= 2, "schedule produced no post-resume selection");
+            for (li, (a, b)) in store_full.bufs.iter().zip(&store_res.bufs).enumerate() {
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "param {li}[{i}] diverged ({policy:?})");
+                }
+            }
+            for l in 0..sizes.len() {
+                assert_eq!(full.dict.norms[l].to_bits(), resumed.dict.norms[l].to_bits());
+            }
         }
     }
 

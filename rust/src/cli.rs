@@ -68,12 +68,36 @@ blockllm — BlockLLM (Ramesh et al., 2024) reproduction, Rust+JAX+Pallas
 
 USAGE:
   blockllm train [--preset tiny] [--task c4|alpaca|glue-<t>] [--method blockllm|adam|galore|lora|badam]
-                 [--backend auto|native|pjrt] [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42] ...
+                 [--backend auto|native|pjrt] [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42]
+                 [--suspend-at N --session path] ...
+  blockllm resume --session path [--save ckpt]
+  blockllm serve --spec path [--slice K] [--out dir]
   blockllm exp --id <fig1|table1|table2|table3|table4|table5|fig3|fig5|fig6|fig7|fig9|table7|table8>
   blockllm exp --all [--quick]
   blockllm eval --ckpt path [--preset tiny] [--task c4]
   blockllm info                 # preset registry + artifact inventory
   blockllm help
+
+Sessions: `train --suspend-at N --session PATH` stops after N optimizer
+steps and writes ONE versioned checkpoint holding everything the run needs
+to continue — config, step counter, optimizer moments, active masks,
+scorer/patience state, data-stream cursors, rng positions, loss/eval
+history, and every parameter tensor. `resume --session PATH` continues it:
+the resumed run's remaining losses and final parameters are bit-for-bit
+identical to a never-suspended run (the `train_loss_bits:` line printed by
+both commands is the proof CI diffs). `resume` reads its config from the
+checkpoint; config flags on the resume command line are ignored.
+`serve --spec PATH` multiplexes many named sessions over one shared
+backend, round-robin, `--slice K` optimizer steps per turn (suspending and
+resuming at every boundary). The spec is JSON: {\"slice_steps\": 8,
+\"sessions\": [{\"name\": ..., \"budget_mb\": ..., \"config\": {any
+TrainConfig key: value}}, ...]}; all sessions must share one preset, task
+and backend kind. A session with a budget is admitted only if the budget
+covers its modeled footprint (weights + modeled gradient retention +
+modeled optimizer state + activations) and is evicted at a slice boundary
+if its MEASURED footprint (the grads layer's peak gradient bytes) exceeds
+the budget; evicted checkpoints are saved under --out for later resume.
+`--out DIR` also writes one JSON report per session.
 
 Any TrainConfig key can be overridden with --key value (see config/mod.rs).
 --backend selects the execution engine: `pjrt` runs the AOT HLO artifacts

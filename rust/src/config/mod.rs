@@ -304,6 +304,77 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// The task value `set("task", ...)` accepts (distinct from
+    /// [`Task::name`], which is the results-directory label).
+    pub fn task_key(&self) -> String {
+        match self.task {
+            Task::C4Pretrain => "c4".into(),
+            Task::AlpacaFinetune => "alpaca".into(),
+            Task::Glue(i) => format!("glue-{}", crate::data::gluesim::TASK_NAMES[i]),
+            Task::DomainShift => "domain-shift".into(),
+        }
+    }
+
+    /// EVERY field as `set()`-compatible `(key, value)` pairs — the
+    /// checkpoint round-trip: `to_kv` at suspend, replay through `set` on a
+    /// default config at resume. f64 values use Rust's shortest round-trip
+    /// formatting, so the rebuilt config is bit-identical.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let norm = match self.norm_kind {
+            NormKind::Fro => "fro",
+            NormKind::Rms => "rms",
+        };
+        let policy = match self.state_policy {
+            StatePolicy::Reset => "reset",
+            StatePolicy::Offload => "offload",
+        };
+        let mask = match self.mask_mode {
+            MaskMode::Alg2 => "alg2",
+            MaskMode::OvershootOnly => "overshoot-only",
+            MaskMode::DenseLayers => "dense-layers",
+        };
+        vec![
+            ("preset".into(), self.preset.clone()),
+            ("task".into(), self.task_key()),
+            ("method".into(), self.method.name().into()),
+            ("backend".into(), self.backend.name().into()),
+            ("steps".into(), self.steps.to_string()),
+            ("eval-every".into(), self.eval_every.to_string()),
+            ("eval-batches".into(), self.eval_batches.to_string()),
+            ("seed".into(), self.seed.to_string()),
+            ("pallas".into(), self.use_pallas_artifact.to_string()),
+            ("grad-accum".into(), self.grad_accum.to_string()),
+            ("lr".into(), self.lr.to_string()),
+            ("beta1".into(), self.beta1.to_string()),
+            ("beta2".into(), self.beta2.to_string()),
+            ("eps".into(), self.eps.to_string()),
+            ("weight-decay".into(), self.weight_decay.to_string()),
+            ("cosine-lr".into(), self.cosine_lr.to_string()),
+            ("warmup-frac".into(), self.warmup_frac.to_string()),
+            ("sparsity".into(), self.sparsity.to_string()),
+            ("patience".into(), self.patience.to_string()),
+            ("sample-layers".into(), self.sample_layers.to_string()),
+            ("norm".into(), norm.into()),
+            ("state-policy".into(), policy.into()),
+            ("mask-mode".into(), mask.into()),
+            ("rank".into(), self.rank.to_string()),
+            ("galore-scale".into(), self.galore_scale.to_string()),
+            ("galore-refresh".into(), self.galore_refresh.to_string()),
+            ("lora-alpha".into(), self.lora_alpha.to_string()),
+            ("badam-k".into(), self.badam_k.to_string()),
+            ("mag-update-every".into(), self.mag_update_every.to_string()),
+        ]
+    }
+
+    /// Rebuild a config from `to_kv` output (checkpoint resume path).
+    pub fn from_kv(pairs: &[(String, String)]) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        for (k, v) in pairs {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("preset", Json::str(self.preset.clone())),
@@ -368,6 +439,27 @@ mod tests {
         assert!(matches!(c.task, Task::Glue(_)));
         assert!(c.set("not-a-key", "1").is_err());
         assert!(c.set("steps", "abc").is_err());
+    }
+
+    #[test]
+    fn kv_roundtrip_rebuilds_every_field() {
+        let mut c = TrainConfig::default();
+        c.set("method", "magnitude").unwrap();
+        c.set("task", "glue-stsb").unwrap();
+        c.set("backend", "native").unwrap();
+        c.set("lr", "0.0007").unwrap();
+        c.set("sparsity", "0.95").unwrap();
+        c.set("state-policy", "offload").unwrap();
+        c.set("mask-mode", "overshoot-only").unwrap();
+        c.set("norm", "fro").unwrap();
+        c.set("grad-accum", "4").unwrap();
+        c.set("warmup-frac", "0.1").unwrap();
+        let r = TrainConfig::from_kv(&c.to_kv()).unwrap();
+        assert_eq!(format!("{c:?}"), format!("{r:?}"));
+        assert_eq!(c.lr.to_bits(), r.lr.to_bits());
+        // the default round-trips too
+        let d = TrainConfig::default();
+        assert_eq!(format!("{d:?}"), format!("{:?}", TrainConfig::from_kv(&d.to_kv()).unwrap()));
     }
 
     #[test]

@@ -73,6 +73,32 @@ impl AlpacaSim {
         }
         (tokens, targets)
     }
+
+    /// Serialize the stream cursor (rng position + active task subset).
+    pub fn state_save(&self, bag: &mut crate::session::state::StateBag, prefix: &str) {
+        bag.put_u64s(&format!("{prefix}.rng"), self.rng.to_parts().to_vec());
+        bag.put_u64s(&format!("{prefix}.tasks"), self.tasks.iter().map(|&t| t as u64).collect());
+    }
+
+    /// Restore a cursor written by [`Self::state_save`].
+    pub fn state_load(
+        &mut self,
+        bag: &crate::session::state::StateBag,
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let rng = bag.u64s(&format!("{prefix}.rng"))?;
+        if rng.len() != 4 {
+            anyhow::bail!("alpacasim rng state wants 4 words, checkpoint has {}", rng.len());
+        }
+        let tasks: Vec<usize> =
+            bag.u64s(&format!("{prefix}.tasks"))?.iter().map(|&t| t as usize).collect();
+        if tasks.is_empty() || tasks.iter().any(|&t| t >= 4) {
+            anyhow::bail!("alpacasim cursor has invalid task subset {tasks:?}");
+        }
+        self.rng = Pcg64::from_parts([rng[0], rng[1], rng[2], rng[3]]);
+        self.tasks = tasks;
+        Ok(())
+    }
 }
 
 impl LmStream for AlpacaSim {

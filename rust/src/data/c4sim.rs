@@ -102,6 +102,44 @@ impl C4Sim {
             self.emit_word();
         }
     }
+
+    /// Serialize the stream cursor (topic, rng, carry-over tokens) under
+    /// `prefix`. The lexicon and topic tables are pure functions of the
+    /// seed and are rebuilt by `new` on resume.
+    pub fn state_save(&self, bag: &mut crate::session::state::StateBag, prefix: &str) {
+        bag.put_usize(&format!("{prefix}.topic"), self.topic);
+        bag.put_u64s(&format!("{prefix}.rng"), self.rng.to_parts().to_vec());
+        bag.put_u64s(
+            &format!("{prefix}.pending"),
+            self.pending.iter().map(|&t| t as u32 as u64).collect(),
+        );
+        bag.put_usize(&format!("{prefix}.wuse"), self.words_until_sentence_end);
+    }
+
+    /// Restore a cursor written by [`Self::state_save`] into a stream built
+    /// with the same seed.
+    pub fn state_load(
+        &mut self,
+        bag: &crate::session::state::StateBag,
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let topic = bag.get_usize(&format!("{prefix}.topic"))?;
+        if topic >= N_TOPICS {
+            anyhow::bail!("c4sim cursor topic {topic} out of range {N_TOPICS}");
+        }
+        let rng = bag.u64s(&format!("{prefix}.rng"))?;
+        if rng.len() != 4 {
+            anyhow::bail!("c4sim rng state wants 4 words, checkpoint has {}", rng.len());
+        }
+        let pending: Vec<i32> =
+            bag.u64s(&format!("{prefix}.pending"))?.iter().map(|&w| w as u32 as i32).collect();
+        let wuse = bag.get_usize(&format!("{prefix}.wuse"))?;
+        self.topic = topic;
+        self.rng = Pcg64::from_parts([rng[0], rng[1], rng[2], rng[3]]);
+        self.pending = pending;
+        self.words_until_sentence_end = wuse;
+        Ok(())
+    }
 }
 
 impl LmStream for C4Sim {

@@ -49,6 +49,29 @@ impl GlueSim {
         self
     }
 
+    /// Serialize both split cursors (train + eval rng positions). Task and
+    /// vocab offset come from config at reconstruction time.
+    pub fn state_save(&self, bag: &mut crate::session::state::StateBag, prefix: &str) {
+        bag.put_u64s(&format!("{prefix}.rng_train"), self.rng_train.to_parts().to_vec());
+        bag.put_u64s(&format!("{prefix}.rng_eval"), self.rng_eval.to_parts().to_vec());
+    }
+
+    /// Restore cursors written by [`Self::state_save`].
+    pub fn state_load(
+        &mut self,
+        bag: &crate::session::state::StateBag,
+        prefix: &str,
+    ) -> anyhow::Result<()> {
+        let tr = bag.u64s(&format!("{prefix}.rng_train"))?;
+        let ev = bag.u64s(&format!("{prefix}.rng_eval"))?;
+        if tr.len() != 4 || ev.len() != 4 {
+            anyhow::bail!("gluesim rng state wants 4 words per split");
+        }
+        self.rng_train = Pcg64::from_parts([tr[0], tr[1], tr[2], tr[3]]);
+        self.rng_eval = Pcg64::from_parts([ev[0], ev[1], ev[2], ev[3]]);
+        Ok(())
+    }
+
     fn tok(&self, raw: i32) -> i32 {
         PAYLOAD_LO + (raw + self.vocab_offset).rem_euclid(PAYLOAD_SPAN)
     }

@@ -6,9 +6,9 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::config::{Task, TrainConfig};
-use crate::data::{alpacasim::AlpacaSim, c4sim::C4Sim, gluesim::GlueSim};
 use crate::model::ParamStore;
-use crate::trainer::{RunResult, Trainer};
+use crate::session::Session;
+use crate::trainer::RunResult;
 use crate::util::json::Json;
 
 /// results/ directory at the repo root, found by walking up from cwd to the
@@ -90,36 +90,17 @@ pub fn run_config(cfg: &TrainConfig, warm: Option<&ParamStore>) -> Result<RunRes
         .0)
 }
 
-/// Like `run_config` but returns the trained parameters too.
+/// Like `run_config` but returns the trained parameters too. The run is a
+/// `Session` driven to completion in one go — the task → data-stream
+/// mapping lives in `session::TaskData`, shared with `eval` and `serve`.
 pub fn run_config_with_params(
     cfg: &TrainConfig,
     warm: Option<&ParamStore>,
 ) -> Result<(RunResult, ParamStore)> {
-    let mut tr = Trainer::open(cfg.clone(), warm)
-        .with_context(|| format!("trainer for {:?}", cfg.method))?;
-    let seed = cfg.seed;
-    let res = match cfg.task {
-        Task::C4Pretrain => {
-            let mut train = C4Sim::new(seed);
-            let mut eval = C4Sim::new(seed ^ 0xEEEE);
-            tr.train_lm(&mut train, &mut eval)?
-        }
-        Task::AlpacaFinetune => {
-            let mut train = AlpacaSim::new(seed);
-            let mut eval = AlpacaSim::new(seed ^ 0xEEEE);
-            tr.train_lm(&mut train, &mut eval)?
-        }
-        Task::Glue(i) => {
-            let mut src = GlueSim::new(i, seed);
-            tr.train_cls(&mut src)?
-        }
-        Task::DomainShift => {
-            // sentiment-ish source task at offset 0 (the IMDb stand-in)
-            let mut src = GlueSim::new(4, seed);
-            tr.train_cls(&mut src)?
-        }
-    };
-    Ok((res, tr.store))
+    let mut sess =
+        Session::new(cfg, warm).with_context(|| format!("session for {:?}", cfg.method))?;
+    sess.run_to_completion()?;
+    sess.finish()
 }
 
 /// Pretrain (or load a cached) LM checkpoint for warm starts.

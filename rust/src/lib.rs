@@ -49,6 +49,7 @@ pub mod model;
 pub mod obs;
 pub mod optim;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

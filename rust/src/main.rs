@@ -1,16 +1,22 @@
 //! `blockllm` — the L3 coordinator CLI.
 //!
-//! Subcommands: `train` (one run, any method/task/preset), `exp` (paper
-//! table/figure harnesses), `eval` (checkpoint evaluation), `info`
-//! (artifact inventory). See cli::USAGE.
+//! Subcommands: `train` (one run, any method/task/preset; `--suspend-at`
+//! checkpoints mid-run), `resume` (continue a suspended session), `serve`
+//! (round-robin many sessions over one backend), `exp` (paper table/figure
+//! harnesses), `eval` (checkpoint evaluation), `info` (artifact
+//! inventory). See cli::USAGE.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use blockllm::cli::{Args, USAGE};
-use blockllm::config::{Task, TrainConfig};
+use blockllm::config::TrainConfig;
 use blockllm::experiments;
 use blockllm::runtime::Runtime;
+use blockllm::session::scheduler::{self, ServeOutcome, ServeSpec};
+use blockllm::session::Session;
+use blockllm::trainer::RunResult;
 use blockllm::util::human_bytes;
+use blockllm::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -19,40 +25,76 @@ fn main() {
     }
 }
 
+/// The CLI's kernel-knob overrides, parsed once so they can be re-applied
+/// after every `util::reset_all_knobs()` (the serve scheduler resets knob
+/// state at each slice boundary; without re-arming, `--threads` etc. would
+/// silently stop applying after the first tenant).
+#[derive(Clone, Copy, Default)]
+struct KnobOverrides {
+    threads: Option<usize>,
+    pack_min: Option<usize>,
+    par_min: Option<usize>,
+    attn_batched: Option<bool>,
+    grad_stream: Option<bool>,
+    pool: Option<bool>,
+}
+
+impl KnobOverrides {
+    fn from_args(args: &Args) -> Result<KnobOverrides> {
+        let num = |key: &str| -> Result<Option<usize>> {
+            match args.get(key) {
+                Some(v) => Ok(Some(
+                    v.parse().map_err(|_| anyhow!("--{key} wants a number, got {v:?}"))?,
+                )),
+                None => Ok(None),
+            }
+        };
+        let bit = |key: &str| -> Result<Option<bool>> {
+            match args.get(key) {
+                Some(v) => {
+                    let n: usize =
+                        v.parse().map_err(|_| anyhow!("--{key} wants 0 or 1, got {v:?}"))?;
+                    Ok(Some(n != 0))
+                }
+                None => Ok(None),
+            }
+        };
+        Ok(KnobOverrides {
+            threads: num("threads")?,
+            pack_min: num("pack-min")?,
+            par_min: num("par-min")?,
+            attn_batched: bit("attn-batched")?,
+            grad_stream: bit("grad-stream")?,
+            pool: bit("pool")?,
+        })
+    }
+
+    fn apply(&self) {
+        if let Some(n) = self.threads {
+            blockllm::util::set_num_threads(n);
+        }
+        if let Some(n) = self.pack_min {
+            blockllm::util::set_pack_min(n);
+        }
+        if let Some(n) = self.par_min {
+            blockllm::util::set_par_min(n);
+        }
+        if let Some(b) = self.attn_batched {
+            blockllm::util::set_attn_batched(b);
+        }
+        if let Some(b) = self.grad_stream {
+            blockllm::util::set_grad_stream(b);
+        }
+        if let Some(b) = self.pool {
+            blockllm::util::set_pool(b);
+        }
+    }
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env()?;
-    if let Some(v) = args.get("threads") {
-        let n: usize =
-            v.parse().map_err(|_| anyhow::anyhow!("--threads wants a number, got {v:?}"))?;
-        blockllm::util::set_num_threads(n);
-    }
-    if let Some(v) = args.get("pack-min") {
-        let n: usize =
-            v.parse().map_err(|_| anyhow::anyhow!("--pack-min wants a number, got {v:?}"))?;
-        blockllm::util::set_pack_min(n);
-    }
-    if let Some(v) = args.get("par-min") {
-        let n: usize =
-            v.parse().map_err(|_| anyhow::anyhow!("--par-min wants a number, got {v:?}"))?;
-        blockllm::util::set_par_min(n);
-    }
-    if let Some(v) = args.get("attn-batched") {
-        let n: usize = v
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--attn-batched wants 0 or 1, got {v:?}"))?;
-        blockllm::util::set_attn_batched(n != 0);
-    }
-    if let Some(v) = args.get("grad-stream") {
-        let n: usize = v
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--grad-stream wants 0 or 1, got {v:?}"))?;
-        blockllm::util::set_grad_stream(n != 0);
-    }
-    if let Some(v) = args.get("pool") {
-        let n: usize =
-            v.parse().map_err(|_| anyhow::anyhow!("--pool wants 0 or 1, got {v:?}"))?;
-        blockllm::util::set_pool(n != 0);
-    }
+    let knobs = KnobOverrides::from_args(&args)?;
+    knobs.apply();
     if let Some(v) = args.get("trace") {
         let n: usize =
             v.parse().map_err(|_| anyhow::anyhow!("--trace wants 0 or 1, got {v:?}"))?;
@@ -66,6 +108,8 @@ fn run() -> Result<()> {
     }
     let out = match args.command.as_str() {
         "train" => cmd_train(&args),
+        "resume" => cmd_resume(&args),
+        "serve" => cmd_serve(&args, &knobs),
         "exp" => cmd_exp(&args),
         "eval" => cmd_eval(&args),
         "info" => cmd_info(),
@@ -85,10 +129,16 @@ fn run() -> Result<()> {
 fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     for (k, v) in &args.kv {
-        // non-config keys: checkpoint paths, experiment id, kernel knobs
+        // non-config keys: checkpoint/session paths, experiment id,
+        // serve-spec paths, kernel knobs
         if k == "ckpt"
             || k == "save"
             || k == "id"
+            || k == "session"
+            || k == "suspend-at"
+            || k == "spec"
+            || k == "slice"
+            || k == "out"
             || k == "threads"
             || k == "pack-min"
             || k == "par-min"
@@ -105,15 +155,7 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = cfg_from_args(args)?;
-    let warm = match args.get("ckpt") {
-        Some(p) => Some(blockllm::model::ParamStore::load(std::path::Path::new(p))?),
-        None => None,
-    };
-    println!("config: {}", cfg.to_json().to_string());
-    let (res, store) =
-        blockllm::experiments::common::run_config_with_params(&cfg, warm.as_ref())?;
+fn print_run_summary(res: &RunResult) {
     println!(
         "\n{} [{} backend]: {} steps | final train loss {:.4} | eval loss {:.4} | metric {:.4}",
         res.method,
@@ -132,14 +174,155 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let [up, ex, dl, st] = res.phase_secs;
     println!(
-        "phase breakdown: upload {up:.2}s | execute {ex:.2}s | grad-download {dl:.2}s | strategy {st:.2}s"
+        "phase breakdown: upload {up:.2}s | execute {ex:.2}s | \
+         grad-download {dl:.2}s | strategy {st:.2}s"
     );
     for (k, v) in &res.telemetry {
         println!("  {k} = {v}");
     }
+}
+
+/// One line of raw loss bits (f64 → hex), the thing CI diffs to prove a
+/// suspended-and-resumed run matches its uninterrupted twin bit for bit.
+fn print_loss_bits(losses: &[f64]) {
+    let bits: Vec<String> = losses.iter().map(|l| format!("{:016x}", l.to_bits())).collect();
+    println!("train_loss_bits: {}", bits.join(","));
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let warm = match args.get("ckpt") {
+        Some(p) => Some(blockllm::model::ParamStore::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    println!("config: {}", cfg.to_json().to_string());
+    if let Some(v) = args.get("suspend-at") {
+        let n: usize =
+            v.parse().map_err(|_| anyhow!("--suspend-at wants a step count, got {v:?}"))?;
+        let path = args
+            .get("session")
+            .ok_or_else(|| anyhow!("--suspend-at needs --session <path> for the checkpoint"))?;
+        let mut sess = Session::new(&cfg, warm.as_ref())?;
+        sess.run_steps(n)?;
+        let bytes = sess.suspend();
+        std::fs::write(path, &bytes)?;
+        println!(
+            "suspended at step {}/{} -> {path} ({} bytes)",
+            sess.step(),
+            sess.target_steps(),
+            bytes.len()
+        );
+        print_loss_bits(sess.train_losses());
+        return Ok(());
+    }
+    let (res, store) =
+        blockllm::experiments::common::run_config_with_params(&cfg, warm.as_ref())?;
+    print_run_summary(&res);
+    print_loss_bits(&res.train_losses);
     if let Some(path) = args.get("save") {
         store.save(std::path::Path::new(path))?;
         println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    let path = args.get("session").ok_or_else(|| anyhow!("resume needs --session <path>"))?;
+    let bytes = std::fs::read(path)?;
+    let mut sess = Session::resume(&bytes)?;
+    println!(
+        "resumed {path} at step {}/{} (config: {})",
+        sess.step(),
+        sess.target_steps(),
+        sess.cfg().to_json().to_string()
+    );
+    sess.run_to_completion()?;
+    let (res, store) = sess.finish()?;
+    print_run_summary(&res);
+    print_loss_bits(&res.train_losses);
+    if let Some(p) = args.get("save") {
+        store.save(std::path::Path::new(p))?;
+        println!("checkpoint saved to {p}");
+    }
+    Ok(())
+}
+
+fn serve_outcome_json(o: &ServeOutcome) -> Json {
+    let result = match &o.result {
+        Some(r) => Json::obj(vec![
+            ("method", Json::str(&r.method)),
+            ("backend", Json::str(&r.backend)),
+            ("steps", Json::num(r.train_losses.len() as f64)),
+            ("final_train_loss", Json::num(r.final_train_loss)),
+            ("final_eval_loss", Json::num(r.final_eval_loss())),
+            ("final_metric", Json::num(r.final_metric())),
+            ("peak_mem_bytes", Json::num(r.peak_mem_bytes as f64)),
+            ("peak_grad_bytes", Json::num(r.peak_grad_bytes as f64)),
+            ("train_losses", Json::Arr(r.train_losses.iter().map(|&l| Json::num(l)).collect())),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("name", Json::str(&o.name)),
+        ("admitted", Json::Bool(o.admitted)),
+        (
+            "fate",
+            match &o.fate {
+                Some(f) => Json::str(f),
+                None => Json::Null,
+            },
+        ),
+        ("result", result),
+    ])
+}
+
+fn cmd_serve(args: &Args, knobs: &KnobOverrides) -> Result<()> {
+    let path = args.get("spec").ok_or_else(|| anyhow!("serve needs --spec <path>"))?;
+    let src = std::fs::read_to_string(path)?;
+    let mut spec = ServeSpec::parse(&src)?;
+    if let Some(v) = args.get("slice") {
+        let k: usize = v.parse().map_err(|_| anyhow!("--slice wants a step count, got {v:?}"))?;
+        if k == 0 {
+            bail!("--slice must be >= 1");
+        }
+        spec.slice_steps = k;
+    }
+    println!(
+        "serving {} sessions, {} steps per slice",
+        spec.sessions.len(),
+        spec.slice_steps
+    );
+    let knobs = *knobs;
+    let outcomes = scheduler::serve(&spec, &move || knobs.apply())?;
+    for o in &outcomes {
+        match (&o.result, &o.fate) {
+            (Some(r), _) => println!(
+                "{:20} done: final train loss {:.4} | eval loss {:.4} | peak grad {}",
+                o.name,
+                r.final_train_loss,
+                r.final_eval_loss(),
+                human_bytes(r.peak_grad_bytes)
+            ),
+            (None, Some(f)) => println!("{:20} {}", o.name, f),
+            (None, None) => println!("{:20} (no result)", o.name),
+        }
+        if let Some(r) = &o.result {
+            print_loss_bits(&r.train_losses);
+        }
+    }
+    if let Some(dir) = args.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        for o in &outcomes {
+            let report = dir.join(format!("{}.json", o.name));
+            std::fs::write(report, serve_outcome_json(o).to_string())?;
+            if let Some(ckpt) = &o.checkpoint {
+                let p = dir.join(format!("{}.session", o.name));
+                std::fs::write(&p, ckpt)?;
+                println!("evicted session checkpoint -> {}", p.display());
+            }
+        }
+        println!("per-session reports written to {}", dir.display());
     }
     Ok(())
 }
@@ -163,27 +346,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     let ckpt = args
         .get("ckpt")
-        .ok_or_else(|| anyhow::anyhow!("eval needs --ckpt <path>"))?;
+        .ok_or_else(|| anyhow!("eval needs --ckpt <path>"))?;
     let store = blockllm::model::ParamStore::load(std::path::Path::new(ckpt))?;
-    let mut tr = blockllm::trainer::Trainer::open(cfg.clone(), Some(&store))?;
-    let ev = match cfg.task {
-        Task::C4Pretrain => {
-            let mut s = blockllm::data::c4sim::C4Sim::new(cfg.seed ^ 0xEEEE);
-            tr.eval_lm(&mut s)?
-        }
-        Task::AlpacaFinetune => {
-            let mut s = blockllm::data::alpacasim::AlpacaSim::new(cfg.seed ^ 0xEEEE);
-            tr.eval_lm(&mut s)?
-        }
-        Task::Glue(i) => {
-            let mut s = blockllm::data::gluesim::GlueSim::new(i, cfg.seed);
-            tr.eval_cls(&mut s)?
-        }
-        Task::DomainShift => {
-            let mut s = blockllm::data::gluesim::GlueSim::new(4, cfg.seed);
-            tr.eval_cls(&mut s)?
-        }
-    };
+    // the task -> eval-stream mapping lives in session::TaskData, shared
+    // with the train driver and the serve scheduler
+    let mut sess = Session::new(&cfg, Some(&store))?;
+    let ev = sess.eval_now()?;
     println!("eval loss {:.4} | metric {:.4}", ev.loss, ev.metric);
     Ok(())
 }

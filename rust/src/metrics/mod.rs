@@ -117,6 +117,13 @@ impl MovingWindow {
         }
     }
 
+    /// The retained values, oldest first (checkpointing: the window is
+    /// rebuilt by pushing these back in order, so `mean()` — an
+    /// insertion-ordered f64 sum — reproduces the exact same bits).
+    pub fn values(&self) -> &[f64] {
+        &self.buf
+    }
+
     pub fn clear(&mut self) {
         self.buf.clear();
     }

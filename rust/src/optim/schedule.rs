@@ -28,6 +28,23 @@ impl LrSchedule {
         }
     }
 
+    /// Resolve the schedule a `TrainConfig` implies. The task-dependent
+    /// cosine floor lives HERE and only here: C4 pretraining decays to 10%
+    /// of base LR (paper App. A.7), every other task decays to zero (App.
+    /// A.6). Trainer and Session both call this, so the paper-appendix
+    /// constants can never drift between the two construction paths.
+    pub fn from_config(cfg: &crate::config::TrainConfig) -> LrSchedule {
+        if cfg.cosine_lr {
+            let min_frac = match cfg.task {
+                crate::config::Task::C4Pretrain => 0.1,
+                _ => 0.0,
+            };
+            LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, min_frac)
+        } else {
+            LrSchedule::constant(cfg.lr)
+        }
+    }
+
     /// LR at 0-based step t.
     pub fn at(&self, t: usize) -> f64 {
         if !self.cosine {
@@ -78,5 +95,20 @@ mod tests {
     fn beyond_total_clamps() {
         let s = LrSchedule::cosine(1.0, 100, 0.0, 0.1);
         assert!((s.at(500) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_config_resolves_task_dependent_floor() {
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.steps = 100;
+        cfg.cosine_lr = true;
+        cfg.task = crate::config::Task::C4Pretrain;
+        assert_eq!(LrSchedule::from_config(&cfg).min_frac, 0.1);
+        cfg.task = crate::config::Task::AlpacaFinetune;
+        assert_eq!(LrSchedule::from_config(&cfg).min_frac, 0.0);
+        cfg.cosine_lr = false;
+        let s = LrSchedule::from_config(&cfg);
+        assert!(!s.cosine);
+        assert_eq!(s.at(0), s.at(99));
     }
 }

@@ -1,0 +1,605 @@
+//! Sessions: the serializable unit of training.
+//!
+//! A [`Session`] owns everything `Trainer::train_lm`/`train_cls` used to
+//! keep on the stack for the whole run — the trainer (backend, params,
+//! strategy, memory tracker), the task's data streams, and the loop
+//! accumulators (loss history, eval points, wall/exec time). Because that
+//! state is an explicit object instead of local variables, a run can stop
+//! after ANY optimizer step ([`Session::suspend`] → one versioned
+//! [`state::StateBag`] checkpoint) and continue later ([`Session::resume`])
+//! with bitwise-identical results: suspend-at-N + resume + train-to-2N
+//! produces the same loss bits and parameter bits as an uninterrupted 2N
+//! run (tests/session_resume.rs pins this across threads × grad-stream).
+//!
+//! [`TaskData`] is the one place the task → data-generator mapping lives;
+//! the run driver, the eval command, and the serve scheduler all route
+//! through it (this mapping used to be copy-pasted at three call sites).
+//!
+//! The [`scheduler`] submodule multiplexes many sessions over one shared
+//! backend (`pallas serve`), suspending and resuming at slice boundaries —
+//! which is exactly why resume must be bitwise: a time-sliced session must
+//! be indistinguishable from a solo run.
+
+pub mod scheduler;
+pub mod state;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{self, Backend, Targets};
+use crate::config::{Task, TrainConfig};
+use crate::data::{alpacasim::AlpacaSim, c4sim::C4Sim, gluesim::GlueSim, ClsBatch, LmBatch};
+use crate::data::{ClsSource, LmStream};
+use crate::memory::{MemBreakdown, F32};
+use crate::model::ParamStore;
+use crate::runtime::ParamSpec;
+use crate::trainer::{EvalPoint, RunResult, Trainer};
+use crate::util::Stopwatch;
+use state::StateBag;
+
+/// The train/eval data streams for one task — the single source of truth
+/// for which generator (and which seed stream) each `Task` trains on.
+pub enum TaskData {
+    C4 { train: C4Sim, eval: C4Sim },
+    Alpaca { train: AlpacaSim, eval: AlpacaSim },
+    /// GlueSim carries its own train and eval rng streams internally (it
+    /// also serves DomainShift, which is GLUE task 4 — the IMDb stand-in).
+    Glue(GlueSim),
+}
+
+impl TaskData {
+    /// Fresh streams at the config's seed. Eval streams use `seed ^ 0xEEEE`
+    /// so they never replay training batches.
+    pub fn open(cfg: &TrainConfig) -> TaskData {
+        let seed = cfg.seed;
+        match cfg.task {
+            Task::C4Pretrain => {
+                TaskData::C4 { train: C4Sim::new(seed), eval: C4Sim::new(seed ^ 0xEEEE) }
+            }
+            Task::AlpacaFinetune => TaskData::Alpaca {
+                train: AlpacaSim::new(seed),
+                eval: AlpacaSim::new(seed ^ 0xEEEE),
+            },
+            Task::Glue(i) => TaskData::Glue(GlueSim::new(i, seed)),
+            Task::DomainShift => TaskData::Glue(GlueSim::new(4, seed)),
+        }
+    }
+
+    /// Serialize every stream cursor under the "data." namespace.
+    pub fn state_save(&self, bag: &mut StateBag) {
+        match self {
+            TaskData::C4 { train, eval } => {
+                train.state_save(bag, "data.train");
+                eval.state_save(bag, "data.eval");
+            }
+            TaskData::Alpaca { train, eval } => {
+                train.state_save(bag, "data.train");
+                eval.state_save(bag, "data.eval");
+            }
+            TaskData::Glue(g) => g.state_save(bag, "data.glue"),
+        }
+    }
+
+    /// Restore cursors written by [`Self::state_save`] (same task only —
+    /// the config round-trip guarantees the variants line up).
+    pub fn state_load(&mut self, bag: &StateBag) -> Result<()> {
+        match self {
+            TaskData::C4 { train, eval } => {
+                train.state_load(bag, "data.train")?;
+                eval.state_load(bag, "data.eval")?;
+            }
+            TaskData::Alpaca { train, eval } => {
+                train.state_load(bag, "data.train")?;
+                eval.state_load(bag, "data.eval")?;
+            }
+            TaskData::Glue(g) => g.state_load(bag, "data.glue")?,
+        }
+        Ok(())
+    }
+}
+
+/// One optimizer step's microbatches, drawn up front (selection events may
+/// replay them — see trainer::optim_step).
+enum MicroBatches {
+    Lm(Vec<LmBatch>),
+    Cls(Vec<ClsBatch>, /* regression */ bool),
+}
+
+/// A training run as a first-class, suspendable object.
+pub struct Session {
+    trainer: Trainer,
+    data: TaskData,
+    train_losses: Vec<f64>,
+    evals: Vec<EvalPoint>,
+    /// wall/exec seconds accumulated across run_steps calls, so a
+    /// suspended-and-resumed run still reports its total cost
+    wall_accum: f64,
+    exec_accum: f64,
+}
+
+impl Session {
+    /// Open a fresh session: config-resolved backend, init (or warm-start)
+    /// params, fresh data streams at the config's seed.
+    pub fn new(cfg: &TrainConfig, warm: Option<&ParamStore>) -> Result<Session> {
+        let be = backend::open(cfg)?;
+        Self::with_backend(be, cfg, warm)
+    }
+
+    /// Like [`Self::new`] but over an explicit backend (the serve scheduler
+    /// threads ONE backend through every session).
+    pub fn with_backend(
+        backend: Box<dyn Backend>,
+        cfg: &TrainConfig,
+        warm: Option<&ParamStore>,
+    ) -> Result<Session> {
+        let trainer = Trainer::new(backend, cfg.clone(), warm)?;
+        let data = TaskData::open(cfg);
+        Ok(Session {
+            trainer,
+            data,
+            train_losses: Vec::new(),
+            evals: Vec::new(),
+            wall_accum: 0.0,
+            exec_accum: 0.0,
+        })
+    }
+
+    // ---- progress ---------------------------------------------------------
+
+    /// 0-based optimizer steps completed so far.
+    pub fn step(&self) -> usize {
+        self.trainer.step()
+    }
+
+    /// Total steps this session will run.
+    pub fn target_steps(&self) -> usize {
+        self.trainer.cfg.steps
+    }
+
+    pub fn done(&self) -> bool {
+        self.trainer.step() >= self.trainer.cfg.steps
+    }
+
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.trainer.cfg
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.trainer.store
+    }
+
+    pub fn train_losses(&self) -> &[f64] {
+        &self.train_losses
+    }
+
+    // ---- memory accounting (serve admission + enforcement) ----------------
+
+    /// Bytes the session is MODELED to need at peak: dense weights + the
+    /// strategy's gradient retention + its optimizer state + whatever
+    /// activations the backend currently reports. Admission control checks
+    /// budgets against this before a session has run a single step.
+    pub fn modeled_footprint_bytes(&self) -> u64 {
+        let n = self.trainer.store.n_params() as u64;
+        let grads = self.trainer.strategy.modeled_grad_elems(n);
+        let state = self.trainer.strategy.modeled_state_elems(n);
+        (n + grads + state) * F32 + self.trainer.backend.activation_bytes()
+    }
+
+    /// Like the modeled footprint, but with the gradient term replaced by
+    /// the MEASURED peak gradient bytes (grads layer, counted at consume
+    /// time) — the scheduler re-checks budgets against this after every
+    /// slice, catching strategies whose real retention exceeds the model.
+    pub fn measured_footprint_bytes(&self) -> u64 {
+        let n = self.trainer.store.n_params() as u64;
+        let state = self.trainer.strategy.modeled_state_elems(n);
+        (n + state) * F32
+            + self.trainer.mem.peak_grad_measured
+            + self.trainer.backend.activation_bytes()
+    }
+
+    // ---- the loop ---------------------------------------------------------
+
+    /// Run up to `k` optimizer steps (stops early at the target step
+    /// count), honoring grad accumulation and the eval cadence exactly as
+    /// the old `train_lm`/`train_cls` loops did. Returns how many steps ran.
+    pub fn run_steps(&mut self, k: usize) -> Result<usize> {
+        let sw = Stopwatch::start();
+        let exec0 = self.trainer.backend.exec_secs();
+        let (b, t) = self.trainer.batch_shape();
+        let accum = self.trainer.cfg.grad_accum.max(1);
+        let mut ran = 0usize;
+        while ran < k && self.trainer.step() < self.trainer.cfg.steps {
+            let s = self.trainer.step();
+            // draw the step's microbatches up front: selection events may
+            // replay them (the data is tiny next to one gradient buffer)
+            let mb = match &mut self.data {
+                TaskData::C4 { train, .. } => {
+                    MicroBatches::Lm((0..accum).map(|_| train.next_batch(b, t)).collect())
+                }
+                TaskData::Alpaca { train, .. } => {
+                    MicroBatches::Lm((0..accum).map(|_| train.next_batch(b, t)).collect())
+                }
+                TaskData::Glue(g) => {
+                    let reg = g.regression();
+                    MicroBatches::Cls((0..accum).map(|_| g.batch(b, t, true)).collect(), reg)
+                }
+            };
+            let mean_loss = match &mb {
+                MicroBatches::Lm(batches) => {
+                    let micro: Vec<(&[i32], Targets<'_>)> = batches
+                        .iter()
+                        .map(|ba| (ba.tokens.as_slice(), Targets::Lm(ba.targets.as_slice())))
+                        .collect();
+                    self.trainer.optim_step(&micro)?
+                }
+                MicroBatches::Cls(batches, regression) => {
+                    let micro: Vec<(&[i32], Targets<'_>)> = batches
+                        .iter()
+                        .map(|ba| {
+                            let tg = if *regression {
+                                Targets::Reg(ba.labels_f.as_slice())
+                            } else {
+                                Targets::Cls(ba.labels_i.as_slice())
+                            };
+                            (ba.tokens.as_slice(), tg)
+                        })
+                        .collect();
+                    self.trainer.optim_step(&micro)?
+                }
+            };
+            self.train_losses.push(mean_loss);
+            if self.trainer.cfg.eval_every > 0 && (s + 1) % self.trainer.cfg.eval_every == 0 {
+                let ev = self.eval_now().context("eval")?;
+                self.evals.push(ev);
+            }
+            ran += 1;
+        }
+        self.wall_accum += sw.secs();
+        self.exec_accum += self.trainer.backend.exec_secs() - exec0;
+        Ok(ran)
+    }
+
+    /// Run every remaining step.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.done() {
+            self.run_steps(usize::MAX)?;
+        }
+        Ok(())
+    }
+
+    /// One eval on the session's eval stream at the current step.
+    pub fn eval_now(&mut self) -> Result<EvalPoint> {
+        match &mut self.data {
+            TaskData::C4 { eval, .. } => self.trainer.eval_lm(eval),
+            TaskData::Alpaca { eval, .. } => self.trainer.eval_lm(eval),
+            TaskData::Glue(g) => self.trainer.eval_cls(g),
+        }
+    }
+
+    /// Close out the run: final eval if the last step lacks one (same rule
+    /// as the old train loops), then assemble the `RunResult`. Returns the
+    /// trained parameters too.
+    pub fn finish(self) -> Result<(RunResult, ParamStore)> {
+        let (res, store, _backend) = self.finish_parts()?;
+        Ok((res, store))
+    }
+
+    /// [`Self::finish`], also handing the backend back to the caller (the
+    /// serve scheduler reuses it for the next session's slice).
+    pub fn finish_parts(mut self) -> Result<(RunResult, ParamStore, Box<dyn Backend>)> {
+        if self.evals.is_empty() || self.evals.last().map(|e| e.step) != Some(self.trainer.step())
+        {
+            let exec0 = self.trainer.backend.exec_secs();
+            let ev = self.eval_now()?;
+            self.evals.push(ev);
+            self.exec_accum += self.trainer.backend.exec_secs() - exec0;
+        }
+        let mut tr = self.trainer;
+        let res = tr.finish(self.train_losses, self.evals, self.wall_accum, self.exec_accum);
+        Ok((res, tr.store, tr.backend))
+    }
+
+    // ---- suspend / resume -------------------------------------------------
+
+    /// Serialize the ENTIRE session — config, step counter, loss/eval
+    /// history, data cursors, strategy state (moments, masks, scorer, rng),
+    /// memory peaks, timing accumulators, and every parameter tensor — into
+    /// one versioned checkpoint. See `state` for the binary format.
+    pub fn suspend(&self) -> Vec<u8> {
+        let mut bag = StateBag::new();
+        for (k, v) in self.trainer.cfg.to_kv() {
+            bag.put_str(&format!("cfg.{k}"), v);
+        }
+        bag.put_usize("session.step", self.trainer.step());
+        bag.put_f64s("session.losses", self.train_losses.clone());
+        bag.put_usize("session.n_evals", self.evals.len());
+        for (i, ev) in self.evals.iter().enumerate() {
+            bag.put_f64s(&format!("session.eval/{i}"), vec![ev.step as f64, ev.loss, ev.metric]);
+            bag.put_f64s(&format!("session.eval_preds/{i}"), ev.preds.clone());
+            bag.put_f64s(&format!("session.eval_labels/{i}"), ev.labels.clone());
+        }
+        bag.put_f64s(
+            "session.timing",
+            vec![self.wall_accum, self.exec_accum, self.trainer.phase_strategy()],
+        );
+        let m = &self.trainer.mem;
+        bag.put_u64s(
+            "session.mem",
+            vec![
+                m.peak_total,
+                m.peak_rss,
+                m.peak_grad_measured,
+                m.peak.weights,
+                m.peak.grads,
+                m.peak.optim_m,
+                m.peak.optim_v,
+                m.peak.extra,
+                m.peak.activations,
+                m.current.weights,
+                m.current.grads,
+                m.current.optim_m,
+                m.current.optim_v,
+                m.current.extra,
+                m.current.activations,
+            ],
+        );
+        self.data.state_save(&mut bag);
+        self.trainer.strategy.state_save(&mut bag);
+        for (i, spec) in self.trainer.store.specs.iter().enumerate() {
+            bag.put_f32s(&format!("param/{}", spec.name), self.trainer.store.bufs[i].clone());
+            bag.put_u64s(
+                &format!("param_shape/{}", spec.name),
+                spec.shape.iter().map(|&d| d as u64).collect(),
+            );
+        }
+        bag.encode()
+    }
+
+    /// [`Self::suspend`], consuming the session and handing the backend
+    /// back (serve slice boundary: checkpoint this session, lend the
+    /// backend to the next one).
+    pub fn suspend_parts(self) -> (Vec<u8>, Box<dyn Backend>) {
+        let bytes = self.suspend();
+        (bytes, self.trainer.backend)
+    }
+
+    /// Rebuild a session from a [`Self::suspend`] checkpoint, opening a
+    /// config-resolved backend.
+    pub fn resume(bytes: &[u8]) -> Result<Session> {
+        let bag = StateBag::decode(bytes)?;
+        let cfg = cfg_from_bag(&bag)?;
+        let be = backend::open(&cfg)?;
+        Self::resume_from_bag(be, &bag)
+    }
+
+    /// Rebuild over an explicit (possibly shared) backend.
+    pub fn resume_with_backend(backend: Box<dyn Backend>, bytes: &[u8]) -> Result<Session> {
+        let bag = StateBag::decode(bytes)?;
+        Self::resume_from_bag(backend, &bag)
+    }
+
+    fn resume_from_bag(backend: Box<dyn Backend>, bag: &StateBag) -> Result<Session> {
+        let cfg = cfg_from_bag(bag)?;
+
+        // Rebuild the checkpointed parameters as a standalone store, then
+        // adopt them through the warm-start path. `Trainer::new` bails when
+        // the overlap is EMPTY (wrong model entirely); the coverage check
+        // below bails unless the overlap is TOTAL — resume never silently
+        // mixes checkpointed tensors with fresh init.
+        let mut specs: Vec<ParamSpec> = Vec::new();
+        let mut bufs: Vec<Vec<f32>> = Vec::new();
+        for key in bag.blob_keys_with_prefix("param/") {
+            let name = key.strip_prefix("param/").expect("prefix-filtered").to_string();
+            let shape: Vec<usize> = bag
+                .u64s(&format!("param_shape/{name}"))
+                .with_context(|| format!("shape for checkpointed tensor {name:?}"))?
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            let data = bag.f32s(key)?.to_vec();
+            let numel: usize = shape.iter().product();
+            if numel != data.len() {
+                bail!(
+                    "checkpointed tensor {name:?} has {} elements but shape {shape:?} \
+                     wants {numel}",
+                    data.len()
+                );
+            }
+            specs.push(ParamSpec { name, shape });
+            bufs.push(data);
+        }
+        if specs.is_empty() {
+            bail!("session checkpoint holds no parameter tensors");
+        }
+        let mut saved = ParamStore::zeros(&specs);
+        saved.bufs = bufs;
+
+        let mut trainer = Trainer::new(backend, cfg.clone(), Some(&saved))
+            .context("rebuilding trainer from checkpoint")?;
+        let covered = trainer.store.load_overlapping(&saved);
+        if covered != trainer.store.n_tensors() {
+            bail!(
+                "checkpoint parameters cover {covered} of {} model tensors — refusing a \
+                 partial resume (preset/config mismatch?)",
+                trainer.store.n_tensors()
+            );
+        }
+
+        trainer
+            .strategy
+            .state_load(bag)
+            .context("restoring optimizer/strategy state")?;
+        trainer.set_step(bag.get_usize("session.step")?);
+
+        let timing = bag.f64s("session.timing")?;
+        if timing.len() != 3 {
+            bail!("session.timing wants 3 entries, checkpoint has {}", timing.len());
+        }
+        trainer.set_phase_strategy(timing[2]);
+
+        let mw = bag.u64s("session.mem")?;
+        if mw.len() != 15 {
+            bail!("session.mem wants 15 entries, checkpoint has {}", mw.len());
+        }
+        trainer.mem.peak_total = mw[0];
+        trainer.mem.peak_rss = mw[1];
+        trainer.mem.peak_grad_measured = mw[2];
+        trainer.mem.peak = MemBreakdown {
+            weights: mw[3],
+            grads: mw[4],
+            optim_m: mw[5],
+            optim_v: mw[6],
+            extra: mw[7],
+            activations: mw[8],
+        };
+        trainer.mem.current = MemBreakdown {
+            weights: mw[9],
+            grads: mw[10],
+            optim_m: mw[11],
+            optim_v: mw[12],
+            extra: mw[13],
+            activations: mw[14],
+        };
+
+        let train_losses = bag.f64s("session.losses")?.to_vec();
+        let n_evals = bag.get_usize("session.n_evals")?;
+        let mut evals = Vec::with_capacity(n_evals);
+        for i in 0..n_evals {
+            let hdr = bag.f64s(&format!("session.eval/{i}"))?;
+            if hdr.len() != 3 {
+                bail!("session.eval/{i} wants 3 entries, checkpoint has {}", hdr.len());
+            }
+            evals.push(EvalPoint {
+                step: hdr[0] as usize,
+                loss: hdr[1],
+                metric: hdr[2],
+                preds: bag.f64s(&format!("session.eval_preds/{i}"))?.to_vec(),
+                labels: bag.f64s(&format!("session.eval_labels/{i}"))?.to_vec(),
+            });
+        }
+
+        let mut data = TaskData::open(&cfg);
+        data.state_load(bag).context("restoring data-stream cursors")?;
+
+        // the adopted backend may have cached another session's device
+        // params — invalidate everything (empty slice = all layers)
+        trainer.backend.params_updated(&[]);
+        // per-session obs scoping: profile deltas start at THIS resume, so
+        // a slice's profile never charges work from co-scheduled sessions
+        trainer.rebase_obs();
+
+        Ok(Session {
+            trainer,
+            data,
+            train_losses,
+            evals,
+            wall_accum: timing[0],
+            exec_accum: timing[1],
+        })
+    }
+}
+
+/// Rebuild the config embedded in a checkpoint ("cfg.<key>" metadata,
+/// values exactly as `TrainConfig::set` accepts them).
+fn cfg_from_bag(bag: &StateBag) -> Result<TrainConfig> {
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    for (k, v) in &bag.meta {
+        if let Some(key) = k.strip_prefix("cfg.") {
+            pairs.push((key.to_string(), v.as_str()?.to_string()));
+        }
+    }
+    if pairs.is_empty() {
+        bail!("session checkpoint carries no embedded config");
+    }
+    TrainConfig::from_kv(&pairs).context("rebuilding config from checkpoint")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn tiny_cfg(method: Method, steps: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.preset = "nano".into();
+        cfg.method = method;
+        cfg.steps = steps;
+        cfg.eval_every = 0;
+        cfg.eval_batches = 1;
+        cfg.seed = 7;
+        cfg
+    }
+
+    #[test]
+    fn session_matches_trainer_loop_bitwise() {
+        let _k = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        let cfg = tiny_cfg(Method::FullAdam, 4);
+        // old-style loop
+        let mut tr = Trainer::open(cfg.clone(), None).unwrap();
+        let mut train = C4Sim::new(cfg.seed);
+        let mut eval = C4Sim::new(cfg.seed ^ 0xEEEE);
+        let want = tr.train_lm(&mut train, &mut eval).unwrap();
+        // session loop
+        let mut sess = Session::new(&cfg, None).unwrap();
+        sess.run_to_completion().unwrap();
+        let (got, store) = sess.finish().unwrap();
+        assert_eq!(want.train_losses.len(), got.train_losses.len());
+        for (a, b) in want.train_losses.iter().zip(&got.train_losses) {
+            assert_eq!(a.to_bits(), b.to_bits(), "train loss bits diverged");
+        }
+        assert_eq!(want.evals.len(), got.evals.len());
+        for (a, b) in want.evals.iter().zip(&got.evals) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "eval loss bits diverged");
+        }
+        for (i, buf) in tr.store.bufs.iter().enumerate() {
+            for (x, y) in buf.iter().zip(&store.bufs[i]) {
+                assert_eq!(x.to_bits(), y.to_bits(), "param bits diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn resume_rejects_wrong_preset() {
+        let _k = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        let cfg = tiny_cfg(Method::FullAdam, 2);
+        let mut sess = Session::new(&cfg, None).unwrap();
+        sess.run_steps(1).unwrap();
+        let bytes = sess.suspend();
+        // corrupt the embedded config's preset: the rebuilt model shares no
+        // tensors with the checkpoint, which must trip the zero-overlap
+        // bail in the warm-start path, not load garbage
+        let bag = StateBag::decode(&bytes).unwrap();
+        let mut tampered = StateBag::new();
+        tampered.meta = bag.meta.clone();
+        tampered.blobs = bag.blobs.clone();
+        tampered.put_str("cfg.preset", "tiny");
+        let err = Session::resume(&tampered.encode()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no tensors") || msg.contains("cover"),
+            "unexpected resume error: {msg}"
+        );
+    }
+
+    #[test]
+    fn resume_rejects_missing_param_tensor() {
+        let _k = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        let cfg = tiny_cfg(Method::FullAdam, 2);
+        let mut sess = Session::new(&cfg, None).unwrap();
+        sess.run_steps(1).unwrap();
+        let bytes = sess.suspend();
+        let bag = StateBag::decode(&bytes).unwrap();
+        let mut tampered = StateBag::new();
+        tampered.meta = bag.meta.clone();
+        tampered.blobs = bag.blobs.clone();
+        // drop one tensor: partial coverage must be refused outright
+        let victim = bag.blob_keys_with_prefix("param/")[0].to_string();
+        tampered.blobs.remove(&victim);
+        tampered.blobs.remove(&victim.replace("param/", "param_shape/"));
+        let err = Session::resume(&tampered.encode()).unwrap_err();
+        assert!(format!("{err:#}").contains("cover"), "{err:#}");
+    }
+}

@@ -1,0 +1,340 @@
+//! `pallas serve`: multiplex many named training sessions over ONE shared
+//! execution backend.
+//!
+//! The scheduler is a round-robin fair-share loop: every live session gets
+//! a time slice of `slice_steps` optimizer steps, then is suspended (via
+//! the same [`Session::suspend`] checkpoint a crash-resume uses) and the
+//! backend is lent to the next tenant. Because suspend/resume is bitwise,
+//! a time-sliced session's losses and final parameters are identical to a
+//! solo run of the same config (tests/session_resume.rs pins this for
+//! three concurrent sessions).
+//!
+//! Memory budgets are enforced twice:
+//! * **admission** — before a session runs a single step, its budget must
+//!   cover [`Session::modeled_footprint_bytes`] (weights + the strategy's
+//!   modeled gradient retention + modeled optimizer state + activations);
+//!   an underprovisioned session is rejected up front, not OOM-killed
+//!   mid-run.
+//! * **runtime** — after every slice the budget is re-checked against
+//!   [`Session::measured_footprint_bytes`], which swaps the modeled
+//!   gradient term for the grads layer's MEASURED `peak_grad_bytes`; a
+//!   session whose real retention exceeds its budget is evicted at the
+//!   slice boundary (its checkpoint is preserved in the outcome, so the
+//!   work isn't lost).
+//!
+//! One backend means one model shape: every session in a spec must agree
+//! on preset, task, and backend kind (validated at parse time). Per-slice
+//! knob hygiene — `util::reset_all_knobs()` plus the caller's `rearm`
+//! closure (which re-applies CLI knob overrides) — guarantees no tenant
+//! inherits another's thread-count or gradient-path resolution.
+
+use anyhow::{bail, Context, Result};
+
+use super::Session;
+use crate::backend::{self, Backend};
+use crate::config::TrainConfig;
+use crate::trainer::RunResult;
+use crate::util::json::Json;
+
+/// Steps per turn when the spec doesn't say.
+pub const DEFAULT_SLICE_STEPS: usize = 8;
+
+/// One tenant in a serve spec.
+pub struct SessionSpec {
+    pub name: String,
+    /// memory budget in bytes (None = unbudgeted: always admitted)
+    pub budget_bytes: Option<u64>,
+    pub cfg: TrainConfig,
+}
+
+/// A parsed serve spec: `{"slice_steps": 8, "sessions": [{"name": ...,
+/// "budget_mb": ..., "config": {"<TrainConfig key>": value, ...}}, ...]}`.
+pub struct ServeSpec {
+    pub slice_steps: usize,
+    pub sessions: Vec<SessionSpec>,
+}
+
+impl ServeSpec {
+    pub fn parse(src: &str) -> Result<ServeSpec> {
+        let j = Json::parse(src).context("serve spec is not valid JSON")?;
+        let slice_steps = match j.get("slice_steps") {
+            Some(v) => v.as_usize().context("slice_steps")?,
+            None => DEFAULT_SLICE_STEPS,
+        };
+        if slice_steps == 0 {
+            bail!("slice_steps must be >= 1");
+        }
+        let mut sessions = Vec::new();
+        for (i, s) in j.req("sessions")?.as_arr()?.iter().enumerate() {
+            let name = s
+                .req("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("sessions[{i}].name"))?
+                .to_string();
+            let budget_bytes = match s.get("budget_mb") {
+                Some(v) => {
+                    let mb = v.as_f64().with_context(|| format!("sessions[{i}].budget_mb"))?;
+                    if mb <= 0.0 {
+                        bail!("sessions[{i}] ({name}): budget_mb must be positive, got {mb}");
+                    }
+                    Some((mb * 1e6) as u64)
+                }
+                None => None,
+            };
+            let mut cfg = TrainConfig::default();
+            if let Some(c) = s.get("config") {
+                for (k, v) in c.as_obj().with_context(|| format!("sessions[{i}].config"))? {
+                    let val = match v {
+                        Json::Str(x) => x.clone(),
+                        // TrainConfig::set parses integer fields with
+                        // parse::<usize>, which rejects "12.0" — print
+                        // whole numbers without the fraction
+                        Json::Num(x) if x.fract() == 0.0 && x.is_finite() => {
+                            format!("{}", *x as i64)
+                        }
+                        Json::Num(x) => x.to_string(),
+                        Json::Bool(b) => b.to_string(),
+                        other => bail!(
+                            "sessions[{i}] ({name}): config key {k:?} has unsupported \
+                             value {other:?}"
+                        ),
+                    };
+                    cfg.set(k, &val)
+                        .with_context(|| format!("sessions[{i}] ({name}): config key {k:?}"))?;
+                }
+            }
+            sessions.push(SessionSpec { name, budget_bytes, cfg });
+        }
+        let spec = ServeSpec { slice_steps, sessions };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural checks: at least one session, unique names, and a model
+    /// shape every tenant agrees on (one shared backend serves them all).
+    pub fn validate(&self) -> Result<()> {
+        if self.sessions.is_empty() {
+            bail!("serve spec has no sessions");
+        }
+        for (i, s) in self.sessions.iter().enumerate() {
+            if self.sessions[..i].iter().any(|t| t.name == s.name) {
+                bail!("duplicate session name {:?}", s.name);
+            }
+        }
+        let base = &self.sessions[0].cfg;
+        for s in &self.sessions[1..] {
+            if s.cfg.preset != base.preset {
+                bail!(
+                    "session {:?} uses preset {:?} but {:?} uses {:?} — all sessions must \
+                     share one model shape (one backend serves them all)",
+                    s.name,
+                    s.cfg.preset,
+                    self.sessions[0].name,
+                    base.preset
+                );
+            }
+            if s.cfg.task != base.task {
+                bail!(
+                    "session {:?} task {} differs from {:?} task {} — the shared backend \
+                     bakes in one head/batch shape",
+                    s.name,
+                    s.cfg.task_key(),
+                    self.sessions[0].name,
+                    base.task_key()
+                );
+            }
+            if s.cfg.backend != base.backend {
+                bail!("session {:?} requests a different backend kind", s.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What happened to one tenant, in spec order.
+pub struct ServeOutcome {
+    pub name: String,
+    /// false = rejected at admission (budget below modeled footprint)
+    pub admitted: bool,
+    /// rejection/eviction explanation; None for a clean completion
+    pub fate: Option<String>,
+    /// the finished run (None when rejected or evicted)
+    pub result: Option<RunResult>,
+    /// an evicted session's suspend checkpoint — the partial work survives
+    /// and can be resumed later under a bigger budget
+    pub checkpoint: Option<Vec<u8>>,
+}
+
+/// Run every session in `spec` to completion (or rejection/eviction) over
+/// one shared backend. `rearm` is called after each `reset_all_knobs()` so
+/// the serve CLI can re-apply its `--threads`/`--grad-stream`/... overrides
+/// (knob state is process-global; tests pass a no-op).
+pub fn serve(spec: &ServeSpec, rearm: &dyn Fn()) -> Result<Vec<ServeOutcome>> {
+    spec.validate()?;
+    let mut shared: Option<Box<dyn Backend>> = Some(backend::open(&spec.sessions[0].cfg)?);
+
+    struct Slot {
+        out_idx: usize,
+        budget: Option<u64>,
+        bytes: Vec<u8>,
+        done: bool,
+    }
+
+    // Admission: build each tenant once on the shared backend, check its
+    // budget against the modeled footprint, and immediately checkpoint it.
+    let mut outcomes: Vec<ServeOutcome> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::new();
+    for s in &spec.sessions {
+        let be = shared.take().expect("backend is lent to at most one session");
+        let sess = Session::with_backend(be, &s.cfg, None)
+            .with_context(|| format!("building session {:?}", s.name))?;
+        let modeled = sess.modeled_footprint_bytes();
+        let (bytes, be) = sess.suspend_parts();
+        shared = Some(be);
+        if let Some(budget) = s.budget_bytes {
+            if budget < modeled {
+                println!(
+                    "[serve] {}: REJECTED — budget {} B below modeled footprint {} B",
+                    s.name, budget, modeled
+                );
+                outcomes.push(ServeOutcome {
+                    name: s.name.clone(),
+                    admitted: false,
+                    fate: Some(format!(
+                        "budget {budget} B below modeled footprint {modeled} B"
+                    )),
+                    result: None,
+                    checkpoint: None,
+                });
+                continue;
+            }
+        }
+        slots.push(Slot {
+            out_idx: outcomes.len(),
+            budget: s.budget_bytes,
+            bytes,
+            done: false,
+        });
+        outcomes.push(ServeOutcome {
+            name: s.name.clone(),
+            admitted: true,
+            fate: None,
+            result: None,
+            checkpoint: None,
+        });
+    }
+
+    // Round-robin: K steps per tenant per turn, suspend at the boundary.
+    let slice = spec.slice_steps.max(1);
+    while slots.iter().any(|sl| !sl.done) {
+        for sl in slots.iter_mut() {
+            if sl.done {
+                continue;
+            }
+            // knob hygiene between tenants: drop whatever the previous
+            // slice resolved, re-resolve from env, re-apply CLI overrides
+            crate::util::reset_all_knobs();
+            rearm();
+            let name = outcomes[sl.out_idx].name.clone();
+            let be = shared.take().expect("backend is lent to at most one session");
+            let mut sess = Session::resume_with_backend(be, &sl.bytes)
+                .with_context(|| format!("resuming session {name:?}"))?;
+            sess.run_steps(slice)?;
+            if let Some(budget) = sl.budget {
+                let measured = sess.measured_footprint_bytes();
+                if measured > budget {
+                    let step = sess.step();
+                    let (bytes, be) = sess.suspend_parts();
+                    shared = Some(be);
+                    sl.done = true;
+                    println!(
+                        "[serve] {name}: EVICTED at step {step} — measured footprint \
+                         {measured} B exceeds budget {budget} B"
+                    );
+                    outcomes[sl.out_idx].fate = Some(format!(
+                        "evicted at step {step}: measured footprint {measured} B exceeds \
+                         budget {budget} B"
+                    ));
+                    outcomes[sl.out_idx].checkpoint = Some(bytes);
+                    continue;
+                }
+            }
+            if sess.done() {
+                let (res, _store, be) = sess
+                    .finish_parts()
+                    .with_context(|| format!("finishing session {name:?}"))?;
+                shared = Some(be);
+                println!(
+                    "[serve] {name}: DONE at step {} — final train loss {:.4}",
+                    res.train_losses.len(),
+                    res.final_train_loss
+                );
+                outcomes[sl.out_idx].result = Some(res);
+                sl.done = true;
+            } else {
+                let step = sess.step();
+                let target = sess.target_steps();
+                let (bytes, be) = sess.suspend_parts();
+                shared = Some(be);
+                sl.bytes = bytes;
+                println!("[serve] {name}: step {step}/{target}, suspended");
+            }
+        }
+    }
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grain_spec(names_steps: &[(&str, usize)], budget_mb: Option<f64>) -> String {
+        let sessions: Vec<String> = names_steps
+            .iter()
+            .map(|(name, steps)| {
+                let budget = match budget_mb {
+                    Some(mb) => format!(",\"budget_mb\":{mb}"),
+                    None => String::new(),
+                };
+                format!(
+                    "{{\"name\":\"{name}\"{budget},\"config\":{{\"preset\":\"grain\",\
+                     \"steps\":{steps},\"eval-every\":0,\"eval-batches\":1,\"seed\":5}}}}"
+                )
+            })
+            .collect();
+        format!("{{\"slice_steps\":2,\"sessions\":[{}]}}", sessions.join(","))
+    }
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let spec = ServeSpec::parse(&grain_spec(&[("a", 4), ("b", 6)], None)).unwrap();
+        assert_eq!(spec.slice_steps, 2);
+        assert_eq!(spec.sessions.len(), 2);
+        assert_eq!(spec.sessions[0].name, "a");
+        assert_eq!(spec.sessions[1].cfg.steps, 6);
+        assert!(spec.sessions[0].budget_bytes.is_none());
+    }
+
+    #[test]
+    fn spec_rejects_duplicate_names_and_mixed_presets() {
+        assert!(ServeSpec::parse(&grain_spec(&[("a", 4), ("a", 6)], None)).is_err());
+        let mixed = "{\"sessions\":[\
+            {\"name\":\"a\",\"config\":{\"preset\":\"grain\"}},\
+            {\"name\":\"b\",\"config\":{\"preset\":\"nano\"}}]}";
+        let err = ServeSpec::parse(mixed).unwrap_err();
+        assert!(format!("{err:#}").contains("preset"), "{err:#}");
+    }
+
+    #[test]
+    fn admission_rejects_budget_below_modeled_footprint() {
+        let _g = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        // 0.001 MB = 1000 bytes: far below any model's weights alone
+        let spec = ServeSpec::parse(&grain_spec(&[("starved", 4)], Some(0.001))).unwrap();
+        let out = serve(&spec, &|| {}).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(!out[0].admitted);
+        assert!(out[0].result.is_none());
+        assert!(out[0].fate.as_deref().unwrap().contains("modeled footprint"));
+    }
+}

@@ -1,0 +1,422 @@
+//! The checkpoint substrate: a flat, typed state bag + versioned binary
+//! codec.
+//!
+//! Everything a suspended session needs to resume bitwise — step counters,
+//! rng positions, optimizer moments, masks, data cursors, parameters — is
+//! written into ONE `StateBag`: small scalars/strings as JSON metadata,
+//! bulk numeric state as raw little-endian blobs. Keys are namespaced by
+//! convention ("session.*", "data.*", "param/<name>", and each strategy's
+//! own prefix) so independently-written components can share the bag
+//! without colliding.
+//!
+//! Two deliberate choices keep the format bit-exact:
+//! - u64 values (rng words, Adam step counts, mask words) are stored as hex
+//!   STRINGS in the JSON metadata or as `Blob::U64` — `util::json` numbers
+//!   are f64 and silently lose precision past 2^53.
+//! - f64 values that feed back into arithmetic (patience window, dict
+//!   norms, loss history) ride in `Blob::F64`, never through JSON's
+//!   decimal round-trip.
+//!
+//! File layout (version 1, magic `BLLMSES1` — distinct from the
+//! `ParamStore` checkpoint's `BLLMCKP1`):
+//!
+//! ```text
+//! [8]  magic "BLLMSES1"
+//! [4]  u32 LE: JSON metadata byte length
+//! [..] JSON metadata (must contain "version": "1")
+//! [4]  u32 LE: blob count
+//! per blob:
+//!   [4]  u32 LE: name byte length
+//!   [..] name (utf-8)
+//!   [1]  dtype tag: 0 = f32, 1 = u64, 2 = f64
+//!   [8]  u64 LE: element count
+//!   [..] raw little-endian elements
+//! ```
+//!
+//! Decoding is fully bounds-checked: a truncated or corrupt file yields a
+//! clean `Err`, never a panic and never a partially-populated bag.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Session-checkpoint format version. Bump on any layout or key-semantics
+/// change; `StateBag::decode` rejects mismatches.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+const MAGIC: &[u8; 8] = b"BLLMSES1";
+
+/// A bulk numeric payload. f32 for parameters/moments, u64 for mask words
+/// and counters, f64 for loss histories and norms (bit-exactness).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Blob {
+    F32(Vec<f32>),
+    U64(Vec<u64>),
+    F64(Vec<f64>),
+}
+
+impl Blob {
+    fn tag(&self) -> u8 {
+        match self {
+            Blob::F32(_) => 0,
+            Blob::U64(_) => 1,
+            Blob::F64(_) => 2,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Blob::F32(v) => v.len(),
+            Blob::U64(v) => v.len(),
+            Blob::F64(v) => v.len(),
+        }
+    }
+
+    fn elem_bytes(tag: u8) -> usize {
+        match tag {
+            0 => 4,
+            _ => 8,
+        }
+    }
+}
+
+/// A flat key-value store of everything one checkpoint holds.
+#[derive(Debug, Default)]
+pub struct StateBag {
+    pub meta: BTreeMap<String, Json>,
+    pub blobs: BTreeMap<String, Blob>,
+}
+
+impl StateBag {
+    pub fn new() -> StateBag {
+        StateBag::default()
+    }
+
+    // ---- metadata (JSON) --------------------------------------------------
+
+    pub fn put_num(&mut self, key: &str, v: f64) {
+        self.meta.insert(key.to_string(), Json::Num(v));
+    }
+
+    pub fn get_num(&self, key: &str) -> Result<f64> {
+        self.meta.get(key).ok_or_else(|| anyhow!("checkpoint missing key {key:?}"))?.as_f64()
+    }
+
+    pub fn put_usize(&mut self, key: &str, v: usize) {
+        // usizes in this codebase are step counts / indices, far below 2^53
+        self.put_num(key, v as f64);
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.meta.get(key).ok_or_else(|| anyhow!("checkpoint missing key {key:?}"))?.as_usize()
+    }
+
+    pub fn put_str(&mut self, key: &str, v: impl Into<String>) {
+        self.meta.insert(key.to_string(), Json::Str(v.into()));
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.meta.get(key).ok_or_else(|| anyhow!("checkpoint missing key {key:?}"))?.as_str()
+    }
+
+    pub fn put_bool(&mut self, key: &str, v: bool) {
+        self.meta.insert(key.to_string(), Json::Bool(v));
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        self.meta.get(key).ok_or_else(|| anyhow!("checkpoint missing key {key:?}"))?.as_bool()
+    }
+
+    /// Full-precision u64 as a hex string (JSON numbers are f64 and would
+    /// corrupt rng words / large step counts past 2^53).
+    pub fn put_u64(&mut self, key: &str, v: u64) {
+        self.put_str(key, format!("{v:x}"));
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        let s = self.get_str(key)?;
+        u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad u64 hex for {key:?}: {e}"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.meta.contains_key(key)
+    }
+
+    // ---- blobs ------------------------------------------------------------
+
+    pub fn put_f32s(&mut self, key: &str, v: Vec<f32>) {
+        self.blobs.insert(key.to_string(), Blob::F32(v));
+    }
+
+    pub fn f32s(&self, key: &str) -> Result<&[f32]> {
+        match self.blobs.get(key) {
+            Some(Blob::F32(v)) => Ok(v),
+            Some(b) => bail!("checkpoint blob {key:?} has dtype tag {}, wanted f32", b.tag()),
+            None => bail!("checkpoint missing blob {key:?}"),
+        }
+    }
+
+    pub fn put_u64s(&mut self, key: &str, v: Vec<u64>) {
+        self.blobs.insert(key.to_string(), Blob::U64(v));
+    }
+
+    pub fn u64s(&self, key: &str) -> Result<&[u64]> {
+        match self.blobs.get(key) {
+            Some(Blob::U64(v)) => Ok(v),
+            Some(b) => bail!("checkpoint blob {key:?} has dtype tag {}, wanted u64", b.tag()),
+            None => bail!("checkpoint missing blob {key:?}"),
+        }
+    }
+
+    pub fn put_f64s(&mut self, key: &str, v: Vec<f64>) {
+        self.blobs.insert(key.to_string(), Blob::F64(v));
+    }
+
+    pub fn f64s(&self, key: &str) -> Result<&[f64]> {
+        match self.blobs.get(key) {
+            Some(Blob::F64(v)) => Ok(v),
+            Some(b) => bail!("checkpoint blob {key:?} has dtype tag {}, wanted f64", b.tag()),
+            None => bail!("checkpoint missing blob {key:?}"),
+        }
+    }
+
+    pub fn has_blob(&self, key: &str) -> bool {
+        self.blobs.contains_key(key)
+    }
+
+    /// Keys of every blob starting with `prefix`, in sorted order (the
+    /// param restore walks "param/").
+    pub fn blob_keys_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.blobs.keys().filter(|k| k.starts_with(prefix)).map(String::as_str).collect()
+    }
+
+    // ---- codec ------------------------------------------------------------
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut meta = self.meta.clone();
+        meta.insert("version".into(), Json::Str(format!("{CHECKPOINT_VERSION}")));
+        let meta_bytes = Json::Obj(meta).to_string().into_bytes();
+        let blob_cap: usize = self.blobs.values().map(|b| 32 + b.len() * 8).sum();
+        let mut out = Vec::with_capacity(8 + 4 + meta_bytes.len() + 4 + blob_cap);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&meta_bytes);
+        out.extend_from_slice(&(self.blobs.len() as u32).to_le_bytes());
+        for (name, blob) in &self.blobs {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(blob.tag());
+            out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+            match blob {
+                Blob::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Blob::U64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Blob::F64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<StateBag> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        let magic = c.take(8)?;
+        if magic != MAGIC {
+            bail!("not a session checkpoint (bad magic {magic:?})");
+        }
+        let meta_len = c.u32()? as usize;
+        let meta_src = std::str::from_utf8(c.take(meta_len)?)
+            .map_err(|e| anyhow!("checkpoint metadata is not utf-8: {e}"))?;
+        let meta_json = Json::parse(meta_src)?;
+        let version = meta_json.req("version")?.as_str()?;
+        if version != format!("{CHECKPOINT_VERSION}") {
+            bail!(
+                "session checkpoint version {version:?} unsupported (this build reads \
+                 version {CHECKPOINT_VERSION})"
+            );
+        }
+        let mut meta = meta_json.as_obj()?.clone();
+        meta.remove("version");
+        let n_blobs = c.u32()? as usize;
+        let mut blobs = BTreeMap::new();
+        for _ in 0..n_blobs {
+            let name_len = c.u32()? as usize;
+            let name = std::str::from_utf8(c.take(name_len)?)
+                .map_err(|e| anyhow!("checkpoint blob name is not utf-8: {e}"))?
+                .to_string();
+            let tag = c.take(1)?[0];
+            if tag > 2 {
+                bail!("checkpoint blob {name:?} has unknown dtype tag {tag}");
+            }
+            let n_elems = c.u64()? as usize;
+            let n_bytes = n_elems
+                .checked_mul(Blob::elem_bytes(tag))
+                .ok_or_else(|| anyhow!("checkpoint blob {name:?} length overflows"))?;
+            let raw = c.take(n_bytes)?;
+            let w8 = |w: &[u8]| [w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]];
+            let blob = match tag {
+                0 => Blob::F32(
+                    raw.chunks_exact(4)
+                        .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+                        .collect(),
+                ),
+                1 => Blob::U64(raw.chunks_exact(8).map(|w| u64::from_le_bytes(w8(w))).collect()),
+                _ => Blob::F64(raw.chunks_exact(8).map(|w| f64::from_le_bytes(w8(w))).collect()),
+            };
+            blobs.insert(name, blob);
+        }
+        if c.i != bytes.len() {
+            bail!("checkpoint has {} trailing bytes after the last blob", bytes.len() - c.i);
+        }
+        Ok(StateBag { meta, blobs })
+    }
+}
+
+/// Bounds-checked byte reader: every `take` validates the remaining length,
+/// so truncation surfaces as an error naming the missing byte count.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "truncated checkpoint: wanted {n} bytes at offset {}, file has {}",
+                    self.i,
+                    self.b.len()
+                )
+            })?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let w = self.take(4)?;
+        Ok(u32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let w = self.take(8)?;
+        Ok(u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bag() -> StateBag {
+        let mut b = StateBag::new();
+        b.put_num("session.step", 42.0);
+        b.put_str("session.method", "blockllm");
+        b.put_bool("flag", true);
+        b.put_u64("rng.word", 0xDEAD_BEEF_CAFE_F00D);
+        b.put_f32s("param/w", vec![1.0, -2.5, f32::MIN_POSITIVE]);
+        b.put_u64s("mask.words", vec![u64::MAX, 0, 0x8000_0000_0000_0001]);
+        b.put_f64s("losses", vec![5.0, 4.999999999999999, -0.0]);
+        b
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_bit() {
+        let bag = sample_bag();
+        let bytes = bag.encode();
+        let back = StateBag::decode(&bytes).unwrap();
+        assert_eq!(back.get_num("session.step").unwrap(), 42.0);
+        assert_eq!(back.get_str("session.method").unwrap(), "blockllm");
+        assert!(back.get_bool("flag").unwrap());
+        assert_eq!(back.get_u64("rng.word").unwrap(), 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(back.f32s("param/w").unwrap(), bag.f32s("param/w").unwrap());
+        assert_eq!(back.u64s("mask.words").unwrap(), bag.u64s("mask.words").unwrap());
+        let (a, b) = (back.f64s("losses").unwrap(), bag.f64s("losses").unwrap());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn u64_meta_survives_past_f64_precision() {
+        // 2^53 + 1 is the first integer f64 cannot represent — the reason
+        // u64s go through hex strings, not Json::Num
+        let mut b = StateBag::new();
+        b.put_u64("big", (1u64 << 53) + 1);
+        let back = StateBag::decode(&b.encode()).unwrap();
+        assert_eq!(back.get_u64("big").unwrap(), (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_clean_error() {
+        let bytes = sample_bag().encode();
+        // every strict prefix must fail with Err, never panic
+        for cut in 0..bytes.len() {
+            assert!(
+                StateBag::decode(&bytes[..cut]).is_err(),
+                "decode accepted a {cut}-byte truncation of a {}-byte file",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut bytes = sample_bag().encode();
+        let err = StateBag::decode(b"NOTACKPT").unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+        // corrupt the version string in the JSON metadata
+        let json_start = 12;
+        let json_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let meta = String::from_utf8(bytes[json_start..json_start + json_len].to_vec()).unwrap();
+        assert!(meta.contains("\"version\":\"1\""));
+        let bumped = meta.replace("\"version\":\"1\"", "\"version\":\"9\"");
+        bytes.splice(json_start..json_start + json_len, bumped.into_bytes());
+        let err = StateBag::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_dtype_and_trailing_bytes_rejected() {
+        let mut bag = StateBag::new();
+        bag.put_f32s("x", vec![1.0]);
+        let mut bytes = bag.encode();
+        // dtype tag byte sits right after the blob-name bytes
+        let meta_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let tag_at = 12 + meta_len + 4 + 4 + 1; // n_blobs + name_len + "x"
+        assert_eq!(bytes[tag_at], 0);
+        bytes[tag_at] = 7;
+        assert!(StateBag::decode(&bytes).is_err());
+        bytes[tag_at] = 0;
+        bytes.push(0xAB);
+        let err = StateBag::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn typed_blob_access_rejects_wrong_dtype() {
+        let bag = sample_bag();
+        assert!(bag.u64s("param/w").is_err());
+        assert!(bag.f32s("mask.words").is_err());
+        assert!(bag.f64s("param/w").is_err());
+        assert!(bag.f32s("no-such-key").is_err());
+    }
+}

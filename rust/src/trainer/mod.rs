@@ -27,7 +27,7 @@ use anyhow::{Context, Result};
 
 use crate::backend::{self, Backend, Targets};
 use crate::baselines::{build, SparseOutcome, Strategy};
-use crate::config::{Task, TrainConfig};
+use crate::config::TrainConfig;
 use crate::data::{ClsSource, LmStream};
 use crate::grads::{AccumSink, GradSink, MaskedSink};
 use crate::memory::MemTracker;
@@ -172,15 +172,7 @@ impl Trainer {
         let sizes: Vec<usize> = specs.iter().map(|p| p.numel()).collect();
         let names: Vec<String> = specs.iter().map(|p| p.name.clone()).collect();
         let strategy = build(&cfg, &sizes, &names);
-        let sched = if cfg.cosine_lr {
-            let min_frac = match cfg.task {
-                Task::C4Pretrain => 0.1, // paper App. A.7
-                _ => 0.0,                // paper App. A.6
-            };
-            LrSchedule::cosine(cfg.lr, cfg.steps, cfg.warmup_frac, min_frac)
-        } else {
-            LrSchedule::constant(cfg.lr)
-        };
+        let sched = LrSchedule::from_config(&cfg);
 
         Ok(Trainer {
             backend,
@@ -199,6 +191,33 @@ impl Trainer {
 
     pub fn batch_shape(&self) -> (usize, usize) {
         self.backend.batch_shape()
+    }
+
+    /// 0-based optimizer step counter (the session/checkpoint position).
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Restore the step counter (session resume; also re-anchors the LR
+    /// schedule, which is a pure function of the step).
+    pub(crate) fn set_step(&mut self, s: usize) {
+        self.step = s;
+    }
+
+    /// Accumulated strategy-phase seconds (session suspend carries it over).
+    pub(crate) fn phase_strategy(&self) -> f64 {
+        self.phase_strategy
+    }
+
+    pub(crate) fn set_phase_strategy(&mut self, secs: f64) {
+        self.phase_strategy = secs;
+    }
+
+    /// Re-anchor the obs-registry baseline so per-session profiles exclude
+    /// work done by OTHER sessions sharing this process (the serve
+    /// scheduler re-baselines at every slice boundary).
+    pub(crate) fn rebase_obs(&mut self) {
+        self.obs_base = obs::snapshot();
     }
 
     /// Allocate the dense gradient staging table (only the dense route pays
@@ -224,7 +243,7 @@ impl Trainer {
     ///   the dense staging table.
     /// * **dense** (everything else): an `AccumSink` accumulates scaled
     ///   shards straight into `self.grads` at consume time.
-    fn optim_step(&mut self, micro: &[(&[i32], Targets<'_>)]) -> Result<f64> {
+    pub(crate) fn optim_step(&mut self, micro: &[(&[i32], Targets<'_>)]) -> Result<f64> {
         let _sp_step = obs::span(Span::TrainStep);
         let accum = micro.len().max(1);
         let scale = 1.0 / accum as f32;
@@ -492,7 +511,7 @@ impl Trainer {
         Ok(EvalPoint { step: self.step, loss: loss_sum / n, metric, preds, labels })
     }
 
-    fn finish(
+    pub(crate) fn finish(
         &mut self,
         train_losses: Vec<f64>,
         evals: Vec<EvalPoint>,

@@ -248,6 +248,23 @@ pub fn reset_par_min() {
     PAR_ELEMS_MIN.store(0, Ordering::Relaxed);
 }
 
+/// Restore EVERY throughput knob (threads, pack-min, both par-mins,
+/// attn-batched, grad-stream, pool) to its unresolved state in one sweep —
+/// the next read of each re-resolves its env var (else its built-in
+/// default). One entry point instead of six scattered `reset_*` calls so a
+/// knob-flipping test — or the serve scheduler handing the backend from one
+/// session to the next — can't forget one and leak a forced path into
+/// whatever runs after it. All six knobs are bitwise-neutral, so this is
+/// hygiene, never a results change.
+pub fn reset_all_knobs() {
+    reset_num_threads();
+    reset_pack_min();
+    reset_par_min();
+    reset_attn_batched();
+    reset_grad_stream();
+    reset_pool();
+}
+
 /// Serializes tests that mutate the process-global tuning knobs AND assert
 /// on their values (the kernels themselves are knob-invariant, so only
 /// value assertions need the lock).
@@ -416,6 +433,32 @@ mod tests {
         assert_eq!(pack_min_mnk(), env("PALLAS_PACK_MIN", DEFAULT_PACK_MIN));
         assert_eq!(par_min_mnk(), env("PALLAS_PAR_MIN", DEFAULT_PAR_MIN));
         assert_eq!(par_min_elems(), env("PALLAS_PAR_MIN", DEFAULT_PAR_ELEMS));
+    }
+
+    #[test]
+    fn reset_all_knobs_rearms_every_knob() {
+        let _g = test_knob_lock();
+        let prev_threads = num_threads();
+        // force every knob away from its env/default resolution...
+        set_num_threads(prev_threads + 1);
+        set_pack_min(1);
+        set_par_min(1);
+        set_attn_batched(false);
+        set_grad_stream(false);
+        set_pool(false);
+        // ...then the sweep must hand each back to env-var resolution
+        reset_all_knobs();
+        let env = |name: &str, default: usize| {
+            std::env::var(name).ok().and_then(|s| s.trim().parse().ok()).unwrap_or(default)
+        };
+        assert_eq!(pack_min_mnk(), env("PALLAS_PACK_MIN", DEFAULT_PACK_MIN));
+        assert_eq!(par_min_mnk(), env("PALLAS_PAR_MIN", DEFAULT_PAR_MIN));
+        assert_eq!(par_min_elems(), env("PALLAS_PAR_MIN", DEFAULT_PAR_ELEMS));
+        assert_eq!(attn_batched(), env("PALLAS_ATTN_BATCHED", 1) != 0);
+        assert_eq!(grad_stream(), env("PALLAS_GRAD_STREAM", 1) != 0);
+        assert_eq!(pool_on(), env("PALLAS_POOL", 1) != 0);
+        assert!(num_threads() >= 1);
+        set_num_threads(prev_threads);
     }
 
     #[test]

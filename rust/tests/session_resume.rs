@@ -1,0 +1,231 @@
+//! Session checkpointing end-to-end:
+//!
+//! 1. Suspend-at-N + resume + train-to-end is BITWISE identical (train-loss
+//!    bits, eval-loss bits, final parameter bits, telemetry) to an
+//!    uninterrupted run — for blockllm, magnitude (which re-selects between
+//!    the suspend point and the end, so the checkpoint provably crosses
+//!    selection machinery), and the dense full-Adam route — across the
+//!    {1,4 threads} × {grad-stream 0,1} knob grid.
+//! 2. Truncated/corrupt/version-bumped checkpoints fail with a clean `Err`
+//!    (no panic, no partially-loaded session).
+//! 3. The serve scheduler's time-sliced sessions finish with results
+//!    identical to solo runs, and admission control rejects a session whose
+//!    budget can't cover its modeled footprint.
+
+use std::sync::Mutex;
+
+use blockllm::config::{Method, TrainConfig};
+use blockllm::session::scheduler::{serve, ServeSpec};
+use blockllm::session::Session;
+use blockllm::trainer::RunResult;
+
+/// Knob state is process-global and these tests drive it — serialize them.
+static KNOBS: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    KNOBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore env-resolved knob defaults even if an assert fires mid-grid.
+struct ResetKnobs;
+impl Drop for ResetKnobs {
+    fn drop(&mut self) {
+        blockllm::util::reset_all_knobs();
+    }
+}
+
+fn grain_cfg(method: Method, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "grain".into();
+    cfg.method = method;
+    cfg.steps = steps;
+    cfg.eval_every = 5;
+    cfg.eval_batches = 1;
+    cfg.seed = 11;
+    // keep selection machinery busy inside short runs: magnitude re-selects
+    // every 3 steps; blockllm's patience window is small enough to trigger
+    // on the noisy grain stream
+    cfg.mag_update_every = 3;
+    cfg.patience = 2;
+    cfg
+}
+
+fn run_uninterrupted(cfg: &TrainConfig) -> (RunResult, Vec<Vec<f32>>) {
+    let mut sess = Session::new(cfg, None).unwrap();
+    sess.run_to_completion().unwrap();
+    let (res, store) = sess.finish().unwrap();
+    (res, store.bufs)
+}
+
+fn run_suspended(cfg: &TrainConfig, at: usize) -> (RunResult, Vec<Vec<f32>>) {
+    let mut sess = Session::new(cfg, None).unwrap();
+    sess.run_steps(at).unwrap();
+    assert_eq!(sess.step(), at.min(cfg.steps));
+    let bytes = sess.suspend();
+    drop(sess);
+    let mut sess = Session::resume(&bytes).unwrap();
+    assert_eq!(sess.step(), at.min(cfg.steps));
+    sess.run_to_completion().unwrap();
+    let (res, store) = sess.finish().unwrap();
+    (res, store.bufs)
+}
+
+fn assert_runs_identical(
+    tag: &str,
+    a: &RunResult,
+    b: &RunResult,
+    pa: &[Vec<f32>],
+    pb: &[Vec<f32>],
+) {
+    assert_eq!(a.train_losses.len(), b.train_losses.len(), "{tag}: step count");
+    for (i, (x, y)) in a.train_losses.iter().zip(&b.train_losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: train loss bits at step {i}");
+    }
+    assert_eq!(a.evals.len(), b.evals.len(), "{tag}: eval count");
+    for (x, y) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(x.step, y.step, "{tag}: eval step");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{tag}: eval loss bits");
+        assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "{tag}: eval metric bits");
+    }
+    assert_eq!(a.telemetry.len(), b.telemetry.len(), "{tag}: telemetry");
+    for ((ka, va), (kb, vb)) in a.telemetry.iter().zip(&b.telemetry) {
+        assert_eq!(ka, kb, "{tag}: telemetry key");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{tag}: telemetry {ka}");
+    }
+    assert_eq!(pa.len(), pb.len(), "{tag}: tensor count");
+    for (t, (ba, bb)) in pa.iter().zip(pb).enumerate() {
+        assert_eq!(ba.len(), bb.len(), "{tag}: tensor {t} size");
+        for (j, (x, y)) in ba.iter().zip(bb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: param bits, tensor {t} elem {j}");
+        }
+    }
+}
+
+#[test]
+fn suspend_resume_is_bitwise_across_knob_grid() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    // suspend at 5: past the eval at step 5, before magnitude's re-selects
+    // at 6 and 9 and before the final eval — every post-resume event runs
+    // from restored state
+    let cases = [
+        (Method::BlockLlm, 12usize, 5usize),
+        (Method::Magnitude, 12, 5),
+        (Method::FullAdam, 8, 3),
+    ];
+    for threads in [1usize, 4] {
+        for stream in [false, true] {
+            blockllm::util::reset_all_knobs();
+            blockllm::util::set_num_threads(threads);
+            blockllm::util::set_grad_stream(stream);
+            for (method, steps, at) in cases {
+                let cfg = grain_cfg(method, steps);
+                let (want, want_p) = run_uninterrupted(&cfg);
+                let (got, got_p) = run_suspended(&cfg, at);
+                let tag = format!("{method:?} t{threads} gs{}", stream as u8);
+                assert_runs_identical(&tag, &want, &got, &want_p, &got_p);
+            }
+        }
+    }
+}
+
+#[test]
+fn glue_cls_sessions_resume_bitwise_too() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    blockllm::util::reset_all_knobs();
+    let mut cfg = grain_cfg(Method::FullAdam, 6);
+    cfg.set("task", "glue-cola").unwrap();
+    cfg.eval_every = 0;
+    let (want, want_p) = run_uninterrupted(&cfg);
+    let (got, got_p) = run_suspended(&cfg, 2);
+    assert_runs_identical("glue", &want, &got, &want_p, &got_p);
+}
+
+#[test]
+fn corrupt_checkpoints_fail_cleanly() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    blockllm::util::reset_all_knobs();
+    let cfg = grain_cfg(Method::FullAdam, 3);
+    let mut sess = Session::new(&cfg, None).unwrap();
+    sess.run_steps(2).unwrap();
+    let bytes = sess.suspend();
+    drop(sess);
+
+    // truncation at a spread of offsets: clean Err, never a panic
+    for cut in [0, 4, 7, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(Session::resume(&bytes[..cut]).is_err(), "accepted {cut}-byte truncation");
+    }
+
+    // a future format version must be refused, not misread
+    let needle = b"\"version\":\"1\"";
+    let at = bytes
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("version key in checkpoint metadata");
+    let mut bumped = bytes.clone();
+    bumped[at + needle.len() - 2] = b'9';
+    let err = Session::resume(&bumped).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+    // flipping the magic is 'not a checkpoint', not a crash
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(Session::resume(&bad_magic).is_err());
+
+    // the intact original still resumes
+    assert!(Session::resume(&bytes).is_ok());
+}
+
+#[test]
+fn serve_matches_solo_runs_and_enforces_admission() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    blockllm::util::reset_all_knobs();
+    // three admitted tenants (different methods/seeds/lengths, one shared
+    // grain backend) + one starved tenant that must be rejected up front
+    let spec_src = r#"{
+        "slice_steps": 2,
+        "sessions": [
+            {"name": "adam",  "config": {"preset": "grain", "method": "adam",
+             "steps": 7, "eval-every": 0, "eval-batches": 1, "seed": 3}},
+            {"name": "bllm",  "config": {"preset": "grain", "method": "blockllm",
+             "steps": 5, "eval-every": 0, "eval-batches": 1, "seed": 4}},
+            {"name": "mag",   "config": {"preset": "grain", "method": "magnitude",
+             "steps": 6, "eval-every": 0, "eval-batches": 1, "seed": 5,
+             "mag-update-every": 3}},
+            {"name": "starved", "budget_mb": 0.001,
+             "config": {"preset": "grain", "method": "adam",
+             "steps": 4, "eval-every": 0, "eval-batches": 1, "seed": 6}}
+        ]
+    }"#;
+    let spec = ServeSpec::parse(spec_src).unwrap();
+    let outcomes = serve(&spec, &|| {}).unwrap();
+    assert_eq!(outcomes.len(), 4);
+
+    let starved = &outcomes[3];
+    assert!(!starved.admitted);
+    assert!(starved.result.is_none());
+    assert!(starved.fate.as_deref().unwrap().contains("modeled footprint"));
+
+    for (i, o) in outcomes.iter().take(3).enumerate() {
+        assert!(o.admitted, "{} not admitted", o.name);
+        let got = o.result.as_ref().unwrap_or_else(|| panic!("{} has no result", o.name));
+        blockllm::util::reset_all_knobs();
+        let (want, _) = run_uninterrupted(&spec.sessions[i].cfg);
+        assert_eq!(want.train_losses.len(), got.train_losses.len(), "{}", o.name);
+        for (s, (x, y)) in want.train_losses.iter().zip(&got.train_losses).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{}: time-sliced loss diverged from solo at step {s}",
+                o.name
+            );
+        }
+        assert_eq!(want.evals.len(), got.evals.len(), "{}", o.name);
+        for (x, y) in want.evals.iter().zip(&got.evals) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{}: eval diverged", o.name);
+        }
+    }
+}
