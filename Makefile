@@ -17,6 +17,7 @@ test:
 lint:
 	cargo fmt -p blockllm --check
 	cargo clippy --release -p blockllm -- -D warnings
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p blockllm
 
 bench:
 	cargo bench

@@ -71,7 +71,8 @@ USAGE:
                  [--backend auto|native|pjrt] [--steps N] [--s 0.95] [--m 100] [--lr 1e-3] [--seed 42]
                  [--suspend-at N --session path] ...
   blockllm resume --session path [--save ckpt]
-  blockllm serve --spec path [--slice K] [--out dir]
+  blockllm serve --spec path [--slice K] [--sched rr|slack|weighted] [--watch-spec path]
+                 [--plan] [--out dir]
   blockllm exp --id <fig1|table1|table2|table3|table4|table5|fig3|fig5|fig6|fig7|fig9|table7|table8>
   blockllm exp --all [--quick]
   blockllm eval --ckpt path [--preset tiny] [--task c4]
@@ -88,16 +89,39 @@ identical to a never-suspended run (the `train_loss_bits:` line printed by
 both commands is the proof CI diffs). `resume` reads its config from the
 checkpoint; config flags on the resume command line are ignored.
 `serve --spec PATH` multiplexes many named sessions over one shared
-backend, round-robin, `--slice K` optimizer steps per turn (suspending and
-resuming at every boundary). The spec is JSON: {\"slice_steps\": 8,
-\"sessions\": [{\"name\": ..., \"budget_mb\": ..., \"config\": {any
-TrainConfig key: value}}, ...]}; all sessions must share one preset, task
-and backend kind. A session with a budget is admitted only if the budget
-covers its modeled footprint (weights + modeled gradient retention +
-modeled optimizer state + activations) and is evicted at a slice boundary
-if its MEASURED footprint (the grads layer's peak gradient bytes) exceeds
-the budget; evicted checkpoints are saved under --out for later resume.
-`--out DIR` also writes one JSON report per session.
+backend, `--slice K` optimizer steps per turn (suspending and resuming at
+every boundary). The spec is JSON: {\"slice_steps\": 8, \"sched\":
+\"rr|slack|weighted\", \"total_budget_mb\": F, \"starvation_turns\": N,
+\"sessions\": [{\"name\": ..., \"budget_mb\": ..., \"weight\": W,
+\"deadline\": D, \"config\": {any TrainConfig key: value}}, ...]}; all
+sessions must share one preset, task and backend kind. --sched (or the
+spec's \"sched\" key; default rr) picks the turn order: `rr` is fair-share
+round-robin; `slack` runs the tenant whose deadline slack (deadline minus
+clock minus remaining steps, on the global clock of total optimizer steps)
+is smallest, preempting the runner MID-slice as soon as a waiter's slack
+drops strictly below its own (deadline-less tenants are protected by the
+spec's starvation_turns aging bound, default 8); `weighted` gives each
+tenant a step share proportional to its \"weight\" (stride scheduling,
+also preemptive). Any interleaving is bitwise-safe: each tenant's losses
+and final parameters are identical to its solo run regardless of policy,
+preemption points, or eviction history.
+A session with an explicit budget_mb is admitted only if the budget covers
+its modeled footprint (weights + modeled gradient retention + modeled
+optimizer state + activations) and is evicted if its MEASURED footprint
+(the grads layer's peak gradient bytes) exceeds the budget. Sessions
+without budget_mb share the spec-level total_budget_mb pool, split
+weight-proportionally among live pool tenants and re-planned whenever the
+roster changes: an evicted pool tenant is queued (checkpoint kept) and
+automatically re-admitted once headroom frees up — shares grow as other
+tenants finish. --watch-spec PATH re-reads a spec file between turns and
+injects any session whose name is new into the RUNNING roster (a changed
+total_budget_mb is adopted too; malformed updates are warned about and
+ignored). --plan prints each tenant's modeled footprint and planned
+budget, then exits without training. Per-tenant schedule summaries (turns,
+steps, preemptions, evictions, re-admissions, deadline slack) are printed
+and included in the --out JSON reports; evicted checkpoints are saved
+under --out for later resume. `--out DIR` also writes one JSON report per
+session.
 
 Any TrainConfig key can be overridden with --key value (see config/mod.rs).
 --backend selects the execution engine: `pjrt` runs the AOT HLO artifacts

@@ -116,11 +116,14 @@ pub struct AccumSink<'a> {
 }
 
 impl<'a> AccumSink<'a> {
+    /// Wrap caller-owned accumulation buffers; `scale` multiplies every
+    /// incoming shard (1/accum for mean-of-microbatches semantics).
     pub fn new(bufs: &'a mut [Vec<f32>], scale: f32) -> AccumSink<'a> {
         let retained: u64 = bufs.iter().map(|b| b.len() as u64).sum();
         AccumSink { bufs, scale, first: true, retained, peak: retained }
     }
 
+    /// Peak simultaneously-live gradient elements (buffers + transient shard).
     pub fn peak_grad_elems(&self) -> u64 {
         self.peak
     }
@@ -168,10 +171,12 @@ pub struct NormProbeSink {
 }
 
 impl NormProbeSink {
+    /// Probe sized for `n_params` parameter-table slots, sums zeroed.
     pub fn new(n_params: usize) -> NormProbeSink {
         NormProbeSink { sq: vec![0.0; n_params], max_shard: 0 }
     }
 
+    /// Peak simultaneously-live gradient elements (transient shard only).
     pub fn peak_grad_elems(&self) -> u64 {
         // nothing retained: only the engine's transient shard is ever live
         self.max_shard

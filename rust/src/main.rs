@@ -2,9 +2,10 @@
 //!
 //! Subcommands: `train` (one run, any method/task/preset; `--suspend-at`
 //! checkpoints mid-run), `resume` (continue a suspended session), `serve`
-//! (round-robin many sessions over one backend), `exp` (paper table/figure
-//! harnesses), `eval` (checkpoint evaluation), `info` (artifact
-//! inventory). See cli::USAGE.
+//! (policy-scheduled multi-tenant loop over one backend: `--sched
+//! rr|slack|weighted`, elastic budgets, `--watch-spec` live injection),
+//! `exp` (paper table/figure harnesses), `eval` (checkpoint evaluation),
+//! `info` (artifact inventory). See cli::USAGE.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -12,7 +13,7 @@ use blockllm::cli::{Args, USAGE};
 use blockllm::config::TrainConfig;
 use blockllm::experiments;
 use blockllm::runtime::Runtime;
-use blockllm::session::scheduler::{self, ServeOutcome, ServeSpec};
+use blockllm::session::scheduler::{SchedPolicy, ServeLoop, ServeOutcome, ServeSpec};
 use blockllm::session::Session;
 use blockllm::trainer::RunResult;
 use blockllm::util::human_bytes;
@@ -138,6 +139,8 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             || k == "suspend-at"
             || k == "spec"
             || k == "slice"
+            || k == "sched"
+            || k == "watch-spec"
             || k == "out"
             || k == "threads"
             || k == "pack-min"
@@ -248,6 +251,20 @@ fn cmd_resume(args: &Args) -> Result<()> {
 }
 
 fn serve_outcome_json(o: &ServeOutcome) -> Json {
+    let s = &o.sched;
+    let sched = Json::obj(vec![
+        ("policy", Json::str(&s.policy)),
+        ("weight", Json::num(s.weight as f64)),
+        ("deadline", s.deadline.map_or(Json::Null, |d| Json::num(d as f64))),
+        ("turns", Json::num(s.turns as f64)),
+        ("steps", Json::num(s.steps as f64)),
+        ("preemptions", Json::num(s.preemptions as f64)),
+        ("evictions", Json::num(s.evictions as f64)),
+        ("readmissions", Json::num(s.readmissions as f64)),
+        ("finished_clock", s.finished_clock.map_or(Json::Null, |c| Json::num(c as f64))),
+        ("final_slack", s.final_slack.map_or(Json::Null, |v| Json::num(v as f64))),
+        ("missed_deadline", Json::Bool(s.missed_deadline)),
+    ]);
     let result = match &o.result {
         Some(r) => Json::obj(vec![
             ("method", Json::str(&r.method)),
@@ -272,8 +289,31 @@ fn serve_outcome_json(o: &ServeOutcome) -> Json {
                 None => Json::Null,
             },
         ),
+        ("sched", sched),
         ("result", result),
     ])
+}
+
+/// Between-turns poll of a watched spec file: on a content change, parse
+/// and inject new tenants. Parse or shape errors are warnings — a running
+/// roster must not die because an operator saved a half-edited file.
+fn poll_watched_spec(lp: &mut ServeLoop<'_>, watch: &str, last: &mut String) {
+    let cur = match std::fs::read_to_string(watch) {
+        Ok(cur) => cur,
+        Err(_) => return,
+    };
+    if cur == *last {
+        return;
+    }
+    *last = cur.clone();
+    match ServeSpec::parse(&cur) {
+        Ok(new_spec) => match lp.refresh_spec(&new_spec) {
+            Ok(n) if n > 0 => println!("[serve] spec refresh admitted {n} session(s)"),
+            Ok(_) => {}
+            Err(e) => eprintln!("[serve] spec refresh failed: {e:#}"),
+        },
+        Err(e) => eprintln!("[serve] ignoring unparsable spec update: {e:#}"),
+    }
 }
 
 fn cmd_serve(args: &Args, knobs: &KnobOverrides) -> Result<()> {
@@ -287,13 +327,50 @@ fn cmd_serve(args: &Args, knobs: &KnobOverrides) -> Result<()> {
         }
         spec.slice_steps = k;
     }
+    if let Some(v) = args.get("sched") {
+        spec.policy = SchedPolicy::parse(v)?;
+    }
     println!(
-        "serving {} sessions, {} steps per slice",
+        "serving {} sessions, {} steps per slice, policy {}",
         spec.sessions.len(),
-        spec.slice_steps
+        spec.slice_steps,
+        spec.policy.name()
     );
     let knobs = *knobs;
-    let outcomes = scheduler::serve(&spec, &move || knobs.apply())?;
+    let rearm = move || knobs.apply();
+    let mut lp = ServeLoop::new(&spec, &rearm)?;
+    if args.flag("plan") {
+        // dry run: report modeled footprints + planned budgets and exit —
+        // the numbers an operator needs to size total_budget_mb
+        for line in lp.plan_lines() {
+            println!("{line}");
+        }
+        return Ok(());
+    }
+    match args.get("watch-spec") {
+        Some(w) => {
+            let watch = w.to_string();
+            let mut last = src.clone();
+            loop {
+                let progressed = lp.turn()?;
+                poll_watched_spec(&mut lp, &watch, &mut last);
+                if progressed {
+                    continue;
+                }
+                // idle: a refresh may have just injected runnable work;
+                // otherwise give up one queued tenant (frees its share)
+                // and keep draining until the roster is empty
+                if lp.turn()? {
+                    continue;
+                }
+                if !lp.abandon_one_waiting() {
+                    break;
+                }
+            }
+        }
+        None => lp.run()?,
+    }
+    let outcomes = lp.finish();
     for o in &outcomes {
         match (&o.result, &o.fate) {
             (Some(r), _) => println!(
@@ -306,6 +383,25 @@ fn cmd_serve(args: &Args, knobs: &KnobOverrides) -> Result<()> {
             (None, Some(f)) => println!("{:20} {}", o.name, f),
             (None, None) => println!("{:20} (no result)", o.name),
         }
+        let s = &o.sched;
+        let deadline_note = match (s.deadline, s.final_slack) {
+            (Some(d), Some(slack)) => format!(
+                " | deadline {d} slack {slack}{}",
+                if s.missed_deadline { " MISSED" } else { "" }
+            ),
+            _ => String::new(),
+        };
+        println!(
+            "{:20} sched[{}]: turns {} | steps {} | preempt {} | evict {} | readmit {}{}",
+            o.name,
+            s.policy,
+            s.turns,
+            s.steps,
+            s.preemptions,
+            s.evictions,
+            s.readmissions,
+            deadline_note
+        );
         if let Some(r) = &o.result {
             print_loss_bits(&r.train_losses);
         }

@@ -12,7 +12,7 @@
 //!    though wall-clock attribution is not. Pool workers are LONG-LIVED:
 //!    they keep stable trace TIDs across dispatches, and the pool clears
 //!    each worker's open-span stack after every dispatch
-//!    ([`reset_thread_spans`]) so one dispatch's bookkeeping can never
+//!    (`reset_thread_spans`, crate-internal) so one dispatch's bookkeeping can never
 //!    skew a later dispatch's self-time — scoped threads got that hygiene
 //!    for free by dying.
 //! 2. **Counters/gauges** — relaxed `AtomicU64` cells ([`add`],
@@ -103,9 +103,13 @@ pub enum Span {
     GemmBatchedDirect,
     GemmBatchedPacked,
     GemmBatchedPack,
+    ServeSchedule,
+    ServePreempt,
+    ServeReadmit,
 }
 
-pub const NSPANS: usize = 21;
+/// Number of `Span` variants (array sizes below are pinned to this).
+pub const NSPANS: usize = 24;
 
 /// Export names, indexed by `Span as usize`. Dotted segments group related
 /// phases in the profile table and Perfetto categories.
@@ -131,6 +135,9 @@ pub const SPAN_NAMES: [&str; NSPANS] = [
     "gemm_batched.direct",
     "gemm_batched.packed",
     "gemm_batched.pack",
+    "serve.schedule",
+    "serve.preempt",
+    "serve.readmit",
 ];
 
 /// Monotonic counters. Keep in sync with [`COUNTER_NAMES`].
@@ -177,9 +184,23 @@ pub enum Counter {
     /// dispatch site, so its totals are identical whether chunks run
     /// pooled or scoped.
     PoolDispatches,
+    /// Serve-loop mid-slice preemptions (a runnable tenant strictly beat
+    /// the runner on the policy key). Leg-variant: scheduling interleaves
+    /// with measured footprints, which differ across grad-stream legs.
+    SchedPreemptions,
+    /// Serve-loop budget evictions (checkpoint queued for re-admission).
+    /// Leg-variant for the same reason.
+    SchedEvictions,
+    /// Serve-loop automatic re-admissions after headroom freed up
+    /// (leg-variant).
+    SchedReadmissions,
+    /// Tenants that finished past their deadline — or never finished at
+    /// all while holding one (leg-variant).
+    SchedDeadlineMisses,
 }
 
-pub const NCOUNTERS: usize = 15;
+/// Number of `Counter` variants.
+pub const NCOUNTERS: usize = 19;
 
 /// Export names, indexed by `Counter as usize`.
 pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
@@ -198,6 +219,10 @@ pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
     "log.writes_dropped",
     "trace.events_dropped",
     "pool.dispatches",
+    "sched.preemptions",
+    "sched.evictions",
+    "sched.readmissions",
+    "sched.deadline_misses",
 ];
 
 impl Counter {
@@ -221,12 +246,19 @@ impl Counter {
 pub enum Gauge {
     /// High-water mark of bytes retained inside a masked streaming sink.
     SinkRetainedPeakBytes,
+    /// Worst deadline overshoot (global-clock steps) across all serve
+    /// tenants. Per-tenant slack lives in each outcome's schedule summary;
+    /// the gauge registry is static-named, so only the fleet-wide
+    /// high-water mark is tracked here.
+    SchedLatenessPeakSteps,
 }
 
-pub const NGAUGES: usize = 1;
+/// Number of `Gauge` variants.
+pub const NGAUGES: usize = 2;
 
 /// Export names, indexed by `Gauge as usize`.
-pub const GAUGE_NAMES: [&str; NGAUGES] = ["sink.retained_peak_bytes"];
+pub const GAUGE_NAMES: [&str; NGAUGES] =
+    ["sink.retained_peak_bytes", "sched.lateness_peak_steps"];
 
 // ---------------------------------------------------------------------------
 // The registry: fixed arrays of relaxed atomics. Const-init keeps this in
@@ -479,9 +511,9 @@ mod tests {
 
     #[test]
     fn name_tables_cover_every_variant() {
-        assert_eq!(Span::GemmBatchedPack as usize, NSPANS - 1);
-        assert_eq!(Counter::PoolDispatches as usize, NCOUNTERS - 1);
-        assert_eq!(Gauge::SinkRetainedPeakBytes as usize, NGAUGES - 1);
+        assert_eq!(Span::ServeReadmit as usize, NSPANS - 1);
+        assert_eq!(Counter::SchedDeadlineMisses as usize, NCOUNTERS - 1);
+        assert_eq!(Gauge::SchedLatenessPeakSteps as usize, NGAUGES - 1);
         assert_eq!(SPAN_NAMES.len(), NSPANS);
         assert_eq!(COUNTER_NAMES.len(), NCOUNTERS);
         assert_eq!(GAUGE_NAMES.len(), NGAUGES);

@@ -155,18 +155,22 @@ impl Session {
         self.trainer.cfg.steps
     }
 
+    /// True once the session has reached its target step count.
     pub fn done(&self) -> bool {
         self.trainer.step() >= self.trainer.cfg.steps
     }
 
+    /// The session's resolved training configuration.
     pub fn cfg(&self) -> &TrainConfig {
         &self.trainer.cfg
     }
 
+    /// The live parameter store (read-only view).
     pub fn store(&self) -> &ParamStore {
         &self.trainer.store
     }
 
+    /// Per-step training losses recorded so far (bitwise-pinned by CI).
     pub fn train_losses(&self) -> &[f64] {
         &self.train_losses
     }

@@ -1,60 +1,154 @@
 //! `pallas serve`: multiplex many named training sessions over ONE shared
-//! execution backend.
+//! execution backend, under a pluggable scheduling policy.
 //!
-//! The scheduler is a round-robin fair-share loop: every live session gets
-//! a time slice of `slice_steps` optimizer steps, then is suspended (via
-//! the same [`Session::suspend`] checkpoint a crash-resume uses) and the
-//! backend is lent to the next tenant. Because suspend/resume is bitwise,
-//! a time-sliced session's losses and final parameters are identical to a
-//! solo run of the same config (tests/session_resume.rs pins this for
-//! three concurrent sessions).
+//! # Policies (`--sched`, spec key `"sched"`)
 //!
-//! Memory budgets are enforced twice:
-//! * **admission** — before a session runs a single step, its budget must
-//!   cover [`Session::modeled_footprint_bytes`] (weights + the strategy's
-//!   modeled gradient retention + modeled optimizer state + activations);
-//!   an underprovisioned session is rejected up front, not OOM-killed
-//!   mid-run.
-//! * **runtime** — after every slice the budget is re-checked against
-//!   [`Session::measured_footprint_bytes`], which swaps the modeled
-//!   gradient term for the grads layer's MEASURED `peak_grad_bytes`; a
-//!   session whose real retention exceeds its budget is evicted at the
-//!   slice boundary (its checkpoint is preserved in the outcome, so the
-//!   work isn't lost).
+//! * **`rr`** (default) — fair-share round-robin: every runnable tenant
+//!   gets a slice of `slice_steps` optimizer steps in roster order.
+//! * **`slack`** — earliest-slack-first. A tenant may carry a `deadline`
+//!   expressed on the *global clock* (total optimizer steps executed
+//!   across all tenants); its slack is `deadline - (clock + remaining)`.
+//!   The runnable tenant with the least slack runs next; a running tenant
+//!   is preempted mid-slice (at optimizer-step granularity) as soon as a
+//!   waiter's slack drops strictly below its own. Deadline-less tenants
+//!   have infinite slack and are protected from starvation by an aging
+//!   bound: after `starvation_turns` consecutive skipped scheduling
+//!   decisions they run next regardless of slack.
+//! * **`weighted`** — stride scheduling on per-tenant `weight`: the tenant
+//!   with the least virtual time (`steps_run / weight`) runs next, which
+//!   converges to weight-proportional step shares; mid-slice preemption
+//!   fires when another runnable tenant's virtual time drops strictly
+//!   below the runner's.
+//!
+//! Preemption reuses the same bitwise [`Session::suspend`]/resume
+//! machinery as slice boundaries, so *any* interleaving — including
+//! evictions and re-admissions — leaves every tenant's losses and final
+//! parameters identical to a solo run of the same config
+//! (tests/session_resume.rs pins this across policies and thread counts).
+//!
+//! # Elastic memory budgets
+//!
+//! Budgets are enforced twice, exactly as before:
+//! * **admission** — a tenant's budget must cover
+//!   [`Session::modeled_footprint_bytes`] before it runs a single step;
+//! * **runtime** — after every turn the budget is re-checked against
+//!   [`Session::measured_footprint_bytes`] (the grads layer's MEASURED
+//!   `peak_grad_bytes` swapped in for the modeled term).
+//!
+//! What changed is what "over budget" means for the roster. A tenant with
+//! an explicit `budget_mb` keeps the PR 8 semantics: too small at
+//! admission is a permanent rejection. Tenants *without* one can instead
+//! draw from a spec-level `total_budget_mb` pool, split weight-
+//! proportionally among live pool tenants and **re-planned** whenever the
+//! roster changes: a tenant whose share shrinks below its demand is
+//! evicted (checkpoint kept, state queued), and a queued tenant is
+//! automatically re-admitted as soon as headroom frees up — shares grow
+//! when other tenants finish. New tenants can be injected into a RUNNING
+//! loop via [`ServeLoop::refresh_spec`] (`serve --watch-spec` re-reads the
+//! spec file between turns), which triggers the same re-planning.
+//!
+//! # Observability
+//!
+//! Scheduling decisions run under obs spans (`serve.schedule`,
+//! `serve.preempt`, `serve.readmit`); preemptions, evictions,
+//! re-admissions and deadline misses bump counters; peak deadline
+//! lateness is tracked by a gauge. Per-tenant totals (turns, preemptions,
+//! evictions, re-admissions, final slack) are surfaced in
+//! [`ServeOutcome::sched`] and the serve JSON reports. These counters are
+//! leg-VARIANT: evictions depend on measured footprints, which differ
+//! across the grad-stream CI legs.
 //!
 //! One backend means one model shape: every session in a spec must agree
-//! on preset, task, and backend kind (validated at parse time). Per-slice
+//! on preset, task, and backend kind (validated at parse time). Per-turn
 //! knob hygiene — `util::reset_all_knobs()` plus the caller's `rearm`
-//! closure (which re-applies CLI knob overrides) — guarantees no tenant
-//! inherits another's thread-count or gradient-path resolution.
+//! closure — guarantees no tenant inherits another's thread-count or
+//! gradient-path resolution.
 
 use anyhow::{bail, Context, Result};
 
 use super::Session;
 use crate::backend::{self, Backend};
 use crate::config::TrainConfig;
+use crate::obs::{self, Counter, Gauge, Span};
 use crate::trainer::RunResult;
 use crate::util::json::Json;
 
 /// Steps per turn when the spec doesn't say.
 pub const DEFAULT_SLICE_STEPS: usize = 8;
 
+/// Aging bound (in skipped scheduling decisions) protecting deadline-less
+/// tenants from starvation under `slack`, when the spec doesn't say.
+pub const DEFAULT_STARVATION_TURNS: u64 = 8;
+
+/// Turn-ordering policy for the serve loop (`--sched`, spec key `"sched"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Fair-share round-robin in roster order (the PR 8 behavior).
+    RoundRobin,
+    /// Earliest-slack-first over per-tenant deadlines, with mid-slice
+    /// preemption and an anti-starvation aging bound.
+    Slack,
+    /// Stride scheduling: weight-proportional step shares.
+    Weighted,
+}
+
+impl SchedPolicy {
+    /// Parse a policy name as accepted by `--sched` / the spec.
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(SchedPolicy::RoundRobin),
+            "slack" => Ok(SchedPolicy::Slack),
+            "weighted" => Ok(SchedPolicy::Weighted),
+            other => bail!("unknown scheduling policy {other:?} (want rr|slack|weighted)"),
+        }
+    }
+
+    /// The canonical spec/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicy::RoundRobin => "rr",
+            SchedPolicy::Slack => "slack",
+            SchedPolicy::Weighted => "weighted",
+        }
+    }
+}
+
 /// One tenant in a serve spec.
 pub struct SessionSpec {
+    /// Unique tenant name (report files, log lines, spec-refresh identity).
     pub name: String,
-    /// memory budget in bytes (None = unbudgeted: always admitted)
+    /// Explicit memory budget in bytes. `None` = draw from the spec-level
+    /// pool when one is configured, else unbudgeted (always admitted).
     pub budget_bytes: Option<u64>,
+    /// Share weight for `weighted` scheduling and pool-budget splitting.
+    pub weight: u64,
+    /// Target finish point on the global clock (total optimizer steps
+    /// across all tenants), for `slack` scheduling and miss accounting.
+    pub deadline: Option<u64>,
+    /// The tenant's full training config.
     pub cfg: TrainConfig,
 }
 
-/// A parsed serve spec: `{"slice_steps": 8, "sessions": [{"name": ...,
-/// "budget_mb": ..., "config": {"<TrainConfig key>": value, ...}}, ...]}`.
+/// A parsed serve spec:
+/// `{"slice_steps": 8, "sched": "slack", "total_budget_mb": 64.0,
+///   "starvation_turns": 8, "sessions": [{"name": ..., "budget_mb": ...,
+///   "weight": 2, "deadline": 40, "config": {<TrainConfig key>: value,
+///   ...}}, ...]}`.
 pub struct ServeSpec {
+    /// Max optimizer steps per turn.
     pub slice_steps: usize,
+    /// Turn-ordering policy.
+    pub policy: SchedPolicy,
+    /// Shared memory pool split among tenants without an explicit budget.
+    pub total_budget_bytes: Option<u64>,
+    /// Aging bound for deadline-less tenants under `slack`.
+    pub starvation_turns: u64,
+    /// The roster, in spec order.
     pub sessions: Vec<SessionSpec>,
 }
 
 impl ServeSpec {
+    /// Parse and structurally validate a JSON serve spec.
     pub fn parse(src: &str) -> Result<ServeSpec> {
         let j = Json::parse(src).context("serve spec is not valid JSON")?;
         let slice_steps = match j.get("slice_steps") {
@@ -64,6 +158,30 @@ impl ServeSpec {
         if slice_steps == 0 {
             bail!("slice_steps must be >= 1");
         }
+        let policy = match j.get("sched") {
+            Some(v) => SchedPolicy::parse(v.as_str().context("sched")?)?,
+            None => SchedPolicy::RoundRobin,
+        };
+        let total_budget_bytes = match j.get("total_budget_mb") {
+            Some(v) => {
+                let mb = v.as_f64().context("total_budget_mb")?;
+                if mb <= 0.0 {
+                    bail!("total_budget_mb must be positive, got {mb}");
+                }
+                Some((mb * 1e6) as u64)
+            }
+            None => None,
+        };
+        let starvation_turns = match j.get("starvation_turns") {
+            Some(v) => {
+                let n = v.as_usize().context("starvation_turns")? as u64;
+                if n == 0 {
+                    bail!("starvation_turns must be >= 1");
+                }
+                n
+            }
+            None => DEFAULT_STARVATION_TURNS,
+        };
         let mut sessions = Vec::new();
         for (i, s) in j.req("sessions")?.as_arr()?.iter().enumerate() {
             let name = s
@@ -79,6 +197,22 @@ impl ServeSpec {
                     }
                     Some((mb * 1e6) as u64)
                 }
+                None => None,
+            };
+            let weight = match s.get("weight") {
+                Some(v) => {
+                    let w = v.as_usize().with_context(|| format!("sessions[{i}].weight"))? as u64;
+                    if w == 0 {
+                        bail!("sessions[{i}] ({name}): weight must be >= 1");
+                    }
+                    w
+                }
+                None => 1,
+            };
+            let deadline = match s.get("deadline") {
+                Some(v) => Some(
+                    v.as_usize().with_context(|| format!("sessions[{i}].deadline"))? as u64,
+                ),
                 None => None,
             };
             let mut cfg = TrainConfig::default();
@@ -103,9 +237,15 @@ impl ServeSpec {
                         .with_context(|| format!("sessions[{i}] ({name}): config key {k:?}"))?;
                 }
             }
-            sessions.push(SessionSpec { name, budget_bytes, cfg });
+            sessions.push(SessionSpec { name, budget_bytes, weight, deadline, cfg });
         }
-        let spec = ServeSpec { slice_steps, sessions };
+        let spec = ServeSpec {
+            slice_steps,
+            policy,
+            total_budget_bytes,
+            starvation_turns,
+            sessions,
+        };
         spec.validate()?;
         Ok(spec)
     }
@@ -123,81 +263,314 @@ impl ServeSpec {
         }
         let base = &self.sessions[0].cfg;
         for s in &self.sessions[1..] {
-            if s.cfg.preset != base.preset {
-                bail!(
-                    "session {:?} uses preset {:?} but {:?} uses {:?} — all sessions must \
-                     share one model shape (one backend serves them all)",
-                    s.name,
-                    s.cfg.preset,
-                    self.sessions[0].name,
-                    base.preset
-                );
-            }
-            if s.cfg.task != base.task {
-                bail!(
-                    "session {:?} task {} differs from {:?} task {} — the shared backend \
-                     bakes in one head/batch shape",
-                    s.name,
-                    s.cfg.task_key(),
-                    self.sessions[0].name,
-                    base.task_key()
-                );
-            }
-            if s.cfg.backend != base.backend {
-                bail!("session {:?} requests a different backend kind", s.name);
-            }
+            shape_compatible(&s.cfg, base, &s.name, &self.sessions[0].name)?;
         }
         Ok(())
     }
 }
 
-/// What happened to one tenant, in spec order.
+/// One-shape-per-backend check, shared by parse-time validation and the
+/// spec-refresh injection path.
+fn shape_compatible(
+    cfg: &TrainConfig,
+    base: &TrainConfig,
+    name: &str,
+    base_name: &str,
+) -> Result<()> {
+    if cfg.preset != base.preset {
+        bail!(
+            "session {name:?} uses preset {:?} but {base_name:?} uses {:?} — all sessions must \
+             share one model shape (one backend serves them all)",
+            cfg.preset,
+            base.preset
+        );
+    }
+    if cfg.task != base.task {
+        bail!(
+            "session {name:?} task {} differs from {base_name:?} task {} — the shared backend \
+             bakes in one head/batch shape",
+            cfg.task_key(),
+            base.task_key()
+        );
+    }
+    if cfg.backend != base.backend {
+        bail!("session {name:?} requests a different backend kind");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Pure policy core: turn ordering and preemption over plain tenant facts,
+// unit-testable without building a single model.
+// ---------------------------------------------------------------------------
+
+/// Scheduling-relevant facts about one tenant, decoupled from the live
+/// [`Session`] so policy ordering is testable in isolation.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantView {
+    /// Admitted and waiting for (or holding) the backend.
+    pub runnable: bool,
+    /// Optimizer steps this tenant has executed.
+    pub steps_run: u64,
+    /// Share weight (`weighted` policy, pool-budget split).
+    pub weight: u64,
+    /// Target finish point on the global clock, if any.
+    pub deadline: Option<u64>,
+    /// Optimizer steps still to run.
+    pub remaining: u64,
+    /// Consecutive scheduling decisions this tenant was runnable but not
+    /// chosen (the aging input for the starvation bound).
+    pub waited: u64,
+}
+
+/// Deadline slack at global-clock time `clock`: how many steps of other
+/// tenants' work can still be interleaved before this tenant's earliest
+/// possible finish overshoots its deadline. Deadline-less tenants report
+/// `i64::MAX`. Negative = already late.
+pub fn slack_of(t: &TenantView, clock: u64) -> i64 {
+    match t.deadline {
+        Some(d) => d as i64 - (clock + t.remaining) as i64,
+        None => i64::MAX,
+    }
+}
+
+/// Stride-scheduling order: `a` runs before `b` when its virtual time
+/// `steps_run / weight` is strictly lower (cross-multiplied, no floats).
+fn weighted_before(a: &TenantView, b: &TenantView) -> bool {
+    (a.steps_run as u128) * (b.weight as u128) < (b.steps_run as u128) * (a.weight as u128)
+}
+
+/// Choose the next tenant to run, or `None` when nothing is runnable.
+/// Deterministic: every tie breaks toward the lower roster index.
+pub fn pick_next(
+    policy: SchedPolicy,
+    tenants: &[TenantView],
+    clock: u64,
+    starvation_turns: u64,
+) -> Option<usize> {
+    let runnable = || tenants.iter().enumerate().filter(|(_, t)| t.runnable);
+    runnable().next()?;
+    match policy {
+        // Max-waited = cyclic roster order (ties break toward the lower
+        // index, and a just-run tenant has waited 0).
+        SchedPolicy::RoundRobin => {
+            runnable().max_by(|(ia, a), (ib, b)| {
+                (a.waited, std::cmp::Reverse(ia)).cmp(&(b.waited, std::cmp::Reverse(ib)))
+            })
+        }
+        SchedPolicy::Slack => {
+            // Aging first: a deadline-less tenant skipped for a full
+            // starvation window runs next regardless of slack.
+            let starved = runnable()
+                .filter(|(_, t)| t.deadline.is_none() && t.waited >= starvation_turns)
+                .max_by(|(ia, a), (ib, b)| {
+                    (a.waited, std::cmp::Reverse(ia)).cmp(&(b.waited, std::cmp::Reverse(ib)))
+                });
+            if starved.is_some() {
+                return starved.map(|(i, _)| i);
+            }
+            runnable().min_by_key(|(i, t)| (slack_of(t, clock), *i))
+        }
+        SchedPolicy::Weighted => runnable().min_by(|(ia, a), (ib, b)| {
+            if weighted_before(a, b) {
+                std::cmp::Ordering::Less
+            } else if weighted_before(b, a) {
+                std::cmp::Ordering::Greater
+            } else {
+                ia.cmp(ib)
+            }
+        }),
+    }
+    .map(|(i, _)| i)
+}
+
+/// Whether some other runnable tenant now STRICTLY beats the runner on the
+/// policy key — the mid-slice preemption trigger. Strictness (and
+/// round-robin never preempting) keeps turns from thrashing on ties.
+pub fn should_preempt(
+    policy: SchedPolicy,
+    tenants: &[TenantView],
+    runner: usize,
+    clock: u64,
+) -> bool {
+    let others = || {
+        tenants.iter().enumerate().filter(move |(i, t)| *i != runner && t.runnable)
+    };
+    match policy {
+        SchedPolicy::RoundRobin => false,
+        SchedPolicy::Slack => {
+            let mine = slack_of(&tenants[runner], clock);
+            others().any(|(_, t)| slack_of(t, clock) < mine)
+        }
+        SchedPolicy::Weighted => others().any(|(_, t)| weighted_before(t, &tenants[runner])),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outcomes + per-tenant schedule summary.
+// ---------------------------------------------------------------------------
+
+/// Per-tenant scheduling telemetry, surfaced in serve output and the JSON
+/// reports (the per-session counterpart of the global obs counters).
+#[derive(Debug, Clone, Default)]
+pub struct SchedSummary {
+    /// Policy the loop ran under.
+    pub policy: String,
+    /// The tenant's share weight.
+    pub weight: u64,
+    /// The tenant's deadline on the global clock, if any.
+    pub deadline: Option<u64>,
+    /// Turns this tenant was scheduled.
+    pub turns: u64,
+    /// Optimizer steps executed.
+    pub steps: u64,
+    /// Mid-slice preemptions suffered.
+    pub preemptions: u64,
+    /// Budget evictions suffered (each preserves a checkpoint).
+    pub evictions: u64,
+    /// Automatic re-admissions after an eviction.
+    pub readmissions: u64,
+    /// Global-clock value when the tenant finished, if it did.
+    pub finished_clock: Option<u64>,
+    /// `deadline - finish clock` (or `deadline - final clock` for tenants
+    /// that never finished); negative = late. `None` without a deadline.
+    pub final_slack: Option<i64>,
+    /// Whether the deadline was missed (late finish, or no finish at all).
+    pub missed_deadline: bool,
+}
+
+/// What happened to one tenant, in roster order.
 pub struct ServeOutcome {
+    /// Tenant name from the spec.
     pub name: String,
-    /// false = rejected at admission (budget below modeled footprint)
+    /// false = rejected at admission, or never admitted before the loop
+    /// drained (pool share stayed below the modeled footprint)
     pub admitted: bool,
     /// rejection/eviction explanation; None for a clean completion
     pub fate: Option<String>,
-    /// the finished run (None when rejected or evicted)
+    /// the finished run (None when rejected or terminally evicted)
     pub result: Option<RunResult>,
     /// an evicted session's suspend checkpoint — the partial work survives
     /// and can be resumed later under a bigger budget
     pub checkpoint: Option<Vec<u8>>,
+    /// per-tenant scheduling telemetry
+    pub sched: SchedSummary,
 }
 
-/// Run every session in `spec` to completion (or rejection/eviction) over
-/// one shared backend. `rearm` is called after each `reset_all_knobs()` so
-/// the serve CLI can re-apply its `--threads`/`--grad-stream`/... overrides
-/// (knob state is process-global; tests pass a no-op).
-pub fn serve(spec: &ServeSpec, rearm: &dyn Fn()) -> Result<Vec<ServeOutcome>> {
-    spec.validate()?;
-    let mut shared: Option<Box<dyn Backend>> = Some(backend::open(&spec.sessions[0].cfg)?);
+// ---------------------------------------------------------------------------
+// The serve loop.
+// ---------------------------------------------------------------------------
 
-    struct Slot {
-        out_idx: usize,
-        budget: Option<u64>,
-        bytes: Vec<u8>,
-        done: bool,
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TenantState {
+    /// Queued: admitted to the roster but currently without enough budget
+    /// (deferred admission or post-eviction). Re-planned every turn.
+    Waiting,
+    /// Holds a checkpoint and competes for turns.
+    Runnable,
+    /// Finished, terminally evicted, or abandoned.
+    Done,
+}
+
+/// One live roster entry (rejected tenants never get a slot).
+struct Slot {
+    out_idx: usize,
+    name: String,
+    explicit_budget: Option<u64>,
+    weight: u64,
+    deadline: Option<u64>,
+    /// Current effective budget: explicit, pool share, or None (unbudgeted).
+    budget: Option<u64>,
+    modeled: u64,
+    /// Bytes the tenant is known to need: modeled before it first runs,
+    /// the (monotonic) measured footprint afterwards.
+    demand: u64,
+    bytes: Vec<u8>,
+    step: usize,
+    target: usize,
+    state: TenantState,
+    waited: u64,
+    turns: u64,
+    preemptions: u64,
+    evictions: u64,
+    readmissions: u64,
+    finished_clock: Option<u64>,
+}
+
+/// The policy-driven serve loop as a steppable object: [`ServeLoop::turn`]
+/// runs one scheduling decision + one tenant turn, [`ServeLoop::refresh_spec`]
+/// injects tenants into a running roster, [`ServeLoop::run`] drains
+/// everything. Tests (and `--watch-spec`) drive turns one at a time; the
+/// [`serve`] convenience wrapper is new-run-finish.
+pub struct ServeLoop<'a> {
+    rearm: &'a dyn Fn(),
+    policy: SchedPolicy,
+    slice_steps: usize,
+    total_budget: Option<u64>,
+    starvation_turns: u64,
+    shared: Option<Box<dyn Backend>>,
+    base_cfg: TrainConfig,
+    slots: Vec<Slot>,
+    outcomes: Vec<ServeOutcome>,
+    clock: u64,
+}
+
+impl<'a> ServeLoop<'a> {
+    /// Build the initial roster: construct every tenant once on the shared
+    /// backend, checkpoint it, apply admission control, and plan budgets.
+    /// `rearm` is called after each `reset_all_knobs()` so the serve CLI
+    /// can re-apply its `--threads`/`--grad-stream`/... overrides (knob
+    /// state is process-global; tests pass a no-op).
+    pub fn new(spec: &ServeSpec, rearm: &'a dyn Fn()) -> Result<ServeLoop<'a>> {
+        spec.validate()?;
+        let mut lp = ServeLoop {
+            rearm,
+            policy: spec.policy,
+            slice_steps: spec.slice_steps.max(1),
+            total_budget: spec.total_budget_bytes,
+            starvation_turns: spec.starvation_turns.max(1),
+            shared: Some(backend::open(&spec.sessions[0].cfg)?),
+            base_cfg: spec.sessions[0].cfg.clone(),
+            slots: Vec::new(),
+            outcomes: Vec::new(),
+            clock: 0,
+        };
+        for s in &spec.sessions {
+            lp.admit_spec(s)?;
+        }
+        lp.replan();
+        Ok(lp)
     }
 
-    // Admission: build each tenant once on the shared backend, check its
-    // budget against the modeled footprint, and immediately checkpoint it.
-    let mut outcomes: Vec<ServeOutcome> = Vec::new();
-    let mut slots: Vec<Slot> = Vec::new();
-    for s in &spec.sessions {
-        let be = shared.take().expect("backend is lent to at most one session");
+    /// Global clock: total optimizer steps executed across all tenants.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Build one tenant on the shared backend, checkpoint it, and either
+    /// reject it (explicit budget below the modeled footprint — permanent,
+    /// the budget can never grow) or queue it for planning.
+    fn admit_spec(&mut self, s: &SessionSpec) -> Result<()> {
+        let be = self.shared.take().expect("backend is lent to at most one session");
         let sess = Session::with_backend(be, &s.cfg, None)
             .with_context(|| format!("building session {:?}", s.name))?;
         let modeled = sess.modeled_footprint_bytes();
+        let target = sess.target_steps();
         let (bytes, be) = sess.suspend_parts();
-        shared = Some(be);
+        self.shared = Some(be);
+        let sched = SchedSummary {
+            policy: self.policy.name().to_string(),
+            weight: s.weight,
+            deadline: s.deadline,
+            ..SchedSummary::default()
+        };
         if let Some(budget) = s.budget_bytes {
             if budget < modeled {
                 println!(
                     "[serve] {}: REJECTED — budget {} B below modeled footprint {} B",
                     s.name, budget, modeled
                 );
-                outcomes.push(ServeOutcome {
+                self.outcomes.push(ServeOutcome {
                     name: s.name.clone(),
                     admitted: false,
                     fate: Some(format!(
@@ -205,88 +578,347 @@ pub fn serve(spec: &ServeSpec, rearm: &dyn Fn()) -> Result<Vec<ServeOutcome>> {
                     )),
                     result: None,
                     checkpoint: None,
+                    sched,
                 });
-                continue;
+                return Ok(());
             }
         }
-        slots.push(Slot {
-            out_idx: outcomes.len(),
+        self.slots.push(Slot {
+            out_idx: self.outcomes.len(),
+            name: s.name.clone(),
+            explicit_budget: s.budget_bytes,
+            weight: s.weight,
+            deadline: s.deadline,
             budget: s.budget_bytes,
+            modeled,
+            demand: modeled,
             bytes,
-            done: false,
+            step: 0,
+            target,
+            state: TenantState::Waiting,
+            waited: 0,
+            turns: 0,
+            preemptions: 0,
+            evictions: 0,
+            readmissions: 0,
+            finished_clock: None,
         });
-        outcomes.push(ServeOutcome {
+        self.outcomes.push(ServeOutcome {
             name: s.name.clone(),
             admitted: true,
             fate: None,
             result: None,
             checkpoint: None,
+            sched,
         });
+        Ok(())
     }
 
-    // Round-robin: K steps per tenant per turn, suspend at the boundary.
-    let slice = spec.slice_steps.max(1);
-    while slots.iter().any(|sl| !sl.done) {
-        for sl in slots.iter_mut() {
-            if sl.done {
-                continue;
-            }
-            // knob hygiene between tenants: drop whatever the previous
-            // slice resolved, re-resolve from env, re-apply CLI overrides
-            crate::util::reset_all_knobs();
-            rearm();
-            let name = outcomes[sl.out_idx].name.clone();
-            let be = shared.take().expect("backend is lent to at most one session");
-            let mut sess = Session::resume_with_backend(be, &sl.bytes)
-                .with_context(|| format!("resuming session {name:?}"))?;
-            sess.run_steps(slice)?;
-            if let Some(budget) = sl.budget {
-                let measured = sess.measured_footprint_bytes();
-                if measured > budget {
-                    let step = sess.step();
-                    let (bytes, be) = sess.suspend_parts();
-                    shared = Some(be);
-                    sl.done = true;
-                    println!(
-                        "[serve] {name}: EVICTED at step {step} — measured footprint \
-                         {measured} B exceeds budget {budget} B"
-                    );
-                    outcomes[sl.out_idx].fate = Some(format!(
-                        "evicted at step {step}: measured footprint {measured} B exceeds \
-                         budget {budget} B"
-                    ));
-                    outcomes[sl.out_idx].checkpoint = Some(bytes);
-                    continue;
+    /// Re-plan budgets and roster states. Pool tenants get a weight-
+    /// proportional share of `total_budget_mb` over the LIVE pool cohort;
+    /// a runnable tenant whose share dropped below its demand is evicted
+    /// (queued), and a queued tenant whose share now covers its demand is
+    /// re-admitted. Explicit budgets never move.
+    fn replan(&mut self) {
+        if let Some(total) = self.total_budget {
+            let pool = |sl: &Slot| sl.state != TenantState::Done && sl.explicit_budget.is_none();
+            let wsum: u128 =
+                self.slots.iter().filter(|sl| pool(sl)).map(|sl| sl.weight as u128).sum();
+            if wsum > 0 {
+                for sl in self.slots.iter_mut() {
+                    if pool(sl) {
+                        sl.budget = Some(((total as u128) * (sl.weight as u128) / wsum) as u64);
+                    }
                 }
             }
-            if sess.done() {
-                let (res, _store, be) = sess
-                    .finish_parts()
-                    .with_context(|| format!("finishing session {name:?}"))?;
-                shared = Some(be);
-                println!(
-                    "[serve] {name}: DONE at step {} — final train loss {:.4}",
-                    res.train_losses.len(),
-                    res.final_train_loss
-                );
-                outcomes[sl.out_idx].result = Some(res);
-                sl.done = true;
-            } else {
-                let step = sess.step();
-                let target = sess.target_steps();
-                let (bytes, be) = sess.suspend_parts();
-                shared = Some(be);
-                sl.bytes = bytes;
-                println!("[serve] {name}: step {step}/{target}, suspended");
+        }
+        for sl in self.slots.iter_mut() {
+            match sl.state {
+                TenantState::Done => {}
+                TenantState::Runnable => {
+                    if let Some(b) = sl.budget {
+                        if b < sl.demand {
+                            sl.state = TenantState::Waiting;
+                            if sl.step > 0 {
+                                sl.evictions += 1;
+                                obs::add(Counter::SchedEvictions, 1);
+                                println!(
+                                    "[serve] {}: EVICTED at step {} — measured footprint {} B \
+                                     exceeds budget {b} B (queued for re-admission)",
+                                    sl.name, sl.step, sl.demand
+                                );
+                            }
+                        }
+                    }
+                }
+                TenantState::Waiting => {
+                    if sl.budget.map_or(true, |b| b >= sl.demand) {
+                        sl.state = TenantState::Runnable;
+                        sl.waited = 0;
+                        if sl.step > 0 {
+                            let _sp = obs::span(Span::ServeReadmit);
+                            sl.readmissions += 1;
+                            obs::add(Counter::SchedReadmissions, 1);
+                            println!(
+                                "[serve] {}: re-admitted at step {} — budget {} B covers \
+                                 measured footprint {} B",
+                                sl.name,
+                                sl.step,
+                                sl.budget
+                                    .map_or_else(|| "unbounded".to_string(), |b| b.to_string()),
+                                sl.demand
+                            );
+                        }
+                    }
+                }
             }
         }
     }
-    Ok(outcomes)
+
+    /// Inject tenants from a refreshed spec into the running roster: any
+    /// session whose name is new is built, admission-checked, and planned
+    /// in; existing tenants are left untouched (their configs, weights and
+    /// deadlines are pinned at first admission). A changed
+    /// `total_budget_mb` is adopted — shrinking the pool live is how an
+    /// operator forces evictions. Policy/slice changes are ignored.
+    /// Returns how many tenants were injected.
+    pub fn refresh_spec(&mut self, spec: &ServeSpec) -> Result<usize> {
+        spec.validate()?;
+        if spec.total_budget_bytes != self.total_budget {
+            if let Some(t) = spec.total_budget_bytes {
+                println!("[serve] total budget re-planned to {t} B");
+            }
+            self.total_budget = spec.total_budget_bytes;
+        }
+        let mut injected = 0usize;
+        for s in &spec.sessions {
+            if self.outcomes.iter().any(|o| o.name == s.name) {
+                continue;
+            }
+            shape_compatible(&s.cfg, &self.base_cfg, &s.name, "the running roster")?;
+            self.admit_spec(s)?;
+            println!("[serve] {}: injected via spec refresh", s.name);
+            injected += 1;
+        }
+        self.replan();
+        Ok(injected)
+    }
+
+    fn views(&self) -> Vec<TenantView> {
+        self.slots
+            .iter()
+            .map(|sl| TenantView {
+                runnable: sl.state == TenantState::Runnable,
+                steps_run: sl.step as u64,
+                weight: sl.weight,
+                deadline: sl.deadline,
+                remaining: sl.target.saturating_sub(sl.step) as u64,
+                waited: sl.waited,
+            })
+            .collect()
+    }
+
+    /// One scheduling decision + one tenant turn (up to `slice_steps`
+    /// optimizer steps, less on preemption/finish). Returns false when no
+    /// tenant is runnable — the loop is drained or everyone left is queued
+    /// without headroom.
+    pub fn turn(&mut self) -> Result<bool> {
+        let picked = {
+            let _sp = obs::span(Span::ServeSchedule);
+            pick_next(self.policy, &self.views(), self.clock, self.starvation_turns)
+        };
+        let Some(i) = picked else { return Ok(false) };
+        for (j, sl) in self.slots.iter_mut().enumerate() {
+            if sl.state == TenantState::Runnable {
+                sl.waited = if j == i { 0 } else { sl.waited + 1 };
+            }
+        }
+        self.slots[i].turns += 1;
+        // knob hygiene between tenants: drop whatever the previous turn
+        // resolved, re-resolve from env, re-apply CLI overrides
+        crate::util::reset_all_knobs();
+        (self.rearm)();
+        let name = self.slots[i].name.clone();
+        let be = self.shared.take().expect("backend is lent to at most one session");
+        let mut sess = Session::resume_with_backend(be, &self.slots[i].bytes)
+            .with_context(|| format!("resuming session {name:?}"))?;
+        let mut ran_in_turn = 0usize;
+        let mut preempted = false;
+        while ran_in_turn < self.slice_steps && !sess.done() {
+            let ran = sess.run_steps(1)?;
+            if ran == 0 {
+                break;
+            }
+            ran_in_turn += ran;
+            self.clock += ran as u64;
+            self.slots[i].step = sess.step();
+            if ran_in_turn >= self.slice_steps || sess.done() {
+                break;
+            }
+            if should_preempt(self.policy, &self.views(), i, self.clock) {
+                let _sp = obs::span(Span::ServePreempt);
+                self.slots[i].preemptions += 1;
+                obs::add(Counter::SchedPreemptions, 1);
+                preempted = true;
+                break;
+            }
+        }
+        self.slots[i].demand = self.slots[i].demand.max(sess.measured_footprint_bytes());
+        if sess.done() {
+            let (res, _store, be) = sess
+                .finish_parts()
+                .with_context(|| format!("finishing session {name:?}"))?;
+            self.shared = Some(be);
+            let sl = &mut self.slots[i];
+            sl.state = TenantState::Done;
+            sl.finished_clock = Some(self.clock);
+            println!(
+                "[serve] {name}: DONE at step {} (clock {}) — final train loss {:.4}",
+                res.train_losses.len(),
+                self.clock,
+                res.final_train_loss
+            );
+            if let Some(d) = sl.deadline {
+                if self.clock > d {
+                    obs::add(Counter::SchedDeadlineMisses, 1);
+                    obs::gauge_max(Gauge::SchedLatenessPeakSteps, self.clock - d);
+                    println!("[serve] {name}: deadline {d} MISSED by {} steps", self.clock - d);
+                }
+            }
+            self.outcomes[sl.out_idx].result = Some(res);
+        } else {
+            let step = sess.step();
+            let target = sess.target_steps();
+            let (bytes, be) = sess.suspend_parts();
+            self.shared = Some(be);
+            self.slots[i].bytes = bytes;
+            let why = if preempted { "preempted" } else { "suspended" };
+            println!("[serve] {name}: step {step}/{target}, {why}");
+        }
+        self.replan();
+        Ok(true)
+    }
+
+    /// Give up on the first still-queued tenant (roster order): record a
+    /// terminal fate, keep its checkpoint if it ran, free its pool share
+    /// (which may re-admit other queued tenants). Returns false when
+    /// nothing is queued. Drivers call this when [`ServeLoop::turn`]
+    /// reports nothing runnable but the roster isn't drained.
+    pub fn abandon_one_waiting(&mut self) -> bool {
+        let Some(i) = self.slots.iter().position(|sl| sl.state == TenantState::Waiting) else {
+            return false;
+        };
+        let sl = &mut self.slots[i];
+        sl.state = TenantState::Done;
+        let budget = sl.budget.map_or_else(|| "unbounded".to_string(), |b| b.to_string());
+        if sl.step > 0 {
+            println!(
+                "[serve] {}: gave up at step {} — demand {} B never fit budget {} B",
+                sl.name, sl.step, sl.demand, budget
+            );
+            self.outcomes[sl.out_idx].fate = Some(format!(
+                "evicted at step {}: measured footprint {} B exceeds budget {} B and \
+                 re-admission never became possible",
+                sl.step, sl.demand, budget
+            ));
+            self.outcomes[sl.out_idx].checkpoint = Some(std::mem::take(&mut sl.bytes));
+        } else {
+            println!(
+                "[serve] {}: never admitted — budget {} B below modeled footprint {} B",
+                sl.name, budget, sl.modeled
+            );
+            self.outcomes[sl.out_idx].admitted = false;
+            self.outcomes[sl.out_idx].fate = Some(format!(
+                "budget {} B below modeled footprint {} B",
+                budget, sl.modeled
+            ));
+        }
+        if sl.deadline.is_some() {
+            obs::add(Counter::SchedDeadlineMisses, 1);
+        }
+        self.replan();
+        true
+    }
+
+    /// Drain the loop: run turns while anything is runnable, abandoning
+    /// queued tenants that can never be re-admitted (their presence would
+    /// otherwise deadlock the roster — giving one up frees its pool share,
+    /// which can re-admit others).
+    pub fn run(&mut self) -> Result<()> {
+        loop {
+            if self.turn()? {
+                continue;
+            }
+            if !self.abandon_one_waiting() {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Consume the loop, filling in every tenant's schedule summary.
+    pub fn finish(mut self) -> Vec<ServeOutcome> {
+        for sl in &self.slots {
+            let o = &mut self.outcomes[sl.out_idx];
+            o.sched.turns = sl.turns;
+            o.sched.steps = sl.step as u64;
+            o.sched.preemptions = sl.preemptions;
+            o.sched.evictions = sl.evictions;
+            o.sched.readmissions = sl.readmissions;
+            o.sched.finished_clock = sl.finished_clock;
+            o.sched.final_slack = sl
+                .deadline
+                .map(|d| d as i64 - sl.finished_clock.unwrap_or(self.clock) as i64);
+            o.sched.missed_deadline = sl
+                .deadline
+                .map_or(false, |d| sl.finished_clock.map_or(true, |c| c > d));
+        }
+        self.outcomes
+    }
+
+    /// Dry-run admission report for `serve --plan`: one line per tenant
+    /// with its modeled footprint and current planned budget — the numbers
+    /// an operator (or CI) needs to size `total_budget_mb`.
+    pub fn plan_lines(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        for sl in &self.slots {
+            lines.push(format!(
+                "[plan] {}: modeled {} B, weight {}, deadline {}, budget {}, state {}",
+                sl.name,
+                sl.modeled,
+                sl.weight,
+                sl.deadline.map_or_else(|| "-".to_string(), |d| d.to_string()),
+                sl.budget.map_or_else(|| "unbounded".to_string(), |b| b.to_string()),
+                match sl.state {
+                    TenantState::Runnable => "admitted",
+                    TenantState::Waiting => "queued",
+                    TenantState::Done => "done",
+                },
+            ));
+        }
+        for o in self.outcomes.iter().filter(|o| !o.admitted) {
+            lines.push(format!(
+                "[plan] {}: REJECTED ({})",
+                o.name,
+                o.fate.as_deref().unwrap_or("admission")
+            ));
+        }
+        lines
+    }
+}
+
+/// Run every session in `spec` to completion (or rejection/eviction) over
+/// one shared backend: [`ServeLoop::new`] + [`ServeLoop::run`] +
+/// [`ServeLoop::finish`].
+pub fn serve(spec: &ServeSpec, rearm: &dyn Fn()) -> Result<Vec<ServeOutcome>> {
+    let mut lp = ServeLoop::new(spec, rearm)?;
+    lp.run()?;
+    Ok(lp.finish())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Method;
 
     fn grain_spec(names_steps: &[(&str, usize)], budget_mb: Option<f64>) -> String {
         let sessions: Vec<String> = names_steps
@@ -305,6 +937,17 @@ mod tests {
         format!("{{\"slice_steps\":2,\"sessions\":[{}]}}", sessions.join(","))
     }
 
+    fn view(
+        runnable: bool,
+        steps_run: u64,
+        weight: u64,
+        deadline: Option<u64>,
+        remaining: u64,
+        waited: u64,
+    ) -> TenantView {
+        TenantView { runnable, steps_run, weight, deadline, remaining, waited }
+    }
+
     #[test]
     fn spec_parses_and_validates() {
         let spec = ServeSpec::parse(&grain_spec(&[("a", 4), ("b", 6)], None)).unwrap();
@@ -313,6 +956,37 @@ mod tests {
         assert_eq!(spec.sessions[0].name, "a");
         assert_eq!(spec.sessions[1].cfg.steps, 6);
         assert!(spec.sessions[0].budget_bytes.is_none());
+        assert_eq!(spec.policy, SchedPolicy::RoundRobin);
+        assert_eq!(spec.sessions[0].weight, 1);
+        assert!(spec.sessions[0].deadline.is_none());
+        assert!(spec.total_budget_bytes.is_none());
+        assert_eq!(spec.starvation_turns, DEFAULT_STARVATION_TURNS);
+    }
+
+    #[test]
+    fn spec_parses_scheduler_fields() {
+        let src = r#"{
+            "slice_steps": 3, "sched": "slack", "total_budget_mb": 2.5,
+            "starvation_turns": 4,
+            "sessions": [
+                {"name": "a", "weight": 3, "deadline": 40,
+                 "config": {"preset": "grain", "steps": 8}},
+                {"name": "b", "config": {"preset": "grain", "steps": 4}}
+            ]
+        }"#;
+        let spec = ServeSpec::parse(src).unwrap();
+        assert_eq!(spec.policy, SchedPolicy::Slack);
+        assert_eq!(spec.total_budget_bytes, Some(2_500_000));
+        assert_eq!(spec.starvation_turns, 4);
+        assert_eq!(spec.sessions[0].weight, 3);
+        assert_eq!(spec.sessions[0].deadline, Some(40));
+        assert_eq!(spec.sessions[1].weight, 1);
+        // bad values are rejected loudly
+        assert!(ServeSpec::parse(&src.replace("\"slack\"", "\"sjf\"")).is_err());
+        assert!(ServeSpec::parse(&src.replace("\"weight\": 3", "\"weight\": 0")).is_err());
+        assert!(ServeSpec::parse(&src.replace("2.5", "-1")).is_err());
+        assert!(SchedPolicy::parse("weighted").unwrap() == SchedPolicy::Weighted);
+        assert_eq!(SchedPolicy::Slack.name(), "slack");
     }
 
     #[test]
@@ -326,6 +1000,97 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_pick_is_cyclic() {
+        let mut waited = [0u64; 3];
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let views: Vec<TenantView> =
+                (0..3).map(|i| view(true, 0, 1, None, 4, waited[i])).collect();
+            let i = pick_next(SchedPolicy::RoundRobin, &views, 0, 8).unwrap();
+            order.push(i);
+            for (j, w) in waited.iter_mut().enumerate() {
+                *w = if j == i { 0 } else { *w + 1 };
+            }
+        }
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn slack_orders_by_earliest_slack_and_preempts_strictly() {
+        // a: deadline 12, remaining 8 -> slack 4; b: deadline 10,
+        // remaining 6 -> slack 4 (tie -> lower index); c: no deadline.
+        let views = [
+            view(true, 0, 1, Some(12), 8, 0),
+            view(true, 0, 1, Some(10), 6, 0),
+            view(true, 0, 1, None, 5, 0),
+        ];
+        assert_eq!(pick_next(SchedPolicy::Slack, &views, 0, 8), Some(0));
+        // at clock 3 b's slack is 10-3-6=1 < a's 12-3-8=1 — tie, not strict
+        assert!(!should_preempt(SchedPolicy::Slack, &views, 0, 3));
+        // one more step of a: a slack 12-4-8=0... with a's remaining fixed
+        // in this static view, b's slack 10-4-6=0 ties again; shrink a's
+        // deadline pressure by moving clock so b strictly wins
+        let late = [
+            view(true, 1, 1, Some(12), 7, 0),
+            view(true, 0, 1, Some(10), 6, 1),
+            view(true, 0, 1, None, 5, 1),
+        ];
+        // runner a: slack 12-2-7=3; waiter b: 10-2-6=2 < 3 -> preempt
+        assert!(should_preempt(SchedPolicy::Slack, &late, 0, 2));
+        // the deadline-less tenant never preempts anyone
+        assert_eq!(slack_of(&late[2], 2), i64::MAX);
+        // non-runnable tenants are invisible to both decisions
+        let parked = [view(false, 0, 1, Some(0), 1, 0), view(true, 0, 1, None, 4, 0)];
+        assert_eq!(pick_next(SchedPolicy::Slack, &parked, 0, 8), Some(1));
+        assert!(!should_preempt(SchedPolicy::Slack, &parked, 1, 50));
+    }
+
+    #[test]
+    fn slack_starvation_bound_schedules_deadline_less_tenants() {
+        // b has a deadline and would win every slack comparison forever;
+        // after STARVATION turns of waiting, a must run anyway.
+        let starvation = 4u64;
+        let mut waited_a = 0u64;
+        let mut picked_a_at = None;
+        for turn in 0..10u64 {
+            let views = [
+                view(true, 0, 1, None, 50, waited_a),
+                view(true, turn, 1, Some(1000), 100, 0),
+            ];
+            let i = pick_next(SchedPolicy::Slack, &views, turn, starvation).unwrap();
+            if i == 0 {
+                picked_a_at = Some(turn);
+                break;
+            }
+            waited_a += 1;
+        }
+        let at = picked_a_at.expect("deadline-less tenant starved past the bound");
+        assert_eq!(at, starvation, "aging must fire exactly at the bound");
+    }
+
+    #[test]
+    fn weighted_pick_converges_to_weight_proportions() {
+        // weights 3:1 over 200 single-step decisions: step counts must
+        // track the 3:1 entitlement within one step at every prefix.
+        let weights = [3u64, 1u64];
+        let mut steps = [0u64; 2];
+        for _ in 0..200 {
+            let views: Vec<TenantView> =
+                (0..2).map(|i| view(true, steps[i], weights[i], None, 1000, 0)).collect();
+            let i = pick_next(SchedPolicy::Weighted, &views, 0, 8).unwrap();
+            steps[i] += 1;
+            let total = (steps[0] + steps[1]) as f64;
+            let share = steps[0] as f64 / total;
+            assert!(
+                (share - 0.75).abs() <= 1.0 / total,
+                "share {share} drifted from 3:1 at total {total}"
+            );
+        }
+        assert_eq!(steps[0], 150);
+        assert_eq!(steps[1], 50);
+    }
+
+    #[test]
     fn admission_rejects_budget_below_modeled_footprint() {
         let _g = crate::util::test_knob_lock();
         crate::util::reset_all_knobs();
@@ -336,5 +1101,124 @@ mod tests {
         assert!(!out[0].admitted);
         assert!(out[0].result.is_none());
         assert!(out[0].fate.as_deref().unwrap().contains("modeled footprint"));
+    }
+
+    fn nano_cfg(steps: usize, seed: u64) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.preset = "nano".into();
+        cfg.method = Method::FullAdam;
+        cfg.steps = steps;
+        cfg.eval_every = 0;
+        cfg.eval_batches = 1;
+        cfg.seed = seed;
+        cfg
+    }
+
+    /// The elastic round trip: a lone pool tenant is admitted under the
+    /// full pool, a heavier tenant injected mid-run shrinks its share
+    /// below the measured footprint (eviction, checkpoint queued), and
+    /// once the intruder finishes the share grows back (automatic
+    /// re-admission) — with the evicted tenant's results still bitwise
+    /// identical to a solo run.
+    #[test]
+    fn evict_then_readmit_round_trip_is_bitwise() {
+        let _g = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        crate::obs::set_trace(true);
+        let base = crate::obs::snapshot();
+        let lo_cfg = nano_cfg(8, 9);
+        let modeled = {
+            let probe = Session::new(&lo_cfg, None).unwrap();
+            probe.modeled_footprint_bytes()
+        };
+        // T = 2x modeled: lo alone fits (T >= modeled); after hi (weight 3)
+        // joins, lo's share T/4 = modeled/2 < measured (~modeled) evicts
+        // it, while hi's share 3T/4 = 1.5x modeled admits hi; hi finishing
+        // returns the full pool to lo, re-admitting it.
+        let total_mb = (2 * modeled) as f64 / 1e6;
+        let tenant = |name: &str, steps: usize, weight: u64, seed: u64| {
+            format!(
+                "{{\"name\":\"{name}\",\"weight\":{weight},\"config\":{{\"preset\":\"nano\",\
+                 \"method\":\"adam\",\"steps\":{steps},\"eval-every\":0,\"eval-batches\":1,\
+                 \"seed\":{seed}}}}}"
+            )
+        };
+        let spec1 = ServeSpec::parse(&format!(
+            "{{\"slice_steps\":2,\"sched\":\"slack\",\"total_budget_mb\":{total_mb},\
+             \"sessions\":[{}]}}",
+            tenant("lo", 8, 1, 9)
+        ))
+        .unwrap();
+        let spec2 = ServeSpec::parse(&format!(
+            "{{\"slice_steps\":2,\"sched\":\"slack\",\"total_budget_mb\":{total_mb},\
+             \"sessions\":[{},{}]}}",
+            tenant("lo", 8, 1, 9),
+            tenant("hi", 2, 3, 10)
+        ))
+        .unwrap();
+        let mut lp = ServeLoop::new(&spec1, &|| {}).unwrap();
+        assert!(lp.turn().unwrap(), "lo must get a first turn");
+        assert_eq!(lp.slots[0].step, 2);
+        assert_eq!(lp.refresh_spec(&spec2).unwrap(), 1, "hi must be injected");
+        assert_eq!(lp.slots[0].state, TenantState::Waiting, "lo must be evicted");
+        assert_eq!(lp.slots[0].evictions, 1);
+        assert_eq!(lp.slots[1].state, TenantState::Runnable, "hi must be admitted");
+        lp.run().unwrap();
+        let outcomes = lp.finish();
+        crate::obs::reset_trace();
+        let lo = &outcomes[0];
+        let hi = &outcomes[1];
+        assert_eq!(lo.sched.evictions, 1);
+        assert_eq!(lo.sched.readmissions, 1, "lo must be re-admitted after hi finishes");
+        assert!(lo.fate.is_none(), "{:?}", lo.fate);
+        assert!(hi.result.is_some());
+        let d = crate::obs::delta(&base);
+        assert!(d.counters[Counter::SchedEvictions as usize] >= 1);
+        assert!(d.counters[Counter::SchedReadmissions as usize] >= 1);
+        // the round trip must not have cost lo a single bit
+        crate::util::reset_all_knobs();
+        let mut solo = Session::new(&lo_cfg, None).unwrap();
+        solo.run_to_completion().unwrap();
+        let (want, _) = solo.finish().unwrap();
+        let got = lo.result.as_ref().expect("lo must finish after re-admission");
+        assert_eq!(want.train_losses.len(), got.train_losses.len());
+        for (s, (x, y)) in want.train_losses.iter().zip(&got.train_losses).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "lo diverged from solo at step {s}");
+        }
+    }
+
+    /// A pool too small for anyone must not deadlock the loop: the first
+    /// queued tenant is abandoned, freeing the pool for the second.
+    #[test]
+    fn undersized_pool_abandons_without_deadlock() {
+        let _g = crate::util::test_knob_lock();
+        crate::util::reset_all_knobs();
+        let modeled = {
+            let probe = Session::new(&nano_cfg(2, 5), None).unwrap();
+            probe.modeled_footprint_bytes()
+        };
+        // 1.5x modeled total: either tenant fits alone, both together
+        // (shares 0.75x each) do not — roster order wins after the other
+        // is given up.
+        let total_mb = (modeled + modeled / 2) as f64 / 1e6;
+        let spec = ServeSpec::parse(&format!(
+            "{{\"slice_steps\":2,\"total_budget_mb\":{total_mb},\"sessions\":[\
+             {{\"name\":\"a\",\"config\":{{\"preset\":\"nano\",\"method\":\"adam\",\
+             \"steps\":2,\"eval-every\":0,\"eval-batches\":1,\"seed\":5}}}},\
+             {{\"name\":\"b\",\"config\":{{\"preset\":\"nano\",\"method\":\"adam\",\
+             \"steps\":2,\"eval-every\":0,\"eval-batches\":1,\"seed\":6}}}}]}}"
+        ))
+        .unwrap();
+        let out = serve(&spec, &|| {}).unwrap();
+        assert_eq!(out.len(), 2);
+        let finished: Vec<bool> = out.iter().map(|o| o.result.is_some()).collect();
+        assert_eq!(
+            finished.iter().filter(|&&f| f).count(),
+            1,
+            "exactly one tenant fits the pool: {finished:?}"
+        );
+        let loser = out.iter().find(|o| o.result.is_none()).unwrap();
+        assert!(!loser.admitted);
+        assert!(loser.fate.as_deref().unwrap().contains("below modeled footprint"));
     }
 }

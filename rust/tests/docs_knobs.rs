@@ -1,0 +1,120 @@
+//! Keeps docs/KNOBS.md and the CLI usage text (`cli::USAGE`) from
+//! drifting apart: every `PALLAS_*` env var must be named by both, every
+//! CLI flag documented in the knob tables must exist in the usage text,
+//! and the serve spec keys must be described in both places. The README
+//! must link both documentation pages.
+//!
+//! Extraction is plain string scanning (no regex crate in the offline
+//! universe): `PALLAS_`-prefixed uppercase tokens, and `--flag` tokens
+//! from the markdown table rows only (prose mentions like `--help` or
+//! bench-only flags are deliberately out of scope).
+
+use std::collections::BTreeSet;
+
+use blockllm::cli::USAGE;
+
+fn repo_doc(rel: &str) -> String {
+    let path = format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// All `PALLAS_<UPPER>` tokens in `text` (trailing underscores trimmed,
+/// so the wildcard `PALLAS_*` in prose never matches).
+fn pallas_vars(text: &str) -> BTreeSet<String> {
+    let bytes = text.as_bytes();
+    let pat = b"PALLAS_";
+    let mut out = BTreeSet::new();
+    let mut i = 0;
+    while i + pat.len() <= bytes.len() {
+        if &bytes[i..i + pat.len()] == pat {
+            let mut j = i + pat.len();
+            while j < bytes.len() && (bytes[j].is_ascii_uppercase() || bytes[j] == b'_') {
+                j += 1;
+            }
+            let tok = text[i..j].trim_end_matches('_');
+            if tok.len() > pat.len() {
+                out.insert(tok.to_string());
+            }
+            i = j.max(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `--flag` tokens found in markdown TABLE rows (lines starting with `|`).
+/// The char after `--` must be a lowercase letter, which skips the
+/// `|---|---|` separator rows.
+fn table_flags(md: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in md.lines().filter(|l| l.trim_start().starts_with('|')) {
+        let mut rest = line;
+        while let Some(p) = rest.find("--") {
+            let tail = &rest[p + 2..];
+            if tail.chars().next().map_or(false, |c| c.is_ascii_lowercase()) {
+                let end = tail
+                    .find(|c: char| !(c.is_ascii_lowercase() || c == '-'))
+                    .unwrap_or(tail.len());
+                out.insert(format!("--{}", &tail[..end]));
+                rest = &tail[end..];
+            } else {
+                rest = tail;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn pallas_env_vars_agree_between_knobs_md_and_usage() {
+    let md = repo_doc("docs/KNOBS.md");
+    let doc_vars = pallas_vars(&md);
+    let usage_vars = pallas_vars(USAGE);
+    assert!(!usage_vars.is_empty(), "usage text names no PALLAS_* vars?");
+    assert_eq!(
+        doc_vars, usage_vars,
+        "PALLAS_* env vars drifted between docs/KNOBS.md and cli::USAGE"
+    );
+}
+
+#[test]
+fn every_documented_flag_exists_in_usage() {
+    let md = repo_doc("docs/KNOBS.md");
+    let flags = table_flags(&md);
+    // sanity: the extraction actually found the knob tables
+    for expect in ["--threads", "--grad-stream", "--sched", "--watch-spec"] {
+        assert!(flags.contains(expect), "KNOBS.md table lost {expect}");
+    }
+    for f in &flags {
+        assert!(
+            USAGE.contains(f.as_str()),
+            "docs/KNOBS.md documents {f} but cli::USAGE does not mention it"
+        );
+    }
+}
+
+#[test]
+fn serve_spec_keys_documented_in_both() {
+    let md = repo_doc("docs/KNOBS.md");
+    for key in [
+        "slice_steps",
+        "sched",
+        "total_budget_mb",
+        "starvation_turns",
+        "budget_mb",
+        "weight",
+        "deadline",
+    ] {
+        assert!(md.contains(key), "docs/KNOBS.md lost serve spec key {key:?}");
+        assert!(USAGE.contains(key), "cli::USAGE lost serve spec key {key:?}");
+    }
+}
+
+#[test]
+fn readme_links_the_docs_pages() {
+    let readme = repo_doc("README.md");
+    for page in ["docs/ARCHITECTURE.md", "docs/KNOBS.md"] {
+        assert!(readme.contains(page), "README.md does not link {page}");
+    }
+}

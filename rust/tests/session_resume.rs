@@ -11,11 +11,14 @@
 //! 3. The serve scheduler's time-sliced sessions finish with results
 //!    identical to solo runs, and admission control rejects a session whose
 //!    budget can't cover its modeled footprint.
+//! 4. The preemptive policies (`slack`, `weighted`) force mid-slice
+//!    preemptions and still reproduce every tenant's solo bits, across
+//!    {1,4} threads.
 
 use std::sync::Mutex;
 
 use blockllm::config::{Method, TrainConfig};
-use blockllm::session::scheduler::{serve, ServeSpec};
+use blockllm::session::scheduler::{serve, SchedPolicy, ServeSpec};
 use blockllm::session::Session;
 use blockllm::trainer::RunResult;
 
@@ -226,6 +229,66 @@ fn serve_matches_solo_runs_and_enforces_admission() {
         assert_eq!(want.evals.len(), got.evals.len(), "{}", o.name);
         for (x, y) in want.evals.iter().zip(&got.evals) {
             assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{}: eval diverged", o.name);
+        }
+    }
+}
+
+#[test]
+fn preemptive_policies_match_solo_runs_across_threads() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    // Deadlines chosen so the slack ranking flips every few steps: a
+    // (deadline 12, 8 steps) and b (deadline 10, 6 steps) start tied at
+    // slack 4, and whichever runs makes the waiter's slack strictly
+    // smaller after 1-2 steps — forcing mid-slice preemptions well before
+    // the 6-step slice is up. Under `weighted` (weights 1:3) the stride
+    // ranking flips the same way. Methods differ so the checkpoint churn
+    // crosses selection machinery, not just dense Adam state.
+    let spec_src = r#"{
+        "slice_steps": 6,
+        "sessions": [
+            {"name": "a", "deadline": 12, "weight": 1,
+             "config": {"preset": "grain", "method": "adam",
+             "steps": 8, "eval-every": 0, "eval-batches": 1, "seed": 3}},
+            {"name": "b", "deadline": 10, "weight": 3,
+             "config": {"preset": "grain", "method": "blockllm",
+             "steps": 6, "eval-every": 0, "eval-batches": 1, "seed": 4,
+             "patience": 2}}
+        ]
+    }"#;
+    for threads in [1usize, 4] {
+        for sched in ["slack", "weighted"] {
+            blockllm::util::reset_all_knobs();
+            blockllm::util::set_num_threads(threads);
+            let mut spec = ServeSpec::parse(spec_src).unwrap();
+            spec.policy = SchedPolicy::parse(sched).unwrap();
+            let rearm = move || blockllm::util::set_num_threads(threads);
+            let outcomes = serve(&spec, &rearm).unwrap();
+            let preemptions: u64 = outcomes.iter().map(|o| o.sched.preemptions).sum();
+            assert!(preemptions > 0, "{sched} t{threads}: no mid-slice preemption fired");
+            for (i, o) in outcomes.iter().enumerate() {
+                let got =
+                    o.result.as_ref().unwrap_or_else(|| panic!("{} has no result", o.name));
+                blockllm::util::reset_all_knobs();
+                blockllm::util::set_num_threads(threads);
+                let (want, _) = run_uninterrupted(&spec.sessions[i].cfg);
+                assert_eq!(
+                    want.train_losses.len(),
+                    got.train_losses.len(),
+                    "{sched} t{threads} {}",
+                    o.name
+                );
+                for (s, (x, y)) in
+                    want.train_losses.iter().zip(&got.train_losses).enumerate()
+                {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{sched} t{threads} {}: preempted loss diverged from solo at step {s}",
+                        o.name
+                    );
+                }
+            }
         }
     }
 }
