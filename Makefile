@@ -2,7 +2,7 @@
 # needs only a Rust toolchain — no Python, no artifacts: tests fall back to
 # the pure-Rust NativeBackend when artifacts/ is absent.
 
-.PHONY: check build test lint bench bench-attention bench-baseline profile artifacts clean
+.PHONY: check build test lint bench bench-attention bench-baseline dist-check profile artifacts clean
 
 check: build test
 
@@ -33,6 +33,16 @@ bench-attention:
 # recorded thread count equals the gated run's.
 bench-baseline:
 	cargo bench --bench train_step -- --preset tiny --warmup 1 --iters 4 --threads 4 --out BENCH_train_step.baseline.json
+
+# Mirrors CI's replicated dist leg locally: the full tier-1 suite with the
+# process default forced to 2 in-process replicas, then the targeted
+# replica-count pins (bitwise {1,2,4}-replica parity, ZeRO state-shard
+# shrinkage, replicated suspend/resume) under their own knob grids.
+dist-check:
+	PALLAS_REPLICAS=2 cargo test -q
+	cargo test -q --test grad_check replicated_training_bitwise_identical_across_replica_counts
+	cargo test -q --test grad_check blockllm_state_shard_bytes_shrink_with_replicas
+	cargo test -q --test session_resume replicated_suspend_resume_is_bitwise_and_matches_sequential
 
 # Profile a short training run: span table + counters on stderr, profile
 # block in the run output, and a Perfetto/chrome://tracing trace-event file

@@ -119,6 +119,10 @@ fn main() {
             // memory trajectory per method). Gated by --baseline alongside
             // ms/step when the retention route matches the baseline's.
             ("peak_grad_bytes", Json::num(peak as f64)),
+            // per-replica optimizer-state bytes under the dist layer's
+            // ZeRO-style sharding (full state bytes at --replicas 1) —
+            // informational, not gated
+            ("state_shard_bytes", Json::num(tr.mem.peak_state_shard_measured as f64)),
         ];
         if let Some(p) = res_profile.as_ref() {
             row.push(("profile", p.clone()));

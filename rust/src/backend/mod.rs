@@ -139,6 +139,18 @@ pub trait Backend {
     /// (0 for PJRT, where activations live inside XLA's arena) — feeds
     /// memory::MemBreakdown so cross-backend comparisons stay honest.
     fn activation_bytes(&self) -> u64;
+
+    /// Clone this engine for a data-parallel worker replica (`dist`
+    /// layer): a fresh instance computing the SAME function — identical
+    /// specs, shape, and fwd/bwd bits for identical inputs — with its own
+    /// scratch and zeroed perf counters, safe to drive from another
+    /// thread. `None` (the default) means the engine can't replicate
+    /// (PJRT's device handles aren't shareable); the dist driver then
+    /// falls back to the bitwise-identical sequential path, so replication
+    /// support is a pure throughput capability, never a results change.
+    fn replicate(&self) -> Option<Box<dyn Backend + Send>> {
+        None
+    }
 }
 
 /// Head + output arity implied by a task (the artifact-resolution logic that

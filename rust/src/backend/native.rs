@@ -892,6 +892,27 @@ impl super::Backend for NativeBackend {
     fn activation_bytes(&self) -> u64 {
         self.act_bytes
     }
+
+    fn replicate(&self) -> Option<Box<dyn super::Backend + Send>> {
+        // The engine is a pure function of (preset, head, shape) plus
+        // per-call scratch: a field copy with zeroed perf counters computes
+        // bit-identical fwd/bwd on any thread. Counters start at zero so a
+        // replica's exec time is its own, never double-booked with the
+        // parent's.
+        Some(Box::new(NativeBackend {
+            preset: self.preset,
+            head: self.head,
+            n_out: self.n_out,
+            specs: self.specs.clone(),
+            batch: self.batch,
+            seq: self.seq,
+            cos: self.cos.clone(),
+            sin: self.sin.clone(),
+            act_bytes: self.act_bytes,
+            exec_secs: 0.0,
+            exec_calls: 0,
+        }))
+    }
 }
 
 // ---------------------------------------------------------------------------

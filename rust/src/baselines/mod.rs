@@ -149,6 +149,17 @@ pub trait Strategy {
         2 * n_params
     }
 
+    /// Per-replica optimizer-state bytes under the dist layer's ZeRO-style
+    /// moment sharding at `replicas` data-parallel workers: the LARGEST
+    /// single replica's share (replica 0's, with even chunking). Default:
+    /// an even split of `modeled_state_elems` — methods whose actual state
+    /// layout shards unevenly (BlockLLM's per-layer compact masks) override
+    /// with their exact number. At `replicas == 1` this must equal the full
+    /// state bytes.
+    fn state_shard_bytes(&self, n_params: u64, replicas: usize) -> u64 {
+        crate::memory::F32 * self.modeled_state_elems(n_params).div_ceil(replicas.max(1) as u64)
+    }
+
     /// Serialize EVERY piece of method-owned mutable state — optimizer
     /// moments, masks, selection bookkeeping, rng positions, step counters
     /// — into `bag` under a method-unique key prefix. Together with

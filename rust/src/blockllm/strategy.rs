@@ -33,7 +33,10 @@ use crate::config::{MaskMode, Method, NormKind, StatePolicy, TrainConfig};
 use crate::grads::{MaskedSink, Retain};
 use crate::memory::{profiles, MemBreakdown};
 use crate::model::ParamStore;
-use crate::optim::masked_adam::{masked_adam_step, masked_adam_step_compact, BitMask, LayerState};
+use crate::optim::masked_adam::{
+    masked_adam_step, masked_adam_step_compact, masked_adam_step_compact_range, BitMask,
+    LayerState,
+};
 use crate::optim::{AdamHypers, SparseAdamState};
 use crate::session::state::StateBag;
 
@@ -41,6 +44,41 @@ use super::mask::{build_masks, mask_plan, MaskRule};
 use super::scorer::NormDictionary;
 use super::selector::{select_layers, Selection, SelectionRule};
 use super::PatienceController;
+
+/// The compact masked-Adam update, ZeRO-sharded when the dist layer is
+/// active: at `--replicas R > 1` the layer's update runs as R consecutive
+/// compact-range calls over even `⌈c/R⌉` chunks — replica q's moment shard
+/// — which is bitwise identical to one full compact call (Adam is
+/// elementwise; `optim::masked_adam` pins the shard/full equivalence). The
+/// in-process artifact runs the shards back to back on the calling thread;
+/// the residency claim — each replica only ever needs ITS shard's moments —
+/// is what `Strategy::state_shard_bytes` reports and what a process port
+/// would allocate.
+fn sharded_compact_step(
+    w: &mut [f32],
+    gc: &[f32],
+    lst: &mut LayerState,
+    t: u64,
+    lr: f64,
+    h: &AdamHypers,
+) -> usize {
+    let r = crate::util::replicas();
+    if r <= 1 {
+        return masked_adam_step_compact(w, gc, lst, t, lr, h);
+    }
+    let c = lst.mask.popcount;
+    let chunk = c.div_ceil(r);
+    let mut updated = 0usize;
+    for q in 0..r {
+        let lo = (q * chunk).min(c);
+        let hi = ((q + 1) * chunk).min(c);
+        if lo >= hi {
+            break;
+        }
+        updated += masked_adam_step_compact_range(w, gc, lst, t, lr, h, lo, hi);
+    }
+    updated
+}
 
 pub struct BlockLlmStrategy {
     pub dict: NormDictionary,
@@ -361,7 +399,7 @@ impl Strategy for BlockLlmStrategy {
             updated += if self.plan_accum > 1 {
                 masked_adam_step(w, g, lst, t, lr, &self.hypers)
             } else {
-                masked_adam_step_compact(w, g, lst, t, lr, &self.hypers)
+                sharded_compact_step(w, g, lst, t, lr, &self.hypers)
             } as u64;
         }
 
@@ -397,8 +435,7 @@ impl Strategy for BlockLlmStrategy {
         for ((li, lst), (vi, vals)) in self.state.layers.iter_mut().zip(&values) {
             debug_assert_eq!(*li, *vi, "state/sink layer order mismatch");
             updated +=
-                masked_adam_step_compact(&mut store.bufs[*li], vals, lst, t, lr, &self.hypers)
-                    as u64;
+                sharded_compact_step(&mut store.bufs[*li], vals, lst, t, lr, &self.hypers) as u64;
         }
 
         self.refresh_processed_norms(step);
@@ -437,6 +474,25 @@ impl Strategy for BlockLlmStrategy {
     /// upper bound for the whole run.
     fn modeled_state_elems(&self, n: u64) -> u64 {
         2 * (((1.0 - self.sparsity) * n as f64).round() as u64).max(1)
+    }
+
+    /// Exact per-replica moment residency under the dist layer's ZeRO-style
+    /// sharding, from the LIVE mask layout (not the modeled sparsity
+    /// budget): each selected layer's compact state (m+v over its popcount
+    /// coordinates) splits into `replicas` even `⌈c_l/r⌉` chunks, and
+    /// replica 0 always holds the largest (first) chunk of every layer —
+    /// so the largest single replica's share is `2·F32·Σ_l ⌈popcount_l/r⌉`.
+    /// At `replicas == 1` this is the full active-state footprint; before
+    /// the first selection it is 0 (no state exists yet).
+    fn state_shard_bytes(&self, _n_params: u64, replicas: usize) -> u64 {
+        let r = replicas.max(1) as u64;
+        2 * crate::memory::F32
+            * self
+                .state
+                .layers
+                .iter()
+                .map(|(_, s)| (s.mask.popcount as u64).div_ceil(r))
+                .sum::<u64>()
     }
 
     fn state_save(&self, bag: &mut StateBag) {
@@ -813,6 +869,28 @@ mod tests {
                 assert_eq!(full.dict.norms[l].to_bits(), resumed.dict.norms[l].to_bits());
             }
         }
+    }
+
+    #[test]
+    fn state_shard_bytes_tracks_the_live_mask_layout() {
+        let specs = testutil::toy_specs();
+        let sizes: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+        let mut s = make(0.8, 10);
+        assert_eq!(s.state_shard_bytes(0, 1), 0, "no selection yet, no state");
+        let mut store = ParamStore::init(&specs, 2);
+        let grads = testutil::rand_grads(&sizes, 3);
+        s.step(&mut store, &grads, 5.0, 1e-3, 0);
+        let full = s.state_shard_bytes(0, 1);
+        let active = s.state.active_coords();
+        assert_eq!(full, 2 * crate::memory::F32 * active, "r=1 is the full active state");
+        let quarter = s.state_shard_bytes(0, 4);
+        assert!(quarter < full, "sharding must shrink per-replica state");
+        // per-layer ceil: replica 0's share exceeds an even split by at
+        // most one coordinate (2 f32s) per selected layer
+        let layers = s.state.layers.len() as u64;
+        assert!(quarter <= full.div_ceil(4) + 2 * crate::memory::F32 * layers);
+        // and r shards together always cover the whole state
+        assert!(4 * quarter >= full);
     }
 
     #[test]

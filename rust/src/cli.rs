@@ -148,11 +148,19 @@ gradient bytes are reported either way (MemTracker / results JSONL).
 park between dispatches — no per-call thread spawn/join); 0 falls back to
 the legacy scoped-thread spawn per dispatch. The row partition is fixed by
 the thread-count knob either way, so both paths produce identical bits.
-All six are pure reproducibility-safe knobs: the packed and direct paths
+--replicas N (or PALLAS_REPLICAS; default 1) runs each optimizer step's
+microbatches on N in-process data-parallel replicas of the native engine
+(one thread each, round-robin microbatch ownership), all-reducing gradient
+shards on the calling thread in a fixed ascending-microbatch order and
+ZeRO-sharding the optimizer moments so per-replica state residency is
+~1/N (reported as state_shard_bytes next to peak_grad_bytes). Backends
+that cannot replicate (pjrt) fall back to the sequential path.
+All seven are pure reproducibility-safe knobs: the packed and direct paths
 agree bit for bit, batched and per-head attention agree bit for bit,
 streaming and dense gradient retention agree bit for bit, pooled and
-scoped dispatch agree bit for bit, and every kernel is deterministic at
-any thread count.
+scoped dispatch agree bit for bit, replicated and sequential training
+agree bit for bit at any replica count, and every kernel is deterministic
+at any thread count.
 --trace {0|1} (or PALLAS_TRACE; default 0) turns on the span profiler +
 metrics registry: per-phase timings (fwd/bwd per sublayer, GEMM kernels,
 pack time, sink consume, optimizer steps), kernel/FLOP/pack-byte counters,

@@ -1,0 +1,406 @@
+//! The distributed layer: data-parallel worker replicas over the
+//! streaming `GradSink` contract.
+//!
+//! ROADMAP open item 4 ("the millions-of-users scaling axis"): PR 5's
+//! streaming gradient emission order is a ready-made communication
+//! schedule. Each of N in-process worker replicas (threads today; the
+//! message protocol is process-ready — see below) runs the backend's
+//! forward/backward on its OWN microbatch slice, and every gradient shard
+//! is shipped to the reducer the moment it finalizes, so reduction of
+//! microbatch k overlaps the remaining backward work of microbatches
+//! k+1.. on the other replicas.
+//!
+//! ## Reduction-order contract (the bitwise-invariance argument)
+//!
+//! Float addition is not associative, so a naive partial-sum-per-replica +
+//! tree all-reduce would change bits with the replica count. This layer
+//! never sums across replicas at all: microbatch OWNERSHIP is round-robin
+//! (replica j owns global microbatches j, j+N, j+2N, ...), each replica
+//! computes its microbatches' full shard values independently (the
+//! backend is bitwise-deterministic, so replica placement cannot change a
+//! shard's bits), and the single reducer folds microbatch k's shards into
+//! the step's real `GradSink` in ascending k — for each micro, shards in
+//! the backend's emission order, exactly one `begin_micro(k == 0)` +
+//! `consume` sequence per micro. That is ARITHMETIC-IDENTICAL to the
+//! sequential loop the trainer runs at `--replicas 1`: the same
+//! additions, on the same values, in the same order. **Replica count is
+//! therefore bitwise-invariant by construction** (1 == 2 == 4 replicas:
+//! loss bits, eval bits, post-step param bits) — pinned by the unit tests
+//! below, the replicated grid in tests/grad_check.rs, and the replicated
+//! suspend/resume leg in tests/session_resume.rs.
+//!
+//! ## Scheduling / residency
+//!
+//! * Replica threads are wrapped in [`pool::run_inline`], so every kernel
+//!   dispatch they issue runs inline on the replica's own thread: N
+//!   replicas use N threads total and never grab the process-wide kernel
+//!   pool (or spawn scoped workers) underneath each other.
+//! * Shards travel over bounded channels ([`CHANNEL_SHARDS`] slots per
+//!   replica), so in-flight gradient residency is capped at
+//!   `replicas × CHANNEL_SHARDS × largest shard` on top of the sink's own
+//!   retention — streaming, never a per-replica dense gradient table.
+//! * The reducer is the CALLING thread (it owns the step's sink), so the
+//!   sink needs no `Sync` and the sink-side counters
+//!   (`SinkConsumeCalls`/`SinkConsumedElems`, the leg-invariant obs
+//!   subset) are bumped exactly as often as on the sequential path.
+//!
+//! ## Process-readiness
+//!
+//! [`Msg`] is deliberately a plain owned-data protocol (param index +
+//! `Vec<f32>` | loss | error string): replacing the mpsc channel with a
+//! socket/shared-memory transport and the `Backend::replicate()` call
+//! with process spawn is a transport swap, not a redesign. The reduction
+//! order contract is transport-independent.
+//!
+//! `--replicas 1` (the default, `PALLAS_REPLICAS`) takes the exact
+//! sequential path — byte-for-byte the loop the trainer always ran — and
+//! backends that cannot replicate (PJRT's device handles) fall back to it
+//! at any setting, so replication is a pure throughput/residency
+//! capability, never a results change.
+
+use anyhow::Result;
+
+use crate::backend::{Backend, Targets};
+use crate::grads::GradSink;
+use crate::model::ParamStore;
+use crate::obs::{self, Counter, Span};
+use crate::util::pool;
+
+/// Bounded per-replica channel capacity, in messages (≈ shards): caps
+/// in-flight gradient bytes at `replicas × CHANNEL_SHARDS × largest
+/// shard` while still letting a replica run ahead into its next shard
+/// during the reducer's fold.
+const CHANNEL_SHARDS: usize = 2;
+
+/// One replica→reducer message. Owned data only — see the module docs'
+/// process-readiness note.
+enum Msg {
+    /// One finalized gradient shard of the replica's CURRENT microbatch.
+    Shard { idx: usize, grad: Vec<f32> },
+    /// The current microbatch finished; `loss` is its mean-loss term.
+    End { loss: f64 },
+    /// The replica's forward/backward failed; the run must abort.
+    Err(String),
+}
+
+/// Worker-side capture sink: forwards each shard to the reducer the
+/// moment the backward pass finalizes it. Deliberately does NOT run the
+/// `sink_probe` instrumentation — only the reducer's fold into the real
+/// sink counts, so `SinkConsumeCalls`/`SinkConsumedElems` (leg-invariant
+/// counters) match the sequential path exactly.
+struct ChannelSink<'a> {
+    tx: &'a std::sync::mpsc::SyncSender<Msg>,
+    /// The reducer hung up (it bailed on another replica's error); stop
+    /// producing.
+    dead: bool,
+}
+
+impl GradSink for ChannelSink<'_> {
+    fn consume(&mut self, idx: usize, grad: &[f32]) {
+        if self.dead {
+            return;
+        }
+        if self.tx.send(Msg::Shard { idx, grad: grad.to_vec() }).is_err() {
+            self.dead = true;
+        }
+    }
+}
+
+/// Drive one optimizer step's microbatches through `sink` — arm it
+/// (`begin_micro(k == 0)`), run the fwd/bwd, fold, repeat — returning the
+/// SUMMED microbatch loss. THE entry point for every gradient route in
+/// the trainer (main streaming pass, selection replays, dense staging):
+/// sequential at `--replicas 1`, data-parallel over
+/// `min(replicas, micro.len())` worker replicas otherwise, with bitwise
+/// identical results either way (module docs).
+pub fn drive_micros(
+    backend: &mut dyn Backend,
+    store: &ParamStore,
+    micro: &[(&[i32], Targets<'_>)],
+    sink: &mut dyn GradSink,
+) -> Result<f64> {
+    let r = crate::util::replicas().min(micro.len());
+    if r <= 1 {
+        return drive_sequential(backend, store, micro, sink);
+    }
+    let mut engines = Vec::with_capacity(r);
+    for _ in 0..r {
+        match backend.replicate() {
+            Some(be) => engines.push(be),
+            // engine can't replicate (PJRT): the sequential path computes
+            // the same bits, so this is a silent capability fallback
+            None => return drive_sequential(backend, store, micro, sink),
+        }
+    }
+    drive_replicated(engines, store, micro, sink)
+}
+
+/// The exact per-microbatch loop the trainer always ran — byte-for-byte
+/// the `--replicas 1` path and the arithmetic reference the replicated
+/// fold must (and does) reproduce.
+fn drive_sequential(
+    backend: &mut dyn Backend,
+    store: &ParamStore,
+    micro: &[(&[i32], Targets<'_>)],
+    sink: &mut dyn GradSink,
+) -> Result<f64> {
+    let mut loss = 0.0f64;
+    for (k, (tokens, targets)) in micro.iter().enumerate() {
+        let _sp = obs::span(Span::FwdBwd);
+        sink.begin_micro(k == 0);
+        loss += backend.forward_backward(store, tokens, *targets, sink)?;
+    }
+    Ok(loss)
+}
+
+fn drive_replicated(
+    engines: Vec<Box<dyn Backend + Send>>,
+    store: &ParamStore,
+    micro: &[(&[i32], Targets<'_>)],
+    sink: &mut dyn GradSink,
+) -> Result<f64> {
+    let r = engines.len();
+    let mut txs = Vec::with_capacity(r);
+    let mut rxs = Vec::with_capacity(r);
+    for _ in 0..r {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Msg>(CHANNEL_SHARDS);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    std::thread::scope(|s| -> Result<f64> {
+        for (j, (engine, tx)) in engines.into_iter().zip(txs).enumerate() {
+            s.spawn(move || replica_worker(engine, store, micro, j, r, tx));
+        }
+        // The reducer: fold microbatch k's stream from replica k % r, in
+        // ascending k — the arithmetic twin of `drive_sequential`.
+        let mut loss = 0.0f64;
+        for k in 0..micro.len() {
+            obs::add(Counter::DistMicros, 1);
+            let _sp = obs::span(Span::DistReduce);
+            sink.begin_micro(k == 0);
+            loop {
+                match rxs[k % r].recv() {
+                    Ok(Msg::Shard { idx, grad }) => {
+                        obs::add(Counter::DistReducedBytes, crate::memory::F32 * grad.len() as u64);
+                        sink.consume(idx, &grad);
+                    }
+                    Ok(Msg::End { loss: l }) => {
+                        loss += l;
+                        break;
+                    }
+                    Ok(Msg::Err(e)) => {
+                        anyhow::bail!("dist: replica {} failed on microbatch {k}: {e}", k % r)
+                    }
+                    Err(_) => {
+                        anyhow::bail!("dist: replica {} hung up mid-microbatch {k}", k % r)
+                    }
+                }
+            }
+        }
+        Ok(loss)
+        // on an early bail the receivers drop here: every blocked replica
+        // send fails, ChannelSink marks itself dead, and the workers wind
+        // down before the scope joins them
+    })
+}
+
+/// One replica thread: run the owned microbatches (global indices
+/// `j, j+r, j+2r, ...`, ascending) on a private engine, streaming each
+/// shard to the reducer as it finalizes. Inline-marked so the replica's
+/// kernel dispatches never touch the shared pool.
+fn replica_worker(
+    mut engine: Box<dyn Backend + Send>,
+    store: &ParamStore,
+    micro: &[(&[i32], Targets<'_>)],
+    j: usize,
+    r: usize,
+    tx: std::sync::mpsc::SyncSender<Msg>,
+) {
+    pool::run_inline(|| {
+        let mut sink = ChannelSink { tx: &tx, dead: false };
+        for k in (j..micro.len()).step_by(r) {
+            let (tokens, targets) = micro[k];
+            let _sp = obs::span(Span::FwdBwd);
+            match engine.forward_backward(store, tokens, targets, &mut sink) {
+                Ok(l) => {
+                    if sink.dead || tx.send(Msg::End { loss: l }).is_err() {
+                        return; // reducer bailed; nothing left to ship
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Msg::Err(format!("{e:#}")));
+                    return;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::grads::DenseSink;
+    use crate::runtime::ParamSpec;
+    use crate::util;
+
+    fn grain_backend() -> NativeBackend {
+        NativeBackend::with_shape("grain", "lm", 0, 4, 8).unwrap()
+    }
+
+    fn filler(n: usize, vocab: usize, salt: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 31 + salt * 7 + 3) % vocab) as i32).collect()
+    }
+
+    /// Run `micros` microbatches through drive_micros into a dense sink,
+    /// returning (loss, dense grad tables).
+    fn run_once(micros: usize) -> (f64, Vec<Vec<f32>>) {
+        let mut be = grain_backend();
+        let specs: Vec<ParamSpec> = be.param_specs().to_vec();
+        let store = ParamStore::init(&specs, 17);
+        let (b, t) = be.batch_shape();
+        let vocab = 101usize;
+        let data: Vec<(Vec<i32>, Vec<i32>)> = (0..micros)
+            .map(|k| (filler(b * t, vocab, k), filler(b * t, vocab, k + 100)))
+            .collect();
+        let micro: Vec<(&[i32], Targets<'_>)> =
+            data.iter().map(|(tok, tgt)| (tok.as_slice(), Targets::Lm(tgt))).collect();
+        let mut bufs: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        let loss = {
+            let mut sink = DenseSink::new(&mut bufs);
+            drive_micros(&mut be, &store, &micro, &mut sink).unwrap()
+        };
+        (loss, bufs)
+    }
+
+    #[test]
+    fn replicated_fold_is_bitwise_identical_to_sequential() {
+        let _g = util::test_knob_lock();
+        util::set_replicas(1);
+        let (loss1, grads1) = run_once(4);
+        for &r in &[2usize, 3, 4, 8] {
+            util::set_replicas(r); // 8 > micros exercises the min() clamp
+            let (lossr, gradsr) = run_once(4);
+            assert_eq!(loss1.to_bits(), lossr.to_bits(), "loss bits, replicas={r}");
+            for (i, (a, b)) in grads1.iter().zip(&gradsr).enumerate() {
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "grad bits diverged: tensor {i} elem {j}, replicas={r}"
+                    );
+                }
+            }
+        }
+        util::reset_replicas();
+    }
+
+    #[test]
+    fn single_microbatch_takes_the_sequential_path() {
+        let _g = util::test_knob_lock();
+        util::set_replicas(1);
+        let (loss1, grads1) = run_once(1);
+        util::set_replicas(4); // clamped to min(4, 1 micro) = sequential
+        let (loss4, grads4) = run_once(1);
+        assert_eq!(loss1.to_bits(), loss4.to_bits());
+        assert_eq!(grads1.len(), grads4.len());
+        for (a, b) in grads1.iter().zip(&grads4) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        util::reset_replicas();
+    }
+
+    /// A backend that refuses to replicate must silently take the
+    /// sequential fallback at any replica setting.
+    struct NoReplicate(NativeBackend);
+
+    impl Backend for NoReplicate {
+        fn name(&self) -> &'static str {
+            "no-replicate"
+        }
+        fn param_specs(&self) -> &[ParamSpec] {
+            self.0.param_specs()
+        }
+        fn batch_shape(&self) -> (usize, usize) {
+            self.0.batch_shape()
+        }
+        fn forward_backward(
+            &mut self,
+            store: &ParamStore,
+            tokens: &[i32],
+            targets: Targets<'_>,
+            sink: &mut dyn GradSink,
+        ) -> Result<f64> {
+            self.0.forward_backward(store, tokens, targets, sink)
+        }
+        fn eval_batch(
+            &mut self,
+            store: &ParamStore,
+            tokens: &[i32],
+            targets: Targets<'_>,
+        ) -> Result<crate::backend::EvalOut> {
+            self.0.eval_batch(store, tokens, targets)
+        }
+        fn params_updated(&mut self, active_layers: &[usize]) {
+            self.0.params_updated(active_layers)
+        }
+        fn exec_secs(&self) -> f64 {
+            self.0.exec_secs()
+        }
+        fn exec_calls(&self) -> u64 {
+            self.0.exec_calls()
+        }
+        fn phase_secs(&self) -> [f64; 3] {
+            self.0.phase_secs()
+        }
+        fn activation_bytes(&self) -> u64 {
+            self.0.activation_bytes()
+        }
+        // inherits the default replicate() -> None
+    }
+
+    #[test]
+    fn non_replicable_backend_falls_back_to_sequential() {
+        let _g = util::test_knob_lock();
+        util::set_replicas(4);
+        let mut be = NoReplicate(grain_backend());
+        assert!(be.replicate().is_none());
+        let specs: Vec<ParamSpec> = be.param_specs().to_vec();
+        let store = ParamStore::init(&specs, 17);
+        let (b, t) = be.batch_shape();
+        let data: Vec<(Vec<i32>, Vec<i32>)> =
+            (0..3).map(|k| (filler(b * t, 101, k), filler(b * t, 101, k + 100))).collect();
+        let micro: Vec<(&[i32], Targets<'_>)> =
+            data.iter().map(|(tok, tgt)| (tok.as_slice(), Targets::Lm(tgt))).collect();
+        let mut bufs: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        let mut sink = DenseSink::new(&mut bufs);
+        let loss = drive_micros(&mut be, &store, &micro, &mut sink).unwrap();
+        assert!(loss.is_finite());
+        util::reset_replicas();
+    }
+
+    #[test]
+    fn native_replicas_compute_identical_shard_bits() {
+        // placement invariance: a replicate()d engine produces the same
+        // fwd/bwd bits as its parent for identical inputs
+        let mut parent = grain_backend();
+        let mut child = parent.replicate().unwrap();
+        assert_eq!(child.exec_calls(), 0, "replica counters start at zero");
+        let specs: Vec<ParamSpec> = parent.param_specs().to_vec();
+        let store = ParamStore::init(&specs, 23);
+        let (b, t) = parent.batch_shape();
+        let tok = filler(b * t, 101, 1);
+        let tgt = filler(b * t, 101, 2);
+        let mut bufs_p: Vec<Vec<f32>> = specs.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        let mut bufs_c = bufs_p.clone();
+        let lp = parent
+            .forward_backward_dense(&store, &tok, Targets::Lm(&tgt), &mut bufs_p)
+            .unwrap();
+        let lc =
+            child.forward_backward_dense(&store, &tok, Targets::Lm(&tgt), &mut bufs_c).unwrap();
+        assert_eq!(lp.to_bits(), lc.to_bits());
+        for (a, b) in bufs_p.iter().zip(&bufs_c) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+}

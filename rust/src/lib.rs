@@ -40,6 +40,7 @@ pub mod blockllm;
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod dist;
 pub mod experiments;
 pub mod grads;
 pub mod linalg;

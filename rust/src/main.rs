@@ -38,6 +38,7 @@ struct KnobOverrides {
     attn_batched: Option<bool>,
     grad_stream: Option<bool>,
     pool: Option<bool>,
+    replicas: Option<usize>,
 }
 
 impl KnobOverrides {
@@ -67,6 +68,7 @@ impl KnobOverrides {
             attn_batched: bit("attn-batched")?,
             grad_stream: bit("grad-stream")?,
             pool: bit("pool")?,
+            replicas: num("replicas")?,
         })
     }
 
@@ -88,6 +90,9 @@ impl KnobOverrides {
         }
         if let Some(b) = self.pool {
             blockllm::util::set_pool(b);
+        }
+        if let Some(n) = self.replicas {
+            blockllm::util::set_replicas(n);
         }
     }
 }
@@ -148,6 +153,7 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
             || k == "attn-batched"
             || k == "grad-stream"
             || k == "pool"
+            || k == "replicas"
             || k == "trace"
             || k == "trace-out"
         {
@@ -275,6 +281,7 @@ fn serve_outcome_json(o: &ServeOutcome) -> Json {
             ("final_metric", Json::num(r.final_metric())),
             ("peak_mem_bytes", Json::num(r.peak_mem_bytes as f64)),
             ("peak_grad_bytes", Json::num(r.peak_grad_bytes as f64)),
+            ("state_shard_bytes", Json::num(r.state_shard_bytes as f64)),
             ("train_losses", Json::Arr(r.train_losses.iter().map(|&l| Json::num(l)).collect())),
         ]),
         None => Json::Null,

@@ -56,6 +56,12 @@ pub struct MemTracker {
     /// ≈ active coords + largest layer for BlockLLM, vs ≈ n + largest
     /// layer on the dense path (asserted in tests/grad_check.rs).
     pub peak_grad_measured: u64,
+    /// Per-replica optimizer-state bytes under the dist layer's ZeRO-style
+    /// moment sharding: the LARGEST single replica's moment-shard
+    /// residency at the run's `--replicas` setting (the full state bytes
+    /// at `--replicas 1`). Peak over the run's steps, since a selection
+    /// can change the active-coordinate layout mid-run.
+    pub peak_state_shard_measured: u64,
 }
 
 impl MemTracker {
@@ -84,11 +90,19 @@ impl MemTracker {
         }
     }
 
+    /// Record one step's per-replica optimizer-state shard bytes (the
+    /// largest replica's share at the step's replica count).
+    pub fn record_state_shard_bytes(&mut self, bytes: u64) {
+        if bytes > self.peak_state_shard_measured {
+            self.peak_state_shard_measured = bytes;
+        }
+    }
+
     pub fn report(&self) -> String {
         let p = &self.peak;
         format!(
             "peak modeled: {} (weights {}, grads {}, m {}, v {}, extra {}, activations {}); \
-             measured grad peak {}; process RSS {}",
+             measured grad peak {}; state shard/replica {}; process RSS {}",
             human_bytes(self.peak_total),
             human_bytes(p.weights),
             human_bytes(p.grads),
@@ -97,6 +111,7 @@ impl MemTracker {
             human_bytes(p.extra),
             human_bytes(p.activations),
             human_bytes(self.peak_grad_measured),
+            human_bytes(self.peak_state_shard_measured),
             human_bytes(self.peak_rss),
         )
     }
@@ -231,6 +246,16 @@ mod tests {
         t.record_grad_bytes(700);
         assert_eq!(t.peak_grad_measured, 1000);
         assert!(t.report().contains("measured grad peak"));
+    }
+
+    #[test]
+    fn tracker_keeps_state_shard_peak() {
+        let mut t = MemTracker::new();
+        t.record_state_shard_bytes(128);
+        t.record_state_shard_bytes(512);
+        t.record_state_shard_bytes(256);
+        assert_eq!(t.peak_state_shard_measured, 512);
+        assert!(t.report().contains("state shard/replica"));
     }
 
     #[test]

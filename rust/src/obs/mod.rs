@@ -106,10 +106,11 @@ pub enum Span {
     ServeSchedule,
     ServePreempt,
     ServeReadmit,
+    DistReduce,
 }
 
 /// Number of `Span` variants (array sizes below are pinned to this).
-pub const NSPANS: usize = 24;
+pub const NSPANS: usize = 25;
 
 /// Export names, indexed by `Span as usize`. Dotted segments group related
 /// phases in the profile table and Perfetto categories.
@@ -138,6 +139,7 @@ pub const SPAN_NAMES: [&str; NSPANS] = [
     "serve.schedule",
     "serve.preempt",
     "serve.readmit",
+    "dist.reduce",
 ];
 
 /// Monotonic counters. Keep in sync with [`COUNTER_NAMES`].
@@ -197,10 +199,17 @@ pub enum Counter {
     /// Tenants that finished past their deadline — or never finished at
     /// all while holding one (leg-variant).
     SchedDeadlineMisses,
+    /// Microbatches folded by the dist reducer (replicated steps only;
+    /// leg-variant: zero whenever `--replicas` is 1 or the step fell back
+    /// to the sequential path).
+    DistMicros,
+    /// Gradient bytes shipped replica → reducer and folded (leg-variant
+    /// like [`Counter::DistMicros`]).
+    DistReducedBytes,
 }
 
 /// Number of `Counter` variants.
-pub const NCOUNTERS: usize = 19;
+pub const NCOUNTERS: usize = 21;
 
 /// Export names, indexed by `Counter as usize`.
 pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
@@ -223,6 +232,8 @@ pub const COUNTER_NAMES: [&str; NCOUNTERS] = [
     "sched.evictions",
     "sched.readmissions",
     "sched.deadline_misses",
+    "dist.micros",
+    "dist.reduced_bytes",
 ];
 
 impl Counter {
@@ -511,8 +522,8 @@ mod tests {
 
     #[test]
     fn name_tables_cover_every_variant() {
-        assert_eq!(Span::ServeReadmit as usize, NSPANS - 1);
-        assert_eq!(Counter::SchedDeadlineMisses as usize, NCOUNTERS - 1);
+        assert_eq!(Span::DistReduce as usize, NSPANS - 1);
+        assert_eq!(Counter::DistReducedBytes as usize, NCOUNTERS - 1);
         assert_eq!(Gauge::SchedLatenessPeakSteps as usize, NGAUGES - 1);
         assert_eq!(SPAN_NAMES.len(), NSPANS);
         assert_eq!(COUNTER_NAMES.len(), NCOUNTERS);

@@ -300,6 +300,90 @@ pub fn masked_adam_step_compact(
     p
 }
 
+/// [`masked_adam_step_compact`] restricted to the compact-coordinate range
+/// `[lo, hi)` — the dist layer's ZeRO-style moment-shard update. Shard `q`
+/// of `r` owns compact elements `[q·⌈c/r⌉, min((q+1)·⌈c/r⌉, c))`, and `r`
+/// consecutive calls covering `[0, c)` in order perform exactly the
+/// per-coordinate arithmetic of ONE full compact call (Adam is elementwise;
+/// the bias corrections depend only on `step`), so the sharded update is
+/// bitwise interchangeable with the unsharded one. Coordinates outside the
+/// range are skipped without touching `w`, `m`, or `v` — a replica's moment
+/// residency is exactly its shard. Returns the coordinate count updated.
+pub fn masked_adam_step_compact_range(
+    w: &mut [f32],
+    gc: &[f32],
+    st: &mut LayerState,
+    step: u64,
+    lr: f64,
+    h: &AdamHypers,
+    lo: usize,
+    hi: usize,
+) -> usize {
+    let _sp = crate::obs::span(crate::obs::Span::AdamStep);
+    debug_assert_eq!(w.len(), st.mask.len);
+    debug_assert_eq!(gc.len(), st.mask.popcount, "compact grads must match the mask popcount");
+    debug_assert!(lo <= hi && hi <= st.mask.popcount, "shard range out of bounds");
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let wd = h.weight_decay as f32;
+    let lr = lr as f32;
+    let (bc1, bc2) = bias_corrections(h, step);
+    let mut p = 0usize;
+    let mut updated = 0usize;
+
+    for (wi, &word) in st.mask.words.iter().enumerate() {
+        if p >= hi {
+            break;
+        }
+        if word == 0 {
+            continue;
+        }
+        let pop = word.count_ones() as usize;
+        if p + pop <= lo {
+            // word wholly below the shard: skip it, advancing the compact
+            // offset past its coordinates
+            p += pop;
+            continue;
+        }
+        let base = wi * 64;
+        if word == u64::MAX && base + 64 <= w.len() && lo <= p && p + 64 <= hi {
+            // full word entirely inside the shard: dense fast path
+            for i in base..base + 64 {
+                let gi = gc[p] + wd * w[i];
+                p += 1;
+                st.m[i] = b1 * st.m[i] + (1.0 - b1) * gi;
+                st.v[i] = b2 * st.v[i] + (1.0 - b2) * gi * gi;
+                w[i] -= lr * (st.m[i] / bc1) / ((st.v[i] / bc2).sqrt() + eps);
+            }
+            updated += 64;
+            continue;
+        }
+        // word straddles a shard edge (or is sparse): walk its bits,
+        // updating only compact positions inside [lo, hi)
+        let mut bits = word;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if p >= hi {
+                return updated;
+            }
+            if p < lo {
+                p += 1;
+                continue;
+            }
+            let i = base + b;
+            let gi = gc[p] + wd * w[i];
+            p += 1;
+            st.m[i] = b1 * st.m[i] + (1.0 - b1) * gi;
+            st.v[i] = b2 * st.v[i] + (1.0 - b2) * gi * gi;
+            w[i] -= lr * (st.m[i] / bc1) / ((st.v[i] / bc2).sqrt() + eps);
+            updated += 1;
+        }
+    }
+    updated
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +532,51 @@ mod tests {
             assert_eq!(w[i].to_bits(), w2[i].to_bits(), "coord {i}");
             assert_eq!(st1.m[i].to_bits(), st2.m[i].to_bits(), "m {i}");
             assert_eq!(st1.v[i].to_bits(), st2.v[i].to_bits(), "v {i}");
+        }
+    }
+
+    #[test]
+    fn compact_range_shards_match_full_step_bitwise() {
+        // R consecutive range calls over even compact chunks must be bitwise
+        // identical to ONE full compact step — the dist layer's ZeRO-style
+        // moment-sharding contract. The mask covers a dense full word (fast
+        // path), straddled words, and scattered bits; the shard counts
+        // include ones that don't divide the popcount evenly.
+        let n = 300;
+        let mut rng = Pcg64::new(11);
+        let w0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let maskv: Vec<f32> =
+            (0..n).map(|i| if i < 64 || i % 3 == 1 { 1.0 } else { 0.0 }).collect();
+        let mask = BitMask::from_threshold(&maskv, 0.5);
+        let gc: Vec<f32> = (0..n).filter(|&i| mask.get(i)).map(|i| g[i]).collect();
+        let c = mask.popcount;
+        let h = AdamHypers { weight_decay: 0.02, ..AdamHypers::default() };
+        let mut w_ref = w0.clone();
+        let mut st_ref = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask: mask.clone() };
+        for step in 1..=3 {
+            masked_adam_step_compact(&mut w_ref, &gc, &mut st_ref, step, 2e-3, &h);
+        }
+        for r in [1usize, 2, 3, 4, 7] {
+            let mut w = w0.clone();
+            let mut st = LayerState { m: vec![0.0; n], v: vec![0.0; n], mask: mask.clone() };
+            let chunk = c.div_ceil(r);
+            for step in 1..=3 {
+                let mut total = 0usize;
+                for q in 0..r {
+                    let lo = (q * chunk).min(c);
+                    let hi = ((q + 1) * chunk).min(c);
+                    total += masked_adam_step_compact_range(
+                        &mut w, &gc, &mut st, step, 2e-3, &h, lo, hi,
+                    );
+                }
+                assert_eq!(total, c, "shards at r={r} must cover every active coord");
+            }
+            for i in 0..n {
+                assert_eq!(w[i].to_bits(), w_ref[i].to_bits(), "r={r} coord {i}");
+                assert_eq!(st.m[i].to_bits(), st_ref.m[i].to_bits(), "r={r} m {i}");
+                assert_eq!(st.v[i].to_bits(), st_ref.v[i].to_bits(), "r={r} v {i}");
+            }
         }
     }
 

@@ -344,6 +344,7 @@ impl Session {
                 m.current.optim_v,
                 m.current.extra,
                 m.current.activations,
+                m.peak_state_shard_measured,
             ],
         );
         self.data.state_save(&mut bag);
@@ -440,13 +441,17 @@ impl Session {
         }
         trainer.set_phase_strategy(timing[2]);
 
+        // 16 entries since the dist layer added peak_state_shard_measured;
+        // 15-entry checkpoints (pre-dist) are still accepted, the new peak
+        // simply restarts at 0
         let mw = bag.u64s("session.mem")?;
-        if mw.len() != 15 {
-            bail!("session.mem wants 15 entries, checkpoint has {}", mw.len());
+        if mw.len() != 15 && mw.len() != 16 {
+            bail!("session.mem wants 15 or 16 entries, checkpoint has {}", mw.len());
         }
         trainer.mem.peak_total = mw[0];
         trainer.mem.peak_rss = mw[1];
         trainer.mem.peak_grad_measured = mw[2];
+        trainer.mem.peak_state_shard_measured = mw.get(15).copied().unwrap_or(0);
         trainer.mem.peak = MemBreakdown {
             weights: mw[3],
             grads: mw[4],

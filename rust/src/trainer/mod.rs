@@ -29,7 +29,7 @@ use crate::backend::{self, Backend, Targets};
 use crate::baselines::{build, SparseOutcome, Strategy};
 use crate::config::TrainConfig;
 use crate::data::{ClsSource, LmStream};
-use crate::grads::{AccumSink, GradSink, MaskedSink};
+use crate::grads::{AccumSink, MaskedSink};
 use crate::memory::MemTracker;
 use crate::metrics::{perplexity, RunLogger};
 use crate::model::ParamStore;
@@ -38,27 +38,13 @@ use crate::optim::schedule::LrSchedule;
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 
-/// Drive one optimizer step's microbatches through a sink — arm it
-/// (`begin_micro(k == 0)`), run the fwd/bwd, repeat — returning the SUMMED
-/// microbatch loss. Every gradient route (main streaming pass, selection
-/// replays, dense staging) goes through this one loop, so the
-/// per-microbatch protocol can never diverge between them. A free function
-/// (not a `Trainer` method) so callers can hold disjoint borrows of the
-/// trainer's fields.
-fn drive_micro(
-    backend: &mut dyn Backend,
-    store: &ParamStore,
-    micro: &[(&[i32], Targets<'_>)],
-    sink: &mut dyn GradSink,
-) -> Result<f64> {
-    let mut loss = 0.0f64;
-    for (k, (tokens, targets)) in micro.iter().enumerate() {
-        let _sp = obs::span(Span::FwdBwd);
-        sink.begin_micro(k == 0);
-        loss += backend.forward_backward(store, tokens, *targets, sink)?;
-    }
-    Ok(loss)
-}
+// One optimizer step's microbatches flow through `dist::drive_micros` —
+// sequential at `--replicas 1` (the exact loop that used to live here),
+// data-parallel over N worker replicas otherwise, bitwise identical either
+// way. Every gradient route (main streaming pass, selection replays, dense
+// staging) goes through that one entry point, so the per-microbatch
+// protocol — and the replica fan-out — can never diverge between them.
+use crate::dist::drive_micros;
 
 /// One evaluation snapshot.
 #[derive(Debug, Clone)]
@@ -86,6 +72,12 @@ pub struct RunResult {
     /// transient shard, counted at consume time by the `grads` layer) —
     /// the ground-truth twin of the modeled `MemBreakdown::grads`
     pub peak_grad_bytes: u64,
+    /// Per-replica optimizer-state bytes under ZeRO-style sharding: the
+    /// LARGEST single replica's moment-shard residency at the run's
+    /// `--replicas` setting (equals the full optimizer-state bytes at
+    /// `--replicas 1`). Reported next to `peak_grad_bytes` in run JSONL,
+    /// serve outcomes, and bench rows.
+    pub state_shard_bytes: u64,
     /// per-run obs profile block (spans/counters/gauges since the trainer
     /// was built) — present only when `--trace`/`PALLAS_TRACE` is on
     pub profile: Option<Json>,
@@ -261,7 +253,7 @@ impl Trainer {
             let n_params = self.backend.param_specs().len();
             let mut sink = MaskedSink::new(n_params, plan.retain, scale);
             let loss =
-                drive_micro(self.backend.as_mut(), &self.store, micro, &mut sink)? / accum as f64;
+                drive_micros(self.backend.as_mut(), &self.store, micro, &mut sink)? / accum as f64;
             grad_peak = grad_peak.max(sink.peak_grad_elems());
             let t0 = std::time::Instant::now();
             let sp_strat = obs::span(Span::Strategy);
@@ -286,7 +278,7 @@ impl Trainer {
                     obs::add(Counter::ReplayEvents, 1);
                     let sp_replay = obs::span(Span::Replay);
                     let mut rsink = MaskedSink::new(n_params, retain, scale);
-                    drive_micro(self.backend.as_mut(), &self.store, micro, &mut rsink)?;
+                    drive_micros(self.backend.as_mut(), &self.store, micro, &mut rsink)?;
                     drop(sp_replay);
                     grad_peak = grad_peak.max(rsink.peak_grad_elems());
                     let t1 = std::time::Instant::now();
@@ -306,7 +298,7 @@ impl Trainer {
                     {
                         let _sp_replay = obs::span(Span::Replay);
                         let mut dsink = AccumSink::new(&mut self.grads, scale);
-                        drive_micro(self.backend.as_mut(), &self.store, micro, &mut dsink)?;
+                        drive_micros(self.backend.as_mut(), &self.store, micro, &mut dsink)?;
                         grad_peak = grad_peak.max(dsink.peak_grad_elems());
                     }
                     let t1 = std::time::Instant::now();
@@ -332,7 +324,7 @@ impl Trainer {
             let loss;
             {
                 let mut dsink = AccumSink::new(&mut self.grads, scale);
-                loss = drive_micro(self.backend.as_mut(), &self.store, micro, &mut dsink)?
+                loss = drive_micros(self.backend.as_mut(), &self.store, micro, &mut dsink)?
                     / accum as f64;
                 grad_peak = grad_peak.max(dsink.peak_grad_elems());
             }
@@ -354,6 +346,10 @@ impl Trainer {
         self.mem.record(mem);
         let grad_bytes = grad_peak * crate::memory::F32;
         self.mem.record_grad_bytes(grad_bytes);
+        let n_params: u64 = self.backend.param_specs().iter().map(|s| s.numel() as u64).sum();
+        self.mem.record_state_shard_bytes(
+            self.strategy.state_shard_bytes(n_params, crate::util::replicas()),
+        );
         self.logger.log(&Json::obj(vec![
             ("step", Json::num(self.step as f64)),
             ("loss", Json::num(mean_loss)),
@@ -539,6 +535,7 @@ impl Trainer {
             peak_mem_gb: self.mem.peak_gb(),
             peak_mem_bytes: self.mem.peak_total,
             peak_grad_bytes: self.mem.peak_grad_measured,
+            state_shard_bytes: self.mem.peak_state_shard_measured,
             wall_secs: wall,
             exec_secs,
             phase_secs: [bp[0], bp[1], bp[2], self.phase_strategy],

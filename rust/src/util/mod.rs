@@ -228,6 +228,34 @@ pub fn reset_pool() {
     POOL_ON.store(0, Ordering::Relaxed);
 }
 
+static REPLICAS: AtomicUsize = AtomicUsize::new(0);
+
+/// Data-parallel replica count for the `dist` layer (`PALLAS_REPLICAS` /
+/// `--replicas`; default 1 = the exact sequential path). At N > 1 the
+/// trainer fans each optimizer step's microbatches out over N in-process
+/// worker replicas and all-reduces gradient shards in a FIXED ascending
+/// microbatch order, so the folded bits are identical to the sequential
+/// fold at any replica count — pinned by grad_check's replicated grid and
+/// session_resume's replicated leg. A pure throughput/residency knob:
+/// flipping it never changes a single loss, eval, or parameter bit.
+pub fn replicas() -> usize {
+    resolve_knob(&REPLICAS, "PALLAS_REPLICAS", 1).max(1)
+}
+
+/// Override the replica count (clamped >= 1). Used by `--replicas` and the
+/// replica-count-invariance tests; takes effect on the next optimizer step.
+pub fn set_replicas(n: usize) {
+    REPLICAS.store(n.max(1).saturating_add(1), Ordering::Relaxed);
+}
+
+/// Restore the replica-count knob to its unresolved state: the next read
+/// re-resolves `PALLAS_REPLICAS` (else the sequential default of 1) — the
+/// same env-re-arming contract as [`reset_pack_min`], so a CI leg pinning
+/// a replica count keeps its coverage after a knob-flipping test finishes.
+pub fn reset_replicas() {
+    REPLICAS.store(0, Ordering::Relaxed);
+}
+
 /// Restore the worker-count knob to its unresolved state: the next read
 /// re-resolves `PALLAS_NUM_THREADS` (else available parallelism) — the
 /// same env-re-arming contract as [`reset_pack_min`]. Used by the
@@ -249,13 +277,14 @@ pub fn reset_par_min() {
 }
 
 /// Restore EVERY throughput knob (threads, pack-min, both par-mins,
-/// attn-batched, grad-stream, pool) to its unresolved state in one sweep —
-/// the next read of each re-resolves its env var (else its built-in
-/// default). One entry point instead of six scattered `reset_*` calls so a
-/// knob-flipping test — or the serve scheduler handing the backend from one
-/// session to the next — can't forget one and leak a forced path into
-/// whatever runs after it. All six knobs are bitwise-neutral, so this is
-/// hygiene, never a results change.
+/// attn-batched, grad-stream, pool, replicas) to its unresolved state in
+/// one sweep — the next read of each re-resolves its env var (else its
+/// built-in default). One entry point instead of seven scattered `reset_*`
+/// calls so a knob-flipping test — or the serve scheduler handing the
+/// backend from one session to the next — can't forget one and leak a
+/// forced path (or a tenant's replica count) into whatever runs after it.
+/// All seven knobs are bitwise-neutral, so this is hygiene, never a
+/// results change.
 pub fn reset_all_knobs() {
     reset_num_threads();
     reset_pack_min();
@@ -263,6 +292,7 @@ pub fn reset_all_knobs() {
     reset_attn_batched();
     reset_grad_stream();
     reset_pool();
+    reset_replicas();
 }
 
 /// Serializes tests that mutate the process-global tuning knobs AND assert
@@ -423,6 +453,11 @@ mod tests {
         assert!(pool_on());
         reset_pool(); // re-arms any env override (CI's scoped-dispatch leg)
         assert_eq!(pool_on(), env_on("PALLAS_POOL", 1));
+        set_replicas(4);
+        assert_eq!(replicas(), 4);
+        set_replicas(0); // clamped to >= 1 (0 replicas is meaningless)
+        assert_eq!(replicas(), 1);
+        reset_replicas(); // re-arms any env override (CI's replicated leg)
         // the reset must re-resolve: the env override when present (CI's
         // {direct, packed} matrix legs), else the DISTINCT built-in defaults
         let env = |name: &str, default: usize| {
@@ -433,6 +468,7 @@ mod tests {
         assert_eq!(pack_min_mnk(), env("PALLAS_PACK_MIN", DEFAULT_PACK_MIN));
         assert_eq!(par_min_mnk(), env("PALLAS_PAR_MIN", DEFAULT_PAR_MIN));
         assert_eq!(par_min_elems(), env("PALLAS_PAR_MIN", DEFAULT_PAR_ELEMS));
+        assert_eq!(replicas(), env("PALLAS_REPLICAS", 1).max(1));
     }
 
     #[test]
@@ -446,6 +482,7 @@ mod tests {
         set_attn_batched(false);
         set_grad_stream(false);
         set_pool(false);
+        set_replicas(3);
         // ...then the sweep must hand each back to env-var resolution
         reset_all_knobs();
         let env = |name: &str, default: usize| {
@@ -457,6 +494,7 @@ mod tests {
         assert_eq!(attn_batched(), env("PALLAS_ATTN_BATCHED", 1) != 0);
         assert_eq!(grad_stream(), env("PALLAS_GRAD_STREAM", 1) != 0);
         assert_eq!(pool_on(), env("PALLAS_POOL", 1) != 0);
+        assert_eq!(replicas(), env("PALLAS_REPLICAS", 1).max(1));
         assert!(num_threads() >= 1);
         set_num_threads(prev_threads);
     }

@@ -124,19 +124,23 @@ thread_local! {
 }
 
 /// Marks the dispatching thread busy for the dispatch's extent; Drop
-/// clears it even when the dispatch re-raises a job panic.
-struct BusyGuard;
+/// restores the prior flag even when the dispatch re-raises a job panic
+/// (restore, not clear, so a nested [`run_inline`] scope can't strip an
+/// outer scope's busy marking).
+struct BusyGuard {
+    prev: bool,
+}
 
 impl BusyGuard {
     fn set() -> BusyGuard {
-        BUSY.with(|b| b.set(true));
-        BusyGuard
+        BusyGuard { prev: BUSY.with(|b| b.replace(true)) }
     }
 }
 
 impl Drop for BusyGuard {
     fn drop(&mut self) {
-        BUSY.with(|b| b.set(false));
+        let prev = self.prev;
+        BUSY.with(|b| b.set(prev));
     }
 }
 
@@ -174,19 +178,34 @@ pub(crate) fn run(jobs: usize, f: &(dyn Fn(usize) + Sync)) {
         1 => return f(0),
         _ => {}
     }
-    if !util::pool_on() {
-        return run_scoped(jobs, f);
-    }
     if BUSY.with(|b| b.get()) {
         // nested dispatch: chunking never changes bits, and waiting on
-        // the pool from inside the pool would deadlock — run inline
+        // the pool from inside the pool would deadlock — run inline.
+        // Checked BEFORE the pool knob so a busy-marked thread (a pool
+        // worker, a dispatching caller, or a dist replica thread inside
+        // `run_inline`) stays inline even under PALLAS_POOL=0, where
+        // scoped spawns would oversubscribe the machine.
         for i in 0..jobs {
             f(i);
         }
         return;
     }
+    if !util::pool_on() {
+        return run_scoped(jobs, f);
+    }
     obs::add(Counter::PoolDispatches, 1);
     pool().dispatch(jobs, f);
+}
+
+/// Run `f` with this thread marked busy, so every kernel dispatch it
+/// issues executes inline on this thread (no pool hand-off, no scoped
+/// spawns). The `dist` layer wraps each replica worker's forward/backward
+/// in this: N replica threads already saturate the machine, and chunking
+/// never changes bits, so inline execution is the non-oversubscribing
+/// schedule with identical results.
+pub(crate) fn run_inline<R>(f: impl FnOnce() -> R) -> R {
+    let _busy = BusyGuard::set();
+    f()
 }
 
 /// The legacy per-call spawn/join path (`PALLAS_POOL=0`): the exact
@@ -422,6 +441,36 @@ mod tests {
             want += round * 31 * jobs + jobs * (jobs - 1) / 2;
         }
         assert_eq!(total.load(Ordering::Relaxed), want);
+        util::reset_pool();
+        util::set_num_threads(prev);
+    }
+
+    #[test]
+    fn run_inline_keeps_dispatches_on_the_calling_thread() {
+        let _g = util::test_knob_lock();
+        let prev = util::num_threads();
+        util::set_num_threads(4);
+        // under BOTH dispatch knob settings: a busy-marked thread must run
+        // its fan-outs inline (a dist replica thread must never grab the
+        // pool or spawn scoped workers underneath N sibling replicas)
+        for &pooled in &[true, false] {
+            util::set_pool(pooled);
+            let caller = std::thread::current().id();
+            let ran_on = Mutex::new(Vec::new());
+            run_inline(|| {
+                run(6, &|_i| {
+                    lock(&ran_on).push(std::thread::current().id());
+                });
+            });
+            let ids = lock(&ran_on);
+            assert_eq!(ids.len(), 6);
+            assert!(
+                ids.iter().all(|&id| id == caller),
+                "inline scope leaked a dispatch to another thread (pool={pooled})"
+            );
+        }
+        // the busy marking must not outlive the scope
+        assert!(!BUSY.with(|b| b.get()));
         util::reset_pool();
         util::set_num_threads(prev);
     }

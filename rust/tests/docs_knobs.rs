@@ -83,7 +83,7 @@ fn every_documented_flag_exists_in_usage() {
     let md = repo_doc("docs/KNOBS.md");
     let flags = table_flags(&md);
     // sanity: the extraction actually found the knob tables
-    for expect in ["--threads", "--grad-stream", "--sched", "--watch-spec"] {
+    for expect in ["--threads", "--grad-stream", "--replicas", "--sched", "--watch-spec"] {
         assert!(flags.contains(expect), "KNOBS.md table lost {expect}");
     }
     for f in &flags {

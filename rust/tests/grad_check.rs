@@ -415,6 +415,104 @@ fn norm_probe_sink_matches_dense_sink_norms_bitwise() {
     assert_eq!(probe.peak_grad_elems(), largest);
 }
 
+/// Restore the dist-layer knobs (replica count, kernel-path forcing) even
+/// if an assertion fires mid-test.
+struct ResetDistKnobs;
+impl Drop for ResetDistKnobs {
+    fn drop(&mut self) {
+        blockllm::util::reset_replicas();
+        blockllm::util::reset_pack_min();
+    }
+}
+
+/// THE dist acceptance pin, end to end: with identical configs and batches,
+/// `--replicas {2, 4}` must produce bit-for-bit identical losses AND
+/// post-training parameters to the 1-replica reference, across the
+/// {direct, packed} kernel paths and {accum 1, 4}. Accum 4 exercises the
+/// real replicated fan-out (round-robin microbatch ownership + the
+/// reducer's ascending-microbatch fold); accum 1 has a single microbatch
+/// per step, so dist takes the sequential fallback but the ZeRO-sharded
+/// compact Adam update still runs per-replica moment-shard ranges.
+#[test]
+fn replicated_training_bitwise_identical_across_replica_counts() {
+    let _g = STREAM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _reset_stream = ResetStream;
+    let _reset = ResetDistKnobs;
+    blockllm::util::set_num_threads(4);
+    for &forced_packed in &[false, true] {
+        if forced_packed {
+            blockllm::util::set_pack_min(0);
+        } else {
+            blockllm::util::set_pack_min(usize::MAX);
+        }
+        for &accum in &[1usize, 4] {
+            let run = |replicas: usize| -> (Vec<f64>, Vec<Vec<f32>>) {
+                blockllm::util::set_grad_stream(true);
+                blockllm::util::set_replicas(replicas);
+                let mut tr = grain_trainer(0.9, 2, accum);
+                let mut losses = Vec::new();
+                for s in 0..6 {
+                    let micro = grain_micro(s, accum);
+                    losses.push(tr.bench_accum_step(&micro).unwrap());
+                }
+                (losses, tr.store.bufs)
+            };
+            let (l1, p1) = run(1);
+            for &r in &[2usize, 4] {
+                let (lr, pr) = run(r);
+                for (i, (a, b)) in l1.iter().zip(&lr).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "loss bits diverged at step {i} (replicas {r}, accum {accum}, \
+                         packed={forced_packed}): {a} vs {b}"
+                    );
+                }
+                for (li, (a, b)) in p1.iter().zip(&pr).enumerate() {
+                    for (ci, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "param {li}[{ci}] diverged (replicas {r}, accum {accum}, \
+                             packed={forced_packed})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The ZeRO acceptance pin: blockllm at sparsity 0.95 on grain must MEASURE
+/// per-replica optimizer-state bytes at `--replicas 4` of at most 1/3 the
+/// `--replicas 1` full state (per-layer `⌈c_l/4⌉` rounding keeps the shard
+/// above an exact 1/4, hence the 1/3 bound), while 4 such shards always
+/// cover the whole state.
+#[test]
+fn blockllm_state_shard_bytes_shrink_with_replicas() {
+    let _g = STREAM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _reset_stream = ResetStream;
+    let _reset = ResetDistKnobs;
+    let run = |replicas: usize| -> u64 {
+        blockllm::util::set_grad_stream(true);
+        blockllm::util::set_replicas(replicas);
+        let mut tr = grain_trainer(0.95, 2, 1);
+        for s in 0..6 {
+            let micro = grain_micro(s, 1);
+            tr.bench_accum_step(&micro).unwrap();
+        }
+        tr.mem.peak_state_shard_measured
+    };
+    let full = run(1);
+    let quarter = run(4);
+    assert!(full > 0, "no optimizer state was measured");
+    assert!(
+        quarter * 3 <= full,
+        "state shard at 4 replicas ({quarter} bytes) not ≤ 1/3 of the full state ({full})"
+    );
+    assert!(quarter * 4 >= full, "4 shards of {quarter} bytes cannot cover {full}");
+}
+
 /// The memory acceptance pin: blockllm at sparsity 0.95 on grain, streamed,
 /// must MEASURE ≤ dense/4 gradient bytes — and stay within the modeled
 /// `active coords + largest layer` residency (+ slack), selection events

@@ -132,6 +132,27 @@ fn suspend_resume_is_bitwise_across_knob_grid() {
     }
 }
 
+/// The dist layer's suspend/resume leg: a `--replicas 2` run (grad accum 4,
+/// so every optimizer step genuinely fans its microbatches out over both
+/// replicas) suspends mid-run, resumes, and must match BOTH its own
+/// uninterrupted twin and the 1-replica uninterrupted reference bit for
+/// bit — replication is invisible to the checkpoint format and to the
+/// training trajectory.
+#[test]
+fn replicated_suspend_resume_is_bitwise_and_matches_sequential() {
+    let _g = lock();
+    let _r = ResetKnobs;
+    blockllm::util::reset_all_knobs();
+    let mut cfg = grain_cfg(Method::BlockLlm, 12);
+    cfg.grad_accum = 4;
+    let (want_seq, want_seq_p) = run_uninterrupted(&cfg);
+    blockllm::util::set_replicas(2);
+    let (want, want_p) = run_uninterrupted(&cfg);
+    let (got, got_p) = run_suspended(&cfg, 5);
+    assert_runs_identical("replicas=2 resume", &want, &got, &want_p, &got_p);
+    assert_runs_identical("replicas=2 vs sequential", &want_seq, &want, &want_seq_p, &want_p);
+}
+
 #[test]
 fn glue_cls_sessions_resume_bitwise_too() {
     let _g = lock();
